@@ -1,0 +1,69 @@
+//! END-TO-END driver: the full three-layer stack on a real workload.
+//!
+//! Layer 1/2 (Pallas/JAX, AOT): `make artifacts` compiles the fused
+//! keygen→hash→shard→slot pipeline to HLO text. This binary loads it via
+//! PJRT (layer 3), self-checks it bit-exactly against the native mixer,
+//! generates the paper's workload-1 and workload-2 streams with it, routes
+//! keys through per-thread lock-free queues to NUMA-local workers, and runs
+//! them against the hierarchical deterministic-skiplist store — reporting
+//! the paper's headline metrics (whole-workload seconds vs threads,
+//! throughput, NUMA locality). Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example numa_store_e2e [OPS]
+//! ```
+
+use std::sync::Arc;
+
+use cdskl::coordinator::{run_workload, ShardedStore, StoreKind};
+use cdskl::numa::Topology;
+use cdskl::runtime::KeyRouter;
+use cdskl::workload::{OpMix, WorkloadSpec};
+
+fn main() {
+    let ops: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| cdskl::util::cli::parse_u64_with_suffix(&s))
+        .unwrap_or(1_000_000);
+    let topo = Topology::milan_virtual();
+    let router = KeyRouter::auto("artifacts");
+    println!(
+        "e2e: {} ops | virtual topology {}x{} | key router: {}",
+        ops,
+        topo.numa_nodes,
+        topo.cpus_per_node,
+        if router.is_aot() { "AOT (PJRT, self-checked)" } else { "native fallback" }
+    );
+
+    println!("\n| workload | store | threads | fill(s) | drain(s) | Mops/s | find-hit% | remote% |");
+    println!("|---|---|---|---|---|---|---|---|");
+    for (wname, mix) in [("w1 (10%I/90%F)", OpMix::W1), ("w2 (+0.2%E)", OpMix::W2)] {
+        for threads in [4usize, 16, 64] {
+            for kind in [StoreKind::DetSkiplistLf, StoreKind::RandomSkiplist] {
+                let store = Arc::new(ShardedStore::new(
+                    kind,
+                    8,
+                    (ops as usize / 4).max(1 << 16),
+                    topo.clone(),
+                    threads,
+                ));
+                let spec = WorkloadSpec::new("e2e", ops, mix, (ops / 2).max(1 << 16));
+                let m = run_workload(&store, &spec, threads, &router, 0xE2E);
+                println!(
+                    "| {} | {} | {} | {:.3} | {:.3} | {:.3} | {:.1} | {:.2} |",
+                    wname,
+                    store.kind_name(),
+                    threads,
+                    m.fill_seconds,
+                    m.drain_seconds,
+                    m.throughput_mops(),
+                    m.found as f64 / m.finds.max(1) as f64 * 100.0,
+                    m.remote_accesses as f64 / (m.local_accesses + m.remote_accesses).max(1) as f64
+                        * 100.0,
+                );
+                assert_eq!(m.ops(), ops, "every routed op must execute exactly once");
+            }
+        }
+    }
+    println!("\ne2e OK: all layers composed (AOT artifacts -> PJRT -> router -> shards)");
+}

@@ -1,0 +1,69 @@
+//! Quickstart: the three data structures in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cdskl::hashtable::{ConcurrentMap, TwoLevelSpoHashMap};
+use cdskl::queue::{ConcurrentQueue, LfQueue};
+use cdskl::skiplist::{DetSkiplist, FindMode};
+use std::sync::Arc;
+
+fn main() {
+    // --- concurrent deterministic 1-2-3-4 skiplist (the paper's headline) ---
+    let skiplist = Arc::new(DetSkiplist::new(FindMode::LockFree));
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let sl = skiplist.clone();
+            s.spawn(move || {
+                for i in 0..10_000u64 {
+                    sl.insert(t * 100_000 + i, i);
+                }
+            });
+        }
+    });
+    println!("skiplist: {} keys, sorted & balanced", skiplist.len());
+    println!("skiplist: get(100007) = {:?}", skiplist.get(100_007));
+    println!("skiplist: range(5..12) = {:?}", skiplist.range(5, 12));
+    skiplist.check_invariants().expect("1-2-3-4 invariants hold");
+
+    // --- unbounded lock-free queue with block recycling ---
+    let queue = Arc::new(LfQueue::new());
+    std::thread::scope(|s| {
+        let q = queue.clone();
+        s.spawn(move || {
+            for i in 0..100_000u64 {
+                q.push(i);
+            }
+        });
+        let q = queue.clone();
+        s.spawn(move || {
+            let mut got = 0u64;
+            while got < 100_000 {
+                if q.pop().is_some() {
+                    got += 1;
+                }
+            }
+        });
+    });
+    let st = queue.stats();
+    println!(
+        "queue: {} pushes / {} pops, {} blocks allocated, {} recycled",
+        st.pushes, st.pops, st.blocks_allocated, st.blocks_recycled
+    );
+
+    // --- hierarchical split-order hash table (the paper's best) ---
+    let map = Arc::new(TwoLevelSpoHashMap::new());
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let m = map.clone();
+            s.spawn(move || {
+                for i in 0..10_000u64 {
+                    m.insert(t << 32 | i, i * 2);
+                }
+            });
+        }
+    });
+    println!("hash table: {} entries, get(7) = {:?}", map.len(), map.get(7));
+    println!("quickstart OK");
+}

@@ -1,0 +1,58 @@
+"""AOT lowering: jit -> stablehlo -> XlaComputation -> HLO *text*.
+
+HLO text (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits:  route_batch_<N>.hlo.txt, route_stats_<N>.hlo.txt for N in BATCH_SIZES,
+        plus manifest.txt recording shapes for the rust loader.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import BATCH_SIZES, make_route_batch, make_route_stats, scalar_spec
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn) -> str:
+    return to_hlo_text(jax.jit(fn).lower(scalar_spec(), scalar_spec()))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for n in BATCH_SIZES:
+        for name, fn in (
+            (f"route_batch_{n}", make_route_batch(n)),
+            (f"route_stats_{n}", make_route_stats(n)),
+        ):
+            text = lower_fn(fn)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(f"{name} batch={n}")
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""L1: Pallas kernels for the workload/routing data path (build-time only).
+
+x64 must be enabled before any jax array work in this package: keys, hashes
+and slots are genuine u64 quantities (the paper packs 64-bit keys next to
+64-bit pointers), and the rust side consumes u64 buffers.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from .hash_mix import BLOCK, hash_mix, splitmix64_mix  # noqa: E402,F401
+from .keygen import keygen  # noqa: E402,F401
+from .route import SHARD_BITS, route  # noqa: E402,F401
+from .histogram import NSHARDS, shard_histogram  # noqa: E402,F401

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: 64-bit key scrambler (splitmix64 finalizer).
+
+Stands in for ``boost::hash<uint64_t>`` in the paper: its only job is to
+decorrelate key bits so that ``slot = H(k) mod M`` (power-of-two M) and the
+NUMA shard id (top 3 bits) are uniformly distributed.  The exact mixer is
+splitmix64's finalizer (Steele et al., "Fast splittable pseudorandom number
+generators"), chosen because it is a bijection on u64 (no collisions are
+introduced) and has a well-known test vector (splitmix64(0) =
+0xe220a8397b1dcdaf) that the rust side asserts against at artifact load.
+
+Pallas notes: the kernel is element-wise over a 1-D block of u64 lanes.  On a
+real TPU this is VPU work (no MXU); the BlockSpec tiles the stream in
+``BLOCK``-sized chunks so the HBM->VMEM schedule double-buffers cleanly.  The
+CPU artifact is lowered with ``interpret=True`` (Mosaic custom-calls cannot run
+on the CPU PJRT plugin).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size for the Pallas grid. 64Ki u64 lanes = 512 KiB per operand block,
+# comfortably inside a TPU core's ~16 MiB VMEM with double buffering.
+BLOCK = 65536
+
+_C1 = 0x9E3779B97F4A7C15
+_C2 = 0xBF58476D1CE4E5B9
+_C3 = 0x94D049BB133111EB
+
+
+def splitmix64_mix(x: jnp.ndarray) -> jnp.ndarray:
+    """The splitmix64 finalizer as traceable u64 ops (used inside kernels)."""
+    x = x + jnp.uint64(_C1)
+    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(_C2)
+    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(_C3)
+    return x ^ (x >> jnp.uint64(31))
+
+
+def _hash_mix_kernel(x_ref, o_ref):
+    o_ref[...] = splitmix64_mix(x_ref[...])
+
+
+def hash_mix(x: jnp.ndarray) -> jnp.ndarray:
+    """H(k) for a batch of u64 keys via a Pallas kernel.
+
+    ``x`` must be 1-D u64. Sizes that are not a multiple of BLOCK use a single
+    whole-array block (small-batch path); multiples use the tiled grid.
+    """
+    n = x.shape[0]
+    if n % BLOCK == 0 and n > BLOCK:
+        grid = n // BLOCK
+        return pl.pallas_call(
+            _hash_mix_kernel,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.uint64),
+            grid=(grid,),
+            in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            interpret=True,
+        )(x)
+    return pl.pallas_call(
+        _hash_mix_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint64),
+        interpret=True,
+    )(x)

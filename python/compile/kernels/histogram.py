@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: per-shard load histogram.
+
+Counts how many keys of a batch land on each of the ``2**SHARD_BITS`` NUMA
+shards.  The coordinator uses this for the load-balance analytics behind the
+paper's "all slots were load balanced with approximately N/M entries" claim
+(§VIII) and for the router's queue-depth accounting (§VI).
+
+Implementation: one-hot compare + reduce per grid step, accumulated across
+grid steps in the output ref (grid iterations run sequentially on a core, so
+the read-modify-write accumulation is race-free).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .hash_mix import BLOCK
+from .route import SHARD_BITS
+
+NSHARDS = 1 << SHARD_BITS
+
+
+def _hist_kernel(shard_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s = shard_ref[...]
+    ids = jnp.arange(NSHARDS, dtype=jnp.uint64)
+    onehot = (s[None, :] == ids[:, None]).astype(jnp.uint64)
+    o_ref[...] += onehot.sum(axis=1)
+
+
+def shard_histogram(shard: jnp.ndarray) -> jnp.ndarray:
+    """u64[NSHARDS] counts for a u64[n] shard-id vector."""
+    n = shard.shape[0]
+    bs = BLOCK if (n % BLOCK == 0 and n >= BLOCK) else n
+    grid = n // bs
+    return pl.pallas_call(
+        _hist_kernel,
+        out_shape=jax.ShapeDtypeStruct((NSHARDS,), jnp.uint64),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((bs,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((NSHARDS,), lambda i: (0,)),
+        interpret=True,
+    )(shard)

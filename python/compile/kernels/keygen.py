@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: counter-based 64-bit key stream.
+
+The paper generates workload keys "using hash functions from boost" — i.e. a
+scrambled counter.  We reproduce that as a stateless splitmix64 stream:
+``key[i] = splitmix64(base + i)``.  Stateless-ness matters for the rust
+coordinator: any worker can regenerate any slice of the workload from
+``(seed, base)`` without coordination, and the rust fallback
+(``workload::gen``) is bit-identical.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .hash_mix import BLOCK, splitmix64_mix
+
+
+def _keygen_kernel(base_ref, o_ref):
+    i = pl.program_id(0)
+    n = o_ref.shape[0]
+    start = base_ref[0] + jnp.uint64(i) * jnp.uint64(n)
+    ctr = start + jnp.arange(n, dtype=jnp.uint64)
+    o_ref[...] = splitmix64_mix(ctr)
+
+
+def keygen(base: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Generate ``n`` keys for counter base ``base`` (shape (1,) u64)."""
+    bs = BLOCK if (n % BLOCK == 0 and n >= BLOCK) else n
+    grid = n // bs
+    return pl.pallas_call(
+        _keygen_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint64),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        interpret=True,
+    )(base)

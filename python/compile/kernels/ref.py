@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness baseline).
+
+These never use pallas; pytest asserts kernel == ref bit-exactly.  Golden
+test vectors for splitmix64 are pinned here too so drift in either layer is
+caught (the rust side pins the same vectors in ``hashtable/hash.rs``).
+"""
+
+import jax.numpy as jnp
+
+from .route import SHARD_BITS
+
+# mix(i) = splitmix64-finalize(i + GAMMA) for i = 0..4.  mix(0) is the first
+# output of the canonical splitmix64 stream seeded with 0 (0xE220A8397B1DCDAF);
+# the rest follow from applying the finalizer to i+GAMMA directly (we hash
+# counters, we do not iterate stream state).
+GOLDEN = [
+    0xE220A8397B1DCDAF,
+    0x910A2DEC89025CC1,
+    0x975835DE1C9756CE,
+    0x1D0B14E4DB018FED,
+    0x6E73E372E2338ACA,
+]
+
+
+def splitmix64_ref(x: jnp.ndarray) -> jnp.ndarray:
+    x = x + jnp.uint64(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    return x ^ (x >> jnp.uint64(31))
+
+
+def keygen_ref(base: int, n: int) -> jnp.ndarray:
+    ctr = jnp.uint64(base) + jnp.arange(n, dtype=jnp.uint64)
+    return splitmix64_ref(ctr)
+
+
+def route_ref(base: int, m: int, n: int):
+    key = keygen_ref(base, n)
+    h = splitmix64_ref(key)
+    shard = key >> jnp.uint64(64 - SHARD_BITS)
+    slot = h & jnp.uint64(m - 1)
+    return key, h, shard, slot
+
+
+def shard_histogram_ref(shard: jnp.ndarray) -> jnp.ndarray:
+    nshards = 1 << SHARD_BITS
+    return jnp.bincount(shard.astype(jnp.int64), length=nshards).astype(jnp.uint64)

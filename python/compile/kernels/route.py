@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: fused keygen -> hash -> shard -> slot routing.
+
+This is the arithmetic the paper's hierarchical design runs in front of every
+data-structure operation (sections VI-VIII):
+
+  key   = splitmix64(base + i)          (workload key stream)
+  H(k)  = splitmix64(key)               (boost-hash stand-in, §VIII eq. 8)
+  shard = key >> 61                     (top ``SHARD_BITS``=3 MSBs -> 8 NUMA shards, §VI)
+  slot  = H(k) & (M - 1)                (power-of-two table of M slots, §VIII)
+
+Fusing the four stages into one kernel keeps the stream in VMEM for a single
+HBM round-trip on a real TPU; under ``interpret=True`` on CPU it lowers to a
+single fused elementwise HLO loop.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .hash_mix import BLOCK, splitmix64_mix
+
+SHARD_BITS = 3  # 8 NUMA shards, matching the paper's 8-NUMA-node Milan.
+
+
+def _route_kernel(base_ref, m_ref, key_ref, hash_ref, shard_ref, slot_ref):
+    i = pl.program_id(0)
+    n = key_ref.shape[0]
+    start = base_ref[0] + jnp.uint64(i) * jnp.uint64(n)
+    ctr = start + jnp.arange(n, dtype=jnp.uint64)
+    key = splitmix64_mix(ctr)
+    h = splitmix64_mix(key)
+    key_ref[...] = key
+    hash_ref[...] = h
+    shard_ref[...] = key >> jnp.uint64(64 - SHARD_BITS)
+    slot_ref[...] = h & (m_ref[0] - jnp.uint64(1))
+
+
+def route(base: jnp.ndarray, m: jnp.ndarray, n: int):
+    """Route ``n`` generated keys. ``base``/``m`` are shape-(1,) u64 scalars.
+
+    Returns (key, hash, shard, slot), each u64[n].
+    """
+    bs = BLOCK if (n % BLOCK == 0 and n >= BLOCK) else n
+    grid = n // bs
+    out = jax.ShapeDtypeStruct((n,), jnp.uint64)
+    return pl.pallas_call(
+        _route_kernel,
+        out_shape=(out, out, out, out),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=tuple(pl.BlockSpec((bs,), lambda i: (i,)) for _ in range(4)),
+        interpret=True,
+    )(base, m)

@@ -1,0 +1,44 @@
+"""L2: the jitted compute graph the rust coordinator loads via PJRT.
+
+Two exported entry points, both calling the L1 Pallas kernels:
+
+- ``route_batch(base, m)``   -> (key, hash, shard, slot) u64[N] each.
+  The full per-batch data path of the paper's hierarchical design
+  (workload key stream -> boost-style H(k) -> NUMA shard -> table slot).
+- ``route_stats(base, m)``   -> same plus the per-shard load histogram used
+  for router accounting.
+
+Shapes are static per artifact; ``aot.py`` lowers one artifact per batch
+size in ``BATCH_SIZES``.  The rust runtime picks the artifact matching its
+configured batch and pads the tail batch.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import route, shard_histogram
+
+# Per-artifact static batch sizes. 4096 covers latency-sensitive small
+# batches; 65536 amortizes PJRT dispatch on the bulk path (one BLOCK).
+BATCH_SIZES = (4096, 65536)
+
+
+def make_route_batch(n: int):
+    def route_batch(base: jnp.ndarray, m: jnp.ndarray):
+        key, h, shard, slot = route(base, m, n)
+        return key, h, shard, slot
+
+    return route_batch
+
+
+def make_route_stats(n: int):
+    def route_stats(base: jnp.ndarray, m: jnp.ndarray):
+        key, h, shard, slot = route(base, m, n)
+        hist = shard_histogram(shard)
+        return key, h, shard, slot, hist
+
+    return route_stats
+
+
+def scalar_spec():
+    return jax.ShapeDtypeStruct((1,), jnp.uint64)

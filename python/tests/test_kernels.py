@@ -1,0 +1,114 @@
+"""Kernel-vs-ref bit-exactness: the core L1 correctness signal.
+
+hypothesis sweeps batch shapes and input values; everything is integer math,
+so comparisons are exact equality (assert_array_equal), not allclose.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_array_equal
+
+from compile.kernels import BLOCK, NSHARDS, hash_mix, keygen, route, shard_histogram
+from compile.kernels.ref import (
+    GOLDEN,
+    keygen_ref,
+    route_ref,
+    shard_histogram_ref,
+    splitmix64_ref,
+)
+
+U64 = st.integers(min_value=0, max_value=2**64 - 1)
+SIZES = st.sampled_from([1, 2, 7, 64, 1000, 4096, 8192])
+
+
+def test_golden_vectors():
+    x = jnp.arange(len(GOLDEN), dtype=jnp.uint64)
+    got = [int(v) for v in hash_mix(x)]
+    assert got == GOLDEN
+
+
+def test_golden_vectors_ref():
+    x = jnp.arange(len(GOLDEN), dtype=jnp.uint64)
+    got = [int(v) for v in splitmix64_ref(x)]
+    assert got == GOLDEN
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=st.lists(U64, min_size=1, max_size=512))
+def test_hash_mix_matches_ref(vals):
+    x = jnp.array(vals, dtype=jnp.uint64)
+    assert_array_equal(np.asarray(hash_mix(x)), np.asarray(splitmix64_ref(x)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(base=U64, n=SIZES)
+def test_keygen_matches_ref(base, n):
+    got = keygen(jnp.array([base], dtype=jnp.uint64), n)
+    assert_array_equal(np.asarray(got), np.asarray(keygen_ref(base, n)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(base=U64, logm=st.integers(min_value=0, max_value=20), n=SIZES)
+def test_route_matches_ref(base, logm, n):
+    m = 1 << logm
+    got = route(
+        jnp.array([base], dtype=jnp.uint64), jnp.array([m], dtype=jnp.uint64), n
+    )
+    want = route_ref(base, m, n)
+    for g, w in zip(got, want):
+        assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@settings(max_examples=15, deadline=None)
+@given(base=U64, n=SIZES)
+def test_route_invariants(base, n):
+    m = 4096
+    key, h, shard, slot = route(
+        jnp.array([base], dtype=jnp.uint64), jnp.array([m], dtype=jnp.uint64), n
+    )
+    assert int(jnp.max(shard)) < NSHARDS
+    assert int(jnp.max(slot)) < m
+    # shard must be derived from the key MSBs, slot from the hash LSBs
+    assert_array_equal(np.asarray(shard), np.asarray(key) >> 61)
+    assert_array_equal(np.asarray(slot), np.asarray(h) & (m - 1))
+
+
+@settings(max_examples=15, deadline=None)
+@given(vals=st.lists(st.integers(min_value=0, max_value=NSHARDS - 1), min_size=1, max_size=512))
+def test_histogram_matches_ref(vals):
+    s = jnp.array(vals, dtype=jnp.uint64)
+    got = shard_histogram(s)
+    assert_array_equal(np.asarray(got), np.asarray(shard_histogram_ref(s)))
+    assert int(jnp.sum(got)) == len(vals)
+
+
+def test_block_tiled_paths_match_small_path():
+    """Sizes that hit the tiled grid must agree with the single-block path."""
+    n = 2 * BLOCK
+    base = jnp.array([12345], dtype=jnp.uint64)
+    m = jnp.array([8192], dtype=jnp.uint64)
+    key, h, shard, slot = route(base, m, n)
+    want = route_ref(12345, 8192, n)
+    for g, w in zip((key, h, shard, slot), want):
+        assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_hash_mix_is_bijective_sample():
+    """splitmix64 finalizer is a bijection — a large sample must be collision-free."""
+    x = jnp.arange(1 << 16, dtype=jnp.uint64)
+    h = np.asarray(hash_mix(x))
+    assert len(np.unique(h)) == len(h)
+
+
+@pytest.mark.parametrize("n", [4096, 65536])
+def test_shard_balance(n):
+    """Top-3-bit shards of scrambled keys must be near-uniform (paper §VI)."""
+    key, _h, shard, _slot = route(
+        jnp.array([0], dtype=jnp.uint64), jnp.array([8192], dtype=jnp.uint64), n
+    )
+    hist = np.asarray(shard_histogram(shard)).astype(np.float64)
+    mean = n / NSHARDS
+    assert np.all(np.abs(hist - mean) < 6 * np.sqrt(mean))

@@ -1,0 +1,22 @@
+//! Shared bench scaffolding (criterion is unavailable offline; these are
+//! plain `harness = false` binaries). Env vars tune the sweep:
+//! CDSKL_THREADS="4,8,...", CDSKL_REPS, CDSKL_SCALE (divides paper op
+//! counts; default keeps each bench to roughly a minute on one CPU).
+
+use cdskl::experiments::ExpConfig;
+
+pub fn config(default_scale: u64) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    if let Ok(t) = std::env::var("CDSKL_THREADS") {
+        cfg.threads = t.split(',').map(|s| s.trim().parse().expect("CDSKL_THREADS")).collect();
+    }
+    cfg.reps = 1; // keep `cargo bench` to minutes on one CPU
+    if let Ok(r) = std::env::var("CDSKL_REPS") {
+        cfg.reps = r.parse().expect("CDSKL_REPS");
+    }
+    cfg.scale = default_scale;
+    if let Ok(s) = std::env::var("CDSKL_SCALE") {
+        cfg.scale = s.parse().expect("CDSKL_SCALE");
+    }
+    cfg
+}

@@ -1,0 +1,10 @@
+//! Bench for Table I / figure 3: queue throughput, tbb-like vs lkfree,
+//! 100m-class and 1b-class workloads. `CDSKL_SCALE` tunes size.
+mod common;
+fn main() {
+    let cfg = common::config(1000);
+    println!("# bench table1_queues (paper Table I / fig 3)\n");
+    for t in cdskl::experiments::t1_queues(&cfg) {
+        t.print();
+    }
+}

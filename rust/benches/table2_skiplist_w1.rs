@@ -1,0 +1,10 @@
+//! Bench for Table II / figure 4: skiplist workload 1 (10% insert / 90%
+//! find), RW-lock baseline vs lock-free find.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(100);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table2_skiplist_w1 (paper Table II / fig 4)\n");
+    cdskl::experiments::t2_skiplist_w1(&cfg, &router).print();
+}

@@ -1,0 +1,10 @@
+//! Bench for Table III / figure 5: skiplist 100m-class, workloads IF and
+//! IFE (0.2% erases), RWL vs lock-free find.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(400);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table3_skiplist_w2 (paper Table III / fig 5)\n");
+    cdskl::experiments::t3_skiplist_w2(&cfg, &router).print();
+}

@@ -1,0 +1,19 @@
+//! Bench for Table IV / figure 6: deterministic 1-2-3-4 skiplist vs the
+//! lock-free randomized skiplist. Shape expectation: random wins, by a
+//! factor growing with threads.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(400);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table4_random_vs_det (paper Table IV / fig 6)\n");
+    let t = cdskl::experiments::t4_random_vs_det(&cfg, &router);
+    t.print();
+    // shape check: randomized skiplist must win overall
+    let (mut det, mut rnd) = (0.0, 0.0);
+    for (_, row) in &t.rows {
+        det += row[0];
+        rnd += row[1];
+    }
+    println!("shape: random/deterministic speedup = {:.2}x (paper: 3-12x)", det / rnd);
+}

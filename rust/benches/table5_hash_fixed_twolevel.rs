@@ -1,0 +1,10 @@
+//! Bench for Table V / figure 7: fixed-slot vs two-level hash tables on
+//! 10m-class and 100m-class 50/50 insert+find workloads.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(200);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table5_hash_fixed_twolevel (paper Table V / fig 7)\n");
+    cdskl::experiments::t5_hash_fixed_twolevel(&cfg, &router).print();
+}

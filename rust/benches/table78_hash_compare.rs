@@ -1,0 +1,12 @@
+//! Bench for Tables VII-VIII / figure 9: tbb-like vs two-level split-order
+//! vs two-level BinLists on 100m-class and 1b-class workloads.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(1000);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table78_hash_compare (paper Tables VII-VIII / fig 9)\n");
+    for t in cdskl::experiments::t78_hash_compare(&cfg, &router) {
+        t.print();
+    }
+}

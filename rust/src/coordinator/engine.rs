@@ -1,0 +1,215 @@
+//! The workload engine: leader fills the router queues (using the AOT
+//! routing pipeline when available), workers pinned to (virtual) CPUs drain
+//! their NUMA-local queues and apply operations to the sharded store.
+//!
+//! Matches the paper's methodology: "we filled the queues first before
+//! performing operations on the data structures"; reported time is the
+//! drain (data-structure) phase.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use crate::numa::pin_to_cpu;
+use crate::runtime::KeyRouter;
+use crate::util::rng::Rng;
+use crate::workload::{OpKind, WorkloadSpec};
+
+use super::router::RouterFabric;
+use super::store::ShardedStore;
+
+/// Aggregated result of one workload run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub fill_seconds: f64,
+    pub drain_seconds: f64,
+    pub inserts: u64,
+    pub finds: u64,
+    pub erases: u64,
+    pub found: u64,
+    pub local_accesses: u64,
+    pub remote_accesses: u64,
+    pub final_len: u64,
+}
+
+impl RunMetrics {
+    pub fn ops(&self) -> u64 {
+        self.inserts + self.finds + self.erases
+    }
+
+    pub fn throughput_mops(&self) -> f64 {
+        if self.drain_seconds == 0.0 {
+            0.0
+        } else {
+            self.ops() as f64 / self.drain_seconds / 1e6
+        }
+    }
+}
+
+/// Run `spec` against `store` with `threads` workers through the queue
+/// fabric. `router` generates+routes keys on the leader thread.
+pub fn run_workload(
+    store: &Arc<ShardedStore>,
+    spec: &WorkloadSpec,
+    threads: usize,
+    key_router: &KeyRouter,
+    seed: u64,
+) -> RunMetrics {
+    let fabric = Arc::new(RouterFabric::new(
+        threads,
+        store.num_shards(),
+        store.topology().clone(),
+        // enough blocks for the whole fill phase
+        (spec.total_ops as usize / 8192 + 2).next_power_of_two().max(64),
+    ));
+
+    // ---- fill phase (leader thread; AOT pipeline) ----
+    let t_fill = Instant::now();
+    let mut rng = Rng::new(seed);
+    let chunk = 65_536usize;
+    let mut base = seed.wrapping_mul(0x9E37_79B9);
+    let mut remaining = spec.total_ops as usize;
+    while remaining > 0 {
+        let n = remaining.min(chunk);
+        let batch = key_router.route(base, 8192, n);
+        for &raw in &batch.keys {
+            fabric.route_key(spec.encode(raw), &mut rng);
+        }
+        base = base.wrapping_add(n as u64);
+        remaining -= n;
+    }
+    let fill_seconds = t_fill.elapsed().as_secs_f64();
+
+    // ---- drain phase (workers) ----
+    let barrier = Arc::new(Barrier::new(threads + 1));
+    let inserts = Arc::new(AtomicU64::new(0));
+    let finds = Arc::new(AtomicU64::new(0));
+    let erases = Arc::new(AtomicU64::new(0));
+    let found = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let store = store.clone();
+        let fabric = fabric.clone();
+        let barrier = barrier.clone();
+        let (inserts, finds, erases, found) =
+            (inserts.clone(), finds.clone(), erases.clone(), found.clone());
+        handles.push(std::thread::spawn(move || {
+            pin_to_cpu(t);
+            barrier.wait(); // start together
+            let (mut li, mut lf, mut le, mut lfound) = (0u64, 0u64, 0u64, 0u64);
+            while let Some(word) = fabric.pop_local(t) {
+                let (op, key) = WorkloadSpec::decode(word);
+                store.account(t, key);
+                match op {
+                    OpKind::Insert => {
+                        li += 1;
+                        store.insert(key, key ^ 0xDA7A);
+                    }
+                    OpKind::Find => {
+                        lf += 1;
+                        if store.get(key).is_some() {
+                            lfound += 1;
+                        }
+                    }
+                    OpKind::Erase => {
+                        le += 1;
+                        store.erase(key);
+                    }
+                }
+            }
+            inserts.fetch_add(li, Ordering::Relaxed);
+            finds.fetch_add(lf, Ordering::Relaxed);
+            erases.fetch_add(le, Ordering::Relaxed);
+            found.fetch_add(lfound, Ordering::Relaxed);
+        }));
+    }
+    // Clock starts BEFORE the barrier release: on an oversubscribed host
+    // the leader can be descheduled across the entire drain otherwise,
+    // undercounting it to microseconds (EXPERIMENTS.md §Perf notes).
+    let t_drain = Instant::now();
+    barrier.wait();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let drain_seconds = t_drain.elapsed().as_secs_f64();
+
+    let (local, remote) = store.locality.snapshot();
+    RunMetrics {
+        fill_seconds,
+        drain_seconds,
+        inserts: inserts.load(Ordering::Relaxed),
+        finds: finds.load(Ordering::Relaxed),
+        erases: erases.load(Ordering::Relaxed),
+        found: found.load(Ordering::Relaxed),
+        local_accesses: local,
+        remote_accesses: remote,
+        final_len: store.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::store::StoreKind;
+    use crate::numa::Topology;
+    use crate::workload::OpMix;
+
+    fn run(kind: StoreKind, threads: usize, ops: u64, mix: OpMix) -> RunMetrics {
+        let store = Arc::new(ShardedStore::new(
+            kind,
+            4,
+            1 << 16,
+            Topology::virtual_grid(2, 2),
+            threads,
+        ));
+        let spec = WorkloadSpec::new("test", ops, mix, 1 << 16);
+        run_workload(&store, &spec, threads, &KeyRouter::Native, 42)
+    }
+
+    #[test]
+    fn all_ops_execute_exactly_once() {
+        let m = run(StoreKind::DetSkiplistLf, 4, 20_000, OpMix::W1);
+        assert_eq!(m.ops(), 20_000);
+        assert!(m.inserts > 1_000 && m.inserts < 3_000, "inserts {}", m.inserts);
+        assert!(m.finds > 16_000, "finds {}", m.finds);
+        assert!(m.final_len <= m.inserts);
+        assert!(m.drain_seconds > 0.0);
+    }
+
+    #[test]
+    fn w2_erases_happen() {
+        let m = run(StoreKind::RandomSkiplist, 4, 50_000, OpMix::W2);
+        assert!(m.erases > 20, "erases {}", m.erases);
+        assert_eq!(m.ops(), 50_000);
+    }
+
+    #[test]
+    fn hash_mix_on_every_table_kind() {
+        for kind in [
+            StoreKind::HashFixed,
+            StoreKind::HashTwoLevel,
+            StoreKind::HashSpo,
+            StoreKind::HashTwoLevelSpo,
+            StoreKind::HashTbbLike,
+        ] {
+            let m = run(kind, 2, 10_000, OpMix::HASH);
+            assert_eq!(m.ops(), 10_000, "{kind:?}");
+            assert!(m.inserts > 4_000, "{kind:?} inserts {}", m.inserts);
+        }
+    }
+
+    #[test]
+    fn locality_is_fully_local_by_construction() {
+        // Keys are routed to threads on their shard's home node, so every
+        // worker access must be local (the paper's design goal).
+        let m = run(StoreKind::HashFixed, 4, 10_000, OpMix::HASH);
+        assert_eq!(m.remote_accesses, 0, "hierarchical routing must be NUMA-local");
+        assert_eq!(m.local_accesses, 10_000);
+    }
+
+    #[test]
+    fn single_thread_run() {
+        let m = run(StoreKind::DetSkiplistLf, 1, 5_000, OpMix::W1);
+        assert_eq!(m.ops(), 5_000);
+    }
+}

@@ -1,0 +1,11 @@
+//! The hierarchical coordinator (the paper's system design): sharded
+//! stores homed on NUMA nodes, a per-thread lock-free queue fabric routing
+//! keys to NUMA-local workers, and the leader-driven workload engine.
+
+pub mod engine;
+pub mod router;
+pub mod store;
+
+pub use engine::{run_workload, RunMetrics};
+pub use router::RouterFabric;
+pub use store::{KvStore, ShardedStore, StoreKind};

@@ -1,0 +1,134 @@
+//! The per-thread queue fabric (paper §VI-VII): "We used lock-free queues,
+//! one per thread, for distributing keys. The queues distributed keys with
+//! upper 3-bits equal to S_i to a random thread in n_{s_i}."
+
+use crate::numa::Topology;
+use crate::queue::{ConcurrentQueue, LfQueue};
+use crate::util::rng::Rng;
+
+/// One lock-free queue per worker thread; keys are routed to a random
+/// thread pinned to the home NUMA node of their shard.
+pub struct RouterFabric {
+    queues: Vec<LfQueue>,
+    #[allow(dead_code)]
+    topology: Topology,
+    nshards: usize,
+    /// Precomputed thread ids per shard's home node (perf: `route_key` was
+    /// O(threads) per key with iterator scans — see EXPERIMENTS.md §Perf).
+    shard_threads: Vec<Vec<usize>>,
+}
+
+impl RouterFabric {
+    pub fn new(threads: usize, nshards: usize, topology: Topology, queue_blocks: usize) -> RouterFabric {
+        assert!(threads >= 1 && nshards.is_power_of_two());
+        let shard_threads = (0..nshards)
+            .map(|shard| {
+                let node = topology.shard_home(shard, threads);
+                let v: Vec<usize> =
+                    (0..threads).filter(|&t| topology.node_of_cpu(t) == node).collect();
+                if v.is_empty() {
+                    vec![0]
+                } else {
+                    v
+                }
+            })
+            .collect();
+        RouterFabric {
+            queues: (0..threads).map(|_| LfQueue::with_config(8192, queue_blocks, true)).collect(),
+            topology,
+            nshards,
+            shard_threads,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Route one key to a random thread on its shard's home node.
+    #[inline]
+    pub fn route_key(&self, key: u64, rng: &mut Rng) {
+        let shard = ((key >> 61) as usize) % self.nshards;
+        let region = &self.shard_threads[shard];
+        let t = region[rng.below(region.len() as u64) as usize];
+        self.queues[t].push(key);
+    }
+
+    /// Route a whole batch (leader-thread fill phase).
+    pub fn route_batch(&self, keys: &[u64], rng: &mut Rng) {
+        for &k in keys {
+            self.route_key(k, rng);
+        }
+    }
+
+    /// Worker-side pop from the thread's own (NUMA-local) queue.
+    #[inline]
+    pub fn pop_local(&self, thread_id: usize) -> Option<u64> {
+        self.queues[thread_id].pop()
+    }
+
+    /// Total keys still enqueued (diagnostics; approximate under churn).
+    pub fn pending(&self) -> u64 {
+        self.queues
+            .iter()
+            .map(|q| {
+                let s = q.stats();
+                s.pushes.saturating_sub(s.pops)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_land_on_home_node_threads() {
+        let topo = Topology::virtual_grid(2, 2); // 2 nodes x 2 cpus
+        let fabric = RouterFabric::new(4, 8, topo.clone(), 64);
+        let mut rng = Rng::new(1);
+        // shard 0 (MSBs 000) homes on node 0 -> threads 0,1
+        // shard 1 (MSBs 001) homes on node 1 -> threads 2,3
+        for i in 0..100u64 {
+            fabric.route_key(i, &mut rng); // shard 0
+            fabric.route_key(1 << 61 | i, &mut rng); // shard 1
+        }
+        let n0: u64 = (0..2).map(|t| fabric.queues[t].stats().pushes).sum();
+        let n1: u64 = (2..4).map(|t| fabric.queues[t].stats().pushes).sum();
+        assert_eq!(n0, 100, "shard-0 keys must stay on node 0");
+        assert_eq!(n1, 100, "shard-1 keys must stay on node 1");
+    }
+
+    #[test]
+    fn pop_local_drains() {
+        let topo = Topology::virtual_grid(1, 2);
+        let fabric = RouterFabric::new(2, 8, topo, 64);
+        let mut rng = Rng::new(2);
+        for i in 0..50u64 {
+            fabric.route_key(i, &mut rng);
+        }
+        let mut got = 0;
+        for t in 0..2 {
+            while fabric.pop_local(t).is_some() {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 50);
+        assert_eq!(fabric.pending(), 0);
+    }
+
+    #[test]
+    fn single_thread_fabric() {
+        let fabric = RouterFabric::new(1, 8, Topology::milan_virtual(), 64);
+        let mut rng = Rng::new(3);
+        for i in 0..20u64 {
+            fabric.route_key(i << 61 | i, &mut rng); // all shards
+        }
+        let mut got = 0;
+        while fabric.pop_local(0).is_some() {
+            got += 1;
+        }
+        assert_eq!(got, 20);
+    }
+}

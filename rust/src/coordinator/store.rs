@@ -1,0 +1,289 @@
+//! Sharded store: one data structure per NUMA shard (paper §VI-VIII:
+//! "we partitioned the skiplist into one skiplist per NUMA node ... the key
+//! space was partitioned across skiplists using 3 MSBs").
+
+use crate::hashtable::{
+    ConcurrentMap, FixedHashMap, SpoHashMap, TbbLikeHashMap, TwoLevelHashMap, TwoLevelSpoHashMap,
+};
+use crate::numa::{LocalityStats, Topology, LATENCY};
+use crate::skiplist::{DetSkiplist, FindMode, RandomSkiplist};
+
+/// Unified key-value interface over every structure in the repo.
+pub trait KvStore: Send + Sync {
+    fn insert(&self, key: u64, value: u64) -> bool;
+    fn get(&self, key: u64) -> Option<u64>;
+    fn erase(&self, key: u64) -> bool;
+    fn len(&self) -> u64;
+    fn name(&self) -> &'static str;
+}
+
+impl KvStore for DetSkiplist {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        DetSkiplist::insert(self, key, value)
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        DetSkiplist::get(self, key)
+    }
+    fn erase(&self, key: u64) -> bool {
+        DetSkiplist::erase(self, key)
+    }
+    fn len(&self) -> u64 {
+        DetSkiplist::len(self)
+    }
+    fn name(&self) -> &'static str {
+        "det-skiplist"
+    }
+}
+
+impl KvStore for RandomSkiplist {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        RandomSkiplist::insert(self, key, value)
+    }
+    fn get(&self, key: u64) -> Option<u64> {
+        RandomSkiplist::get(self, key)
+    }
+    fn erase(&self, key: u64) -> bool {
+        RandomSkiplist::erase(self, key)
+    }
+    fn len(&self) -> u64 {
+        RandomSkiplist::len(self)
+    }
+    fn name(&self) -> &'static str {
+        "random-skiplist"
+    }
+}
+
+macro_rules! kv_for_map {
+    ($t:ty) => {
+        impl KvStore for $t {
+            fn insert(&self, key: u64, value: u64) -> bool {
+                ConcurrentMap::insert(self, key, value)
+            }
+            fn get(&self, key: u64) -> Option<u64> {
+                ConcurrentMap::get(self, key)
+            }
+            fn erase(&self, key: u64) -> bool {
+                ConcurrentMap::erase(self, key)
+            }
+            fn len(&self) -> u64 {
+                ConcurrentMap::len(self)
+            }
+            fn name(&self) -> &'static str {
+                ConcurrentMap::name(self)
+            }
+        }
+    };
+}
+
+kv_for_map!(FixedHashMap);
+kv_for_map!(TwoLevelHashMap);
+kv_for_map!(SpoHashMap);
+kv_for_map!(TwoLevelSpoHashMap);
+kv_for_map!(TbbLikeHashMap);
+
+/// Which structure backs each shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreKind {
+    DetSkiplistLf,
+    DetSkiplistRwl,
+    RandomSkiplist,
+    HashFixed,
+    HashTwoLevel,
+    HashSpo,
+    HashTwoLevelSpo,
+    HashTbbLike,
+}
+
+impl StoreKind {
+    pub fn parse(s: &str) -> Option<StoreKind> {
+        Some(match s {
+            "det" | "det-lf" | "lkfreefind" => StoreKind::DetSkiplistLf,
+            "det-rwl" | "rwl" => StoreKind::DetSkiplistRwl,
+            "random" | "random-skiplist" => StoreKind::RandomSkiplist,
+            "fixed" | "binlist" => StoreKind::HashFixed,
+            "twolevel" => StoreKind::HashTwoLevel,
+            "spo" | "splitorder" => StoreKind::HashSpo,
+            "twolevel-spo" | "spo2" => StoreKind::HashTwoLevelSpo,
+            "tbb" | "tbb-like" => StoreKind::HashTbbLike,
+            _ => return None,
+        })
+    }
+
+    fn build(self, capacity: usize) -> Box<dyn KvStore> {
+        match self {
+            StoreKind::DetSkiplistLf => {
+                Box::new(DetSkiplist::with_capacity(FindMode::LockFree, capacity))
+            }
+            StoreKind::DetSkiplistRwl => {
+                Box::new(DetSkiplist::with_capacity(FindMode::ReadLocked, capacity))
+            }
+            StoreKind::RandomSkiplist => Box::new(RandomSkiplist::with_capacity(capacity)),
+            StoreKind::HashFixed => Box::new(FixedHashMap::new(1024)),
+            StoreKind::HashTwoLevel => Box::new(TwoLevelHashMap::new(1024, 256)),
+            StoreKind::HashSpo => {
+                Box::new(SpoHashMap::with_config(1024, 16, 1 << 17, capacity))
+            }
+            StoreKind::HashTwoLevelSpo => {
+                Box::new(TwoLevelSpoHashMap::with_config(32, 64, 16, 1 << 14, capacity / 16))
+            }
+            StoreKind::HashTbbLike => Box::new(TbbLikeHashMap::with_config(1 << 14, 4)),
+        }
+    }
+}
+
+/// The hierarchical store: one structure per shard, shards homed on
+/// (virtual) NUMA nodes by eqs (6)-(7).
+pub struct ShardedStore {
+    shards: Vec<Box<dyn KvStore>>,
+    topology: Topology,
+    threads: usize,
+    pub locality: LocalityStats,
+}
+
+impl ShardedStore {
+    /// `nshards` structures (paper: 8 = one per Milan NUMA node).
+    pub fn new(kind: StoreKind, nshards: usize, capacity_per_shard: usize, topology: Topology, threads: usize) -> ShardedStore {
+        assert!(nshards.is_power_of_two() && nshards <= 8);
+        ShardedStore {
+            shards: (0..nshards).map(|_| kind.build(capacity_per_shard)).collect(),
+            topology,
+            threads,
+            locality: LocalityStats::new(),
+        }
+    }
+
+    /// Shard of a key: top 3 MSBs folded onto the shard count.
+    #[inline]
+    pub fn shard_of(&self, key: u64) -> usize {
+        ((key >> 61) as usize) % self.shards.len()
+    }
+
+    /// Home NUMA node of a shard under the current thread count (eq. 7).
+    #[inline]
+    pub fn home_node(&self, shard: usize) -> usize {
+        self.topology.shard_home(shard, self.threads)
+    }
+
+    /// Account locality of an access from `thread_id` to `key`'s shard and
+    /// charge the latency model if the access is remote.
+    #[inline]
+    pub fn account(&self, thread_id: usize, key: u64) {
+        let home = self.home_node(self.shard_of(key));
+        let from = self.topology.node_of_cpu(thread_id);
+        let local = home == from;
+        self.locality.record(local);
+        if !local {
+            LATENCY.charge_remote();
+        }
+    }
+
+    #[inline]
+    pub fn shard(&self, key: u64) -> &dyn KvStore {
+        &*self.shards[self.shard_of(key)]
+    }
+
+    pub fn insert(&self, key: u64, value: u64) -> bool {
+        self.shard(key).insert(key, value)
+    }
+
+    pub fn get(&self, key: u64) -> Option<u64> {
+        self.shard(key).get(key)
+    }
+
+    pub fn erase(&self, key: u64) -> bool {
+        self.shard(key).erase(key)
+    }
+
+    pub fn len(&self) -> u64 {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        self.shards[0].name()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_routing_by_msbs() {
+        let s = ShardedStore::new(StoreKind::HashFixed, 8, 1 << 10, Topology::milan_virtual(), 128);
+        assert_eq!(s.shard_of(0), 0);
+        assert_eq!(s.shard_of(u64::MAX), 7);
+        assert_eq!(s.shard_of(1 << 61), 1);
+        assert_eq!(s.num_shards(), 8);
+    }
+
+    #[test]
+    fn insert_routes_and_len_aggregates() {
+        let s = ShardedStore::new(StoreKind::DetSkiplistLf, 4, 1 << 12, Topology::milan_virtual(), 64);
+        for i in 0..100u64 {
+            // spread keys across shards via MSBs
+            let key = (i % 4) << 61 | i;
+            assert!(s.insert(key, i));
+        }
+        assert_eq!(s.len(), 100);
+        for i in 0..100u64 {
+            let key = (i % 4) << 61 | i;
+            assert_eq!(s.get(key), Some(i));
+        }
+    }
+
+    #[test]
+    fn all_kinds_build_and_work() {
+        for kind in [
+            StoreKind::DetSkiplistLf,
+            StoreKind::DetSkiplistRwl,
+            StoreKind::RandomSkiplist,
+            StoreKind::HashFixed,
+            StoreKind::HashTwoLevel,
+            StoreKind::HashSpo,
+            StoreKind::HashTwoLevelSpo,
+            StoreKind::HashTbbLike,
+        ] {
+            let s = ShardedStore::new(kind, 2, 1 << 12, Topology::milan_virtual(), 8);
+            assert!(s.insert(42, 1), "{kind:?}");
+            assert!(!s.insert(42, 2), "{kind:?}");
+            assert_eq!(s.get(42), Some(1), "{kind:?}");
+            assert!(s.erase(42), "{kind:?}");
+            assert_eq!(s.get(42), None, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn locality_accounting() {
+        let s = ShardedStore::new(StoreKind::HashFixed, 8, 1 << 10, Topology::milan_virtual(), 128);
+        // thread 0 is on node 0; shard 0's home with 128 threads is node 0
+        s.account(0, 0); // local
+        // shard 7 homes on node 7; access from thread 0 is remote
+        s.account(0, u64::MAX);
+        let (l, r) = s.locality.snapshot();
+        assert_eq!((l, r), (1, 1));
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(StoreKind::parse("det"), Some(StoreKind::DetSkiplistLf));
+        assert_eq!(StoreKind::parse("rwl"), Some(StoreKind::DetSkiplistRwl));
+        assert_eq!(StoreKind::parse("spo2"), Some(StoreKind::HashTwoLevelSpo));
+        assert_eq!(StoreKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,101 @@
+//! Experiment T1 (Table I / figure 3): concurrent queue throughput,
+//! tbb-like vs the paper's lkfree queue.
+//!
+//! Methodology (§IV): a vector of queues, one per thread; threads pinned in
+//! id order; pushes go to a random queue within the thread's NUMA region,
+//! pops come from the thread's local queue; ~50/50 mix; block size 8192.
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use crate::numa::{pin_to_cpu, Topology};
+use crate::queue::{ConcurrentQueue, LfQueue, TbbLikeQueue};
+use crate::util::rng::Rng;
+
+/// Which queue implementation to benchmark.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueImpl {
+    Lkfree,
+    TbbLike,
+    MsBoostLike,
+    Mutex,
+}
+
+impl QueueImpl {
+    pub fn build(self, blocks: usize) -> Box<dyn ConcurrentQueue> {
+        match self {
+            QueueImpl::Lkfree => Box::new(LfQueue::with_config(8192, blocks, true)),
+            QueueImpl::TbbLike => Box::new(TbbLikeQueue::with_config(8192, blocks.max(1 << 12))),
+            QueueImpl::MsBoostLike => Box::new(crate::queue::MsQueue::new()),
+            QueueImpl::Mutex => Box::new(crate::queue::MutexQueue::new()),
+        }
+    }
+}
+
+/// Run `total_ops` (~50% push / 50% pop) over `threads` queues.
+/// Returns wall seconds for the whole workload.
+pub fn run_queue_workload(
+    imp: QueueImpl,
+    threads: usize,
+    total_ops: u64,
+    topology: &Topology,
+    seed: u64,
+) -> f64 {
+    let blocks = ((total_ops as usize / threads) / 8192 + 4).next_power_of_two().max(64);
+    let queues: Arc<Vec<Box<dyn ConcurrentQueue>>> =
+        Arc::new((0..threads).map(|_| imp.build(blocks)).collect());
+    let barrier = Arc::new(Barrier::new(threads + 1));
+    let per_thread = total_ops / threads as u64;
+    let mut handles = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let queues = queues.clone();
+        let barrier = barrier.clone();
+        let topo = topology.clone();
+        handles.push(std::thread::spawn(move || {
+            pin_to_cpu(t);
+            // threads in this NUMA region (for push targets)
+            let node = topo.node_of_cpu(t);
+            let region: Vec<usize> =
+                (0..queues.len()).filter(|&u| topo.node_of_cpu(u) == node).collect();
+            let mut rng = Rng::new(seed ^ (t as u64) << 32);
+            barrier.wait();
+            for i in 0..per_thread {
+                if rng.chance(1, 2) {
+                    let target = region[rng.below(region.len() as u64) as usize];
+                    queues[target].push(i);
+                } else {
+                    let _ = queues[t].pop();
+                }
+            }
+        }));
+    }
+    let t0 = Instant::now(); // before the barrier: see engine.rs timing note
+    barrier.wait();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_impls_complete() {
+        let topo = Topology::virtual_grid(2, 2);
+        for imp in [QueueImpl::Lkfree, QueueImpl::TbbLike] {
+            let secs = run_queue_workload(imp, 4, 20_000, &topo, 7);
+            assert!(secs > 0.0 && secs < 60.0, "{imp:?} took {secs}");
+        }
+    }
+
+    #[test]
+    fn baselines_complete() {
+        let topo = Topology::virtual_grid(1, 2);
+        for imp in [QueueImpl::MsBoostLike, QueueImpl::Mutex] {
+            let secs = run_queue_workload(imp, 2, 10_000, &topo, 9);
+            assert!(secs > 0.0);
+        }
+    }
+}

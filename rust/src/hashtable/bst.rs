@@ -1,0 +1,248 @@
+//! Per-slot binary search tree (collision resolution for the fixed and
+//! two-level tables, §VII items 1-2).
+//!
+//! The tree itself is sequential: every access happens under the owning
+//! slot's reader-writer lock (shared for `find`, exclusive for
+//! `insert`/`erase`), exactly the paper's design. Nodes live in a flat
+//! `Vec` arena with an internal free list so slot-local memory stays in a
+//! few blocks (the §V locality argument).
+
+#[derive(Clone, Copy, Debug)]
+struct BstNode {
+    key: u64,
+    value: u64,
+    left: u32,
+    right: u32,
+}
+
+const NIL: u32 = u32::MAX;
+
+/// Unbalanced BST keyed by the *scrambled* hash (insertion order of
+/// scrambled keys is effectively random, keeping expected depth O(log n)).
+#[derive(Debug, Default)]
+pub struct Bst {
+    nodes: Vec<BstNode>,
+    free: Vec<u32>,
+    root: u32,
+    len: usize,
+}
+
+impl Bst {
+    pub fn new() -> Bst {
+        Bst { nodes: Vec::new(), free: Vec::new(), root: NIL, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn alloc(&mut self, key: u64, value: u64) -> u32 {
+        let n = BstNode { key, value, left: NIL, right: NIL };
+        if let Some(i) = self.free.pop() {
+            self.nodes[i as usize] = n;
+            i
+        } else {
+            self.nodes.push(n);
+            (self.nodes.len() - 1) as u32
+        }
+    }
+
+    /// Insert; false on duplicate.
+    pub fn insert(&mut self, key: u64, value: u64) -> bool {
+        if self.root == NIL {
+            self.root = self.alloc(key, value);
+            self.len = 1;
+            return true;
+        }
+        let mut cur = self.root;
+        loop {
+            let n = self.nodes[cur as usize];
+            if key == n.key {
+                return false;
+            }
+            let next = if key < n.key { n.left } else { n.right };
+            if next == NIL {
+                let fresh = self.alloc(key, value);
+                let n = &mut self.nodes[cur as usize];
+                if key < n.key {
+                    n.left = fresh;
+                } else {
+                    n.right = fresh;
+                }
+                self.len += 1;
+                return true;
+            }
+            cur = next;
+        }
+    }
+
+    pub fn get(&self, key: u64) -> Option<u64> {
+        let mut cur = self.root;
+        while cur != NIL {
+            let n = &self.nodes[cur as usize];
+            if key == n.key {
+                return Some(n.value);
+            }
+            cur = if key < n.key { n.left } else { n.right };
+        }
+        None
+    }
+
+    /// Remove; false if absent. Standard BST delete (successor splice).
+    pub fn erase(&mut self, key: u64) -> bool {
+        let mut parent = NIL;
+        let mut cur = self.root;
+        while cur != NIL {
+            let n = self.nodes[cur as usize];
+            if key == n.key {
+                break;
+            }
+            parent = cur;
+            cur = if key < n.key { n.left } else { n.right };
+        }
+        if cur == NIL {
+            return false;
+        }
+        let n = self.nodes[cur as usize];
+        let replacement = if n.left == NIL {
+            n.right
+        } else if n.right == NIL {
+            n.left
+        } else {
+            // splice in-order successor (leftmost of right subtree)
+            let mut sp = cur;
+            let mut s = n.right;
+            while self.nodes[s as usize].left != NIL {
+                sp = s;
+                s = self.nodes[s as usize].left;
+            }
+            let succ = self.nodes[s as usize];
+            self.nodes[cur as usize].key = succ.key;
+            self.nodes[cur as usize].value = succ.value;
+            // remove s (has no left child)
+            if sp == cur {
+                self.nodes[sp as usize].right = succ.right;
+            } else {
+                self.nodes[sp as usize].left = succ.right;
+            }
+            self.free.push(s);
+            self.len -= 1;
+            return true;
+        };
+        if parent == NIL {
+            self.root = replacement;
+        } else if self.nodes[parent as usize].left == cur {
+            self.nodes[parent as usize].left = replacement;
+        } else {
+            self.nodes[parent as usize].right = replacement;
+        }
+        self.free.push(cur);
+        self.len -= 1;
+        true
+    }
+
+    /// Maximum depth (collision-chain cost metric for Table V analysis).
+    pub fn depth(&self) -> usize {
+        fn rec(nodes: &[BstNode], cur: u32) -> usize {
+            if cur == NIL {
+                0
+            } else {
+                let n = &nodes[cur as usize];
+                1 + rec(nodes, n.left).max(rec(nodes, n.right))
+            }
+        }
+        rec(&self.nodes, self.root)
+    }
+
+    /// In-order keys (test helper).
+    pub fn keys(&self) -> Vec<u64> {
+        fn rec(nodes: &[BstNode], cur: u32, out: &mut Vec<u64>) {
+            if cur != NIL {
+                let n = &nodes[cur as usize];
+                rec(nodes, n.left, out);
+                out.push(n.key);
+                rec(nodes, n.right, out);
+            }
+        }
+        let mut out = Vec::with_capacity(self.len);
+        rec(&self.nodes, self.root, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn basic_ops() {
+        let mut t = Bst::new();
+        assert!(t.insert(5, 50));
+        assert!(t.insert(3, 30));
+        assert!(t.insert(8, 80));
+        assert!(!t.insert(5, 55));
+        assert_eq!(t.get(3), Some(30));
+        assert_eq!(t.get(4), None);
+        assert!(t.erase(3));
+        assert!(!t.erase(3));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.keys(), vec![5, 8]);
+    }
+
+    #[test]
+    fn erase_two_children_and_root() {
+        let mut t = Bst::new();
+        for k in [50u64, 30, 70, 20, 40, 60, 80] {
+            t.insert(k, k);
+        }
+        assert!(t.erase(50)); // root with two children
+        assert!(t.erase(30)); // internal with two children
+        assert_eq!(t.keys(), vec![20, 40, 60, 70, 80]);
+        for k in [20u64, 40, 60, 70, 80] {
+            assert_eq!(t.get(k), Some(k));
+        }
+    }
+
+    #[test]
+    fn matches_btreemap_oracle() {
+        let mut t = Bst::new();
+        let mut oracle = BTreeMap::new();
+        let mut rng = Rng::new(13);
+        for _ in 0..20_000 {
+            let k = rng.below(300);
+            match rng.below(3) {
+                0 => {
+                    let e = oracle.contains_key(&k);
+                    assert_eq!(t.insert(k, k * 2), !e);
+                    oracle.entry(k).or_insert(k * 2);
+                }
+                1 => assert_eq!(t.erase(k), oracle.remove(&k).is_some()),
+                _ => assert_eq!(t.get(k), oracle.get(&k).copied()),
+            }
+            assert_eq!(t.len(), oracle.len());
+        }
+        assert_eq!(t.keys(), oracle.keys().copied().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn node_reuse_via_freelist() {
+        let mut t = Bst::new();
+        for k in 0..100u64 {
+            t.insert(k, k);
+        }
+        for k in 0..100u64 {
+            t.erase(k);
+        }
+        let cap = t.nodes.len();
+        for k in 0..100u64 {
+            t.insert(k, k);
+        }
+        assert_eq!(t.nodes.len(), cap, "freed nodes must be reused");
+    }
+}

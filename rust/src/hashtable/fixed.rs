@@ -1,0 +1,224 @@
+//! Fixed-slot MWMR hash table with a BST per slot (§VII variant 1,
+//! "BinLists"/"fixed" in Tables V/VII/VIII).
+//!
+//! A constant power-of-two number of slots; each slot is a reader-writer
+//! lock protecting an unbalanced BST keyed by H(k). Scales with slot count
+//! but degrades for large workloads as per-slot trees deepen — exactly the
+//! behaviour Table V demonstrates against the two-level variant.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sync::RwSpinLock;
+
+use super::bst::Bst;
+use super::hash::{hash_key, slot_of};
+use super::traits::ConcurrentMap;
+
+struct Slot {
+    lock: RwSpinLock,
+    tree: std::cell::UnsafeCell<Bst>,
+}
+
+unsafe impl Send for Slot {}
+unsafe impl Sync for Slot {}
+
+/// Fixed-size table: `m` slots, BST collision chains.
+pub struct FixedHashMap {
+    slots: Box<[Slot]>,
+    len: AtomicU64,
+}
+
+impl FixedHashMap {
+    /// `m` must be a power of two (the paper uses 8192).
+    pub fn new(m: usize) -> FixedHashMap {
+        assert!(m.is_power_of_two());
+        FixedHashMap {
+            slots: (0..m)
+                .map(|_| Slot { lock: RwSpinLock::new(), tree: std::cell::UnsafeCell::new(Bst::new()) })
+                .collect(),
+            len: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn slot(&self, key: u64) -> (&Slot, u64) {
+        let h = hash_key(key);
+        (&self.slots[slot_of(h, self.slots.len())], h)
+    }
+
+    /// Max BST depth across slots (collision metric for Table V).
+    pub fn max_depth(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| {
+                let _g = s.lock.read();
+                unsafe { &*s.tree.get() }.depth()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Per-slot load vector (load-balance check: ~N/M per slot, §VIII).
+    pub fn slot_loads(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .map(|s| {
+                let _g = s.lock.read();
+                unsafe { &*s.tree.get() }.len()
+            })
+            .collect()
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+impl ConcurrentMap for FixedHashMap {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        let (s, h) = self.slot(key);
+        let _g = s.lock.write();
+        // the BST is keyed by the scrambled hash to stay shallow; ties on
+        // full 64-bit H(k) are impossible for distinct keys (bijection)
+        let ok = unsafe { &mut *s.tree.get() }.insert(h, value);
+        if ok {
+            self.len.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    fn get(&self, key: u64) -> Option<u64> {
+        let (s, h) = self.slot(key);
+        let _g = s.lock.read();
+        unsafe { &*s.tree.get() }.get(h)
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        let (s, h) = self.slot(key);
+        let _g = s.lock.write();
+        let ok = unsafe { &mut *s.tree.get() }.erase(h);
+        if ok {
+            self.len.fetch_sub(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    fn len(&self) -> u64 {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed-binlist"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic() {
+        let m = FixedHashMap::new(16);
+        assert!(m.insert(1, 10));
+        assert!(!m.insert(1, 11));
+        assert_eq!(m.get(1), Some(10));
+        assert!(m.erase(1));
+        assert_eq!(m.get(1), None);
+        assert_eq!(m.len(), 0);
+    }
+
+    #[test]
+    fn oracle_sequential() {
+        let m = FixedHashMap::new(64);
+        let mut oracle = BTreeMap::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..20_000 {
+            let k = rng.below(1_000);
+            match rng.below(3) {
+                0 => {
+                    let fresh = !oracle.contains_key(&k);
+                    assert_eq!(m.insert(k, k + 1), fresh);
+                    oracle.entry(k).or_insert(k + 1);
+                }
+                1 => assert_eq!(m.erase(k), oracle.remove(&k).is_some()),
+                _ => assert_eq!(m.get(k), oracle.get(&k).copied()),
+            }
+        }
+        assert_eq!(m.len() as usize, oracle.len());
+    }
+
+    #[test]
+    fn concurrent_disjoint() {
+        let m = Arc::new(FixedHashMap::new(256));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..3_000u64 {
+                    assert!(m.insert(t * 1_000_000 + i, i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.len(), 12_000);
+        for t in 0..4u64 {
+            assert_eq!(m.get(t * 1_000_000 + 7), Some(7));
+        }
+    }
+
+    #[test]
+    fn slots_are_load_balanced() {
+        let m = FixedHashMap::new(64);
+        let n = 64 * 100;
+        for k in 0..n as u64 {
+            m.insert(k, k);
+        }
+        let loads = m.slot_loads();
+        let mean = 100.0;
+        for (i, &l) in loads.iter().enumerate() {
+            assert!(
+                (l as f64 - mean).abs() < 6.0 * mean.sqrt(),
+                "slot {i} load {l} far from mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn concurrent_mixed_same_keys() {
+        let m = Arc::new(FixedHashMap::new(32));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t + 50);
+                for _ in 0..5_000 {
+                    let k = rng.below(100);
+                    match rng.below(3) {
+                        0 => {
+                            m.insert(k, k * 7);
+                        }
+                        1 => {
+                            m.erase(k);
+                        }
+                        _ => {
+                            if let Some(v) = m.get(k) {
+                                assert_eq!(v, k * 7);
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // len consistent with actual contents
+        let total: usize = m.slot_loads().iter().sum();
+        assert_eq!(total as u64, m.len());
+    }
+}

@@ -1,0 +1,118 @@
+//! The repo-wide key scrambler H(k) (paper §VIII eq. 8).
+//!
+//! Bit-exact with the L1 Pallas kernel and the jnp oracle — see
+//! `util::rng::mix64`; this module just re-exports it under the hash-table
+//! vocabulary and adds slot/shard helpers.
+
+pub use crate::util::rng::{mix64, GOLDEN};
+
+/// H(k): scramble a 64-bit key (the `boost::hash` stand-in).
+#[inline(always)]
+pub fn hash_key(k: u64) -> u64 {
+    mix64(k)
+}
+
+/// Slot for a hash in a power-of-two table of `m` slots (eq. 8 with the
+/// modulo reduced to the low bits, exactly as the paper does).
+#[inline(always)]
+pub fn slot_of(h: u64, m: usize) -> usize {
+    debug_assert!(m.is_power_of_two());
+    (h & (m as u64 - 1)) as usize
+}
+
+/// NUMA shard for a key: the top `bits` MSBs (paper §VI uses bits 63-61).
+#[inline(always)]
+pub fn shard_of(key: u64, bits: u32) -> usize {
+    if bits == 0 {
+        0
+    } else {
+        (key >> (64 - bits)) as usize
+    }
+}
+
+/// Reverse the bits of a 64-bit word (split-order list order, §VIII).
+#[inline(always)]
+pub fn reverse_bits(x: u64) -> u64 {
+    x.reverse_bits()
+}
+
+/// Split-order "regular" key: reversed hash with the MSB set so dummy nodes
+/// (reversed slot indices, MSB clear) sort strictly before regular nodes of
+/// the same slot (Shalev & Shavit).
+#[inline(always)]
+pub fn so_regular_key(h: u64) -> u64 {
+    reverse_bits(h | (1u64 << 63))
+}
+
+/// Split-order dummy key for a slot index.
+#[inline(always)]
+pub fn so_dummy_key(slot: u64) -> u64 {
+    reverse_bits(slot)
+}
+
+/// Parent slot in the split-order recursive initialization: clear the
+/// highest set bit.
+#[inline(always)]
+pub fn so_parent(slot: usize) -> usize {
+    if slot == 0 {
+        0
+    } else {
+        slot & !(1usize << (usize::BITS - 1 - slot.leading_zeros()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_matches_kernel() {
+        for (i, want) in GOLDEN.iter().enumerate() {
+            assert_eq!(hash_key(i as u64), *want);
+        }
+    }
+
+    #[test]
+    fn slot_is_low_bits() {
+        assert_eq!(slot_of(0xABCD, 256), 0xCD);
+        assert_eq!(slot_of(u64::MAX, 8192), 8191);
+    }
+
+    #[test]
+    fn shard_is_high_bits() {
+        assert_eq!(shard_of(0, 3), 0);
+        assert_eq!(shard_of(u64::MAX, 3), 7);
+        assert_eq!(shard_of(1u64 << 61, 3), 1);
+        assert_eq!(shard_of(123, 0), 0);
+    }
+
+    #[test]
+    fn dummy_sorts_before_regulars_of_slot() {
+        // slot 3 in a 8-slot table: dummy key < any regular key whose low
+        // bits are 3.
+        let d = so_dummy_key(3);
+        for h in [3u64, 11, 19, 0xFFF3, u64::MAX & !4] {
+            if h & 7 == 3 {
+                assert!(d < so_regular_key(h), "h={h:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn so_parent_clears_top_bit() {
+        assert_eq!(so_parent(1), 0);
+        assert_eq!(so_parent(5), 1);
+        assert_eq!(so_parent(12), 4);
+        assert_eq!(so_parent(1024 + 17), 17);
+        assert_eq!(so_parent(0), 0);
+    }
+
+    #[test]
+    fn regular_keys_order_by_reversed_hash() {
+        // within a slot, regular keys are ordered by bit-reversed hash
+        let a = so_regular_key(0b0001);
+        let b = so_regular_key(0b1001);
+        assert!(a < b || a > b); // total order, no equality for distinct h
+        assert_ne!(a, b);
+    }
+}

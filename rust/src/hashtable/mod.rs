@@ -1,0 +1,25 @@
+//! Concurrent MWMR hash tables (paper §VII-VIII).
+//!
+//! Variants, in the paper's order:
+//! 1. [`FixedHashMap`] — fixed slots, BST per slot ("BinLists").
+//! 2. [`TwoLevelHashMap`] — two-level with BSTs and threshold expansion.
+//! 3. [`SpoHashMap`] — split-order list table (RW locks, lazy slot init,
+//!    migration-free resize).
+//! 4. [`TwoLevelSpoHashMap`] — hierarchical split-order (the winner).
+//! Baseline: [`TbbLikeHashMap`] — chained buckets + migrating rehash.
+
+pub mod bst;
+pub mod fixed;
+pub mod hash;
+pub mod splitorder;
+pub mod tbb_like;
+pub mod traits;
+pub mod twolevel;
+pub mod twolevel_spo;
+
+pub use fixed::FixedHashMap;
+pub use splitorder::{SpoHashMap, SpoStats};
+pub use tbb_like::TbbLikeHashMap;
+pub use traits::ConcurrentMap;
+pub use twolevel::TwoLevelHashMap;
+pub use twolevel_spo::TwoLevelSpoHashMap;

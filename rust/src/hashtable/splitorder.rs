@@ -1,0 +1,428 @@
+//! Split-order hash table (§VII variant 3, "SPO") after Shalev & Shavit,
+//! with the paper's locking twist: read-write locks on the whole table (for
+//! resizing) and per slot, instead of the original lock-free CAS list.
+//!
+//! One shared linked list holds every node sorted by *split-order key*
+//! (bit-reversed hash; regular nodes additionally set the pre-reversal MSB,
+//! so after reversal their LSB is 1 and slot dummies — reversed slot
+//! indices, LSB 0 — sort strictly first in their region). Slots point at
+//! dummy nodes. Resizing just doubles the active slot count: **no data
+//! migration** — new slots are initialized lazily by splicing a dummy into
+//! the parent slot's region on first touch (recursive parent walk, the
+//! cache-miss source Table VI measures).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::skiplist::node::{NodeArena, NodeRef, SENTINEL};
+use crate::sync::RwSpinLock;
+
+use super::hash::{hash_key, so_dummy_key, so_parent, so_regular_key};
+use super::traits::ConcurrentMap;
+
+/// "uninitialized slot" marker (a NodeRef can never be all-ones: index
+/// u32::MAX is never allocated by the arena sizes we use).
+const UNINIT: u64 = u64::MAX;
+
+/// Cache-behaviour proxy counters for Table VI: the one-level table's lazy
+/// slot initialization chases far-apart parent slots; the two-level variant
+/// keeps chains short and local.
+#[derive(Debug, Default, Clone)]
+pub struct SpoStats {
+    pub init_parent_hops: u64,
+    pub walk_steps: u64,
+    pub resizes: u64,
+}
+
+#[derive(Default)]
+struct AtomicSpoStats {
+    init_parent_hops: AtomicU64,
+    walk_steps: AtomicU64,
+    resizes: AtomicU64,
+}
+
+/// Split-order table. `seed` initial slots, growing by doubling while
+/// `len > active_slots * max_collisions`.
+pub struct SpoHashMap {
+    arena: NodeArena,
+    /// head of the shared list = dummy of slot 0 (kept for list-order tests).
+    #[cfg_attr(not(test), allow(dead_code))]
+    pub(crate) head: NodeRef,
+    slots: Box<[AtomicU64]>,
+    locks: Box<[RwSpinLock]>,
+    active: AtomicUsize,
+    resize_lock: RwSpinLock,
+    max_collisions: usize,
+    len: AtomicU64,
+    stats: AtomicSpoStats,
+}
+
+impl SpoHashMap {
+    /// The paper's defaults: seed 8192 slots, 16 max collisions.
+    pub fn new() -> SpoHashMap {
+        Self::with_config(8192, 16, 1 << 17, 1 << 22)
+    }
+
+    /// `seed` initial active slots, growth capped at `max_slots`, arena
+    /// capacity `capacity` nodes.
+    pub fn with_config(seed: usize, max_collisions: usize, max_slots: usize, capacity: usize) -> SpoHashMap {
+        assert!(seed.is_power_of_two() && max_slots.is_power_of_two() && seed <= max_slots);
+        let block = 8192.min(capacity.max(16));
+        let blocks = capacity.div_ceil(block) + 2;
+        let arena = NodeArena::new(block, blocks);
+        // dummy for slot 0 heads the list.
+        let head = arena.alloc(so_dummy_key(0), SENTINEL, SENTINEL, 0, 0);
+        let slots: Box<[AtomicU64]> = (0..max_slots).map(|_| AtomicU64::new(UNINIT)).collect();
+        slots[0].store(head, Ordering::Release);
+        SpoHashMap {
+            arena,
+            head,
+            slots,
+            locks: (0..max_slots).map(|_| RwSpinLock::new()).collect(),
+            active: AtomicUsize::new(seed),
+            resize_lock: RwSpinLock::new(),
+            max_collisions,
+            len: AtomicU64::new(0),
+            stats: AtomicSpoStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> SpoStats {
+        SpoStats {
+            init_parent_hops: self.stats.init_parent_hops.load(Ordering::Relaxed),
+            walk_steps: self.stats.walk_steps.load(Ordering::Relaxed),
+            resizes: self.stats.resizes.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn active_slots(&self) -> usize {
+        self.active.load(Ordering::Acquire)
+    }
+
+    /// Ensure `slot`'s dummy exists; recursively initializes parents.
+    /// Caller holds the table read lock; this takes parent slot write locks.
+    fn ensure_slot(&self, slot: usize) -> NodeRef {
+        let cur = self.slots[slot].load(Ordering::Acquire);
+        if cur != UNINIT {
+            return cur;
+        }
+        let parent = so_parent(slot);
+        // distance-weighted: the cache cost Table VI measures is parent
+        // slots being FAR APART in the slot array (flat table: distance up
+        // to active/2; hierarchical: bounded by the small table size).
+        self.stats
+            .init_parent_hops
+            .fetch_add((slot - parent) as u64 + 1, Ordering::Relaxed);
+        let pdummy = self.ensure_slot(parent);
+        // splice dummy(slot) into the parent's region under its lock
+        let plock = &self.locks[parent];
+        plock.lock();
+        // re-check: someone may have initialized it while we waited
+        let cur = self.slots[slot].load(Ordering::Acquire);
+        if cur != UNINIT {
+            plock.unlock();
+            return cur;
+        }
+        let dkey = so_dummy_key(slot as u64);
+        // find insert position from the parent's dummy
+        let (mut pred, mut steps) = (pdummy, 0u64);
+        loop {
+            let pn = self.arena.node(pred);
+            let (_, next) = pn.key_next();
+            if next == SENTINEL {
+                break;
+            }
+            let (nk, _) = self.arena.node(next).key_next();
+            if nk >= dkey {
+                break;
+            }
+            pred = next;
+            steps += 1;
+        }
+        self.stats.walk_steps.fetch_add(steps, Ordering::Relaxed);
+        let prn = self.arena.node(pred);
+        let (pk, pnext) = prn.key_next();
+        let dummy = self.arena.alloc(dkey, pnext, SENTINEL, 0, 0);
+        prn.set_key_next(pk, dummy);
+        self.slots[slot].store(dummy, Ordering::Release);
+        plock.unlock();
+        dummy
+    }
+
+    /// Double the active slot count if occupancy exceeds the threshold.
+    fn maybe_resize(&self) {
+        let n = self.active.load(Ordering::Acquire);
+        if (self.len() as usize) <= n * self.max_collisions || n * 2 > self.slots.len() {
+            return;
+        }
+        // exclusive table lock; the operation itself is O(1)
+        self.resize_lock.lock();
+        let n = self.active.load(Ordering::Acquire);
+        if (self.len() as usize) > n * self.max_collisions && n * 2 <= self.slots.len() {
+            self.active.store(n * 2, Ordering::Release);
+            self.stats.resizes.fetch_add(1, Ordering::Relaxed);
+        }
+        self.resize_lock.unlock();
+    }
+
+    /// slot index for hash `h` under the current active count.
+    #[inline]
+    fn slot_index(&self, h: u64) -> usize {
+        (h & (self.active.load(Ordering::Acquire) as u64 - 1)) as usize
+    }
+
+    /// Walk the slot region for `sokey`; returns (pred, Option<node>) where
+    /// node is the exact match. Caller holds the slot lock.
+    fn locate(&self, dummy: NodeRef, sokey: u64) -> (NodeRef, Option<NodeRef>) {
+        let mut pred = dummy;
+        let mut steps = 0u64;
+        loop {
+            let (_, next) = self.arena.node(pred).key_next();
+            if next == SENTINEL {
+                self.stats.walk_steps.fetch_add(steps, Ordering::Relaxed);
+                return (pred, None);
+            }
+            let (nk, _) = self.arena.node(next).key_next();
+            if nk == sokey {
+                self.stats.walk_steps.fetch_add(steps, Ordering::Relaxed);
+                return (pred, Some(next));
+            }
+            if nk > sokey {
+                self.stats.walk_steps.fetch_add(steps, Ordering::Relaxed);
+                return (pred, None);
+            }
+            pred = next;
+            steps += 1;
+        }
+    }
+}
+
+impl Default for SpoHashMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ConcurrentMap for SpoHashMap {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        let h = hash_key(key);
+        let sokey = so_regular_key(h);
+        self.resize_lock.lock_shared();
+        let slot = self.slot_index(h);
+        let dummy = self.ensure_slot(slot);
+        let lock = &self.locks[slot];
+        lock.lock();
+        let (pred, found) = self.locate(dummy, sokey);
+        let ok = if found.is_some() {
+            false
+        } else {
+            let prn = self.arena.node(pred);
+            let (pk, pnext) = prn.key_next();
+            let node = self.arena.alloc(sokey, pnext, SENTINEL, value, 0);
+            prn.set_key_next(pk, node);
+            true
+        };
+        lock.unlock();
+        self.resize_lock.unlock_shared();
+        if ok {
+            self.len.fetch_add(1, Ordering::Relaxed);
+            self.maybe_resize();
+        }
+        ok
+    }
+
+    fn get(&self, key: u64) -> Option<u64> {
+        let h = hash_key(key);
+        let sokey = so_regular_key(h);
+        self.resize_lock.lock_shared();
+        let slot = self.slot_index(h);
+        let dummy = self.ensure_slot(slot);
+        let lock = &self.locks[slot];
+        lock.lock_shared();
+        let (_, found) = self.locate(dummy, sokey);
+        let r = found.map(|n| self.arena.node(n).value.load(Ordering::Relaxed));
+        lock.unlock_shared();
+        self.resize_lock.unlock_shared();
+        r
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        let h = hash_key(key);
+        let sokey = so_regular_key(h);
+        self.resize_lock.lock_shared();
+        let slot = self.slot_index(h);
+        let dummy = self.ensure_slot(slot);
+        let lock = &self.locks[slot];
+        lock.lock();
+        let (pred, found) = self.locate(dummy, sokey);
+        let ok = if let Some(node) = found {
+            let prn = self.arena.node(pred);
+            let (pk, _) = prn.key_next();
+            let nn = self.arena.node(node);
+            let (_, nnext) = nn.key_next();
+            prn.set_key_next(pk, nnext);
+            nn.mark.store(true, Ordering::Release);
+            self.arena.retire(node);
+            true
+        } else {
+            false
+        };
+        lock.unlock();
+        self.resize_lock.unlock_shared();
+        if ok {
+            self.len.fetch_sub(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    fn len(&self) -> u64 {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    fn name(&self) -> &'static str {
+        "splitorder"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    fn small() -> SpoHashMap {
+        SpoHashMap::with_config(4, 4, 1 << 10, 1 << 14)
+    }
+
+    #[test]
+    fn basic() {
+        let m = small();
+        assert!(m.insert(1, 10));
+        assert!(!m.insert(1, 11));
+        assert_eq!(m.get(1), Some(10));
+        assert!(m.erase(1));
+        assert!(!m.erase(1));
+        assert_eq!(m.get(1), None);
+    }
+
+    #[test]
+    fn grows_without_migration_and_keeps_contents() {
+        let m = small();
+        for k in 0..2_000u64 {
+            assert!(m.insert(k, k * 3));
+        }
+        assert!(m.stats().resizes > 0, "table must resize");
+        assert!(m.active_slots() > 4);
+        for k in 0..2_000u64 {
+            assert_eq!(m.get(k), Some(k * 3), "key {k} lost across resizes");
+        }
+    }
+
+    #[test]
+    fn shared_list_is_sorted_by_split_order() {
+        let m = small();
+        for k in 0..500u64 {
+            m.insert(k, k);
+        }
+        // walk the whole list: split-order keys must strictly increase
+        let mut cur = m.head;
+        let mut prev: Option<u64> = None;
+        let mut regulars = 0;
+        while cur != SENTINEL {
+            let (k, nx) = m.arena.node(cur).key_next();
+            if let Some(p) = prev {
+                assert!(k > p, "split-order keys must increase: {p:#x} -> {k:#x}");
+            }
+            if k & 1 == 1 {
+                regulars += 1; // regular nodes have LSB 1 after reversal
+            }
+            prev = Some(k);
+            cur = nx;
+        }
+        assert_eq!(regulars, 500);
+    }
+
+    #[test]
+    fn oracle_sequential() {
+        let m = small();
+        let mut oracle = BTreeMap::new();
+        let mut rng = Rng::new(23);
+        for _ in 0..20_000 {
+            let k = rng.below(800);
+            match rng.below(3) {
+                0 => {
+                    let fresh = !oracle.contains_key(&k);
+                    assert_eq!(m.insert(k, k + 5), fresh);
+                    oracle.entry(k).or_insert(k + 5);
+                }
+                1 => assert_eq!(m.erase(k), oracle.remove(&k).is_some()),
+                _ => assert_eq!(m.get(k), oracle.get(&k).copied()),
+            }
+        }
+        assert_eq!(m.len() as usize, oracle.len());
+    }
+
+    #[test]
+    fn concurrent_inserts_through_resize() {
+        let m = Arc::new(SpoHashMap::with_config(4, 4, 1 << 12, 1 << 16));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2_000u64 {
+                    let k = t * 1_000_000 + i;
+                    assert!(m.insert(k, k));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.len(), 8_000);
+        for t in 0..4u64 {
+            for i in (0..2_000u64).step_by(101) {
+                assert_eq!(m.get(t * 1_000_000 + i), Some(t * 1_000_000 + i));
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_mixed() {
+        let m = Arc::new(small());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t + 77);
+                for _ in 0..4_000 {
+                    let k = rng.below(200);
+                    match rng.below(3) {
+                        0 => {
+                            m.insert(k, k * 9);
+                        }
+                        1 => {
+                            m.erase(k);
+                        }
+                        _ => {
+                            if let Some(v) = m.get(k) {
+                                assert_eq!(v, k * 9);
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn lazy_init_counts_parent_hops() {
+        let m = SpoHashMap::with_config(4, 1, 1 << 10, 1 << 14);
+        for k in 0..3_000u64 {
+            m.insert(k, k);
+        }
+        assert!(m.stats().init_parent_hops > 0, "lazy init must chase parents");
+    }
+}

@@ -1,0 +1,240 @@
+//! TBB-like concurrent hash map baseline (`tbb::concurrent_hash_map`
+//! analog for Tables VII-VIII).
+//!
+//! Per the paper: "The TBB implementation is similar to a two-level
+//! split-order table with expansion and shrinking. Unlike the split-order
+//! algorithm, rehashing traverses all entries in a slot, removes and adds
+//! them to new slots" — i.e. chained buckets with per-bucket RW locks and a
+//! **migrating** rehash under a table-wide exclusive lock; and "TBB
+//! allocates large segments of memory before running hash table queries",
+//! which we mirror with a generous initial bucket reservation.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::sync::RwSpinLock;
+
+use super::hash::{hash_key, slot_of};
+use super::traits::ConcurrentMap;
+
+struct Bucket {
+    lock: RwSpinLock,
+    chain: UnsafeCell<Vec<(u64, u64)>>, // (hash, value)
+}
+
+unsafe impl Send for Bucket {}
+unsafe impl Sync for Bucket {}
+
+fn make_buckets(n: usize) -> Box<[Bucket]> {
+    (0..n)
+        .map(|_| Bucket { lock: RwSpinLock::new(), chain: UnsafeCell::new(Vec::new()) })
+        .collect()
+}
+
+/// Chained-bucket map with migrating rehash.
+pub struct TbbLikeHashMap {
+    table_lock: RwSpinLock,
+    buckets: UnsafeCell<Box<[Bucket]>>,
+    len: AtomicU64,
+    max_load: usize,
+    rehashes: AtomicUsize,
+}
+
+unsafe impl Send for TbbLikeHashMap {}
+unsafe impl Sync for TbbLikeHashMap {}
+
+impl TbbLikeHashMap {
+    /// TBB-style eager reservation (large initial table).
+    pub fn new() -> TbbLikeHashMap {
+        Self::with_config(1 << 16, 4)
+    }
+
+    pub fn with_config(initial_buckets: usize, max_load: usize) -> TbbLikeHashMap {
+        assert!(initial_buckets.is_power_of_two());
+        TbbLikeHashMap {
+            table_lock: RwSpinLock::new(),
+            buckets: UnsafeCell::new(make_buckets(initial_buckets)),
+            len: AtomicU64::new(0),
+            max_load,
+            rehashes: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn rehash_count(&self) -> usize {
+        self.rehashes.load(Ordering::Relaxed)
+    }
+
+    pub fn bucket_count(&self) -> usize {
+        let _g = self.table_lock.read();
+        unsafe { &*self.buckets.get() }.len()
+    }
+
+    /// Migrating rehash: table-wide exclusive lock, every entry moved.
+    fn maybe_rehash(&self) {
+        let need = {
+            let _g = self.table_lock.read();
+            let b = unsafe { &*self.buckets.get() };
+            (self.len.load(Ordering::Relaxed) as usize) > b.len() * self.max_load
+        };
+        if !need {
+            return;
+        }
+        let _g = self.table_lock.write();
+        let b = unsafe { &mut *self.buckets.get() };
+        if (self.len.load(Ordering::Relaxed) as usize) <= b.len() * self.max_load {
+            return; // raced
+        }
+        let fresh = make_buckets(b.len() * 2);
+        for bucket in b.iter() {
+            for &(h, v) in unsafe { &*bucket.chain.get() }.iter() {
+                let idx = slot_of(h, fresh.len());
+                unsafe { &mut *fresh[idx].chain.get() }.push((h, v));
+            }
+        }
+        *b = fresh;
+        self.rehashes.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl Default for TbbLikeHashMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ConcurrentMap for TbbLikeHashMap {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        let h = hash_key(key);
+        let ok = {
+            let _g = self.table_lock.read();
+            let b = unsafe { &*self.buckets.get() };
+            let bucket = &b[slot_of(h, b.len())];
+            let _bg = bucket.lock.write();
+            let chain = unsafe { &mut *bucket.chain.get() };
+            if chain.iter().any(|&(eh, _)| eh == h) {
+                false
+            } else {
+                chain.push((h, value));
+                true
+            }
+        };
+        if ok {
+            self.len.fetch_add(1, Ordering::Relaxed);
+            self.maybe_rehash();
+        }
+        ok
+    }
+
+    fn get(&self, key: u64) -> Option<u64> {
+        let h = hash_key(key);
+        let _g = self.table_lock.read();
+        let b = unsafe { &*self.buckets.get() };
+        let bucket = &b[slot_of(h, b.len())];
+        let _bg = bucket.lock.read();
+        unsafe { &*bucket.chain.get() }
+            .iter()
+            .find(|&&(eh, _)| eh == h)
+            .map(|&(_, v)| v)
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        let h = hash_key(key);
+        let ok = {
+            let _g = self.table_lock.read();
+            let b = unsafe { &*self.buckets.get() };
+            let bucket = &b[slot_of(h, b.len())];
+            let _bg = bucket.lock.write();
+            let chain = unsafe { &mut *bucket.chain.get() };
+            if let Some(pos) = chain.iter().position(|&(eh, _)| eh == h) {
+                chain.swap_remove(pos);
+                true
+            } else {
+                false
+            }
+        };
+        if ok {
+            self.len.fetch_sub(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    fn len(&self) -> u64 {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    fn name(&self) -> &'static str {
+        "tbb-like"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic() {
+        let m = TbbLikeHashMap::with_config(8, 2);
+        assert!(m.insert(1, 10));
+        assert!(!m.insert(1, 11));
+        assert_eq!(m.get(1), Some(10));
+        assert!(m.erase(1));
+        assert_eq!(m.get(1), None);
+    }
+
+    #[test]
+    fn rehash_preserves_contents() {
+        let m = TbbLikeHashMap::with_config(4, 2);
+        for k in 0..1_000u64 {
+            assert!(m.insert(k, k * 2));
+        }
+        assert!(m.rehash_count() > 0, "must rehash under load");
+        assert!(m.bucket_count() > 4);
+        for k in 0..1_000u64 {
+            assert_eq!(m.get(k), Some(k * 2));
+        }
+    }
+
+    #[test]
+    fn oracle_sequential() {
+        let m = TbbLikeHashMap::with_config(16, 2);
+        let mut oracle = BTreeMap::new();
+        let mut rng = Rng::new(37);
+        for _ in 0..20_000 {
+            let k = rng.below(600);
+            match rng.below(3) {
+                0 => {
+                    let fresh = !oracle.contains_key(&k);
+                    assert_eq!(m.insert(k, k + 3), fresh);
+                    oracle.entry(k).or_insert(k + 3);
+                }
+                1 => assert_eq!(m.erase(k), oracle.remove(&k).is_some()),
+                _ => assert_eq!(m.get(k), oracle.get(&k).copied()),
+            }
+        }
+        assert_eq!(m.len() as usize, oracle.len());
+    }
+
+    #[test]
+    fn concurrent_through_rehash() {
+        let m = Arc::new(TbbLikeHashMap::with_config(4, 2));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2_000u64 {
+                    let k = t * 1_000_000 + i;
+                    assert!(m.insert(k, k));
+                    assert_eq!(m.get(k), Some(k));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.len(), 8_000);
+        assert!(m.rehash_count() > 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Common interface over the MWMR hash-table variants.
+
+/// A concurrent multi-writer multi-reader map `u64 -> u64`.
+pub trait ConcurrentMap: Send + Sync {
+    /// Insert; `false` if the key already exists (no overwrite, matching the
+    /// skiplist's set-style semantics used in the paper's workloads).
+    fn insert(&self, key: u64, value: u64) -> bool;
+
+    /// Lookup.
+    fn get(&self, key: u64) -> Option<u64>;
+
+    /// Remove; `false` if not present.
+    fn erase(&self, key: u64) -> bool;
+
+    /// Number of entries.
+    fn len(&self) -> u64;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// Implementation name for reports.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,329 @@
+//! Two-level MWMR hash table with BSTs at the second level (§VII variant 2,
+//! "twolevel" in Table V).
+//!
+//! Level 1: `m1` slots, each with a reader-writer lock taken **shared** by
+//! every operation (exclusive only while expanding/shrinking the slot's
+//! second level). Level 2: a nested table of `m2` slots (1 until the slot
+//! grows past the expansion threshold, then `m2_max`), each with its own RW
+//! lock and BST. The two levels consume different bit ranges of H(k): the
+//! low `log2(m1)` bits, then the next `log2(m2)` bits.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::sync::RwSpinLock;
+
+use super::bst::Bst;
+use super::hash::{hash_key, slot_of};
+use super::traits::ConcurrentMap;
+
+/// Expansion threshold: a slot grows its second level when it holds more
+/// than this many entries (the paper uses 10).
+pub const EXPAND_THRESHOLD: usize = 10;
+
+struct L2Slot {
+    lock: RwSpinLock,
+    tree: std::cell::UnsafeCell<Bst>,
+}
+
+unsafe impl Send for L2Slot {}
+unsafe impl Sync for L2Slot {}
+
+struct L1Slot {
+    lock: RwSpinLock,
+    /// 1 or `m2_max` L2 slots; swapped under the exclusive L1 lock.
+    inner: std::cell::UnsafeCell<Box<[L2Slot]>>,
+    entries: AtomicUsize,
+}
+
+unsafe impl Send for L1Slot {}
+unsafe impl Sync for L1Slot {}
+
+fn make_l2(n: usize) -> Box<[L2Slot]> {
+    (0..n)
+        .map(|_| L2Slot { lock: RwSpinLock::new(), tree: std::cell::UnsafeCell::new(Bst::new()) })
+        .collect()
+}
+
+/// Two-level table: `m1` first-level slots, `m2_max` second-level slots
+/// after expansion.
+pub struct TwoLevelHashMap {
+    slots: Box<[L1Slot]>,
+    m2_max: usize,
+    len: AtomicU64,
+    expansions: AtomicU64,
+    shrinks: AtomicU64,
+}
+
+impl TwoLevelHashMap {
+    /// The paper's configuration: 8192 L1 slots, 2048 L2 slots.
+    pub fn new(m1: usize, m2_max: usize) -> TwoLevelHashMap {
+        assert!(m1.is_power_of_two() && m2_max.is_power_of_two());
+        TwoLevelHashMap {
+            slots: (0..m1)
+                .map(|_| L1Slot {
+                    lock: RwSpinLock::new(),
+                    inner: std::cell::UnsafeCell::new(make_l2(1)),
+                    entries: AtomicUsize::new(0),
+                })
+                .collect(),
+            m2_max,
+            len: AtomicU64::new(0),
+            expansions: AtomicU64::new(0),
+            shrinks: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn l1(&self, h: u64) -> &L1Slot {
+        &self.slots[slot_of(h, self.slots.len())]
+    }
+
+    /// Second-level slot index: the next log2(m2) bits above the L1 bits.
+    #[inline]
+    fn l2_index(&self, h: u64, m2: usize) -> usize {
+        let shift = self.slots.len().trailing_zeros();
+        slot_of(h >> shift, m2)
+    }
+
+    /// Grow (or shrink) the slot's second level; caller holds NO locks.
+    fn resize_slot(&self, s: &L1Slot, grow: bool) {
+        let _g = s.lock.write();
+        let inner = unsafe { &mut *s.inner.get() };
+        let cur = inner.len();
+        let target = if grow { self.m2_max } else { 1 };
+        if cur == target {
+            return; // raced with another resizer
+        }
+        // re-check the trigger under the exclusive lock
+        let entries = s.entries.load(Ordering::Relaxed);
+        if grow && entries <= EXPAND_THRESHOLD {
+            return;
+        }
+        if !grow && entries > EXPAND_THRESHOLD {
+            return;
+        }
+        let fresh = make_l2(target);
+        for l2 in inner.iter() {
+            let tree = unsafe { &*l2.tree.get() };
+            for h in tree.keys() {
+                let v = tree.get(h).unwrap();
+                let idx = self.l2_index(h, target);
+                unsafe { &mut *fresh[idx].tree.get() }.insert(h, v);
+            }
+        }
+        *inner = fresh;
+        if grow {
+            self.expansions.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.shrinks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn expansion_count(&self) -> u64 {
+        self.expansions.load(Ordering::Relaxed)
+    }
+
+    pub fn shrink_count(&self) -> u64 {
+        self.shrinks.load(Ordering::Relaxed)
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Max BST depth over all L2 trees (Table V collision metric).
+    pub fn max_depth(&self) -> usize {
+        let mut max = 0;
+        for s in self.slots.iter() {
+            let _g = s.lock.read();
+            let inner = unsafe { &*s.inner.get() };
+            for l2 in inner.iter() {
+                let _g2 = l2.lock.read();
+                max = max.max(unsafe { &*l2.tree.get() }.depth());
+            }
+        }
+        max
+    }
+}
+
+impl ConcurrentMap for TwoLevelHashMap {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        let h = hash_key(key);
+        let s = self.l1(h);
+        let ok = {
+            let _g = s.lock.read(); // shared at level 1 (paper's design)
+            let inner = unsafe { &*s.inner.get() };
+            let l2 = &inner[self.l2_index(h, inner.len())];
+            let _g2 = l2.lock.write(); // exclusive at level 2
+            unsafe { &mut *l2.tree.get() }.insert(h, value)
+        };
+        if ok {
+            self.len.fetch_add(1, Ordering::Relaxed);
+            let e = s.entries.fetch_add(1, Ordering::Relaxed) + 1;
+            if e > EXPAND_THRESHOLD {
+                let grown = {
+                    let _g = s.lock.read();
+                    unsafe { &*s.inner.get() }.len() == self.m2_max
+                };
+                if !grown {
+                    self.resize_slot(s, true);
+                }
+            }
+        }
+        ok
+    }
+
+    fn get(&self, key: u64) -> Option<u64> {
+        let h = hash_key(key);
+        let s = self.l1(h);
+        let _g = s.lock.read();
+        let inner = unsafe { &*s.inner.get() };
+        let l2 = &inner[self.l2_index(h, inner.len())];
+        let _g2 = l2.lock.read();
+        unsafe { &*l2.tree.get() }.get(h)
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        let h = hash_key(key);
+        let s = self.l1(h);
+        let ok = {
+            let _g = s.lock.read();
+            let inner = unsafe { &*s.inner.get() };
+            let l2 = &inner[self.l2_index(h, inner.len())];
+            let _g2 = l2.lock.write();
+            unsafe { &mut *l2.tree.get() }.erase(h)
+        };
+        if ok {
+            self.len.fetch_sub(1, Ordering::Relaxed);
+            let e = s.entries.fetch_sub(1, Ordering::Relaxed) - 1;
+            if e <= EXPAND_THRESHOLD {
+                let grown = {
+                    let _g = s.lock.read();
+                    unsafe { &*s.inner.get() }.len() > 1
+                };
+                if grown {
+                    self.resize_slot(s, false);
+                }
+            }
+        }
+        ok
+    }
+
+    fn len(&self) -> u64 {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    fn name(&self) -> &'static str {
+        "twolevel-binlist"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic() {
+        let m = TwoLevelHashMap::new(16, 8);
+        assert!(m.insert(1, 10));
+        assert!(!m.insert(1, 11));
+        assert_eq!(m.get(1), Some(10));
+        assert!(m.erase(1));
+        assert!(!m.erase(1));
+        assert_eq!(m.len(), 0);
+    }
+
+    #[test]
+    fn expansion_triggers_and_preserves_contents() {
+        // a single L1 slot (m1 = 1) forces everything through one slot
+        let m = TwoLevelHashMap::new(1, 64);
+        for k in 0..100u64 {
+            assert!(m.insert(k, k * 2));
+        }
+        assert!(m.expansion_count() >= 1, "slot must expand past threshold");
+        for k in 0..100u64 {
+            assert_eq!(m.get(k), Some(k * 2), "key {k} lost in expansion");
+        }
+    }
+
+    #[test]
+    fn shrink_after_mass_erase() {
+        let m = TwoLevelHashMap::new(1, 64);
+        for k in 0..100u64 {
+            m.insert(k, k);
+        }
+        for k in 0..95u64 {
+            m.erase(k);
+        }
+        assert!(m.shrink_count() >= 1, "slot must shrink below threshold");
+        for k in 95..100u64 {
+            assert_eq!(m.get(k), Some(k));
+        }
+    }
+
+    #[test]
+    fn oracle_sequential() {
+        let m = TwoLevelHashMap::new(8, 16);
+        let mut oracle = BTreeMap::new();
+        let mut rng = Rng::new(17);
+        for _ in 0..20_000 {
+            let k = rng.below(500);
+            match rng.below(3) {
+                0 => {
+                    let fresh = !oracle.contains_key(&k);
+                    assert_eq!(m.insert(k, k + 9), fresh);
+                    oracle.entry(k).or_insert(k + 9);
+                }
+                1 => assert_eq!(m.erase(k), oracle.remove(&k).is_some()),
+                _ => assert_eq!(m.get(k), oracle.get(&k).copied()),
+            }
+        }
+        assert_eq!(m.len() as usize, oracle.len());
+    }
+
+    #[test]
+    fn concurrent_through_expansion() {
+        let m = Arc::new(TwoLevelHashMap::new(2, 32));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2_000u64 {
+                    let k = t * 1_000_000 + i;
+                    assert!(m.insert(k, k));
+                    assert_eq!(m.get(k), Some(k), "read-own-write {k}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.len(), 8_000);
+        assert!(m.expansion_count() > 0);
+        for t in 0..4u64 {
+            for i in (0..2_000u64).step_by(111) {
+                assert_eq!(m.get(t * 1_000_000 + i), Some(t * 1_000_000 + i));
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_is_shallower_than_fixed() {
+        use super::super::fixed::FixedHashMap;
+        let fixed = FixedHashMap::new(16);
+        let two = TwoLevelHashMap::new(16, 256);
+        for k in 0..20_000u64 {
+            fixed.insert(k, k);
+            two.insert(k, k);
+        }
+        assert!(
+            two.max_depth() < fixed.max_depth(),
+            "two-level {} !< fixed {}",
+            two.max_depth(),
+            fixed.max_depth()
+        );
+    }
+}

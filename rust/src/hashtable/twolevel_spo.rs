@@ -1,0 +1,177 @@
+//! Hierarchical (two-level) split-order hash table (§VII variant 4,
+//! "twolevelspo" in Table VI / "SPO" winner of Tables VII-VIII).
+//!
+//! The first level is a fixed fan-out of small split-order tables; each
+//! second-level table resizes independently with a small seed, so the lazy
+//! slot-initialization parent chains stay short and *local* — the paper's
+//! fix for the cache behaviour of the flat split-order table. Each
+//! second-level table also gets its own node arena (the paper gives each
+//! first-level slot its own memory manager).
+
+use super::hash::hash_key;
+use super::splitorder::{SpoHashMap, SpoStats};
+use super::traits::ConcurrentMap;
+
+/// Two-level split-order table.
+pub struct TwoLevelSpoHashMap {
+    tables: Box<[SpoHashMap]>,
+    shift: u32,
+}
+
+impl TwoLevelSpoHashMap {
+    /// The paper's configuration: 256 first-level tables, seed 64 each.
+    pub fn new() -> TwoLevelSpoHashMap {
+        Self::with_config(256, 64, 16, 1 << 14, 1 << 16)
+    }
+
+    /// `fanout` first-level tables (power of two); each second-level table
+    /// has `seed` slots, `max_collisions`, and its own arena.
+    pub fn with_config(
+        fanout: usize,
+        seed: usize,
+        max_collisions: usize,
+        max_slots: usize,
+        capacity_per_table: usize,
+    ) -> TwoLevelSpoHashMap {
+        assert!(fanout.is_power_of_two());
+        TwoLevelSpoHashMap {
+            tables: (0..fanout)
+                .map(|_| SpoHashMap::with_config(seed, max_collisions, max_slots, capacity_per_table))
+                .collect(),
+            // route on high hash bits so second-level tables (which consume
+            // low bits) see independent distributions
+            shift: 64 - fanout.trailing_zeros(),
+        }
+    }
+
+    #[inline]
+    fn table(&self, h: u64) -> &SpoHashMap {
+        &self.tables[(h >> self.shift) as usize]
+    }
+
+    /// Aggregated cache-proxy stats across all second-level tables.
+    pub fn stats(&self) -> SpoStats {
+        let mut out = SpoStats::default();
+        for t in self.tables.iter() {
+            let s = t.stats();
+            out.init_parent_hops += s.init_parent_hops;
+            out.walk_steps += s.walk_steps;
+            out.resizes += s.resizes;
+        }
+        out
+    }
+
+    pub fn fanout(&self) -> usize {
+        self.tables.len()
+    }
+}
+
+impl Default for TwoLevelSpoHashMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ConcurrentMap for TwoLevelSpoHashMap {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        self.table(hash_key(key)).insert(key, value)
+    }
+
+    fn get(&self, key: u64) -> Option<u64> {
+        self.table(hash_key(key)).get(key)
+    }
+
+    fn erase(&self, key: u64) -> bool {
+        self.table(hash_key(key)).erase(key)
+    }
+
+    fn len(&self) -> u64 {
+        self.tables.iter().map(|t| t.len()).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "twolevel-spo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    fn small() -> TwoLevelSpoHashMap {
+        TwoLevelSpoHashMap::with_config(8, 4, 4, 1 << 10, 1 << 14)
+    }
+
+    #[test]
+    fn basic() {
+        let m = small();
+        assert!(m.insert(1, 10));
+        assert!(!m.insert(1, 11));
+        assert_eq!(m.get(1), Some(10));
+        assert!(m.erase(1));
+        assert_eq!(m.get(1), None);
+        assert_eq!(m.len(), 0);
+    }
+
+    #[test]
+    fn oracle_sequential() {
+        let m = small();
+        let mut oracle = BTreeMap::new();
+        let mut rng = Rng::new(31);
+        for _ in 0..20_000 {
+            let k = rng.below(700);
+            match rng.below(3) {
+                0 => {
+                    let fresh = !oracle.contains_key(&k);
+                    assert_eq!(m.insert(k, k + 2), fresh);
+                    oracle.entry(k).or_insert(k + 2);
+                }
+                1 => assert_eq!(m.erase(k), oracle.remove(&k).is_some()),
+                _ => assert_eq!(m.get(k), oracle.get(&k).copied()),
+            }
+        }
+        assert_eq!(m.len() as usize, oracle.len());
+    }
+
+    #[test]
+    fn concurrent_inserts() {
+        let m = Arc::new(small());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2_000u64 {
+                    let k = t * 1_000_000 + i;
+                    assert!(m.insert(k, k));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.len(), 8_000);
+    }
+
+    #[test]
+    fn shorter_parent_chains_than_flat_spo() {
+        // Table VI's mechanism: same workload, flat vs hierarchical; the
+        // hierarchical table must do fewer parent-chain hops per entry.
+        let flat = SpoHashMap::with_config(4, 2, 1 << 12, 1 << 16);
+        let two = TwoLevelSpoHashMap::with_config(16, 4, 2, 1 << 10, 1 << 14);
+        for k in 0..8_000u64 {
+            flat.insert(k, k);
+            two.insert(k, k);
+        }
+        let f = flat.stats();
+        let t = two.stats();
+        assert!(
+            t.walk_steps < f.walk_steps,
+            "two-level walk {} !< flat walk {}",
+            t.walk_steps,
+            f.walk_steps
+        );
+    }
+}

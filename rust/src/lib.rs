@@ -1,0 +1,29 @@
+//! # cdskl — Concurrent Deterministic Skiplist and Other Data Structures
+//!
+//! Reproduction of Sasidharan, *"Concurrent Deterministic Skiplist and Other
+//! Data Structures"* (CS.DC 2023) as a three-layer rust + JAX/Pallas stack:
+//!
+//! - **L3 (rust, this crate)** — the paper's systems: the concurrent
+//!   deterministic 1-2-3-4 skiplist ([`skiplist`]), array-block lock-free
+//!   queues ([`queue`]), MWMR hash tables ([`hashtable`]), the block memory
+//!   manager ([`mem`]), the (virtual) NUMA layer ([`numa`]) and the
+//!   hierarchical coordinator ([`coordinator`]).
+//! - **L2/L1 (JAX + Pallas, `python/compile/`)** — the batched
+//!   keygen/hash/route/histogram data path, AOT-lowered to HLO text and
+//!   loaded at startup by [`runtime`] through the PJRT CPU client. Python
+//!   never runs on the request path.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod coordinator;
+pub mod experiments;
+pub mod hashtable;
+pub mod mem;
+pub mod numa;
+pub mod queue;
+pub mod runtime;
+pub mod skiplist;
+pub mod sync;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,179 @@
+//! `cdskl` — CLI launcher for the reproduction.
+//!
+//! ```text
+//! cdskl info                           topology, artifacts, self-check
+//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|all> [--threads 4,8] [--reps N]
+//!           [--scale N] [--out FILE]   regenerate paper tables
+//! cdskl run [--store det|rwl|random|fixed|twolevel|spo|spo2|tbb]
+//!           [--ops N] [--threads N] [--mix w1|w2|hash]
+//!           [--inject-latency NS]      one workload run with metrics
+//! cdskl selfcheck                      AOT artifacts vs native mixer
+//! ```
+
+use std::sync::Arc;
+
+use cdskl::coordinator::{run_workload, ShardedStore, StoreKind};
+use cdskl::experiments::{self, ExpConfig};
+use cdskl::numa::{Topology, LATENCY};
+use cdskl::runtime::{KeyRouter, RouteEngine};
+use cdskl::util::cli::Args;
+use cdskl::workload::{OpMix, WorkloadSpec};
+
+fn artifacts_dir() -> String {
+    std::env::var("CDSKL_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("info") => info(),
+        Some("selfcheck") => selfcheck(),
+        Some("exp") => exp(&args),
+        Some("run") => run(&args),
+        _ => {
+            eprintln!(
+                "usage: cdskl <info|selfcheck|exp|run> [flags]\n\
+                 see `cdskl exp all --scale 1000 --reps 1` for a quick sweep"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() {
+    let topo = Topology::detect();
+    println!(
+        "topology: {} NUMA nodes x {} CPUs (detected={})",
+        topo.numa_nodes, topo.cpus_per_node, topo.detected
+    );
+    println!(
+        "host parallelism: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    match RouteEngine::load(&artifacts_dir()) {
+        Ok(e) => println!("AOT artifacts: OK (batch sizes {:?}, self-check passed)", e.batch_sizes()),
+        Err(err) => println!("AOT artifacts: unavailable ({err:#}) — run `make artifacts`"),
+    }
+}
+
+fn selfcheck() {
+    match RouteEngine::load(&artifacts_dir()) {
+        Ok(e) => {
+            e.self_check().expect("self-check");
+            println!("selfcheck OK: AOT route == native splitmix64 routing");
+        }
+        Err(err) => {
+            eprintln!("selfcheck FAILED: {err:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn exp_config(args: &Args) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    cfg.threads = args.u64_list_or("threads", &cfg.threads);
+    cfg.reps = args.usize_or("reps", cfg.reps);
+    cfg.scale = args.u64_or("scale", cfg.scale);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    let nodes = args.usize_or("numa-nodes", cfg.topology.numa_nodes);
+    let cpus = args.usize_or("cpus-per-node", cfg.topology.cpus_per_node);
+    cfg.topology = Topology::virtual_grid(nodes, cpus);
+    cfg
+}
+
+fn exp(args: &Args) {
+    let cfg = exp_config(args);
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let router = KeyRouter::auto(&artifacts_dir());
+    println!(
+        "# cdskl experiments — {} | threads {:?} | reps {} | scale 1/{} | router {}\n",
+        which,
+        cfg.threads,
+        cfg.reps,
+        cfg.scale,
+        if router.is_aot() { "AOT" } else { "native" }
+    );
+    let mut tables = Vec::new();
+    let all = which == "all";
+    if all || which == "t1" {
+        tables.extend(experiments::t1_queues(&cfg));
+    }
+    if all || which == "t2" {
+        tables.push(experiments::t2_skiplist_w1(&cfg, &router));
+    }
+    if all || which == "t3" {
+        tables.push(experiments::t3_skiplist_w2(&cfg, &router));
+    }
+    if all || which == "t4" {
+        tables.push(experiments::t4_random_vs_det(&cfg, &router));
+    }
+    if all || which == "t5" {
+        tables.push(experiments::t5_hash_fixed_twolevel(&cfg, &router));
+    }
+    if all || which == "t6" {
+        tables.push(experiments::t6_spo_cache(&cfg));
+    }
+    if all || which == "t78" {
+        tables.extend(experiments::t78_hash_compare(&cfg, &router));
+    }
+    if tables.is_empty() {
+        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 all)");
+        std::process::exit(2);
+    }
+    let mut out = String::new();
+    for t in &tables {
+        t.print();
+        out.push_str(&t.to_markdown());
+        out.push('\n');
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, out).expect("write --out file");
+        println!("(written to {path})");
+    }
+}
+
+fn run(args: &Args) {
+    let kind = StoreKind::parse(&args.str_or("store", "det")).unwrap_or_else(|| {
+        eprintln!("unknown --store (det rwl random fixed twolevel spo spo2 tbb)");
+        std::process::exit(2);
+    });
+    let ops = args.u64_or("ops", 1_000_000);
+    let threads = args.usize_or("threads", 8);
+    let mix = match args.str_or("mix", "w1").as_str() {
+        "w1" => OpMix::W1,
+        "w2" => OpMix::W2,
+        "hash" => OpMix::HASH,
+        other => {
+            eprintln!("unknown --mix '{other}' (w1 w2 hash)");
+            std::process::exit(2);
+        }
+    };
+    if let Some(ns) = args.get("inject-latency") {
+        LATENCY.enable(ns.parse().expect("--inject-latency NS"));
+    }
+    let topo = Topology::virtual_grid(
+        args.usize_or("numa-nodes", 8),
+        args.usize_or("cpus-per-node", 16),
+    );
+    let router = KeyRouter::auto(&artifacts_dir());
+    let store = Arc::new(ShardedStore::new(kind, 8, (ops as usize / 4).max(1 << 16), topo, threads));
+    let spec = WorkloadSpec::new("run", ops, mix, args.u64_or("key-space", (ops / 2).max(1 << 16)));
+    let m = run_workload(&store, &spec, threads, &router, args.u64_or("seed", 7));
+    println!(
+        "store: {} x{} shards | threads {threads} | ops {ops}",
+        store.kind_name(),
+        store.num_shards()
+    );
+    println!(
+        "fill   : {:.4}s (router={})",
+        m.fill_seconds,
+        if router.is_aot() { "AOT" } else { "native" }
+    );
+    println!("drain  : {:.4}s  ({:.3} Mops/s)", m.drain_seconds, m.throughput_mops());
+    println!(
+        "ops    : {} inserts, {} finds ({} hit), {} erases",
+        m.inserts, m.finds, m.found, m.erases
+    );
+    println!("numa   : {} local, {} remote accesses", m.local_accesses, m.remote_accesses);
+    println!("final  : {} keys resident", m.final_len);
+}

@@ -1,0 +1,5 @@
+//! Memory management (paper §V): block allocation + lock-free recycling.
+
+pub mod pool;
+
+pub use pool::{eq5_average_blocks, NodePool, PoolStats};

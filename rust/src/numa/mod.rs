@@ -1,0 +1,11 @@
+//! The (virtual) NUMA layer: topology + eqs (6)-(7) shard placement,
+//! thread pinning, locality accounting and latency injection
+//! (paper §I, §VI; DESIGN.md §Hardware-Adaptation).
+
+pub mod locality;
+pub mod pinning;
+pub mod topology;
+
+pub use locality::{LocalityStats, LatencyModel, LATENCY};
+pub use pinning::pin_to_cpu;
+pub use topology::Topology;

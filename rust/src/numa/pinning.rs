@@ -1,0 +1,43 @@
+//! Thread pinning (the paper pins thread i to CPU i).
+//!
+//! On the real Milan node this is `sched_setaffinity`; on the single-CPU
+//! container every pin degenerates to CPU 0 and becomes a no-op — the
+//! virtual topology still records which *virtual* CPU a thread owns.
+
+/// Pin the calling thread to `cpu` (mod the host's CPU count).
+/// Returns true when an affinity call actually succeeded.
+pub fn pin_to_cpu(cpu: usize) -> bool {
+    let host_cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let target = cpu % host_cpus;
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(target, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    }
+}
+
+/// Virtual CPU id for a worker thread (identity, like the paper).
+pub fn cpu_of_thread(thread_id: usize) -> usize {
+    thread_id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_to_existing_cpu_succeeds() {
+        assert!(pin_to_cpu(0));
+    }
+
+    #[test]
+    fn pin_wraps_past_host_cpus() {
+        // virtual CPU 127 must map onto some host CPU without failing
+        assert!(pin_to_cpu(127));
+    }
+
+    #[test]
+    fn identity_mapping() {
+        assert_eq!(cpu_of_thread(5), 5);
+    }
+}

@@ -1,0 +1,122 @@
+//! NUMA topology: detected from sysfs when real, virtual otherwise.
+//!
+//! The paper's testbed is an AMD Milan node with 8 NUMA nodes x 16 CPUs.
+//! This container exposes a single CPU, so the default topology is a
+//! **virtual** Milan-like 8x16 grid: thread pinning becomes a no-op, but
+//! shard placement, per-node memory pools and locality accounting behave
+//! exactly as they would on the real machine (DESIGN.md §Hardware-Adaptation).
+
+/// A machine topology (real or virtual).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    pub numa_nodes: usize,
+    pub cpus_per_node: usize,
+    /// True when the grid reflects actual hardware rather than simulation.
+    pub detected: bool,
+}
+
+impl Topology {
+    /// The paper's AMD Milan layout: 8 NUMA nodes x 16 CPUs.
+    pub fn milan_virtual() -> Topology {
+        Topology { numa_nodes: 8, cpus_per_node: 16, detected: false }
+    }
+
+    /// Custom virtual topology.
+    pub fn virtual_grid(numa_nodes: usize, cpus_per_node: usize) -> Topology {
+        assert!(numa_nodes >= 1 && cpus_per_node >= 1);
+        Topology { numa_nodes, cpus_per_node, detected: false }
+    }
+
+    /// Detect from sysfs; falls back to the virtual Milan grid when the
+    /// host has no multi-node NUMA (as in this container).
+    pub fn detect() -> Topology {
+        let nodes = Self::sysfs_node_count().unwrap_or(1);
+        let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if nodes > 1 {
+            Topology { numa_nodes: nodes, cpus_per_node: cpus.div_ceil(nodes), detected: true }
+        } else {
+            Topology::milan_virtual()
+        }
+    }
+
+    fn sysfs_node_count() -> Option<usize> {
+        let entries = std::fs::read_dir("/sys/devices/system/node").ok()?;
+        let n = entries
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                name.starts_with("node") && name[4..].chars().all(|c| c.is_ascii_digit())
+            })
+            .count();
+        (n >= 1).then_some(n)
+    }
+
+    pub fn total_cpus(&self) -> usize {
+        self.numa_nodes * self.cpus_per_node
+    }
+
+    /// NUMA node of a CPU id (CPUs are numbered node-major, like the
+    /// paper's Milan: CPUs 0-15 on node 0, 16-31 on node 1, ...).
+    pub fn node_of_cpu(&self, cpu: usize) -> usize {
+        (cpu / self.cpus_per_node) % self.numa_nodes
+    }
+
+    /// Number of NUMA nodes engaged by `threads` threads pinned in id order
+    /// — the paper's eq. (6): n_u = ceil(T / n_cpu).
+    pub fn nodes_in_use(&self, threads: usize) -> usize {
+        threads.div_ceil(self.cpus_per_node).min(self.numa_nodes).max(1)
+    }
+
+    /// Home NUMA node of shard `i` — the paper's eq. (7):
+    /// n_{s_i} = S_i mod n_u.
+    pub fn shard_home(&self, shard: usize, threads: usize) -> usize {
+        shard % self.nodes_in_use(threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn milan_shape() {
+        let t = Topology::milan_virtual();
+        assert_eq!(t.total_cpus(), 128);
+        assert_eq!(t.node_of_cpu(0), 0);
+        assert_eq!(t.node_of_cpu(15), 0);
+        assert_eq!(t.node_of_cpu(16), 1);
+        assert_eq!(t.node_of_cpu(127), 7);
+    }
+
+    #[test]
+    fn eq6_nodes_in_use() {
+        let t = Topology::milan_virtual();
+        assert_eq!(t.nodes_in_use(4), 1);
+        assert_eq!(t.nodes_in_use(16), 1);
+        assert_eq!(t.nodes_in_use(17), 2);
+        assert_eq!(t.nodes_in_use(32), 2);
+        assert_eq!(t.nodes_in_use(128), 8);
+        assert_eq!(t.nodes_in_use(1_000), 8);
+    }
+
+    #[test]
+    fn eq7_shard_home_odd_even_example() {
+        // Paper: T=32, n_cpu=16 -> n_u=2; even shards on node 0, odd on 1.
+        let t = Topology::milan_virtual();
+        for s in 0..8 {
+            assert_eq!(t.shard_home(s, 32), s % 2);
+        }
+        // T=128 -> n_u=8: shard i lives on node i.
+        for s in 0..8 {
+            assert_eq!(t.shard_home(s, 128), s);
+        }
+    }
+
+    #[test]
+    fn detect_never_panics() {
+        let t = Topology::detect();
+        assert!(t.numa_nodes >= 1);
+        assert!(t.cpus_per_node >= 1);
+    }
+}

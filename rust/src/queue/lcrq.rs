@@ -1,0 +1,612 @@
+//! Unbounded lock-free queue over an array of recycled blocks
+//! (paper §III, algorithms 7–10).
+//!
+//! Layout: the queue is a linked chain of fixed-size *blocks*; each block is
+//! an array of `(data, fe)` slots.  `front`/`rear` are plain integers bumped
+//! with fetch-add (no CAS retry loops on the hot path — the LCRQ insight),
+//! and the `fe` ("full/empty") flag array signals completion of the data
+//! write so pops never read half-written slots.  `wclosed`/`rclosed` retire a
+//! block for writing/reading; retired blocks return to a pool and are
+//! recycled (the paper's memory-management contribution vs. stock LCRQ).
+//!
+//! ## fe slot protocol
+//!
+//! ```text
+//!   0 EMPTY    --push: fetch_add(+1)-->  1 FULL   --pop: CAS(1,3)-->  3 CONSUMED
+//!   0 EMPTY    --pop:  CAS(0,2)------->  2 KILLED (push fetch_add sees prev!=0 and retries)
+//! ```
+//!
+//! A pop that overtakes `rear` (the paper's "front gets ahead of rear") kills
+//! the slot instead of blocking, and the push that later claims that index
+//! observes `prev != 0` from its fetch-add and retries on a fresh slot — the
+//! exchange of "signals necessary for validating pushes and pops" of §III.
+//!
+//! ## Safe recycling (epoch/pin)
+//!
+//! The paper recycles with per-node reference counters against ABA; we use
+//! the equivalent (block `epoch` counter + `pins` count, both SeqCst):
+//! an operation pins a block then re-validates its epoch; a recycler bumps
+//! the epoch then requires `pins == 0`. The store-load pairing guarantees at
+//! least one side observes the other, so a block is never reset under an
+//! active operation. Block *memory* is never freed before queue drop, so
+//! stale pointers are always safe to dereference.
+
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::sync::Backoff;
+
+use super::traits::ConcurrentQueue;
+
+const NONE: usize = usize::MAX;
+
+const FE_EMPTY: u32 = 0;
+const FE_FULL: u32 = 1;
+const FE_KILLED: u32 = 2;
+const FE_CONSUMED: u32 = 3;
+
+struct Block {
+    front: AtomicUsize,
+    rear: AtomicUsize,
+    next: AtomicUsize,
+    wclosed: AtomicBool,
+    rclosed: AtomicBool,
+    /// Recycle generation; bumped first by the recycler (SeqCst).
+    epoch: AtomicU64,
+    /// Active operations pinning this block (SeqCst).
+    pins: AtomicU64,
+    data: Box<[AtomicU64]>,
+    fe: Box<[AtomicU32]>,
+}
+
+impl Block {
+    fn new(size: usize) -> Block {
+        Block {
+            front: AtomicUsize::new(0),
+            rear: AtomicUsize::new(0),
+            next: AtomicUsize::new(NONE),
+            wclosed: AtomicBool::new(false),
+            rclosed: AtomicBool::new(false),
+            epoch: AtomicU64::new(0),
+            pins: AtomicU64::new(0),
+            data: (0..size).map(|_| AtomicU64::new(0)).collect(),
+            fe: (0..size).map(|_| AtomicU32::new(FE_EMPTY)).collect(),
+        }
+    }
+
+    /// Reset for reuse. Caller holds the pool lock and has already bumped
+    /// `epoch` and verified `pins == 0`.
+    fn reset(&self) {
+        self.front.store(0, Ordering::Relaxed);
+        self.rear.store(0, Ordering::Relaxed);
+        self.next.store(NONE, Ordering::Relaxed);
+        self.wclosed.store(false, Ordering::Relaxed);
+        self.rclosed.store(false, Ordering::Relaxed);
+        for f in self.fe.iter() {
+            f.store(FE_EMPTY, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Counters for the §IV analysis (allocation/recycle behaviour).
+#[derive(Debug, Default, Clone)]
+pub struct QueueStats {
+    pub pushes: u64,
+    pub pops: u64,
+    pub blocks_allocated: u64,
+    pub blocks_recycled: u64,
+    pub push_retries: u64,
+    pub pop_retries: u64,
+    pub slots_killed: u64,
+}
+
+#[derive(Default)]
+struct AtomicStats {
+    pushes: AtomicU64,
+    pops: AtomicU64,
+    blocks_allocated: AtomicU64,
+    blocks_recycled: AtomicU64,
+    push_retries: AtomicU64,
+    pop_retries: AtomicU64,
+    slots_killed: AtomicU64,
+}
+
+/// The paper's unbounded lock-free queue ("lkfree" in Table I).
+pub struct LfQueue {
+    /// Stable directory of blocks; a slot is written once (block addresses
+    /// never move or free until drop).
+    slots: Box<[AtomicPtr<Block>]>,
+    /// Number of `slots` entries ever populated.
+    allocated: AtomicUsize,
+    /// Most recent active block (paper's `cn`).
+    cn: AtomicUsize,
+    /// Least recent active block (paper's `listhead`).
+    listhead: AtomicUsize,
+    /// Retired block ids awaiting reuse (slow path only).
+    free: Mutex<Vec<usize>>,
+    block_size: usize,
+    recycle: bool,
+    stats: AtomicStats,
+}
+
+unsafe impl Send for LfQueue {}
+unsafe impl Sync for LfQueue {}
+
+impl LfQueue {
+    /// Default configuration: the paper's 8192-slot blocks, recycling on.
+    pub fn new() -> LfQueue {
+        Self::with_config(8192, 4096, true)
+    }
+
+    /// `block_size` slots per block, at most `max_blocks` blocks live at
+    /// once; `recycle=false` reproduces the TBB/LCRQ behaviour of always
+    /// allocating fresh segments (see `tbb_like`).
+    pub fn with_config(block_size: usize, max_blocks: usize, recycle: bool) -> LfQueue {
+        assert!(block_size >= 2 && max_blocks >= 2);
+        let q = LfQueue {
+            slots: (0..max_blocks).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+            allocated: AtomicUsize::new(0),
+            cn: AtomicUsize::new(0),
+            listhead: AtomicUsize::new(0),
+            free: Mutex::new(Vec::new()),
+            block_size,
+            recycle,
+            stats: AtomicStats::default(),
+        };
+        let first = q.alloc_block().expect("initial block");
+        debug_assert_eq!(first, 0);
+        q
+    }
+
+    #[inline]
+    fn block(&self, id: usize) -> &Block {
+        debug_assert!(id < self.allocated.load(Ordering::Acquire));
+        unsafe { &*self.slots[id].load(Ordering::Acquire) }
+    }
+
+    /// Allocate a block id: recycled if possible, else a fresh slot.
+    /// Returns None when the directory is exhausted.
+    fn alloc_block(&self) -> Option<usize> {
+        if self.recycle {
+            let mut free = self.free.lock().unwrap();
+            // Find a retired block no operation is still pinned to.
+            for i in 0..free.len() {
+                let id = free[i];
+                let blk = self.block(id);
+                // Bump epoch FIRST (SeqCst): new pinners will re-validate and
+                // retreat; then require no pre-existing pinner.
+                blk.epoch.fetch_add(1, Ordering::SeqCst);
+                if blk.pins.load(Ordering::SeqCst) == 0 {
+                    free.swap_remove(i);
+                    blk.reset();
+                    self.stats.blocks_recycled.fetch_add(1, Ordering::Relaxed);
+                    return Some(id);
+                }
+                // A straggler is mid-operation: leave it for later; the epoch
+                // bump is harmless (it only forces re-validation).
+            }
+        }
+        let id = self.allocated.fetch_add(1, Ordering::AcqRel);
+        if id >= self.slots.len() {
+            self.allocated.fetch_sub(1, Ordering::AcqRel);
+            return None;
+        }
+        let b = Box::into_raw(Box::new(Block::new(self.block_size)));
+        self.slots[id].store(b, Ordering::Release);
+        self.stats.blocks_allocated.fetch_add(1, Ordering::Relaxed);
+        Some(id)
+    }
+
+    /// Paper's AddNode (alg. 8): link a fresh block after `n`.
+    fn add_node(&self, n: usize) -> bool {
+        let blk = self.block(n);
+        if blk.next.load(Ordering::Acquire) != NONE {
+            return true; // someone else already linked
+        }
+        let Some(e) = self.alloc_block() else {
+            return false;
+        };
+        if blk
+            .next
+            .compare_exchange(NONE, e, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            // Lost the race; return e to the pool.
+            if self.recycle {
+                self.free.lock().unwrap().push(e);
+            }
+            // (without recycling the block simply stays allocated-but-unused)
+        }
+        true
+    }
+
+    /// Paper's DeleteNode (alg. 10): unlink a drained head block and retire it.
+    fn delete_node(&self, n: usize) {
+        let blk = self.block(n);
+        if !(blk.rclosed.load(Ordering::Acquire) && blk.wclosed.load(Ordering::Acquire)) {
+            return;
+        }
+        if n == self.cn.load(Ordering::Acquire) {
+            return;
+        }
+        let next = blk.next.load(Ordering::Acquire);
+        if next == NONE {
+            return;
+        }
+        if self
+            .listhead
+            .compare_exchange(n, next, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+            && self.recycle
+        {
+            self.free.lock().unwrap().push(n);
+        }
+    }
+
+    /// Pin a block for use; returns false if the block was recycled since
+    /// `id` was read (caller must retry from the queue anchors).
+    #[inline]
+    fn pin(&self, blk: &Block, seen_epoch: u64) -> bool {
+        blk.pins.fetch_add(1, Ordering::SeqCst);
+        if blk.epoch.load(Ordering::SeqCst) == seen_epoch {
+            true
+        } else {
+            blk.pins.fetch_sub(1, Ordering::SeqCst);
+            false
+        }
+    }
+
+    #[inline]
+    fn unpin(&self, blk: &Block) {
+        blk.pins.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Paper's Push (alg. 7). Returns false only if the directory is
+    /// exhausted and recycling cannot reclaim (try_push semantics).
+    fn push_inner(&self, v: u64, block_on_full: bool) -> bool {
+        let mut b = Backoff::new();
+        loop {
+            let n = self.cn.load(Ordering::Acquire);
+            let blk = self.block(n);
+            let epoch = blk.epoch.load(Ordering::SeqCst);
+            if !self.pin(blk, epoch) || self.cn.load(Ordering::Acquire) != n {
+                if blk.pins.load(Ordering::Relaxed) > 0 && self.cn.load(Ordering::Acquire) != n {
+                    // pinned a stale block; release before retrying
+                }
+                self.unpin(blk);
+                self.stats.push_retries.fetch_add(1, Ordering::Relaxed);
+                b.wait();
+                continue;
+            }
+
+            if !blk.wclosed.load(Ordering::Acquire) {
+                let p = blk.rear.fetch_add(1, Ordering::AcqRel);
+                if p < self.block_size {
+                    blk.data[p].store(v, Ordering::Relaxed);
+                    let prev = blk.fe[p].fetch_add(1, Ordering::AcqRel);
+                    if prev == FE_EMPTY {
+                        self.unpin(blk);
+                        self.stats.pushes.fetch_add(1, Ordering::Relaxed);
+                        return true;
+                    }
+                    // Slot was killed by an overtaking pop; retry elsewhere.
+                    self.stats.push_retries.fetch_add(1, Ordering::Relaxed);
+                    self.unpin(blk);
+                    continue;
+                }
+                blk.wclosed.store(true, Ordering::Release);
+            }
+
+            // Block write-closed: advance to / create the next block.
+            let nn = blk.next.load(Ordering::Acquire);
+            if nn != NONE {
+                let _ = self
+                    .cn
+                    .compare_exchange(n, nn, Ordering::AcqRel, Ordering::Acquire);
+                self.unpin(blk);
+            } else {
+                let ok = self.add_node(n);
+                self.unpin(blk);
+                if !ok {
+                    if !block_on_full {
+                        return false;
+                    }
+                    b.wait(); // wait for consumers to retire blocks
+                }
+            }
+        }
+    }
+
+    /// Paper's Pop (alg. 9).
+    fn pop_inner(&self) -> Option<u64> {
+        let mut b = Backoff::new();
+        loop {
+            let n = self.listhead.load(Ordering::Acquire);
+            let blk = self.block(n);
+            let epoch = blk.epoch.load(Ordering::SeqCst);
+            if !self.pin(blk, epoch) || self.listhead.load(Ordering::Acquire) != n {
+                self.unpin(blk);
+                self.stats.pop_retries.fetch_add(1, Ordering::Relaxed);
+                b.wait();
+                continue;
+            }
+
+            if blk.rclosed.load(Ordering::Acquire) {
+                if blk.next.load(Ordering::Acquire) == NONE {
+                    // Drained tail block with no successor: queue empty.
+                    self.unpin(blk);
+                    return None;
+                }
+                self.delete_node(n);
+                self.unpin(blk);
+                continue;
+            }
+
+            let f = blk.front.load(Ordering::Acquire);
+            let r = blk.rear.load(Ordering::Acquire);
+            let limit = r.min(self.block_size);
+
+            if f >= limit {
+                if f >= self.block_size || blk.wclosed.load(Ordering::Acquire) {
+                    // Drained (every claimed slot was consumed or killed).
+                    // f >= size implies rear >= size, so no push will ever
+                    // write this block again: safe to write-close it too
+                    // (delete_node requires both flags).
+                    blk.wclosed.store(true, Ordering::Release);
+                    blk.rclosed.store(true, Ordering::Release);
+                    self.delete_node(n);
+                    self.unpin(blk);
+                    continue;
+                }
+                // Queue currently empty.
+                self.unpin(blk);
+                return None;
+            }
+
+            let p = blk.front.fetch_add(1, Ordering::AcqRel);
+            if p >= self.block_size {
+                blk.wclosed.store(true, Ordering::Release);
+                blk.rclosed.store(true, Ordering::Release);
+                self.delete_node(n);
+                self.unpin(blk);
+                continue;
+            }
+
+            // If a push already claimed this index (p < r), give it a short
+            // grace period to finish its data write before killing the slot.
+            let claimed_by_push = p < r;
+            let mut spin = Backoff::new();
+            loop {
+                match blk.fe[p].load(Ordering::Acquire) {
+                    FE_FULL => {
+                        // Unique consumer for index p: CAS cannot fail.
+                        let prev = blk.fe[p].swap(FE_CONSUMED, Ordering::AcqRel);
+                        debug_assert_eq!(prev, FE_FULL);
+                        let v = blk.data[p].load(Ordering::Relaxed);
+                        self.unpin(blk);
+                        self.stats.pops.fetch_add(1, Ordering::Relaxed);
+                        return Some(v);
+                    }
+                    FE_EMPTY => {
+                        if claimed_by_push && !spin.is_yielding() {
+                            spin.wait();
+                            continue;
+                        }
+                        if blk.fe[p]
+                            .compare_exchange(
+                                FE_EMPTY,
+                                FE_KILLED,
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
+                            )
+                            .is_ok()
+                        {
+                            self.stats.slots_killed.fetch_add(1, Ordering::Relaxed);
+                            break; // retry pop on the next index
+                        }
+                        // CAS failed => push just completed => consume it.
+                    }
+                    other => unreachable!("pop claimed slot in state {other}"),
+                }
+            }
+            self.unpin(blk);
+            self.stats.pop_retries.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        QueueStats {
+            pushes: self.stats.pushes.load(Ordering::Relaxed),
+            pops: self.stats.pops.load(Ordering::Relaxed),
+            blocks_allocated: self.stats.blocks_allocated.load(Ordering::Relaxed),
+            blocks_recycled: self.stats.blocks_recycled.load(Ordering::Relaxed),
+            push_retries: self.stats.push_retries.load(Ordering::Relaxed),
+            pop_retries: self.stats.pop_retries.load(Ordering::Relaxed),
+            slots_killed: self.stats.slots_killed.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+}
+
+impl Default for LfQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for LfQueue {
+    fn drop(&mut self) {
+        let n = self.allocated.load(Ordering::Acquire);
+        for i in 0..n {
+            let p = self.slots[i].load(Ordering::Acquire);
+            if !p.is_null() {
+                drop(unsafe { Box::from_raw(p) });
+            }
+        }
+    }
+}
+
+impl ConcurrentQueue for LfQueue {
+    fn push(&self, v: u64) {
+        let ok = self.push_inner(v, true);
+        debug_assert!(ok);
+    }
+
+    fn try_push(&self, v: u64) -> bool {
+        self.push_inner(v, false)
+    }
+
+    fn pop(&self) -> Option<u64> {
+        self.pop_inner()
+    }
+
+    fn name(&self) -> &'static str {
+        if self.recycle {
+            "lkfree"
+        } else {
+            "lcrq-norecycle"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = LfQueue::with_config(8, 16, true);
+        for i in 0..100 {
+            q.push(i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn crosses_many_blocks_and_recycles() {
+        let q = LfQueue::with_config(4, 8, true);
+        // 25 rounds of fill/drain across 4-slot blocks with only 8 block ids:
+        // impossible without recycling.
+        for round in 0..25 {
+            for i in 0..16 {
+                q.push(round * 100 + i);
+            }
+            for i in 0..16 {
+                assert_eq!(q.pop(), Some(round * 100 + i));
+            }
+        }
+        let st = q.stats();
+        assert!(st.blocks_recycled > 0, "expected recycling: {st:?}");
+        assert!(st.blocks_allocated <= 8);
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_dup() {
+        let q = Arc::new(LfQueue::with_config(64, 64, true));
+        let producers = 4;
+        let consumers = 4;
+        let per = 5_000u64;
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    q.push((p as u64) << 32 | i);
+                }
+            }));
+        }
+        let got = Arc::new(Mutex::new(Vec::new()));
+        for _ in 0..consumers {
+            let q = q.clone();
+            let got = got.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut local = Vec::new();
+                let mut empties = 0;
+                while (local.len() as u64) < producers as u64 * per {
+                    match q.pop() {
+                        Some(v) => {
+                            local.push(v);
+                            empties = 0;
+                        }
+                        None => {
+                            empties += 1;
+                            if empties > 10_000 {
+                                break; // producers done & queue drained
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+                got.lock().unwrap().extend(local);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // drain leftovers
+        while let Some(v) = q.pop() {
+            got.lock().unwrap().push(v);
+        }
+        let got = got.lock().unwrap();
+        assert_eq!(got.len() as u64, producers as u64 * per);
+        let set: HashSet<u64> = got.iter().copied().collect();
+        assert_eq!(set.len(), got.len(), "duplicated element");
+        for p in 0..producers as u64 {
+            for i in 0..per {
+                assert!(set.contains(&(p << 32 | i)));
+            }
+        }
+    }
+
+    #[test]
+    fn per_producer_order_is_fifo() {
+        // Single producer, single consumer: strict FIFO.
+        let q = Arc::new(LfQueue::with_config(16, 32, true));
+        let qp = q.clone();
+        let h = std::thread::spawn(move || {
+            for i in 0..20_000u64 {
+                qp.push(i);
+            }
+        });
+        let mut expect = 0u64;
+        while expect < 20_000 {
+            if let Some(v) = q.pop() {
+                assert_eq!(v, expect);
+                expect += 1;
+            }
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn try_push_fails_when_exhausted_without_consumers() {
+        let q = LfQueue::with_config(2, 2, false);
+        let mut pushed = 0;
+        while q.try_push(1) {
+            pushed += 1;
+            assert!(pushed < 100);
+        }
+        assert!(pushed >= 2);
+    }
+
+    #[test]
+    fn block_accounting_upper_bound() {
+        // §III analysis: blocks in use <= ceil(n1 / C).
+        let c = 16;
+        let q = LfQueue::with_config(c, 128, true);
+        let n1 = 1000u64;
+        for i in 0..n1 {
+            q.push(i);
+        }
+        let st = q.stats();
+        assert!(st.blocks_allocated as u64 <= n1.div_ceil(c as u64) + 1);
+    }
+}

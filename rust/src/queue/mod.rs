@@ -1,0 +1,20 @@
+//! Concurrent queues (paper §III–IV).
+//!
+//! - [`LfQueue`] — the paper's contribution: array-block lock-free queue
+//!   with pooled, recycled blocks (algorithms 7–10).
+//! - [`TbbLikeQueue`] — TBB baseline: same LCRQ family, no recycling.
+//! - [`MsQueue`] — boost baseline: Michael–Scott linked queue, coarse-locked
+//!   free list.
+//! - [`MutexQueue`] — coarse-lock oracle.
+
+pub mod lcrq;
+pub mod ms_queue;
+pub mod mutex_queue;
+pub mod tbb_like;
+pub mod traits;
+
+pub use lcrq::{LfQueue, QueueStats};
+pub use ms_queue::MsQueue;
+pub use mutex_queue::MutexQueue;
+pub use tbb_like::TbbLikeQueue;
+pub use traits::ConcurrentQueue;

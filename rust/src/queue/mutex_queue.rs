@@ -1,0 +1,58 @@
+//! Coarse-locked queue: the simplest correct baseline (a `VecDeque` under a
+//! mutex). Used as a sanity oracle in tests and as the "coarse locks on the
+//! queue" anti-pattern the paper calls out in §III.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::traits::ConcurrentQueue;
+
+pub struct MutexQueue {
+    inner: Mutex<VecDeque<u64>>,
+}
+
+impl MutexQueue {
+    pub fn new() -> MutexQueue {
+        MutexQueue { inner: Mutex::new(VecDeque::new()) }
+    }
+}
+
+impl Default for MutexQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ConcurrentQueue for MutexQueue {
+    fn push(&self, v: u64) {
+        self.inner.lock().unwrap().push_back(v);
+    }
+
+    fn try_push(&self, v: u64) -> bool {
+        self.push(v);
+        true
+    }
+
+    fn pop(&self) -> Option<u64> {
+        self.inner.lock().unwrap().pop_front()
+    }
+
+    fn name(&self) -> &'static str {
+        "mutex"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo() {
+        let q = MutexQueue::new();
+        q.push(1);
+        q.push(2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+}

@@ -1,0 +1,20 @@
+//! Common interface over all queue implementations so benchmarks and the
+//! router can swap them.
+
+/// A multi-producer multi-consumer queue of `u64` payloads.
+///
+/// `u64` is the native payload of the paper's experiments (keys / node
+/// pointers); richer types go through an arena index.
+pub trait ConcurrentQueue: Send + Sync {
+    /// Enqueue, blocking (with backoff) if the implementation is at capacity.
+    fn push(&self, v: u64);
+
+    /// Try to enqueue; `false` if the queue is at capacity right now.
+    fn try_push(&self, v: u64) -> bool;
+
+    /// Dequeue; `None` if the queue is observed empty.
+    fn pop(&self) -> Option<u64>;
+
+    /// Implementation name for reports.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,253 @@
+//! PJRT runtime: load the AOT-compiled L2/L1 routing pipeline and run it
+//! from rust (python never executes at request time).
+//!
+//! Artifacts are HLO **text** (`artifacts/*.hlo.txt`) produced by
+//! `python/compile/aot.py` — text, not serialized protos, because jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so a [`RouteEngine`] must be
+//! created and used on one thread. That matches the paper's methodology —
+//! "we filled the queues first before performing operations on the data
+//! structures": the coordinator generates + routes batches on the leader
+//! thread, workers drain per-thread queues.
+//!
+//! [`native_route`] is the bit-exact rust fallback (same splitmix64 mixer);
+//! [`RouteEngine::self_check`] cross-validates the loaded artifact against
+//! it at startup, so artifact drift is caught before any experiment runs.
+
+use anyhow::{bail, Context, Result};
+
+use crate::hashtable::hash::{hash_key, shard_of};
+use crate::util::rng::mix64;
+
+/// Number of shard bits baked into the kernels (8 NUMA shards).
+pub const SHARD_BITS: u32 = 3;
+
+/// A routed batch: for each generated key, its hash, NUMA shard and slot.
+#[derive(Debug, Clone, Default)]
+pub struct RoutedBatch {
+    pub keys: Vec<u64>,
+    pub hashes: Vec<u64>,
+    pub shards: Vec<u64>,
+    pub slots: Vec<u64>,
+}
+
+impl RoutedBatch {
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    fn append(&mut self, other: &mut RoutedBatch) {
+        self.keys.append(&mut other.keys);
+        self.hashes.append(&mut other.hashes);
+        self.shards.append(&mut other.shards);
+        self.slots.append(&mut other.slots);
+    }
+
+    fn truncate(&mut self, n: usize) {
+        self.keys.truncate(n);
+        self.hashes.truncate(n);
+        self.shards.truncate(n);
+        self.slots.truncate(n);
+    }
+}
+
+/// Bit-exact rust implementation of the `route` kernel
+/// (`python/compile/kernels/route.py`): the no-artifact fallback and the
+/// self-check oracle.
+pub fn native_route(base: u64, m: u64, n: usize) -> RoutedBatch {
+    assert!(m.is_power_of_two());
+    let mut out = RoutedBatch {
+        keys: Vec::with_capacity(n),
+        hashes: Vec::with_capacity(n),
+        shards: Vec::with_capacity(n),
+        slots: Vec::with_capacity(n),
+    };
+    for i in 0..n as u64 {
+        let key = mix64(base.wrapping_add(i));
+        let h = hash_key(key);
+        out.keys.push(key);
+        out.hashes.push(h);
+        out.shards.push(shard_of(key, SHARD_BITS) as u64);
+        out.slots.push(h & (m - 1));
+    }
+    out
+}
+
+/// One compiled batch-size variant of the routing pipeline.
+struct CompiledRoute {
+    batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The AOT routing engine: PJRT CPU client + compiled `route_batch_<N>`
+/// executables. Not `Send` — create and use on the leader thread.
+pub struct RouteEngine {
+    _client: xla::PjRtClient,
+    /// sorted descending by batch size
+    variants: Vec<CompiledRoute>,
+    pub dispatches: std::cell::Cell<u64>,
+}
+
+impl RouteEngine {
+    /// Load every `route_batch_*.hlo.txt` under `artifacts_dir`.
+    pub fn load(artifacts_dir: &str) -> Result<RouteEngine> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut variants = Vec::new();
+        for entry in std::fs::read_dir(artifacts_dir)
+            .with_context(|| format!("artifacts dir {artifacts_dir} (run `make artifacts`)"))?
+        {
+            let path = entry?.path();
+            let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+            if let Some(rest) = name.strip_prefix("route_batch_") {
+                if let Some(bs) = rest.strip_suffix(".hlo.txt") {
+                    let batch: usize = bs.parse().context("batch size in artifact name")?;
+                    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                        .with_context(|| format!("parse {name}"))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+                    variants.push(CompiledRoute { batch, exe });
+                }
+            }
+        }
+        if variants.is_empty() {
+            bail!("no route_batch_*.hlo.txt artifacts in {artifacts_dir}");
+        }
+        variants.sort_by(|a, b| b.batch.cmp(&a.batch));
+        let engine = RouteEngine { _client: client, variants, dispatches: std::cell::Cell::new(0) };
+        engine.self_check().context("artifact self-check vs native mixer")?;
+        Ok(engine)
+    }
+
+    /// Batch sizes available (descending).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.variants.iter().map(|v| v.batch).collect()
+    }
+
+    fn run_variant(&self, v: &CompiledRoute, base: u64, m: u64) -> Result<RoutedBatch> {
+        let base_l = xla::Literal::vec1(&[base]);
+        let m_l = xla::Literal::vec1(&[m]);
+        let result = v.exe.execute::<xla::Literal>(&[base_l, m_l])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 4 {
+            bail!("route artifact returned {} outputs, want 4", parts.len());
+        }
+        let mut it = parts.into_iter();
+        let keys = it.next().unwrap().to_vec::<u64>()?;
+        let hashes = it.next().unwrap().to_vec::<u64>()?;
+        let shards = it.next().unwrap().to_vec::<u64>()?;
+        let slots = it.next().unwrap().to_vec::<u64>()?;
+        self.dispatches.set(self.dispatches.get() + 1);
+        Ok(RoutedBatch { keys, hashes, shards, slots })
+    }
+
+    /// Route `n` keys starting at counter `base` for a table of `m` slots.
+    /// Runs as few compiled dispatches as possible (largest variants first),
+    /// padding the tail with the smallest variant and truncating.
+    pub fn route(&self, base: u64, m: u64, n: usize) -> Result<RoutedBatch> {
+        assert!(m.is_power_of_two());
+        let mut out = RoutedBatch::default();
+        let mut off = 0usize;
+        for v in &self.variants {
+            while n - off >= v.batch {
+                let mut b = self.run_variant(v, base.wrapping_add(off as u64), m)?;
+                out.append(&mut b);
+                off += v.batch;
+            }
+        }
+        if off < n {
+            // tail: run the smallest variant once and truncate
+            let v = self.variants.last().unwrap();
+            let mut b = self.run_variant(v, base.wrapping_add(off as u64), m)?;
+            b.truncate(n - off);
+            out.append(&mut b);
+        }
+        Ok(out)
+    }
+
+    /// Cross-check the artifact against the rust mixer on a probe batch.
+    pub fn self_check(&self) -> Result<()> {
+        let v = self.variants.last().unwrap();
+        let got = self.run_variant(v, 0, 8192)?;
+        let want = native_route(0, 8192, v.batch);
+        if got.keys != want.keys || got.hashes != want.hashes {
+            bail!("artifact drift: AOT route != native splitmix64");
+        }
+        if got.shards != want.shards || got.slots != want.slots {
+            bail!("artifact drift: AOT shard/slot routing != native");
+        }
+        Ok(())
+    }
+}
+
+/// Key router: AOT engine when artifacts are present, else the bit-exact
+/// native path. Both produce identical batches.
+pub enum KeyRouter {
+    Aot(RouteEngine),
+    Native,
+}
+
+impl KeyRouter {
+    /// Prefer AOT artifacts from `dir`; fall back to native with a notice.
+    pub fn auto(dir: &str) -> KeyRouter {
+        match RouteEngine::load(dir) {
+            Ok(e) => KeyRouter::Aot(e),
+            Err(err) => {
+                eprintln!("[cdskl] AOT artifacts unavailable ({err:#}); using native router");
+                KeyRouter::Native
+            }
+        }
+    }
+
+    pub fn route(&self, base: u64, m: u64, n: usize) -> RoutedBatch {
+        match self {
+            KeyRouter::Aot(e) => e.route(base, m, n).expect("AOT route"),
+            KeyRouter::Native => native_route(base, m, n),
+        }
+    }
+
+    pub fn is_aot(&self) -> bool {
+        matches!(self, KeyRouter::Aot(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::GOLDEN;
+
+    #[test]
+    fn native_route_matches_golden() {
+        let b = native_route(0, 8192, 5);
+        assert_eq!(b.keys, GOLDEN.to_vec());
+        for i in 0..5 {
+            assert_eq!(b.hashes[i], mix64(b.keys[i]));
+            assert_eq!(b.shards[i], b.keys[i] >> 61);
+            assert_eq!(b.slots[i], b.hashes[i] & 8191);
+        }
+    }
+
+    #[test]
+    fn native_route_shard_range() {
+        let b = native_route(12345, 1024, 10_000);
+        assert!(b.shards.iter().all(|&s| s < 8));
+        assert!(b.slots.iter().all(|&s| s < 1024));
+        assert_eq!(b.len(), 10_000);
+    }
+
+    #[test]
+    fn native_router_enum() {
+        let r = KeyRouter::Native;
+        assert!(!r.is_aot());
+        let b = r.route(7, 256, 100);
+        assert_eq!(b.len(), 100);
+        assert_eq!(b.keys[0], mix64(7));
+    }
+
+    // AOT tests live in rust/tests/aot_roundtrip.rs (they need artifacts).
+}

@@ -1,0 +1,1448 @@
+//! Concurrent deterministic 1-2-3-4 skiplist (paper §II, algorithms 1–6).
+//!
+//! Structure: a hierarchy of linked lists. Level 0 is the *terminal* list
+//! holding `(key, value)`; level 1 nodes ("leaves") point into it; higher
+//! levels shortcut further. Every non-terminal node covers the child segment
+//! `(<prev sibling key>, node.key]`; the rightmost node of every level (and
+//! the head) carries key `u64::MAX` ("the key of the root node is the
+//! maximum key"). All lists end at the shared self-referential sentinel.
+//!
+//! Concurrency design, faithful to the paper:
+//! - `(key, next)` lives in one 128-bit atomic word; **`Find` is lock-free**
+//!   (algorithm 4) and validates node generations against recycling (the
+//!   paper's per-node reference counters).
+//! - `Addition` (algs 1–2) locks a node plus its children (L shape, ≤ 6
+//!   locks) and splits 5-child nodes proactively on the way down.
+//! - `Deletion` locks the node plus an adjacent child *pair* (LL shape),
+//!   boosts 2-child path nodes via `MergeBorrow` (alg 5), and removes the
+//!   terminal key with in-segment unlink or delete-by-copy so a segment's
+//!   first node is never unlinked (which would dangle the left neighbour's
+//!   `next`). `merge` removes the node with the *higher* key for the same
+//!   reason.
+//! - Height changes only at the head (algs 3/6); any operation seeing
+//!   `head.next != sentinel` retries after helping (`IncreaseDepth`).
+//! - Stale-high keys left by lazy ancestor updates are repaired eagerly by
+//!   `CheckNodeKey` whenever a writer passes through a node.
+//!
+//! Deadlock freedom: every writer acquires locks parent-before-child and
+//! left-before-right, and releases before recursing; the order is acyclic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sync::Backoff;
+
+use super::node::{NodeArena, NodeRef, SENTINEL};
+
+/// How `find` traverses: the paper's lock-free algorithm 4, or the RWL
+/// baseline (hand-over-hand shared locks, "RWL" in tables II/III).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FindMode {
+    LockFree,
+    ReadLocked,
+}
+
+/// Tri-state internal result (paper's TRUE/FALSE/RETRY).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Tri {
+    True,
+    False,
+    Retry,
+}
+
+/// Operation counters (used by tests, ablations and EXPERIMENTS.md).
+#[derive(Debug, Default, Clone)]
+pub struct SkiplistStats {
+    pub splits: u64,
+    pub merges: u64,
+    pub borrows: u64,
+    pub depth_increases: u64,
+    pub depth_decreases: u64,
+    pub find_retries: u64,
+    pub write_retries: u64,
+}
+
+#[derive(Default)]
+struct AtomicSkiplistStats {
+    splits: AtomicU64,
+    merges: AtomicU64,
+    borrows: AtomicU64,
+    depth_increases: AtomicU64,
+    depth_decreases: AtomicU64,
+    find_retries: AtomicU64,
+    write_retries: AtomicU64,
+}
+
+
+/// Fixed-capacity child list (arity is bounded by ~7 plus the boundary
+/// node): avoids a heap allocation per visited node on the write path —
+/// see EXPERIMENTS.md §Perf.
+pub(crate) struct ChildVec {
+    buf: [NodeRef; 12],
+    len: usize,
+}
+
+impl ChildVec {
+    #[inline]
+    fn new() -> ChildVec {
+        ChildVec { buf: [SENTINEL; 12], len: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, r: NodeRef) {
+        if self.len < self.buf.len() {
+            self.buf[self.len] = r;
+            self.len += 1;
+        } else {
+            // Beyond any legal arity: structure is transiently wide; the
+            // caller's split logic only needs a prefix, so clamp (the next
+            // traversal splits again).
+            debug_assert!(false, "child arity overflow");
+        }
+    }
+}
+
+impl std::ops::Deref for ChildVec {
+    type Target = [NodeRef];
+    #[inline]
+    fn deref(&self) -> &[NodeRef] {
+        &self.buf[..self.len]
+    }
+}
+
+/// The concurrent deterministic 1-2-3-4 skiplist.
+pub struct DetSkiplist {
+    arena: NodeArena,
+    head: NodeRef,
+    mode: FindMode,
+    len: AtomicU64,
+    stats: AtomicSkiplistStats,
+}
+
+/// Keys must stay below `u64::MAX` (reserved for the head/sentinel spine).
+pub const MAX_KEY: u64 = u64::MAX - 1;
+
+impl DetSkiplist {
+    /// Skiplist with default arena sizing (grow-on-demand blocks).
+    pub fn new(mode: FindMode) -> DetSkiplist {
+        Self::with_capacity(mode, 1 << 20)
+    }
+
+    /// `capacity` bounds the number of live nodes (terminal + index).
+    pub fn with_capacity(mode: FindMode, capacity: usize) -> DetSkiplist {
+        let block = 8192.min(capacity.max(16));
+        let blocks = capacity.div_ceil(block) + 2;
+        let arena = NodeArena::new(block, blocks);
+        // head: level-1 leaf, key MAX, no children yet.
+        let head = arena.alloc(u64::MAX, SENTINEL, SENTINEL, 0, 1);
+        DetSkiplist {
+            arena,
+            head,
+            mode,
+            len: AtomicU64::new(0),
+            stats: AtomicSkiplistStats::default(),
+        }
+    }
+
+    #[inline]
+    fn is_head(&self, r: NodeRef) -> bool {
+        r == self.head
+    }
+
+    /// Number of keys currently stored.
+    pub fn len(&self) -> u64 {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> SkiplistStats {
+        SkiplistStats {
+            splits: self.stats.splits.load(Ordering::Relaxed),
+            merges: self.stats.merges.load(Ordering::Relaxed),
+            borrows: self.stats.borrows.load(Ordering::Relaxed),
+            depth_increases: self.stats.depth_increases.load(Ordering::Relaxed),
+            depth_decreases: self.stats.depth_decreases.load(Ordering::Relaxed),
+            find_retries: self.stats.find_retries.load(Ordering::Relaxed),
+            write_retries: self.stats.write_retries.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn arena(&self) -> &NodeArena {
+        &self.arena
+    }
+
+    // ------------------------------------------------------------------
+    // Height management (algorithms 3 and 6)
+    // ------------------------------------------------------------------
+
+    /// Algorithm 3: push the head's level down one if it gained a sibling.
+    fn increase_depth(&self) {
+        let head = self.arena.node(self.head);
+        head.lock.lock();
+        let (hkey, hnext) = head.key_next();
+        if hnext == SENTINEL {
+            head.lock.unlock();
+            return;
+        }
+        let level = head.level.load(Ordering::Relaxed);
+        let hbot = head.bottom.load(Ordering::Acquire);
+        // d inherits the head's current (key, next, bottom) at the old level.
+        let d = self.arena.alloc(hkey, hnext, hbot, 0, level);
+        head.bottom.store(d, Ordering::Release);
+        head.level.store(level + 1, Ordering::Relaxed);
+        head.set_key_next(u64::MAX, SENTINEL);
+        head.lock.unlock();
+        self.stats.depth_increases.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Algorithm 6: collapse a root whose single child spans everything.
+    fn decrease_depth(&self) {
+        let head = self.arena.node(self.head);
+        head.lock.lock();
+        let (hkey, hnext) = head.key_next();
+        let level = head.level.load(Ordering::Relaxed);
+        if hnext != SENTINEL || level <= 1 {
+            head.lock.unlock();
+            return;
+        }
+        let b = head.bottom.load(Ordering::Acquire);
+        if b == SENTINEL {
+            head.lock.unlock();
+            return;
+        }
+        let bn = self.arena.node(b);
+        bn.lock.lock();
+        let (bkey, bnext) = bn.key_next();
+        let bb = bn.bottom.load(Ordering::Acquire);
+        // Collapse only when b is the sole child (key MAX), not terminal.
+        if bkey == hkey && bnext == SENTINEL && bb != SENTINEL {
+            head.bottom.store(bb, Ordering::Release);
+            head.level.store(level - 1, Ordering::Relaxed);
+            bn.mark.store(true, Ordering::Release);
+            bn.lock.unlock();
+            self.arena.retire(b);
+            self.stats.depth_decreases.fetch_add(1, Ordering::Relaxed);
+        } else {
+            bn.lock.unlock();
+        }
+        head.lock.unlock();
+    }
+
+    // ------------------------------------------------------------------
+    // Shared helpers for writers (node + children locked)
+    // ------------------------------------------------------------------
+
+    /// Lock and collect the children of locked node `p` (the paper's
+    /// `AcquireChildren`): the segment from `p.bottom` up to and including
+    /// the first child with key >= p.key. Children cannot be retired while
+    /// `p` is locked, so links resolve unconditionally.
+    fn acquire_children(&self, pkey: u64, pbottom: NodeRef) -> ChildVec {
+        let mut out = ChildVec::new();
+        let mut d = pbottom;
+        while d != SENTINEL {
+            let dn = self.arena.node(d);
+            dn.lock.lock();
+            let (dk, dnext) = dn.key_next();
+            if dk > pkey {
+                // Foreign boundary: this node already belongs to the next
+                // parent (we are stale-high). Exclude it — CheckNodeKey will
+                // lower our key and the operation moves right.
+                dn.lock.unlock();
+                break;
+            }
+            out.push(d);
+            if dk == pkey {
+                break;
+            }
+            d = dnext;
+        }
+        out
+    }
+
+    fn release_children(&self, children: &[NodeRef]) {
+        for &c in children {
+            self.arena.node(c).lock.unlock();
+        }
+    }
+
+    /// Release children, retiring any that this operation marked (merge /
+    /// drop-key victims). Children cannot be marked by other threads while
+    /// their parent is locked, so every marked child here is ours.
+    fn release_children_retiring(&self, children: &[NodeRef]) {
+        for &c in children {
+            let n = self.arena.node(c);
+            let marked = n.is_marked();
+            n.lock.unlock();
+            if marked {
+                self.arena.retire(c);
+            }
+        }
+    }
+
+    /// Paper's `CheckNodeKey`: lower `p.key` to its last child's key if the
+    /// child with the highest key was removed. `p` and children are locked.
+    fn check_node_key(&self, p: NodeRef, children: &[NodeRef]) {
+        if self.is_head(p) || children.is_empty() {
+            return;
+        }
+        let pn = self.arena.node(p);
+        let (pkey, pnext) = pn.key_next();
+        if pkey == u64::MAX {
+            return; // MAX-spine nodes cover (prev, MAX] by construction
+        }
+        let last = self.arena.node(*children.last().unwrap());
+        let lk = last.key();
+        if lk < pkey {
+            pn.set_key_next(lk, pnext);
+        }
+    }
+
+    /// Algorithm 2 (`AdditionRebalance`): split `p` if it has >= 5 children.
+    /// `p` and `children` are locked. The new sibling takes `p`'s old
+    /// `(key, next)` and the children from index 2 on; `p` keeps the first
+    /// two and the second child's key.
+    fn addition_rebalance(&self, p: NodeRef, children: &[NodeRef]) {
+        if children.len() < 5 {
+            return;
+        }
+        let pn = self.arena.node(p);
+        let (pkey, pnext) = pn.key_next();
+        let level = pn.level.load(Ordering::Relaxed);
+        let nn = self.arena.alloc(pkey, pnext, children[2], 0, level);
+        let c1key = self.arena.node(children[1]).key();
+        pn.set_key_next(c1key, nn);
+        self.stats.splits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // ------------------------------------------------------------------
+    // Addition (algorithm 1)
+    // ------------------------------------------------------------------
+
+    /// Insert `key -> value`. Returns `false` if the key already exists.
+    pub fn insert(&self, key: u64, value: u64) -> bool {
+        assert!(key <= MAX_KEY, "key {key} reserved for sentinels");
+        let mut b = Backoff::new();
+        loop {
+            match self.addition(self.head, key, value) {
+                Tri::True => {
+                    self.len.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+                Tri::False => return false,
+                Tri::Retry => {
+                    self.stats.write_retries.fetch_add(1, Ordering::Relaxed);
+                    self.increase_depth();
+                    b.wait();
+                }
+            }
+        }
+    }
+
+    fn addition(&self, nref: NodeRef, key: u64, value: u64) -> Tri {
+        if nref == SENTINEL {
+            return Tri::Retry; // fell off the structure; restart
+        }
+        let Some(n) = self.arena.resolve(nref) else {
+            return Tri::Retry;
+        };
+        n.lock.lock();
+        if n.is_marked() || self.arena.resolve(nref).is_none() {
+            n.lock.unlock();
+            return Tri::Retry;
+        }
+        let (nkey, nnext) = n.key_next();
+        if self.is_head(nref) && nnext != SENTINEL {
+            n.lock.unlock();
+            return Tri::Retry; // height increase pending (alg 3)
+        }
+        let nbottom = n.bottom.load(Ordering::Acquire);
+        let children = self.acquire_children(nkey, nbottom);
+        self.check_node_key(nref, &children);
+        let (nkey, nnext) = n.key_next(); // may have been lowered
+
+        if nkey < key {
+            // Move right.
+            self.release_children(&children);
+            n.lock.unlock();
+            return self.addition(nnext, key, value);
+        }
+
+        self.addition_rebalance(nref, &children);
+        let level = n.level.load(Ordering::Relaxed);
+
+        if level == 1 {
+            // Leaf: insert into the terminal segment (paper's AddNode).
+            let r = self.add_terminal(nref, &children, key, value);
+            self.release_children(&children);
+            n.lock.unlock();
+            return r;
+        }
+
+        // Descend into the first child whose key covers `key`.
+        let mut target = None;
+        for &c in children.iter() {
+            if key <= self.arena.node(c).key() {
+                target = Some(c);
+                break;
+            }
+        }
+        self.release_children(&children);
+        n.lock.unlock();
+        match target {
+            Some(c) => self.addition(c, key, value),
+            // Can only happen transiently (concurrent restructure): retry.
+            None => Tri::Retry,
+        }
+    }
+
+    /// Insert a terminal node for `key` into locked leaf `p` whose terminal
+    /// children (also locked) are `children`. Insert-before is done by
+    /// duplicating the successor and atomically overwriting its `(key,next)`
+    /// so no predecessor pointer is ever needed.
+    fn add_terminal(&self, p: NodeRef, children: &[NodeRef], key: u64, value: u64) -> Tri {
+        let pn = self.arena.node(p);
+        // children here are terminal nodes; find insert position.
+        let mut pred: Option<NodeRef> = None;
+        let mut cand: Option<NodeRef> = None;
+        for &c in children {
+            let ck = self.arena.node(c).key();
+            if ck < key {
+                pred = Some(c);
+            } else {
+                cand = Some(c);
+                break;
+            }
+        }
+        if let Some(c) = cand {
+            let cn = self.arena.node(c);
+            let (ck, cnext) = cn.key_next();
+            if ck == key {
+                return Tri::False; // duplicate
+            }
+            // insert-before-c: nn duplicates c; c becomes the new key.
+            let cval = cn.value.load(Ordering::Relaxed);
+            let nn = self.arena.alloc(ck, cnext, SENTINEL, cval, 0);
+            cn.value.store(value, Ordering::Relaxed);
+            cn.set_key_next(key, nn);
+            return Tri::True;
+        }
+        // key is larger than every child but <= p.key: append after pred,
+        // or become the first terminal node of an empty (head) leaf.
+        let t = match pred {
+            Some(pr) => {
+                let prn = self.arena.node(pr);
+                let (prk, prnext) = prn.key_next();
+                let t = self.arena.alloc(key, prnext, SENTINEL, value, 0);
+                prn.set_key_next(prk, t);
+                t
+            }
+            None => {
+                let t = self.arena.alloc(key, SENTINEL, SENTINEL, value, 0);
+                pn.bottom.store(t, Ordering::Release);
+                t
+            }
+        };
+        let _ = t;
+        Tri::True
+    }
+
+    // ------------------------------------------------------------------
+    // Find (algorithm 4)
+    // ------------------------------------------------------------------
+
+    /// Lookup: returns the value if present.
+    pub fn get(&self, key: u64) -> Option<u64> {
+        let mut b = Backoff::new();
+        loop {
+            let r = match self.mode {
+                FindMode::LockFree => self.find_lockfree(key),
+                FindMode::ReadLocked => self.find_readlocked(key),
+            };
+            match r {
+                Ok(v) => return v,
+                Err(()) => {
+                    self.stats.find_retries.fetch_add(1, Ordering::Relaxed);
+                    // help pending height changes, then retry
+                    if self.arena.node(self.head).next() != SENTINEL {
+                        self.increase_depth();
+                    }
+                    b.wait();
+                }
+            }
+        }
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// One lock-free traversal attempt. `Err(())` = RETRY.
+    fn find_lockfree(&self, key: u64) -> Result<Option<u64>, ()> {
+        let mut cur = self.head;
+        loop {
+            if cur == SENTINEL {
+                return Ok(None);
+            }
+            let Some(n) = self.arena.resolve(cur) else {
+                return Err(());
+            };
+            if n.is_marked() {
+                return Err(());
+            }
+            let (nkey, nnext) = n.key_next();
+            let bottom = n.bottom.load(Ordering::Acquire);
+            // validate the snapshot was taken while `cur` was live
+            if self.arena.resolve(cur).is_none() {
+                return Err(());
+            }
+            if self.is_head(cur) && nnext != SENTINEL {
+                return Err(()); // height change pending
+            }
+            if bottom == SENTINEL && !self.is_head(cur) {
+                // terminal node
+                if nkey == key {
+                    let v = n.value.load(Ordering::Relaxed);
+                    if n.is_marked() || self.arena.resolve(cur).is_none() {
+                        return Err(());
+                    }
+                    return Ok(Some(v));
+                }
+                if nkey > key {
+                    return Ok(None);
+                }
+                cur = nnext;
+                continue;
+            }
+            if self.is_head(cur) && bottom == SENTINEL {
+                return Ok(None); // empty structure
+            }
+            if nkey < key {
+                cur = nnext;
+                continue;
+            }
+            // collect children lock-free; stop at first covering child
+            let mut d = bottom;
+            let mut target = None;
+            loop {
+                if d == SENTINEL {
+                    break;
+                }
+                let Some((dk, dn)) = self.arena.read_key_next(d) else {
+                    return Err(());
+                };
+                let dnode = self.arena.node(d);
+                if dnode.is_marked() || n.is_marked() {
+                    return Err(());
+                }
+                if key <= dk {
+                    target = Some(d);
+                    break;
+                }
+                if dk >= nkey {
+                    break; // boundary child passed without covering `key`
+                }
+                d = dn;
+            }
+            match target {
+                // Descending into a foreign boundary child (key > nkey,
+                // stale-high parent) is correct: the gap (last child, nkey]
+                // belongs to the next parent's first subtree.
+                Some(t) => cur = t,
+                // No cover: every child key < key, so this subtree's max is
+                // below `key` — continue right (paper: "the search can
+                // continue to the right").
+                None => cur = nnext,
+            }
+        }
+    }
+
+    /// RWL baseline: hand-over-hand shared locks.
+    fn find_readlocked(&self, key: u64) -> Result<Option<u64>, ()> {
+        let mut cur = self.head;
+        let mut held: Option<NodeRef> = None;
+        let r = self.find_readlocked_inner(&mut cur, &mut held, key);
+        if let Some(h) = held {
+            self.arena.node(h).lock.unlock_shared();
+        }
+        r
+    }
+
+    fn find_readlocked_inner(
+        &self,
+        cur: &mut NodeRef,
+        held: &mut Option<NodeRef>,
+        key: u64,
+    ) -> Result<Option<u64>, ()> {
+        // lock the starting node
+        let n0 = self.arena.node(*cur);
+        n0.lock.lock_shared();
+        *held = Some(*cur);
+        loop {
+            let curref = (*held).unwrap();
+            let n = self.arena.node(curref);
+            if n.is_marked() || self.arena.resolve(curref).is_none() {
+                return Err(());
+            }
+            let (nkey, nnext) = n.key_next();
+            if self.is_head(curref) && nnext != SENTINEL {
+                return Err(());
+            }
+            let bottom = n.bottom.load(Ordering::Acquire);
+            if bottom == SENTINEL && !self.is_head(curref) {
+                // terminal
+                if nkey == key {
+                    return Ok(Some(n.value.load(Ordering::Relaxed)));
+                }
+                if nkey > key {
+                    return Ok(None);
+                }
+                if !self.step_read(held, nnext)? {
+                    return Ok(None);
+                }
+                continue;
+            }
+            if self.is_head(curref) && bottom == SENTINEL {
+                return Ok(None);
+            }
+            if nkey < key {
+                if !self.step_read(held, nnext)? {
+                    return Ok(None);
+                }
+                continue;
+            }
+            // walk children under the parent's read lock (children cannot be
+            // restructured without the parent's write lock for terminals, and
+            // child-level writers lock the child itself — take its read lock
+            // before stepping down).
+            let mut d = bottom;
+            let mut target = None;
+            while d != SENTINEL {
+                let dn = self.arena.node(d);
+                let (dk, dnext) = dn.key_next();
+                if key <= dk {
+                    target = Some(d);
+                    break;
+                }
+                if dk >= nkey {
+                    break;
+                }
+                d = dnext;
+            }
+            match target {
+                Some(t) => {
+                    if !self.step_read(held, t)? {
+                        return Ok(None);
+                    }
+                }
+                // no cover: subtree max < key — continue right
+                None => {
+                    if !self.step_read(held, nnext)? {
+                        return Ok(None);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Move the single shared lock from `held` to `to` (hand-over-hand).
+    fn step_read(&self, held: &mut Option<NodeRef>, to: NodeRef) -> Result<bool, ()> {
+        if to == SENTINEL {
+            if let Some(h) = held.take() {
+                self.arena.node(h).lock.unlock_shared();
+            }
+            return Ok(false);
+        }
+        let tn = self.arena.node(to);
+        tn.lock.lock_shared();
+        if let Some(h) = held.take() {
+            self.arena.node(h).lock.unlock_shared();
+        }
+        *held = Some(to);
+        if self.arena.resolve(to).is_none() || tn.is_marked() {
+            return Err(());
+        }
+        Ok(true)
+    }
+
+    // ------------------------------------------------------------------
+    // Deletion (algorithm 5 + the paper's prose)
+    // ------------------------------------------------------------------
+
+    /// Remove `key`. Returns `false` if it was not present.
+    pub fn erase(&self, key: u64) -> bool {
+        let mut b = Backoff::new();
+        loop {
+            match self.deletion(self.head, key) {
+                Tri::True => {
+                    self.len.fetch_sub(1, Ordering::Relaxed);
+                    // opportunistic height collapse (cheap check first)
+                    self.maybe_decrease_depth();
+                    return true;
+                }
+                Tri::False => return false,
+                Tri::Retry => {
+                    self.stats.write_retries.fetch_add(1, Ordering::Relaxed);
+                    self.increase_depth();
+                    self.maybe_decrease_depth();
+                    b.wait();
+                }
+            }
+        }
+    }
+
+    fn maybe_decrease_depth(&self) {
+        let head = self.arena.node(self.head);
+        if head.level.load(Ordering::Relaxed) <= 1 {
+            return;
+        }
+        let b = head.bottom.load(Ordering::Acquire);
+        if b == SENTINEL {
+            return;
+        }
+        if let Some((bk, bn)) = self.arena.read_key_next(b) {
+            if bk == u64::MAX && bn == SENTINEL {
+                self.decrease_depth();
+            }
+        }
+    }
+
+    fn deletion(&self, nref: NodeRef, key: u64) -> Tri {
+        if nref == SENTINEL {
+            return Tri::Retry;
+        }
+        let Some(n) = self.arena.resolve(nref) else {
+            return Tri::Retry;
+        };
+        n.lock.lock();
+        if n.is_marked() || self.arena.resolve(nref).is_none() {
+            n.lock.unlock();
+            return Tri::Retry;
+        }
+        let (nkey, nnext) = n.key_next();
+        if self.is_head(nref) && nnext != SENTINEL {
+            n.lock.unlock();
+            return Tri::Retry;
+        }
+        let nbottom = n.bottom.load(Ordering::Acquire);
+        let children = self.acquire_children(nkey, nbottom);
+        self.check_node_key(nref, &children);
+        let (nkey, nnext) = n.key_next();
+
+        if nkey < key {
+            self.release_children(&children);
+            n.lock.unlock();
+            return self.deletion(nnext, key);
+        }
+
+        let level = n.level.load(Ordering::Relaxed);
+        if level == 1 {
+            let r = self.drop_key(nref, &children, key);
+            self.release_children_retiring(&children);
+            n.lock.unlock();
+            return r;
+        }
+
+        // Choose the covering child and (if it needs boosting) a partner.
+        let mut idx = None;
+        for (i, &c) in children.iter().enumerate() {
+            if key <= self.arena.node(c).key() {
+                idx = Some(i);
+                break;
+            }
+        }
+        let Some(i) = idx else {
+            self.release_children(&children);
+            n.lock.unlock();
+            return Tri::False; // key beyond every child: not present
+        };
+
+        let target = children[i];
+        let tchildren = self.count_children(target);
+        let mut descend = target;
+
+        if tchildren == 0 {
+            // transient/corrupt view; retry
+            self.release_children(&children);
+            n.lock.unlock();
+            return Tri::Retry;
+        }
+        if tchildren <= 2 && children.len() >= 2 {
+            // Boost via merge/borrow with a sibling (alg 5). Pair is always
+            // (left, right) = adjacent children of n; merge removes the
+            // RIGHT node so the parent's bottom link never dangles.
+            let (li, ri) = if i > 0 { (i - 1, i) } else { (i, i + 1) };
+            if ri < children.len() {
+                let merged = self.merge_borrow(children[li], children[ri], key);
+                descend = merged;
+            }
+        }
+
+        self.release_children_retiring(&children);
+        n.lock.unlock();
+        self.deletion(descend, key)
+    }
+
+    /// Count the children of locked node `c` (no locks needed: mutating
+    /// `c`'s child list requires `c`'s lock, which we hold).
+    fn count_children(&self, c: NodeRef) -> usize {
+        self.collect_children(c).len()
+    }
+
+    /// Algorithm 5: merge the pair `(n1, n2)` (both locked children of the
+    /// current node; `n2 = n1.next`) and optionally re-split ("borrow") if
+    /// the donor side had more than 2 children. Returns the node now
+    /// covering `key`.
+    fn merge_borrow(&self, n1: NodeRef, n2: NodeRef, key: u64) -> NodeRef {
+        let n1n = self.arena.node(n1);
+        let n2n = self.arena.node(n2);
+        let (n1key, n1next) = n1n.key_next();
+        debug_assert_eq!(n1next, n2, "pair must be adjacent");
+        let c1 = self.collect_children(n1);
+        let c2 = self.collect_children(n2);
+        let target_left = key <= n1key;
+        let need = (target_left && c1.len() <= 2) || (!target_left && c2.len() <= 2);
+        if !need {
+            return if target_left { n1 } else { n2 };
+        }
+
+        // merge: n1 absorbs n2 (atomic (key,next) takeover), n2 retires.
+        let (n2key, n2next) = n2n.key_next();
+        let level = n1n.level.load(Ordering::Relaxed);
+        n1n.set_key_next(n2key, n2next);
+        n2n.mark.store(true, Ordering::Release);
+        self.stats.merges.fetch_add(1, Ordering::Relaxed);
+
+        let merged_len = c1.len() + c2.len();
+        let mut result = n1;
+        if merged_len > 4 {
+            // borrow: re-split so the target side keeps >= 3 children.
+            self.stats.borrows.fetch_add(1, Ordering::Relaxed);
+            if target_left {
+                // target was n1 (2 children); give it c2[0], new node nn
+                // takes c2[1..].
+                let nn = self.arena.alloc(n2key, n2next, c2[1], 0, level);
+                let bk = self.arena.node(c2[0]).key();
+                n1n.set_key_next(bk, nn);
+                result = if key <= bk { n1 } else { nn };
+            } else {
+                // target was n2 (2 children); nn takes n1's last child plus
+                // n2's children.
+                let p = c1.len();
+                let nn = self.arena.alloc(n2key, n2next, c1[p - 1], 0, level);
+                let bk = self.arena.node(c1[p - 2]).key();
+                n1n.set_key_next(bk, nn);
+                result = if key <= bk { n1 } else { nn };
+            }
+        }
+        // n2 stays locked and marked; the caller's release loop unlocks and
+        // retires it (release_children_retiring).
+        result
+    }
+
+    /// Child refs of locked node `c`, without locking them (mutating `c`'s
+    /// child list requires `c`'s lock, which the caller holds). Foreign
+    /// boundary nodes (key > c.key) are excluded — see `acquire_children`.
+    fn collect_children(&self, c: NodeRef) -> ChildVec {
+        let cn = self.arena.node(c);
+        let ckey = cn.key();
+        let mut out = ChildVec::new();
+        let mut d = cn.bottom.load(Ordering::Acquire);
+        while d != SENTINEL {
+            let (dk, dn) = self.arena.node(d).key_next();
+            if dk > ckey {
+                break;
+            }
+            out.push(d);
+            if dk == ckey {
+                break;
+            }
+            d = dn;
+        }
+        out
+    }
+
+    /// Remove `key` from the terminal segment of locked leaf `p` (children
+    /// locked). In-segment unlink via predecessor, or delete-by-copy when
+    /// the target is the segment's first node.
+    fn drop_key(&self, p: NodeRef, children: &[NodeRef], key: u64) -> Tri {
+        let pn = self.arena.node(p);
+        let mut pred: Option<NodeRef> = None;
+        let mut target: Option<(usize, NodeRef)> = None;
+        for (i, &c) in children.iter().enumerate() {
+            let ck = self.arena.node(c).key();
+            if ck == key {
+                target = Some((i, c));
+                break;
+            }
+            if ck < key {
+                pred = Some(c);
+            } else {
+                break;
+            }
+        }
+        let Some((ti, t)) = target else {
+            return Tri::False;
+        };
+        let tn = self.arena.node(t);
+        let (tkey, tnext) = tn.key_next();
+        debug_assert_eq!(tkey, key);
+
+        if let Some(pr) = pred {
+            // unlink via in-segment predecessor
+            let prn = self.arena.node(pr);
+            let (prk, _) = prn.key_next();
+            prn.set_key_next(prk, tnext);
+            tn.mark.store(true, Ordering::Release);
+            // keep p.key in sync if we removed the last child
+            if ti == children.len() - 1 {
+                let (pk, pnx) = pn.key_next();
+                if pk == key && !self.is_head(p) {
+                    pn.set_key_next(prk, pnx);
+                }
+            }
+        } else if ti + 1 < children.len() {
+            // first child: delete-by-copy from the in-segment successor
+            let s = children[ti + 1];
+            let sn = self.arena.node(s);
+            let (sk, snext) = sn.key_next();
+            let sval = sn.value.load(Ordering::Relaxed);
+            tn.value.store(sval, Ordering::Relaxed);
+            tn.set_key_next(sk, snext);
+            sn.mark.store(true, Ordering::Release);
+        } else {
+            // only child (possible only at the head leaf)
+            pn.bottom.store(tnext, Ordering::Release);
+            tn.mark.store(true, Ordering::Release);
+        }
+        Tri::True
+    }
+
+
+    // ------------------------------------------------------------------
+    // Range search (the paper's motivating skiplist advantage, §IX)
+    // ------------------------------------------------------------------
+
+    /// Collect all `(key, value)` with `lo <= key <= hi` (lock-free walk of
+    /// the terminal list; retries on interference).
+    pub fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)> {
+        let mut b = Backoff::new();
+        'retry: loop {
+            let Some(start) = self.seek_terminal(lo) else {
+                self.stats.find_retries.fetch_add(1, Ordering::Relaxed);
+                b.wait();
+                continue 'retry;
+            };
+            let mut out = Vec::new();
+            let mut cur = start;
+            loop {
+                if cur == SENTINEL {
+                    return out;
+                }
+                let Some((k, nx)) = self.arena.read_key_next(cur) else {
+                    self.stats.find_retries.fetch_add(1, Ordering::Relaxed);
+                    b.wait();
+                    continue 'retry;
+                };
+                if k > hi {
+                    return out;
+                }
+                if k >= lo {
+                    let v = self.arena.node(cur).value.load(Ordering::Relaxed);
+                    if self.arena.resolve(cur).is_none() {
+                        b.wait();
+                        continue 'retry;
+                    }
+                    out.push((k, v));
+                }
+                cur = nx;
+            }
+        }
+    }
+
+    /// Find the first terminal node with key >= lo (None = retry).
+    fn seek_terminal(&self, lo: u64) -> Option<NodeRef> {
+        let mut cur = self.head;
+        loop {
+            if cur == SENTINEL {
+                return Some(SENTINEL);
+            }
+            let n = self.arena.resolve(cur)?;
+            if n.is_marked() {
+                return None;
+            }
+            let (nkey, nnext) = n.key_next();
+            let bottom = n.bottom.load(Ordering::Acquire);
+            if self.arena.resolve(cur).is_none() {
+                return None;
+            }
+            if self.is_head(cur) && nnext != SENTINEL {
+                return None;
+            }
+            if bottom == SENTINEL && !self.is_head(cur) {
+                // terminal node
+                if nkey >= lo {
+                    return Some(cur);
+                }
+                cur = nnext;
+                continue;
+            }
+            if self.is_head(cur) && bottom == SENTINEL {
+                return Some(SENTINEL);
+            }
+            if nkey < lo {
+                cur = nnext;
+                continue;
+            }
+            // descend into covering child
+            let mut d = bottom;
+            let mut target = None;
+            while d != SENTINEL {
+                let (dk, dn) = self.arena.read_key_next(d)?;
+                if lo <= dk {
+                    target = Some(d);
+                    break;
+                }
+                if dk >= nkey {
+                    break;
+                }
+                d = dn;
+            }
+            match target {
+                Some(t) => cur = t,
+                None => {
+                    // lo beyond this subtree: continue right at this level
+                    cur = nnext;
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Invariant checking (tests; quiescent only)
+    // ------------------------------------------------------------------
+
+    /// Verify structural invariants (call only when no writers are active):
+    /// per-level sorted keys, parent keys >= child keys, segment partition,
+    /// arity bounds, terminal key set. Returns the sorted terminal keys.
+    pub fn check_invariants(&self) -> Result<Vec<u64>, String> {
+        let head = self.arena.node(self.head);
+        if head.next() != SENTINEL {
+            return Err("head has a sibling (pending IncreaseDepth)".into());
+        }
+        // walk down the leftmost spine collecting level heads
+        let mut level_heads = vec![self.head];
+        let mut cur = self.head;
+        loop {
+            let b = self.arena.node(cur).bottom.load(Ordering::Acquire);
+            if b == SENTINEL {
+                break;
+            }
+            level_heads.push(b);
+            cur = b;
+        }
+        if level_heads.len() < 2 {
+            // empty structure
+            return Ok(Vec::new());
+        }
+        // check each non-terminal level
+        for w in 0..level_heads.len() - 1 {
+            let mut node = level_heads[w];
+            let mut child = level_heads[w + 1];
+            let mut prev_key: Option<u64> = None;
+            while node != SENTINEL {
+                let nn = self.arena.node(node);
+                if nn.is_marked() {
+                    return Err(format!("marked node reachable at level walk {w}"));
+                }
+                let (nkey, nnext) = nn.key_next();
+                if let Some(pk) = prev_key {
+                    if nkey <= pk {
+                        return Err(format!("level {w}: keys not increasing ({pk} -> {nkey})"));
+                    }
+                }
+                prev_key = Some(nkey);
+                // node's children = segment of the lower level from `child`
+                if nn.bottom.load(Ordering::Acquire) != child {
+                    return Err(format!("level {w}: segment partition broken at key {nkey}"));
+                }
+                let mut arity = 0;
+                loop {
+                    if child == SENTINEL {
+                        break;
+                    }
+                    let (ck, cn) = self.arena.node(child).key_next();
+                    if ck > nkey {
+                        // stale-high parent (lazy CheckNodeKey): the next
+                        // parent owns this child — legal quiescent state.
+                        break;
+                    }
+                    arity += 1;
+                    child = cn;
+                    if ck == nkey {
+                        break;
+                    }
+                }
+                if arity > 7 {
+                    return Err(format!("level {w}: node arity {arity} > 7"));
+                }
+                let is_root_or_spine = node == self.head || nkey == u64::MAX;
+                if arity < 2 && !is_root_or_spine && self.len() > 4 {
+                    return Err(format!("level {w}: node key {nkey} arity {arity} < 2"));
+                }
+                node = nnext;
+            }
+            if child != SENTINEL {
+                return Err(format!("level {w}: lower level has unreachable tail"));
+            }
+        }
+        // collect terminal keys
+        let mut keys = Vec::new();
+        let mut t = *level_heads.last().unwrap();
+        let mut prev: Option<u64> = None;
+        while t != SENTINEL {
+            let (k, nx) = self.arena.node(t).key_next();
+            if let Some(p) = prev {
+                if k <= p {
+                    return Err(format!("terminal keys not increasing ({p} -> {k})"));
+                }
+            }
+            prev = Some(k);
+            keys.push(k);
+            t = nx;
+        }
+        if keys.len() as u64 != self.len() {
+            return Err(format!("len {} != terminal count {}", self.len(), keys.len()));
+        }
+        Ok(keys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeSet;
+    use std::sync::Arc;
+
+    fn new_lf() -> DetSkiplist {
+        DetSkiplist::with_capacity(FindMode::LockFree, 1 << 14)
+    }
+
+    #[test]
+    fn empty_structure() {
+        let s = new_lf();
+        assert_eq!(s.get(1), None);
+        assert!(!s.erase(1));
+        assert!(s.is_empty());
+        assert_eq!(s.check_invariants().unwrap(), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn single_insert_find() {
+        let s = new_lf();
+        assert!(s.insert(42, 420));
+        assert_eq!(s.get(42), Some(420));
+        assert_eq!(s.get(41), None);
+        assert_eq!(s.get(43), None);
+        assert!(!s.insert(42, 421), "duplicate rejected");
+        assert_eq!(s.get(42), Some(420), "duplicate does not overwrite");
+        assert_eq!(s.check_invariants().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn sorted_bulk_insert_builds_levels() {
+        let s = new_lf();
+        for k in 0..200u64 {
+            assert!(s.insert(k, k * 10));
+        }
+        for k in 0..200u64 {
+            assert_eq!(s.get(k), Some(k * 10), "key {k}");
+        }
+        assert_eq!(s.get(200), None);
+        let st = s.stats();
+        assert!(st.splits > 0, "splits must have happened");
+        assert!(st.depth_increases > 0, "height must have grown");
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reverse_and_shuffled_inserts() {
+        for seed in 0..3 {
+            let s = new_lf();
+            let mut keys: Vec<u64> = (0..300).map(|i| i * 7 + 1).collect();
+            if seed == 0 {
+                keys.reverse();
+            } else {
+                Rng::new(seed).shuffle(&mut keys);
+            }
+            for &k in &keys {
+                assert!(s.insert(k, k));
+            }
+            for &k in &keys {
+                assert_eq!(s.get(k), Some(k));
+            }
+            let mut sorted = keys.clone();
+            sorted.sort_unstable();
+            assert_eq!(s.check_invariants().unwrap(), sorted);
+        }
+    }
+
+    #[test]
+    fn erase_sequential() {
+        let s = new_lf();
+        for k in 0..100u64 {
+            s.insert(k, k);
+        }
+        // erase evens
+        for k in (0..100u64).step_by(2) {
+            assert!(s.erase(k), "erase {k}");
+        }
+        for k in 0..100u64 {
+            assert_eq!(s.contains(k), k % 2 == 1, "key {k}");
+        }
+        assert!(!s.erase(2), "double erase");
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys, (0..100).filter(|k| k % 2 == 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn erase_everything_and_reuse() {
+        let s = new_lf();
+        for round in 0..3 {
+            for k in 0..150u64 {
+                assert!(s.insert(k, k + round), "round {round} insert {k}");
+            }
+            for k in 0..150u64 {
+                assert!(s.erase(k), "round {round} erase {k}");
+            }
+            assert!(s.is_empty(), "round {round}");
+            assert_eq!(s.check_invariants().unwrap(), Vec::<u64>::new());
+        }
+        assert!(s.arena().recycled_count() > 0, "nodes must recycle");
+    }
+
+    #[test]
+    fn matches_btreeset_oracle_sequential() {
+        let s = new_lf();
+        let mut oracle = BTreeSet::new();
+        let mut rng = Rng::new(7);
+        for i in 0..10_000 {
+            let k = rng.below(400);
+            match rng.below(10) {
+                0..=3 => assert_eq!(s.insert(k, k), oracle.insert(k), "op {i} insert {k}"),
+                4..=5 => assert_eq!(s.erase(k), oracle.remove(&k), "op {i} erase {k}"),
+                _ => assert_eq!(s.contains(k), oracle.contains(&k), "op {i} find {k}"),
+            }
+        }
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys, oracle.into_iter().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn range_search() {
+        let s = new_lf();
+        for k in (0..100u64).step_by(5) {
+            s.insert(k, k * 2);
+        }
+        let r = s.range(10, 30);
+        assert_eq!(r, vec![(10, 20), (15, 30), (20, 40), (25, 50), (30, 60)]);
+        assert_eq!(s.range(101, 200), vec![]);
+        assert_eq!(s.range(0, 0), vec![(0, 0)]);
+        // range on boundaries not present
+        let r = s.range(11, 14);
+        assert_eq!(r, vec![]);
+    }
+
+    #[test]
+    fn rwl_mode_basics() {
+        let s = DetSkiplist::with_capacity(FindMode::ReadLocked, 1 << 14);
+        let mut oracle = BTreeSet::new();
+        let mut rng = Rng::new(11);
+        for _ in 0..3_000 {
+            let k = rng.below(200);
+            match rng.below(4) {
+                0 => assert_eq!(s.insert(k, k), oracle.insert(k)),
+                1 => assert_eq!(s.erase(k), oracle.remove(&k)),
+                _ => assert_eq!(s.contains(k), oracle.contains(&k)),
+            }
+        }
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys, oracle.into_iter().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_disjoint_inserts() {
+        let s = Arc::new(DetSkiplist::with_capacity(FindMode::LockFree, 1 << 16));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2_000u64 {
+                    assert!(s.insert(t * 100_000 + i, i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 8_000);
+        for t in 0..4u64 {
+            for i in (0..2_000u64).step_by(97) {
+                assert_eq!(s.get(t * 100_000 + i), Some(i));
+            }
+        }
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys.len(), 8_000);
+    }
+
+    #[test]
+    fn concurrent_interleaved_key_space() {
+        // threads insert interleaved (mod-4) keys: heavy same-segment contention
+        let s = Arc::new(DetSkiplist::with_capacity(FindMode::LockFree, 1 << 16));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1_500u64 {
+                    assert!(s.insert(i * 4 + t, t));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 6_000);
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys, (0..6_000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers() {
+        let s = Arc::new(DetSkiplist::with_capacity(FindMode::LockFree, 1 << 16));
+        for k in 0..1_000u64 {
+            s.insert(k * 2, k); // evens pre-inserted
+        }
+        let mut handles = Vec::new();
+        // writers insert odds
+        for t in 0..2u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1_000u64 {
+                    if i % 2 == t {
+                        s.insert(i * 2 + 1, i);
+                    }
+                }
+            }));
+        }
+        // readers: evens must always be present
+        for _ in 0..2 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(3);
+                for _ in 0..5_000 {
+                    let k = rng.below(1_000) * 2;
+                    assert!(s.contains(k), "pre-inserted key {k} lost");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 2_000);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn concurrent_erase_and_find() {
+        let s = Arc::new(DetSkiplist::with_capacity(FindMode::LockFree, 1 << 16));
+        for k in 0..4_000u64 {
+            s.insert(k, k);
+        }
+        let mut handles = Vec::new();
+        // erasers: each removes a disjoint quarter
+        for t in 0..2u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for k in 0..4_000u64 {
+                    if k % 4 == t {
+                        assert!(s.erase(k), "erase {k}");
+                    }
+                }
+            }));
+        }
+        // readers: keys == 3 (mod 4) never erased
+        for _ in 0..2 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(5);
+                for _ in 0..4_000 {
+                    let k = rng.below(1_000) * 4 + 3;
+                    assert!(s.contains(k), "stable key {k} lost");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 2_000);
+        let keys = s.check_invariants().unwrap();
+        assert!(keys.iter().all(|k| k % 4 >= 2));
+    }
+
+    #[test]
+    fn concurrent_mixed_workload_then_invariants() {
+        let s = Arc::new(DetSkiplist::with_capacity(FindMode::LockFree, 1 << 16));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for _ in 0..2_500 {
+                    let k = rng.below(256);
+                    match rng.below(10) {
+                        0..=4 => {
+                            s.insert(k, k * 3);
+                        }
+                        5..=6 => {
+                            s.erase(k);
+                        }
+                        _ => {
+                            if let Some(v) = s.get(k) {
+                                assert_eq!(v, k * 3, "value corruption at {k}");
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let keys = s.check_invariants().unwrap();
+        for k in keys {
+            assert_eq!(s.get(k), Some(k * 3));
+        }
+    }
+
+    #[test]
+    fn height_decreases_after_mass_erase() {
+        let s = new_lf();
+        for k in 0..500u64 {
+            s.insert(k, k);
+        }
+        for k in 0..495u64 {
+            s.erase(k);
+        }
+        // trigger lazy collapses via traffic
+        for _ in 0..20 {
+            s.get(499);
+            s.erase(496);
+            s.insert(496, 0);
+        }
+        assert!(s.stats().depth_decreases > 0, "height should shrink");
+        s.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,14 @@
+//! Skiplists (paper §II, §VI).
+//!
+//! - [`DetSkiplist`] — the paper's contribution: concurrent deterministic
+//!   1-2-3-4 skiplist with lock-free `Find` ([`FindMode::LockFree`],
+//!   "lkfreefind") or the RWL baseline ([`FindMode::ReadLocked`], "RWL").
+//! - [`RandomSkiplist`] — the lock-free randomized skiplist baseline of
+//!   Table IV ("lkfreeRandomSL").
+
+pub mod det;
+pub mod node;
+pub mod random;
+
+pub use det::{DetSkiplist, FindMode, SkiplistStats, MAX_KEY};
+pub use random::RandomSkiplist;

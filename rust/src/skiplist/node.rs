@@ -1,0 +1,303 @@
+//! Skiplist nodes and the generation-tagged node arena.
+//!
+//! A node link (`NodeRef`) is not a raw pointer but a packed
+//! `(generation << 32) | index` word.  The arena keeps node memory alive for
+//! its whole lifetime (block allocation, §V) and bumps a node's generation
+//! when it is retired — the paper's "reference counters incremented during
+//! every recycling operation" ABA defense.  Any traversal that resolves a
+//! stale link observes a generation mismatch and retries; recycled memory
+//! can never masquerade as the node a link meant.
+//!
+//! The `(key, next)` pair lives in one [`AtomicU128`] (key in bits 127:64,
+//! next link in bits 63:0, exactly the paper's wide-integer layout), so the
+//! lock-free `Find` reads a consistent view with a single atomic load and
+//! rebalancing publishes `(key, next)` changes atomically.
+
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::queue::{ConcurrentQueue, LfQueue};
+use crate::sync::{hi64, lo64, pack, AtomicU128, RwSpinLock};
+
+/// Packed node link: `(gen << 32) | idx`. `SENTINEL` (0) is the shared
+/// self-referential tail/bottom sentinel of every list level.
+pub type NodeRef = u64;
+
+/// The sentinel link: index 0, generation 0 (never retired).
+pub const SENTINEL: NodeRef = 0;
+
+#[inline(always)]
+pub fn ref_idx(r: NodeRef) -> u32 {
+    r as u32
+}
+
+#[inline(always)]
+pub fn ref_gen(r: NodeRef) -> u32 {
+    (r >> 32) as u32
+}
+
+#[inline(always)]
+pub fn make_ref(gen: u32, idx: u32) -> NodeRef {
+    (gen as u64) << 32 | idx as u64
+}
+
+/// A skiplist node (terminal and non-terminal share the layout).
+pub struct Node {
+    /// `(key << 64) | next` — read/written as one atomic word.
+    pub kn: AtomicU128,
+    /// Link to the first child (non-terminal) or `SENTINEL` (terminal).
+    pub bottom: AtomicU64,
+    /// Payload (terminal nodes only).
+    pub value: AtomicU64,
+    /// Per-node reader-writer lock (writers: L/LL acquisition; readers:
+    /// only in the RWL find baseline).
+    pub lock: RwSpinLock,
+    /// Set when the node has been removed from its list.
+    pub mark: AtomicBool,
+    /// Recycle generation; bumped at retire. Links carry the expected value.
+    pub gen: AtomicU32,
+    /// Height: 0 = terminal, 1 = leaf, increasing upward.
+    pub level: AtomicU32,
+}
+
+impl Node {
+    #[inline]
+    pub fn key(&self) -> u64 {
+        hi64(self.kn.load())
+    }
+
+    #[inline]
+    pub fn next(&self) -> NodeRef {
+        lo64(self.kn.load())
+    }
+
+    /// Atomic `(key, next)` snapshot.
+    #[inline]
+    pub fn key_next(&self) -> (u64, NodeRef) {
+        let kn = self.kn.load();
+        (hi64(kn), lo64(kn))
+    }
+
+    #[inline]
+    pub fn set_key_next(&self, key: u64, next: NodeRef) {
+        self.kn.store(pack(key, next));
+    }
+
+    #[inline]
+    pub fn is_marked(&self) -> bool {
+        self.mark.load(Ordering::Acquire)
+    }
+}
+
+/// Index-addressed block arena for [`Node`]s with lock-free recycling.
+pub struct NodeArena {
+    dir: Box<[AtomicPtr<Node>]>, // one pointer per block
+    count: AtomicUsize,
+    grow: Mutex<()>,
+    bump: AtomicUsize,
+    block_size: usize,
+    free: LfQueue,
+    retired: AtomicU64,
+    recycled: AtomicU64,
+}
+
+unsafe impl Send for NodeArena {}
+unsafe impl Sync for NodeArena {}
+
+impl NodeArena {
+    /// Arena with `block_size` nodes per block, at most `max_blocks` blocks.
+    /// Index 0 is pre-allocated as the self-referential sentinel.
+    pub fn new(block_size: usize, max_blocks: usize) -> NodeArena {
+        let a = NodeArena {
+            dir: (0..max_blocks).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+            count: AtomicUsize::new(0),
+            grow: Mutex::new(()),
+            bump: AtomicUsize::new(0),
+            block_size,
+            free: LfQueue::with_config(4096, max_blocks.max(64), true),
+            retired: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        };
+        // slot 0: the sentinel — key MAX, next/bottom self, never retired.
+        let s = a.alloc(u64::MAX, SENTINEL, SENTINEL, 0, 0);
+        debug_assert_eq!(s, SENTINEL);
+        a
+    }
+
+    #[inline]
+    fn raw(&self, idx: u32) -> &Node {
+        let b = idx as usize / self.block_size;
+        let s = idx as usize % self.block_size;
+        debug_assert!(b < self.count.load(Ordering::Acquire));
+        unsafe { &*self.dir[b].load(Ordering::Acquire).add(s) }
+    }
+
+    /// Resolve a link; `None` if the node has been retired/recycled since
+    /// the link was created (generation mismatch).
+    #[inline]
+    pub fn resolve(&self, r: NodeRef) -> Option<&Node> {
+        let n = self.raw(ref_idx(r));
+        if n.gen.load(Ordering::Acquire) == ref_gen(r) {
+            Some(n)
+        } else {
+            None
+        }
+    }
+
+    /// Resolve without the generation check (sentinel / owned refs).
+    #[inline]
+    pub fn node(&self, r: NodeRef) -> &Node {
+        self.raw(ref_idx(r))
+    }
+
+    /// Read a validated `(key, next)` snapshot of `r`: the generation is
+    /// re-checked *after* the read, so the returned pair was published while
+    /// the node was live under this link.
+    #[inline]
+    pub fn read_key_next(&self, r: NodeRef) -> Option<(u64, NodeRef)> {
+        let n = self.raw(ref_idx(r));
+        if n.gen.load(Ordering::Acquire) != ref_gen(r) {
+            return None;
+        }
+        let (k, nx) = n.key_next();
+        if n.gen.load(Ordering::Acquire) != ref_gen(r) {
+            return None;
+        }
+        Some((k, nx))
+    }
+
+    /// Allocate a node (recycled or fresh) and initialize it. The lock word
+    /// and generation are deliberately *not* reset (stragglers may still be
+    /// spinning on them; they re-validate after acquiring).
+    pub fn alloc(&self, key: u64, next: NodeRef, bottom: NodeRef, value: u64, level: u32) -> NodeRef {
+        let idx = if let Some(i) = self.free.pop() {
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+            i as u32
+        } else {
+            let idx = self.bump.fetch_add(1, Ordering::AcqRel);
+            let b = idx / self.block_size;
+            assert!(b < self.dir.len(), "NodeArena exhausted ({} blocks)", self.dir.len());
+            while b >= self.count.load(Ordering::Acquire) {
+                let _g = self.grow.lock().unwrap();
+                let cur = self.count.load(Ordering::Acquire);
+                if cur <= b {
+                    for nb in cur..=b {
+                        let block: Box<[Node]> = (0..self.block_size)
+                            .map(|_| Node {
+                                kn: AtomicU128::new(0),
+                                bottom: AtomicU64::new(SENTINEL),
+                                value: AtomicU64::new(0),
+                                lock: RwSpinLock::new(),
+                                mark: AtomicBool::new(false),
+                                gen: AtomicU32::new(0),
+                                level: AtomicU32::new(0),
+                            })
+                            .collect();
+                        let ptr = Box::into_raw(block) as *mut Node;
+                        self.dir[nb].store(ptr, Ordering::Release);
+                    }
+                    self.count.store(b + 1, Ordering::Release);
+                }
+            }
+            idx as u32
+        };
+        let n = self.raw(idx);
+        n.bottom.store(bottom, Ordering::Relaxed);
+        n.value.store(value, Ordering::Relaxed);
+        n.mark.store(false, Ordering::Relaxed);
+        n.level.store(level, Ordering::Relaxed);
+        // publish (key,next) last
+        n.set_key_next(key, next);
+        make_ref(n.gen.load(Ordering::Acquire), idx)
+    }
+
+    /// Retire a node: bump its generation (invalidating every existing link
+    /// to it) and return it to the free pool.
+    pub fn retire(&self, r: NodeRef) {
+        debug_assert_ne!(r, SENTINEL, "cannot retire the sentinel");
+        let n = self.raw(ref_idx(r));
+        debug_assert!(n.is_marked(), "retiring an unmarked node");
+        n.gen.fetch_add(1, Ordering::AcqRel);
+        self.retired.fetch_add(1, Ordering::Relaxed);
+        self.free.push(ref_idx(r) as u64);
+    }
+
+    /// Nodes currently materialized (capacity in nodes).
+    pub fn capacity(&self) -> u64 {
+        self.count.load(Ordering::Acquire) as u64 * self.block_size as u64
+    }
+
+    pub fn retired_count(&self) -> u64 {
+        self.retired.load(Ordering::Relaxed)
+    }
+
+    pub fn recycled_count(&self) -> u64 {
+        self.recycled.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for NodeArena {
+    fn drop(&mut self) {
+        let n = self.count.load(Ordering::Acquire);
+        for i in 0..n {
+            let p = self.dir[i].load(Ordering::Acquire);
+            if !p.is_null() {
+                let slice = std::ptr::slice_from_raw_parts_mut(p, self.block_size);
+                drop(unsafe { Box::from_raw(slice) });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentinel_is_self_referential() {
+        let a = NodeArena::new(16, 16);
+        let s = a.node(SENTINEL);
+        assert_eq!(s.key(), u64::MAX);
+        assert_eq!(s.next(), SENTINEL);
+        assert_eq!(s.bottom.load(Ordering::Relaxed), SENTINEL);
+    }
+
+    #[test]
+    fn alloc_and_resolve() {
+        let a = NodeArena::new(16, 16);
+        let r = a.alloc(42, SENTINEL, SENTINEL, 7, 0);
+        let n = a.resolve(r).unwrap();
+        assert_eq!(n.key(), 42);
+        assert_eq!(n.value.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn retire_invalidates_links() {
+        let a = NodeArena::new(16, 16);
+        let r = a.alloc(1, SENTINEL, SENTINEL, 0, 0);
+        a.node(r).mark.store(true, Ordering::Release);
+        a.retire(r);
+        assert!(a.resolve(r).is_none());
+        assert!(a.read_key_next(r).is_none());
+    }
+
+    #[test]
+    fn recycled_slot_gets_new_generation() {
+        let a = NodeArena::new(16, 16);
+        let r1 = a.alloc(1, SENTINEL, SENTINEL, 0, 0);
+        a.node(r1).mark.store(true, Ordering::Release);
+        a.retire(r1);
+        let r2 = a.alloc(2, SENTINEL, SENTINEL, 0, 0);
+        assert_eq!(ref_idx(r1), ref_idx(r2), "slot reused");
+        assert_ne!(ref_gen(r1), ref_gen(r2), "generation bumped");
+        assert!(a.resolve(r1).is_none());
+        assert_eq!(a.resolve(r2).unwrap().key(), 2);
+    }
+
+    #[test]
+    fn ref_packing() {
+        let r = make_ref(0xABCD, 0x1234);
+        assert_eq!(ref_gen(r), 0xABCD);
+        assert_eq!(ref_idx(r), 0x1234);
+    }
+}

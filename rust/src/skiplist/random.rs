@@ -1,0 +1,584 @@
+//! Lock-free randomized skiplist — the "lkfreeRandomSL" baseline of
+//! Table IV / figure 6.
+//!
+//! The classic Harris/Herlihy–Shavit lock-free skiplist: each node carries a
+//! tower of next links; removal marks links top-down (mark bit embedded in
+//! the link word) and traversals help unlink marked nodes with CAS.  Nodes
+//! come from a block arena with generation-tagged links (the §V memory
+//! manager): a link is `(mark:1 | gen:31 | idx:32)`, so CAS on a recycled
+//! node's link fails on the generation — the ABA defense the paper
+//! implements with per-node reference counters.
+
+use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::queue::{ConcurrentQueue, LfQueue};
+use crate::sync::Backoff;
+use crate::util::rng::mix64;
+
+pub const MAX_LEVEL: usize = 16;
+
+const NIL_IDX: u32 = u32::MAX;
+const MARK: u64 = 1 << 63;
+const GEN_MASK: u64 = ((1u64 << 31) - 1) << 32;
+
+#[inline(always)]
+fn link(gen: u32, idx: u32) -> u64 {
+    ((gen as u64 & 0x7FFF_FFFF) << 32) | idx as u64
+}
+
+#[inline(always)]
+fn link_idx(l: u64) -> u32 {
+    l as u32
+}
+
+#[inline(always)]
+fn link_gen(l: u64) -> u32 {
+    ((l & GEN_MASK) >> 32) as u32
+}
+
+#[inline(always)]
+fn is_marked(l: u64) -> bool {
+    l & MARK != 0
+}
+
+#[inline(always)]
+fn unmarked(l: u64) -> u64 {
+    l & !MARK
+}
+
+const NIL: u64 = NIL_IDX as u64; // unmarked, gen 0, idx NIL
+
+struct RNode {
+    key: AtomicU64,
+    value: AtomicU64,
+    /// next links per level; `tower[0]` is the full list.
+    tower: [AtomicU64; MAX_LEVEL],
+    /// highest valid tower level (inclusive).
+    top: AtomicU32,
+    gen: AtomicU32,
+}
+
+impl RNode {
+    fn empty() -> RNode {
+        RNode {
+            key: AtomicU64::new(0),
+            value: AtomicU64::new(0),
+            tower: std::array::from_fn(|_| AtomicU64::new(NIL)),
+            top: AtomicU32::new(0),
+            gen: AtomicU32::new(0),
+        }
+    }
+}
+
+/// Lock-free randomized skiplist mapping `u64 -> u64`.
+pub struct RandomSkiplist {
+    dir: Box<[AtomicPtr<RNode>]>,
+    count: AtomicUsize,
+    grow: Mutex<()>,
+    bump: AtomicUsize,
+    block_size: usize,
+    free: LfQueue,
+    head: Box<RNode>, // virtual -inf node; its tower anchors every level
+    len: AtomicU64,
+    seed: AtomicU64,
+    retries: AtomicU64,
+}
+
+unsafe impl Send for RandomSkiplist {}
+unsafe impl Sync for RandomSkiplist {}
+
+struct FindResult {
+    preds: [u64; MAX_LEVEL], // link to pred per level; HEAD_LINK for head
+    succs: [u64; MAX_LEVEL],
+    found: Option<u64>, // link of the node with the key (level-0 succ)
+}
+
+/// Marker for "the head anchors this level" in `preds`.
+const HEAD_LINK: u64 = (NIL_IDX as u64) | (1 << 62);
+
+impl RandomSkiplist {
+    pub fn new() -> RandomSkiplist {
+        Self::with_capacity(1 << 20)
+    }
+
+    pub fn with_capacity(capacity: usize) -> RandomSkiplist {
+        let block = 8192.min(capacity.max(16));
+        let blocks = capacity.div_ceil(block) + 2;
+        RandomSkiplist {
+            dir: (0..blocks).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+            count: AtomicUsize::new(0),
+            grow: Mutex::new(()),
+            bump: AtomicUsize::new(0),
+            block_size: block,
+            free: LfQueue::with_config(4096, blocks.max(64), true),
+            head: Box::new(RNode::empty()),
+            len: AtomicU64::new(0),
+            seed: AtomicU64::new(0x5EED),
+            retries: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn raw(&self, idx: u32) -> &RNode {
+        let b = idx as usize / self.block_size;
+        let s = idx as usize % self.block_size;
+        unsafe { &*self.dir[b].load(Ordering::Acquire).add(s) }
+    }
+
+    /// Resolve an unmarked link; None on generation mismatch (recycled).
+    #[inline]
+    fn resolve(&self, l: u64) -> Option<&RNode> {
+        let n = self.raw(link_idx(l));
+        if n.gen.load(Ordering::Acquire) & 0x7FFF_FFFF == link_gen(l) {
+            Some(n)
+        } else {
+            None
+        }
+    }
+
+    /// Load the tower slot `lvl` of the node behind link `l` (or the head).
+    #[inline]
+    fn tower(&self, l: u64, lvl: usize) -> &AtomicU64 {
+        if l == HEAD_LINK {
+            &self.head.tower[lvl]
+        } else {
+            &self.raw(link_idx(l)).tower[lvl]
+        }
+    }
+
+    fn alloc(&self, key: u64, value: u64, top: u32) -> u64 {
+        let idx = if let Some(i) = self.free.pop() {
+            i as u32
+        } else {
+            let idx = self.bump.fetch_add(1, Ordering::AcqRel);
+            let b = idx / self.block_size;
+            assert!(b < self.dir.len(), "RandomSkiplist arena exhausted");
+            while b >= self.count.load(Ordering::Acquire) {
+                let _g = self.grow.lock().unwrap();
+                let cur = self.count.load(Ordering::Acquire);
+                if cur <= b {
+                    for nb in cur..=b {
+                        let block: Box<[RNode]> =
+                            (0..self.block_size).map(|_| RNode::empty()).collect();
+                        self.dir[nb].store(Box::into_raw(block) as *mut RNode, Ordering::Release);
+                    }
+                    self.count.store(b + 1, Ordering::Release);
+                }
+            }
+            idx as u32
+        };
+        let n = self.raw(idx);
+        n.key.store(key, Ordering::Relaxed);
+        n.value.store(value, Ordering::Relaxed);
+        n.top.store(top, Ordering::Relaxed);
+        link(n.gen.load(Ordering::Acquire), idx)
+    }
+
+    fn retire(&self, l: u64) {
+        let n = self.raw(link_idx(l));
+        n.gen.fetch_add(1, Ordering::AcqRel);
+        self.free.push(link_idx(l) as u64);
+    }
+
+    /// Geometric tower height (p = 1/2), capped at MAX_LEVEL.
+    fn random_level(&self) -> u32 {
+        let s = self.seed.fetch_add(0x9E37_79B9, Ordering::Relaxed);
+        let r = mix64(s);
+        ((r.trailing_ones()) as u32).min(MAX_LEVEL as u32 - 1)
+    }
+
+    /// Harris find with helping. Err(()) = restart (interference/recycle).
+    fn find(&self, key: u64) -> Result<FindResult, ()> {
+        let mut preds = [HEAD_LINK; MAX_LEVEL];
+        let mut succs = [NIL; MAX_LEVEL];
+        let mut pred = HEAD_LINK;
+        for lvl in (0..MAX_LEVEL).rev() {
+            let mut curr = unmarked(self.tower(pred, lvl).load(Ordering::Acquire));
+            loop {
+                if link_idx(curr) == NIL_IDX {
+                    break;
+                }
+                let Some(cn) = self.resolve(curr) else {
+                    return Err(());
+                };
+                let csucc = cn.tower[lvl].load(Ordering::Acquire);
+                // re-validate the node was live when we read its link
+                if self.resolve(curr).is_none() {
+                    return Err(());
+                }
+                if is_marked(csucc) {
+                    // help unlink curr at this level
+                    if self
+                        .tower(pred, lvl)
+                        .compare_exchange(curr, unmarked(csucc), Ordering::AcqRel, Ordering::Acquire)
+                        .is_err()
+                    {
+                        return Err(());
+                    }
+                    curr = unmarked(csucc);
+                    continue;
+                }
+                let ckey = cn.key.load(Ordering::Relaxed);
+                if self.resolve(curr).is_none() {
+                    return Err(());
+                }
+                if ckey < key {
+                    pred = curr;
+                    curr = unmarked(csucc);
+                } else {
+                    break;
+                }
+            }
+            preds[lvl] = pred;
+            succs[lvl] = curr;
+        }
+        let found = if link_idx(succs[0]) != NIL_IDX {
+            let n = self.resolve(succs[0]).ok_or(())?;
+            if n.key.load(Ordering::Relaxed) == key && self.resolve(succs[0]).is_some() {
+                Some(succs[0])
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        Ok(FindResult { preds, succs, found })
+    }
+
+    /// Insert; false if the key exists.
+    pub fn insert(&self, key: u64, value: u64) -> bool {
+        let top = self.random_level();
+        let mut b = Backoff::new();
+        loop {
+            let Ok(f) = self.find(key) else {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+                b.wait();
+                continue;
+            };
+            if f.found.is_some() {
+                return false;
+            }
+            let nl = self.alloc(key, value, top);
+            let nn = self.raw(link_idx(nl));
+            for lvl in 0..=top as usize {
+                nn.tower[lvl].store(f.succs[lvl], Ordering::Relaxed);
+            }
+            // link bottom level (the linearization point)
+            if self.tower(f.preds[0], 0)
+                .compare_exchange(f.succs[0], nl, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                // undo the allocation and retry
+                self.retire(nl);
+                self.retries.fetch_add(1, Ordering::Relaxed);
+                b.wait();
+                continue;
+            }
+            self.len.fetch_add(1, Ordering::Relaxed);
+            // link upper levels (best effort with refresh)
+            for lvl in 1..=top as usize {
+                loop {
+                    let own = nn.tower[lvl].load(Ordering::Acquire);
+                    if is_marked(own) {
+                        return true; // concurrently removed; stop linking
+                    }
+                    if self.tower(f.preds[lvl], lvl)
+                        .compare_exchange(f.succs[lvl], nl, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        break;
+                    }
+                    // refresh preds/succs
+                    let Ok(f2) = self.find(key) else {
+                        return true; // node is in (bottom linked); give up on upper levels
+                    };
+                    if f2.found != Some(nl) {
+                        return true; // removed meanwhile
+                    }
+                    let expected = nn.tower[lvl].load(Ordering::Acquire);
+                    if is_marked(expected) {
+                        return true;
+                    }
+                    if nn.tower[lvl]
+                        .compare_exchange(expected, f2.succs[lvl], Ordering::AcqRel, Ordering::Acquire)
+                        .is_err()
+                    {
+                        return true;
+                    }
+                    // retry CAS with refreshed pred
+                    if self.tower(f2.preds[lvl], lvl)
+                        .compare_exchange(f2.succs[lvl], nl, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        break;
+                    }
+                }
+            }
+            return true;
+        }
+    }
+
+    /// Remove; false if not present.
+    pub fn erase(&self, key: u64) -> bool {
+        let mut b = Backoff::new();
+        loop {
+            let Ok(f) = self.find(key) else {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+                b.wait();
+                continue;
+            };
+            let Some(nl) = f.found else {
+                return false;
+            };
+            let Some(n) = self.resolve(nl) else {
+                continue;
+            };
+            let top = n.top.load(Ordering::Relaxed) as usize;
+            // mark upper levels
+            for lvl in (1..=top).rev() {
+                loop {
+                    let s = n.tower[lvl].load(Ordering::Acquire);
+                    if is_marked(s) {
+                        break;
+                    }
+                    if n.tower[lvl]
+                        .compare_exchange(s, s | MARK, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        break;
+                    }
+                }
+                if self.resolve(nl).is_none() {
+                    return false; // recycled under us: someone else removed it
+                }
+            }
+            // mark bottom level — the linearization point
+            loop {
+                let s = n.tower[0].load(Ordering::Acquire);
+                if is_marked(s) {
+                    return false; // another eraser won
+                }
+                if self.resolve(nl).is_none() {
+                    return false;
+                }
+                if n.tower[0]
+                    .compare_exchange(s, s | MARK, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    self.len.fetch_sub(1, Ordering::Relaxed);
+                    // physical cleanup, then recycle
+                    let _ = self.find(key);
+                    self.retire(nl);
+                    return true;
+                }
+            }
+        }
+    }
+
+    /// Lookup.
+    pub fn get(&self, key: u64) -> Option<u64> {
+        let mut b = Backoff::new();
+        loop {
+            match self.find(key) {
+                Ok(f) => {
+                    let l = f.found?;
+                    let Some(n) = self.resolve(l) else {
+                        continue;
+                    };
+                    let v = n.value.load(Ordering::Relaxed);
+                    if self.resolve(l).is_none() {
+                        continue;
+                    }
+                    return Some(v);
+                }
+                Err(()) => {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    b.wait();
+                }
+            }
+        }
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.get(key).is_some()
+    }
+
+    pub fn len(&self) -> u64 {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn retry_count(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Quiescent structural check: level-0 sorted, towers consistent.
+    pub fn check_invariants(&self) -> Result<Vec<u64>, String> {
+        let mut keys = Vec::new();
+        let mut cur = unmarked(self.head.tower[0].load(Ordering::Acquire));
+        let mut prev: Option<u64> = None;
+        while link_idx(cur) != NIL_IDX {
+            let n = self.resolve(cur).ok_or("stale link in level 0")?;
+            let k = n.key.load(Ordering::Relaxed);
+            if let Some(p) = prev {
+                if k <= p {
+                    return Err(format!("level 0 keys not increasing: {p} -> {k}"));
+                }
+            }
+            prev = Some(k);
+            keys.push(k);
+            cur = unmarked(n.tower[0].load(Ordering::Acquire));
+        }
+        // every upper-level list must be a subsequence of level 0
+        for lvl in 1..MAX_LEVEL {
+            let mut cur = unmarked(self.head.tower[lvl].load(Ordering::Acquire));
+            let mut prev: Option<u64> = None;
+            while link_idx(cur) != NIL_IDX {
+                let n = self.resolve(cur).ok_or("stale link in upper level")?;
+                let k = n.key.load(Ordering::Relaxed);
+                if is_marked(n.tower[lvl].load(Ordering::Acquire)) {
+                    return Err(format!("marked node reachable at level {lvl}"));
+                }
+                if let Some(p) = prev {
+                    if k <= p {
+                        return Err(format!("level {lvl} keys not increasing"));
+                    }
+                }
+                if keys.binary_search(&k).is_err() {
+                    return Err(format!("level {lvl} key {k} missing from level 0"));
+                }
+                prev = Some(k);
+                cur = unmarked(n.tower[lvl].load(Ordering::Acquire));
+            }
+        }
+        if keys.len() as u64 != self.len() {
+            return Err(format!("len {} != level-0 count {}", self.len(), keys.len()));
+        }
+        Ok(keys)
+    }
+}
+
+impl Default for RandomSkiplist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for RandomSkiplist {
+    fn drop(&mut self) {
+        let n = self.count.load(Ordering::Acquire);
+        for i in 0..n {
+            let p = self.dir[i].load(Ordering::Acquire);
+            if !p.is_null() {
+                let slice = std::ptr::slice_from_raw_parts_mut(p, self.block_size);
+                drop(unsafe { Box::from_raw(slice) });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeSet;
+    use std::sync::Arc;
+
+    #[test]
+    fn insert_find_erase_sequential() {
+        let s = RandomSkiplist::with_capacity(1 << 12);
+        assert!(s.insert(5, 50));
+        assert!(s.insert(1, 10));
+        assert!(s.insert(9, 90));
+        assert!(!s.insert(5, 55), "duplicate");
+        assert_eq!(s.get(5), Some(50));
+        assert_eq!(s.get(2), None);
+        assert!(s.erase(5));
+        assert!(!s.erase(5));
+        assert_eq!(s.get(5), None);
+        assert_eq!(s.len(), 2);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn matches_btreeset_oracle() {
+        let s = RandomSkiplist::with_capacity(1 << 14);
+        let mut oracle = BTreeSet::new();
+        let mut rng = Rng::new(42);
+        for _ in 0..5_000 {
+            let k = rng.below(500);
+            match rng.below(3) {
+                0 => assert_eq!(s.insert(k, k), oracle.insert(k), "insert {k}"),
+                1 => assert_eq!(s.erase(k), oracle.remove(&k), "erase {k}"),
+                _ => assert_eq!(s.contains(k), oracle.contains(&k), "find {k}"),
+            }
+        }
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys, oracle.into_iter().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_disjoint_inserts() {
+        let s = Arc::new(RandomSkiplist::with_capacity(1 << 16));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2_000u64 {
+                    assert!(s.insert(t * 10_000 + i, i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 8_000);
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys.len(), 8_000);
+    }
+
+    #[test]
+    fn concurrent_mixed_against_oracle_keys() {
+        // concurrent inserts/erases over a small key space; final state must
+        // be a subset of the key space with consistent membership
+        let s = Arc::new(RandomSkiplist::with_capacity(1 << 16));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                for _ in 0..3_000 {
+                    let k = rng.below(128);
+                    if rng.chance(1, 2) {
+                        s.insert(k, k * 2);
+                    } else {
+                        s.erase(k);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let keys = s.check_invariants().unwrap();
+        for k in keys {
+            assert!(k < 128);
+            assert_eq!(s.get(k), Some(k * 2));
+        }
+    }
+
+    #[test]
+    fn random_levels_are_geometricish() {
+        let s = RandomSkiplist::new();
+        let mut counts = [0u32; MAX_LEVEL];
+        for _ in 0..10_000 {
+            counts[s.random_level() as usize] += 1;
+        }
+        assert!(counts[0] > 4_000 && counts[0] < 6_000, "p(level 0) ~ 1/2");
+        assert!(counts[1] > 1_800 && counts[1] < 3_200, "p(level 1) ~ 1/4");
+    }
+}

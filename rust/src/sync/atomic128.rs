@@ -1,0 +1,271 @@
+//! 128-bit atomic word for the packed `(key, next)` pair.
+//!
+//! The paper stores a 64-bit key in the upper half and a 64-bit pointer in
+//! the lower half of one wide integer so that `Find` can read both with a
+//! single atomic load and `Addition`/`Deletion` can update both with a single
+//! atomic store — that is what makes the lock-free `Find` sound.
+//!
+//! On x86_64 this is implemented with `lock cmpxchg16b` (both the load and
+//! the store are CAS loops; an aligned SSE load is *not* guaranteed atomic
+//! pre-AVX, so we don't use it). Other architectures fall back to a seqlock.
+
+use std::cell::UnsafeCell;
+
+/// A 16-byte-aligned atomic u128.
+#[repr(C, align(16))]
+pub struct AtomicU128 {
+    #[cfg(target_arch = "x86_64")]
+    cell: UnsafeCell<u128>,
+    #[cfg(not(target_arch = "x86_64"))]
+    seq: std::sync::atomic::AtomicU64,
+    #[cfg(not(target_arch = "x86_64"))]
+    cell: UnsafeCell<u128>,
+}
+
+unsafe impl Send for AtomicU128 {}
+unsafe impl Sync for AtomicU128 {}
+
+#[cfg(target_arch = "x86_64")]
+impl AtomicU128 {
+    pub const fn new(v: u128) -> Self {
+        AtomicU128 { cell: UnsafeCell::new(v) }
+    }
+
+    /// Raw cmpxchg16b: returns the previous value (== `expected` on success).
+    #[inline]
+    fn cmpxchg16b(&self, expected: u128, new: u128) -> u128 {
+        let dst = self.cell.get();
+        let (mut lo, mut hi) = (expected as u64, (expected >> 64) as u64);
+        let (new_lo, new_hi) = (new as u64, (new >> 64) as u64);
+        unsafe {
+            // rbx is LLVM-reserved as an asm operand, but the generic `reg`
+            // class may still allocate it for other operands — pin every
+            // register explicitly and shuttle new_lo through rsi around the
+            // cmpxchg16b (restoring rbx with the second xchg).
+            std::arch::asm!(
+                "xchg rbx, rsi",
+                "lock cmpxchg16b [rdi]",
+                "xchg rbx, rsi",
+                in("rdi") dst,
+                inout("rsi") new_lo => _,
+                inout("rax") lo,
+                inout("rdx") hi,
+                in("rcx") new_hi,
+                options(nostack),
+            );
+        }
+        (hi as u128) << 64 | lo as u128
+    }
+
+    #[inline]
+    pub fn load(&self) -> u128 {
+        // cmpxchg16b with new == expected never changes memory and returns
+        // the current value in rdx:rax.
+        self.cmpxchg16b(0, 0)
+    }
+
+    #[inline]
+    pub fn store(&self, v: u128) {
+        let mut cur = self.load();
+        loop {
+            let prev = self.cmpxchg16b(cur, v);
+            if prev == cur {
+                return;
+            }
+            cur = prev;
+        }
+    }
+
+    /// CAS; returns Ok(prev) on success, Err(actual) on failure.
+    #[inline]
+    pub fn compare_exchange(&self, expected: u128, new: u128) -> Result<u128, u128> {
+        let prev = self.cmpxchg16b(expected, new);
+        if prev == expected {
+            Ok(prev)
+        } else {
+            Err(prev)
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+impl AtomicU128 {
+    pub const fn new(v: u128) -> Self {
+        AtomicU128 {
+            seq: std::sync::atomic::AtomicU64::new(0),
+            cell: UnsafeCell::new(v),
+        }
+    }
+
+    // Seqlock fallback: writers serialize on odd seq; readers retry on a
+    // seq change. Writers spin-wait for an even seq.
+    #[inline]
+    pub fn load(&self) -> u128 {
+        use std::sync::atomic::Ordering::*;
+        loop {
+            let s0 = self.seq.load(Acquire);
+            if s0 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let v = unsafe { std::ptr::read_volatile(self.cell.get()) };
+            std::sync::atomic::fence(Acquire);
+            if self.seq.load(Relaxed) == s0 {
+                return v;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn store(&self, v: u128) {
+        use std::sync::atomic::Ordering::*;
+        loop {
+            let s0 = self.seq.load(Relaxed);
+            if s0 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            if self
+                .seq
+                .compare_exchange_weak(s0, s0 + 1, Acquire, Relaxed)
+                .is_ok()
+            {
+                unsafe { std::ptr::write_volatile(self.cell.get(), v) };
+                self.seq.store(s0 + 2, Release);
+                return;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn compare_exchange(&self, expected: u128, new: u128) -> Result<u128, u128> {
+        use std::sync::atomic::Ordering::*;
+        loop {
+            let s0 = self.seq.load(Relaxed);
+            if s0 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            if self
+                .seq
+                .compare_exchange_weak(s0, s0 + 1, Acquire, Relaxed)
+                .is_ok()
+            {
+                let cur = unsafe { std::ptr::read_volatile(self.cell.get()) };
+                let r = if cur == expected {
+                    unsafe { std::ptr::write_volatile(self.cell.get(), new) };
+                    Ok(cur)
+                } else {
+                    Err(cur)
+                };
+                self.seq.store(s0 + 2, Release);
+                return r;
+            }
+        }
+    }
+}
+
+/// Pack `(key, lo64)` into one u128: key in the upper half, pointer/index in
+/// the lower half (the paper's layout: bits 127:64 key, 63:0 next).
+#[inline(always)]
+pub const fn pack(key: u64, lo: u64) -> u128 {
+    (key as u128) << 64 | lo as u128
+}
+
+/// Upper half (the key).
+#[inline(always)]
+pub const fn hi64(v: u128) -> u64 {
+    (v >> 64) as u64
+}
+
+/// Lower half (the next pointer).
+#[inline(always)]
+pub const fn lo64(v: u128) -> u64 {
+    v as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn pack_unpack() {
+        let v = pack(0xDEAD_BEEF_0000_0001, 0x1234_5678_9ABC_DEF0);
+        assert_eq!(hi64(v), 0xDEAD_BEEF_0000_0001);
+        assert_eq!(lo64(v), 0x1234_5678_9ABC_DEF0);
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let a = AtomicU128::new(7);
+        assert_eq!(a.load(), 7);
+        a.store(pack(u64::MAX, 42));
+        assert_eq!(hi64(a.load()), u64::MAX);
+        assert_eq!(lo64(a.load()), 42);
+    }
+
+    #[test]
+    fn cas_semantics() {
+        let a = AtomicU128::new(1);
+        assert_eq!(a.compare_exchange(1, 2), Ok(1));
+        assert_eq!(a.compare_exchange(1, 3), Err(2));
+        assert_eq!(a.load(), 2);
+    }
+
+    #[test]
+    fn concurrent_torn_write_detection() {
+        // Writers alternate between two values whose halves must never mix;
+        // readers assert they only ever observe whole values.
+        let a = Arc::new(AtomicU128::new(pack(1, 1)));
+        let v1 = pack(1, 1);
+        let v2 = pack(u64::MAX, u64::MAX);
+        let mut handles = Vec::new();
+        for w in 0..2 {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..20_000 {
+                    a.store(if w == 0 { v1 } else { v2 });
+                }
+            }));
+        }
+        for _ in 0..2 {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..20_000 {
+                    let v = a.load();
+                    assert!(v == v1 || v == v2, "torn read: {v:#034x}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn concurrent_cas_counter() {
+        // 4 threads x 10k CAS-increments over both halves simultaneously.
+        let a = Arc::new(AtomicU128::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    let mut cur = a.load();
+                    loop {
+                        let next = pack(hi64(cur) + 1, lo64(cur) + 1);
+                        match a.compare_exchange(cur, next) {
+                            Ok(_) => break,
+                            Err(actual) => cur = actual,
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load(), pack(40_000, 40_000));
+    }
+}

@@ -1,0 +1,79 @@
+//! Contention backoff tuned for oversubscribed cores.
+//!
+//! The evaluation host runs many more threads than cores (see
+//! DESIGN.md §Hardware-Adaptation), so pure spinning deadlocks progress:
+//! the lock holder is likely *descheduled*. We spin only a few iterations,
+//! then yield to the OS scheduler, then sleep with exponentially growing
+//! intervals.
+
+/// Exponential backoff helper. Create one per contended loop.
+#[derive(Debug, Default)]
+pub struct Backoff {
+    step: u32,
+}
+
+const SPIN_STEPS: u32 = 4;
+const YIELD_STEPS: u32 = 12;
+
+impl Backoff {
+    #[inline]
+    pub fn new() -> Self {
+        Backoff { step: 0 }
+    }
+
+    /// Wait once; escalates spin -> yield -> sleep across calls.
+    #[inline]
+    pub fn wait(&mut self) {
+        if self.step < SPIN_STEPS {
+            for _ in 0..(1 << self.step) {
+                std::hint::spin_loop();
+            }
+        } else if self.step < YIELD_STEPS {
+            std::thread::yield_now();
+        } else {
+            let exp = (self.step - YIELD_STEPS).min(6);
+            std::thread::sleep(std::time::Duration::from_micros(1 << exp));
+        }
+        self.step = self.step.saturating_add(1);
+    }
+
+    /// True once waiting has escalated past pure spinning (used by tests and
+    /// adaptive retry loops to decide when to re-validate global state).
+    #[inline]
+    pub fn is_yielding(&self) -> bool {
+        self.step >= SPIN_STEPS
+    }
+
+    #[inline]
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escalates() {
+        let mut b = Backoff::new();
+        assert!(!b.is_yielding());
+        for _ in 0..SPIN_STEPS {
+            b.wait();
+        }
+        assert!(b.is_yielding());
+        b.reset();
+        assert!(!b.is_yielding());
+    }
+
+    #[test]
+    fn wait_many_times_is_bounded() {
+        let mut b = Backoff::new();
+        let t0 = std::time::Instant::now();
+        for _ in 0..YIELD_STEPS + 10 {
+            b.wait();
+        }
+        // sleep growth is capped at 64us per wait
+        assert!(t0.elapsed().as_millis() < 2_000);
+    }
+}

@@ -1,0 +1,10 @@
+//! Concurrency primitives: the 128-bit atomic `(key, next)` word, node
+//! reader-writer spinlocks and oversubscription-aware backoff.
+
+pub mod atomic128;
+pub mod backoff;
+pub mod lock;
+
+pub use atomic128::{hi64, lo64, pack, AtomicU128};
+pub use backoff::Backoff;
+pub use lock::RwSpinLock;

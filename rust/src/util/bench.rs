@@ -1,0 +1,114 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Runs a closure `reps` times after `warmup` runs, reports a [`Summary`]
+//! of wall seconds, and renders paper-style markdown tables.  All paper
+//! tables report *seconds for the whole workload averaged over 5 reps* — the
+//! same convention is used here.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One benchmark measurement: run `f` (whole-workload closure) repeatedly.
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// A labelled results table mirroring one paper table: rows keyed by thread
+/// count, one column per configuration.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub row_key: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(u64, Vec<f64>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, row_key: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            row_key: row_key.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, key: u64, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len());
+        self.rows.push((key, values));
+    }
+
+    /// Render as github markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s.push_str(&format!("| {} |", self.row_key));
+        for c in &self.columns {
+            s.push_str(&format!(" {c} |"));
+        }
+        s.push('\n');
+        s.push_str("|---|");
+        for _ in &self.columns {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for (k, vals) in &self.rows {
+            s.push_str(&format!("| {k} |"));
+            for v in vals {
+                s.push_str(&format!(" {v:.6} |"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Print to stdout (benches tee this into bench_output.txt).
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+}
+
+/// Standard thread sweep used by every paper table, scaled to the host:
+/// the paper sweeps 4..128; `--threads` overrides.
+pub fn default_thread_sweep() -> Vec<u64> {
+    vec![4, 8, 16, 32, 64, 128]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_reps() {
+        let mut n = 0;
+        let s = measure(1, 3, || n += 1);
+        assert_eq!(n, 4);
+        assert_eq!(s.n, 3);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("T", "#threads", &["a", "b"]);
+        t.push_row(4, vec![1.0, 2.0]);
+        let md = t.to_markdown();
+        assert!(md.contains("| #threads | a | b |"));
+        assert!(md.contains("| 4 | 1.000000 | 2.000000 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_arity_checked() {
+        let mut t = Table::new("T", "k", &["a", "b"]);
+        t.push_row(1, vec![1.0]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Minimal command-line parser (clap is unavailable offline).
+//!
+//! Supports `sub-command --flag --key value --key=value positional` shapes,
+//! typed getters with defaults, and a usage dump of everything queried.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| parse_u64_with_suffix(v).unwrap_or_else(|| panic!("--{key}: bad integer '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.u64_or(key, default as u64) as usize
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad float '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key}: bad bool '{v}'"),
+        }
+    }
+
+    /// Comma-separated u64 list, e.g. `--threads 4,8,16`.
+    pub fn u64_list_or(&self, key: &str, default: &[u64]) -> Vec<u64> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    parse_u64_with_suffix(s.trim())
+                        .unwrap_or_else(|| panic!("--{key}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Parse "123", "10k", "5m", "1b" (decimal suffixes) or "0x.." hex.
+pub fn parse_u64_with_suffix(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x") {
+        return u64::from_str_radix(hex, 16).ok();
+    }
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1_000),
+        'm' | 'M' => (&s[..s.len() - 1], 1_000_000),
+        'b' | 'B' | 'g' | 'G' => (&s[..s.len() - 1], 1_000_000_000),
+        _ => (s, 1),
+    };
+    num.parse::<u64>().ok().map(|v| v * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // note: positionals must precede flags (a bare flag would otherwise
+        // consume the next token as its value)
+        let a = parse(&["exp", "t1", "--threads", "4,8", "--ops=10m", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["t1"]);
+        assert_eq!(a.u64_list_or("threads", &[]), vec![4, 8]);
+        assert_eq!(a.u64_or("ops", 0), 10_000_000);
+        assert!(a.bool_or("verbose", false));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.u64_or("x", 7), 7);
+        assert_eq!(a.str_or("s", "d"), "d");
+        assert!(!a.bool_or("b", false));
+    }
+
+    #[test]
+    fn suffixes() {
+        assert_eq!(parse_u64_with_suffix("100m"), Some(100_000_000));
+        assert_eq!(parse_u64_with_suffix("1b"), Some(1_000_000_000));
+        assert_eq!(parse_u64_with_suffix("8k"), Some(8_000));
+        assert_eq!(parse_u64_with_suffix("0x10"), Some(16));
+        assert_eq!(parse_u64_with_suffix("zzz"), None);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_bool() {
+        let a = parse(&["run", "--fast", "--ops", "5"]);
+        assert!(a.bool_or("fast", false));
+        assert_eq!(a.u64_or("ops", 0), 5);
+    }
+}

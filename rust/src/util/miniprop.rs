@@ -1,0 +1,223 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` seeded random inputs; on failure it
+//! re-runs with shrunk inputs (halved vectors / bisected integers) and
+//! reports the smallest failing case plus the seed to reproduce it.
+
+use super::rng::Rng;
+
+/// Outcome of a property over one generated input.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random `Vec<u64>` inputs of length `0..=max_len`
+/// with values `< max_val`, shrinking on failure. Panics with the minimal
+/// counterexample.
+pub fn forall_vec_u64<F>(seed: u64, cases: usize, max_len: usize, max_val: u64, mut prop: F)
+where
+    F: FnMut(&[u64]) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let len = rng.below(max_len as u64 + 1) as usize;
+        let input: Vec<u64> = (0..len).map(|_| rng.below(max_val.max(1))).collect();
+        if let Err(msg) = prop(&input) {
+            let minimal = shrink_vec(&input, &mut prop);
+            panic!(
+                "property failed (seed={seed}, case={case}): {msg}\n  minimal counterexample ({} elems): {:?}",
+                minimal.len(),
+                &minimal[..minimal.len().min(64)]
+            );
+        }
+    }
+}
+
+/// Run `prop` over `cases` random u64 scalars.
+pub fn forall_u64<F>(seed: u64, cases: usize, max_val: u64, mut prop: F)
+where
+    F: FnMut(u64) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let x = rng.below(max_val.max(1));
+        if let Err(msg) = prop(x) {
+            let minimal = shrink_u64(x, &mut prop);
+            panic!("property failed (seed={seed}, case={case}, input={x}): {msg}\n  minimal counterexample: {minimal}");
+        }
+    }
+}
+
+/// Generic operation for history-based tests on maps/sets/queues.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Insert(u64),
+    Find(u64),
+    Erase(u64),
+}
+
+/// Random operation sequences (key universe `[0, key_space)`), with the
+/// given percent mix of insert/find/erase.
+pub fn gen_ops(rng: &mut Rng, n: usize, key_space: u64, ins_pct: u64, find_pct: u64) -> Vec<Op> {
+    (0..n)
+        .map(|_| {
+            let k = rng.below(key_space.max(1));
+            let roll = rng.below(100);
+            if roll < ins_pct {
+                Op::Insert(k)
+            } else if roll < ins_pct + find_pct {
+                Op::Find(k)
+            } else {
+                Op::Erase(k)
+            }
+        })
+        .collect()
+}
+
+/// Run `prop` over `cases` random op sequences, shrinking on failure.
+pub fn forall_ops<F>(
+    seed: u64,
+    cases: usize,
+    max_len: usize,
+    key_space: u64,
+    mix: (u64, u64),
+    mut prop: F,
+) where
+    F: FnMut(&[Op]) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let len = rng.below(max_len as u64 + 1) as usize;
+        let ops = gen_ops(&mut rng, len, key_space, mix.0, mix.1);
+        if let Err(msg) = prop(&ops) {
+            let minimal = shrink_ops(&ops, &mut prop);
+            panic!(
+                "property failed (seed={seed}, case={case}): {msg}\n  minimal counterexample ({} ops): {:?}",
+                minimal.len(),
+                &minimal[..minimal.len().min(64)]
+            );
+        }
+    }
+}
+
+fn shrink_vec<F>(input: &[u64], prop: &mut F) -> Vec<u64>
+where
+    F: FnMut(&[u64]) -> PropResult,
+{
+    let mut cur = input.to_vec();
+    loop {
+        let mut shrunk = false;
+        // try removing halves, then quarters
+        for chunk in [cur.len() / 2, cur.len() / 4, 1] {
+            if chunk == 0 || cur.len() <= 1 {
+                continue;
+            }
+            let mut i = 0;
+            while i + chunk <= cur.len() {
+                let mut cand = cur.clone();
+                cand.drain(i..i + chunk);
+                if prop(&cand).is_err() {
+                    cur = cand;
+                    shrunk = true;
+                } else {
+                    i += chunk;
+                }
+            }
+        }
+        if !shrunk {
+            return cur;
+        }
+    }
+}
+
+fn shrink_u64<F>(input: u64, prop: &mut F) -> u64
+where
+    F: FnMut(u64) -> PropResult,
+{
+    let mut cur = input;
+    while cur > 0 {
+        let cand = cur / 2;
+        if prop(cand).is_err() {
+            cur = cand;
+        } else {
+            break;
+        }
+    }
+    cur
+}
+
+fn shrink_ops<F>(input: &[Op], prop: &mut F) -> Vec<Op>
+where
+    F: FnMut(&[Op]) -> PropResult,
+{
+    let mut cur = input.to_vec();
+    loop {
+        let mut shrunk = false;
+        for chunk in [cur.len() / 2, cur.len() / 4, 1] {
+            if chunk == 0 || cur.len() <= 1 {
+                continue;
+            }
+            let mut i = 0;
+            while i + chunk <= cur.len() {
+                let mut cand = cur.clone();
+                cand.drain(i..i + chunk);
+                if prop(&cand).is_err() {
+                    cur = cand;
+                    shrunk = true;
+                } else {
+                    i += chunk;
+                }
+            }
+        }
+        if !shrunk {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        forall_vec_u64(1, 50, 100, 1000, |xs| {
+            if xs.iter().all(|&x| x < 1000) {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        forall_vec_u64(1, 50, 100, 1000, |xs| {
+            if xs.contains(&7) {
+                Err("contains 7".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_ops_respects_mix() {
+        let mut rng = Rng::new(9);
+        let ops = gen_ops(&mut rng, 10_000, 100, 100, 0);
+        assert!(ops.iter().all(|o| matches!(o, Op::Insert(_))));
+    }
+
+    #[test]
+    fn scalar_shrink_finds_small() {
+        let r = std::panic::catch_unwind(|| {
+            forall_u64(2, 100, 1 << 40, |x| {
+                if x >= 10 {
+                    Err("big".into())
+                } else {
+                    Ok(())
+                }
+            })
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Support utilities: deterministic RNG, statistics, CLI parsing, the mini
+//! bench harness and the mini property-testing harness (clap/criterion/
+//! proptest are unavailable in the offline build).
+
+pub mod bench;
+pub mod cli;
+pub mod miniprop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,118 @@
+//! Deterministic pseudo-random streams.
+//!
+//! [`mix64`] is the splitmix64 finalizer applied to `x + GAMMA`; it is
+//! **bit-exact** with the L1 Pallas kernel (`python/compile/kernels/hash_mix.py`)
+//! and the jnp oracle — the golden vectors below are asserted in all three
+//! layers so any drift is caught at test time and at artifact load time.
+
+/// splitmix64 odd gamma.
+pub const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// splitmix64 finalizer of `x + GAMMA` — the repo-wide 64-bit scrambler.
+///
+/// A bijection on `u64` (no collisions are ever introduced), used as the
+/// `boost::hash<uint64_t>` stand-in for H(k) and as the workload key stream
+/// (`key[i] = mix64(base + i)`).
+#[inline(always)]
+pub fn mix64(x: u64) -> u64 {
+    let mut x = x.wrapping_add(GAMMA);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Golden vectors: `mix64(i)` for `i = 0..5`. `mix64(0)` equals the first
+/// output of the canonical splitmix64 stream seeded with 0.
+pub const GOLDEN: [u64; 5] = [
+    0xE220_A839_7B1D_CDAF,
+    0x910A_2DEC_8902_5CC1,
+    0x9758_35DE_1C97_56CE,
+    0x1D0B_14E4_DB01_8FED,
+    0x6E73_E372_E233_8ACA,
+];
+
+/// Small seedable PRNG (a splitmix64 stream) for tests, workload shuffling
+/// and property generation. Not cryptographic.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = self.state;
+        self.state = self.state.wrapping_add(1);
+        mix64(s)
+    }
+
+    /// Uniform in `[0, bound)` (Lemire-style widening reduction).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    #[inline]
+    pub fn chance(&mut self, num: u64, denom: u64) -> bool {
+        self.below(denom) < num
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_vectors() {
+        for (i, want) in GOLDEN.iter().enumerate() {
+            assert_eq!(mix64(i as u64), *want, "mix64({i})");
+        }
+    }
+
+    #[test]
+    fn mix64_is_injective_sample() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..1u64 << 16 {
+            assert!(seen.insert(mix64(i)));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(13) < 13);
+            let v = r.range(5, 9);
+            assert!((5..9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut xs: Vec<u64> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut ys = xs.clone();
+        ys.sort_unstable();
+        assert_eq!(ys, (0..100).collect::<Vec<_>>());
+    }
+}

