@@ -1,74 +1,111 @@
-//! Range-search scenario (paper §IX: "Skiplists are more convenient than
-//! binary search trees for range searches because of the terminal
-//! linked-list").
+//! Range-search scenario across the NUMA-sharded store (paper §IX:
+//! "Skiplists are more convenient than binary search trees for range
+//! searches because of the terminal linked-list", plus the §VI 3-MSB key
+//! partition).
 //!
-//! Models a time-series store: concurrent writers append timestamped
-//! samples while readers run sliding-window range queries against the
-//! deterministic skiplist — lock-free reads, no global locks.
+//! Models a time-series store sharded by source (the 3 key MSBs pick the
+//! shard, i.e. the NUMA node owning that source group): history is
+//! bulk-loaded through the per-shard batch path, then concurrent writers
+//! append timestamped samples to every shard while readers run per-source
+//! sliding windows and full cross-shard scans — per-shard results
+//! concatenate in prefix order, so scans are globally sorted with no merge
+//! step.
 //!
 //! ```bash
 //! cargo run --release --example range_search
 //! ```
 
-use cdskl::skiplist::{DetSkiplist, FindMode};
+use cdskl::coordinator::{ShardedStore, StoreKind};
+use cdskl::numa::Topology;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-fn main() {
-    let store = Arc::new(DetSkiplist::with_capacity(FindMode::LockFree, 1 << 20));
-    let stop = Arc::new(AtomicBool::new(false));
-    let max_ts = Arc::new(AtomicU64::new(0));
-    let writers = 3usize;
-    let per_writer = 50_000u64;
+const SOURCES: u64 = 8; // one per shard / NUMA node
+const HISTORY_PER_SOURCE: u64 = 20_000;
+const LIVE_PER_WRITER: u64 = 30_000;
 
-    std::thread::scope(|s| {
-        // writers: interleaved "timestamps" (writer w owns ts ≡ w mod 3)
-        for w in 0..writers as u64 {
+fn key(source: u64, ts: u64) -> u64 {
+    source << 61 | ts
+}
+
+fn main() {
+    let store = Arc::new(ShardedStore::new(
+        StoreKind::DetSkiplistLf,
+        SOURCES as usize,
+        1 << 20,
+        Topology::milan_virtual(),
+        8,
+    ));
+
+    // ---- bulk load the history through the routed batch path ----
+    let history: Vec<(u64, u64)> = (0..SOURCES)
+        .flat_map(|s| (0..HISTORY_PER_SOURCE).map(move |ts| (key(s, ts * 2), s)))
+        .collect();
+    let loaded = store.insert_batch(&history);
+    assert_eq!(loaded, SOURCES * HISTORY_PER_SOURCE);
+    println!("bulk-loaded {} history samples across {} shards", loaded, store.num_shards());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let max_ts = Arc::new(AtomicU64::new(HISTORY_PER_SOURCE * 2));
+    std::thread::scope(|scope| {
+        // writers: one per source, appending odd "live" timestamps
+        let mut writers = Vec::new();
+        for s in 0..SOURCES {
             let store = store.clone();
             let max_ts = max_ts.clone();
-            s.spawn(move || {
-                for i in 0..per_writer {
-                    let ts = i * writers as u64 + w;
-                    store.insert(ts, w << 32 | i);
+            writers.push(scope.spawn(move || {
+                for i in 0..LIVE_PER_WRITER {
+                    let ts = HISTORY_PER_SOURCE * 2 + i * 2 + 1;
+                    store.insert(key(s, ts), s);
                     max_ts.fetch_max(ts, Ordering::Relaxed);
                 }
-            });
+            }));
         }
-        // readers: sliding windows over whatever is present
-        for _ in 0..2 {
+        // readers: per-source sliding windows + full cross-shard scans
+        for r in 0..2u64 {
             let store = store.clone();
             let stop = stop.clone();
             let max_ts = max_ts.clone();
-            s.spawn(move || {
+            scope.spawn(move || {
                 let mut windows = 0u64;
-                let mut total = 0u64;
+                let mut rows_total = 0u64;
                 while !stop.load(Ordering::Relaxed) {
+                    // sliding window on one source (single-shard fast path)
+                    let s = (windows + r) % SOURCES;
                     let hi = max_ts.load(Ordering::Relaxed);
-                    let lo = hi.saturating_sub(1_000);
-                    let rows = store.range(lo, hi);
-                    // results must be sorted and within bounds
-                    assert!(rows.windows(2).all(|w| w[0].0 < w[1].0));
-                    assert!(rows.iter().all(|&(k, _)| k >= lo && k <= hi));
+                    let lo = hi.saturating_sub(2_000);
+                    let rows = store.range(key(s, lo), key(s, hi));
+                    assert!(rows.windows(2).all(|w| w[0].0 < w[1].0), "window sorted");
+                    assert!(rows.iter().all(|&(k, v)| k >> 61 == s && v == s));
+                    rows_total += rows.len() as u64;
+                    // cross-shard scan over the same time slice of EVERY
+                    // source: per-prefix results concatenate already sorted
+                    let recent: Vec<(u64, u64)> = (0..SOURCES)
+                        .flat_map(|src| store.range(key(src, lo), key(src, hi)))
+                        .collect();
+                    assert!(recent.windows(2).all(|w| w[0].0 < w[1].0), "global order");
                     windows += 1;
-                    total += rows.len() as u64;
                 }
-                println!("reader: {windows} windows, {total} rows scanned");
+                println!("reader {r}: {windows} windows, {rows_total} rows scanned");
             });
         }
-        // let writers finish, then stop readers
-        s.spawn({
-            let stop = stop.clone();
-            move || {
-                std::thread::sleep(std::time::Duration::from_millis(1500));
-                stop.store(true, Ordering::Relaxed);
-            }
-        });
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
     });
 
-    let n = writers as u64 * per_writer;
-    assert_eq!(store.len(), n);
-    // final full-range scan: exactly every timestamp
+    // ---- quiescent validation ----
+    let expect = SOURCES * (HISTORY_PER_SOURCE + LIVE_PER_WRITER);
+    assert_eq!(store.len(), expect);
     let all = store.range(0, u64::MAX - 2);
-    assert_eq!(all.len() as u64, n);
-    println!("range_search OK: {} samples, windows consistent under concurrency", n);
+    assert_eq!(all.len() as u64, expect, "full cross-shard scan sees every sample");
+    assert!(all.windows(2).all(|w| w[0].0 < w[1].0), "globally sorted, no merge step");
+    let st = store.stats();
+    println!(
+        "range_search OK: {} samples, {} splits / {} find-retries across shards",
+        expect,
+        st.splits,
+        st.find_retries
+    );
 }

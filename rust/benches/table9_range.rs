@@ -1,0 +1,11 @@
+//! Bench for Table IX (new, beyond the paper): the mixed point/range
+//! workload of §IX — skiplist terminal-list scans vs the hash tables'
+//! sorted-snapshot fallback, across the sharded store.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(100);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table9_range (ordered-map API, paper §IX)\n");
+    cdskl::experiments::t9_range(&cfg, &router).print();
+}

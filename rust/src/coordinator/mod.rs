@@ -1,11 +1,16 @@
 //! The hierarchical coordinator (the paper's system design): sharded
 //! stores homed on NUMA nodes, a per-thread lock-free queue fabric routing
 //! keys to NUMA-local workers, and the leader-driven workload engine.
+//!
+//! The sharded store exposes the full ordered-map API ([`OrderedKv`]):
+//! cross-shard `range` (per-prefix fan-out, concatenated in key order) and
+//! routed `insert_batch`/`erase_batch`; [`bulk_load`] drains batch inserts
+//! through per-shard queues on pinned workers.
 
 pub mod engine;
 pub mod router;
 pub mod store;
 
-pub use engine::{run_workload, RunMetrics};
+pub use engine::{bulk_load, run_workload, RunMetrics};
 pub use router::RouterFabric;
-pub use store::{KvStore, ShardedStore, StoreKind};
+pub use store::{KvStore, OrderedKv, ShardedStore, StoreKind};

@@ -1,12 +1,21 @@
 //! Sharded store: one data structure per NUMA shard (paper §VI-VIII:
 //! "we partitioned the skiplist into one skiplist per NUMA node ... the key
 //! space was partitioned across skiplists using 3 MSBs").
+//!
+//! Besides the point ops ([`KvStore`]), every structure carries the
+//! ordered-map capability ([`OrderedKv`]): `range` plus `insert_batch` /
+//! `erase_batch`. The skiplists answer ranges natively off their terminal
+//! linked list (the paper's §IX advantage); the hash tables fall back to a
+//! sorted snapshot of their contents. Because the shard of a key is its 3
+//! MSBs, per-shard range results concatenated in key-prefix order are
+//! globally sorted *by construction* — no merge heap is needed (see
+//! [`ShardedStore::range`]).
 
 use crate::hashtable::{
     ConcurrentMap, FixedHashMap, SpoHashMap, TbbLikeHashMap, TwoLevelHashMap, TwoLevelSpoHashMap,
 };
 use crate::numa::{LocalityStats, Topology, LATENCY};
-use crate::skiplist::{DetSkiplist, FindMode, RandomSkiplist};
+use crate::skiplist::{DetSkiplist, FindMode, RandomSkiplist, SkiplistStats};
 
 /// Unified key-value interface over every structure in the repo.
 pub trait KvStore: Send + Sync {
@@ -15,6 +24,41 @@ pub trait KvStore: Send + Sync {
     fn erase(&self, key: u64) -> bool;
     fn len(&self) -> u64;
     fn name(&self) -> &'static str;
+
+    /// Retry-counter snapshot. Structures without retry loops (the locked
+    /// hash tables) report all-zero; the skiplists surface their real
+    /// counters so the sharded store can aggregate them end-to-end.
+    fn stats(&self) -> SkiplistStats {
+        SkiplistStats::default()
+    }
+}
+
+/// Ordered-map capability layered on [`KvStore`]: range scans and batch
+/// mutations. Implemented natively by both skiplists (terminal-list walk)
+/// and via sorted snapshot for the hash tables.
+pub trait OrderedKv: KvStore {
+    /// All `(key, value)` with `lo <= key <= hi`, sorted by key.
+    /// `lo > hi` yields an empty result.
+    fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)>;
+
+    /// Insert every pair; returns how many were newly inserted (pairs whose
+    /// key already existed are skipped, matching `insert`'s set semantics).
+    /// The batch is applied in sorted key order: consecutive skiplist
+    /// inserts then land in the same or adjacent terminal segments (the
+    /// §IX bulk-load locality argument); for hash tables order is neutral.
+    fn insert_batch(&self, items: &[(u64, u64)]) -> u64 {
+        let mut sorted = items.to_vec();
+        sorted.sort_unstable_by_key(|e| e.0);
+        sorted.iter().filter(|&&(k, v)| self.insert(k, v)).count() as u64
+    }
+
+    /// Erase every key (sorted, like [`OrderedKv::insert_batch`]); returns
+    /// how many were present.
+    fn erase_batch(&self, keys: &[u64]) -> u64 {
+        let mut sorted = keys.to_vec();
+        sorted.sort_unstable();
+        sorted.iter().filter(|&&k| self.erase(k)).count() as u64
+    }
 }
 
 impl KvStore for DetSkiplist {
@@ -33,6 +77,18 @@ impl KvStore for DetSkiplist {
     fn name(&self) -> &'static str {
         "det-skiplist"
     }
+    fn stats(&self) -> SkiplistStats {
+        DetSkiplist::stats(self)
+    }
+}
+
+impl OrderedKv for DetSkiplist {
+    fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)> {
+        if lo > hi {
+            return Vec::new();
+        }
+        DetSkiplist::range(self, lo, hi)
+    }
 }
 
 impl KvStore for RandomSkiplist {
@@ -50,6 +106,17 @@ impl KvStore for RandomSkiplist {
     }
     fn name(&self) -> &'static str {
         "random-skiplist"
+    }
+    fn stats(&self) -> SkiplistStats {
+        // the randomized skiplist keeps one retry counter, incremented on
+        // traversal interference — report it on the find side
+        SkiplistStats { find_retries: self.retry_count(), ..SkiplistStats::default() }
+    }
+}
+
+impl OrderedKv for RandomSkiplist {
+    fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)> {
+        RandomSkiplist::range(self, lo, hi)
     }
 }
 
@@ -70,6 +137,24 @@ macro_rules! kv_for_map {
             }
             fn name(&self) -> &'static str {
                 ConcurrentMap::name(self)
+            }
+        }
+
+        impl OrderedKv for $t {
+            /// Sorted-snapshot fallback: hash tables have no key order, so
+            /// a range is a filtered full snapshot, sorted once at the end.
+            fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)> {
+                if lo > hi {
+                    return Vec::new();
+                }
+                let mut out = Vec::new();
+                ConcurrentMap::for_each(self, &mut |k, v| {
+                    if (lo..=hi).contains(&k) {
+                        out.push((k, v));
+                    }
+                });
+                out.sort_unstable_by_key(|e| e.0);
+                out
             }
         }
     };
@@ -109,7 +194,9 @@ impl StoreKind {
         })
     }
 
-    fn build(self, capacity: usize) -> Box<dyn KvStore> {
+    /// Build one shard's structure. Public so tests and tools can exercise
+    /// every [`OrderedKv`] implementation behind one constructor.
+    pub fn build(self, capacity: usize) -> Box<dyn OrderedKv> {
         match self {
             StoreKind::DetSkiplistLf => {
                 Box::new(DetSkiplist::with_capacity(FindMode::LockFree, capacity))
@@ -131,10 +218,15 @@ impl StoreKind {
     }
 }
 
+/// Number of key-space prefixes (the paper's 3 MSBs → 8 segments).
+const PREFIXES: u64 = 8;
+/// Width of one 3-MSB prefix segment in key space.
+const PREFIX_MASK: u64 = (1u64 << 61) - 1;
+
 /// The hierarchical store: one structure per shard, shards homed on
 /// (virtual) NUMA nodes by eqs (6)-(7).
 pub struct ShardedStore {
-    shards: Vec<Box<dyn KvStore>>,
+    shards: Vec<Box<dyn OrderedKv>>,
     topology: Topology,
     threads: usize,
     pub locality: LocalityStats,
@@ -143,7 +235,7 @@ pub struct ShardedStore {
 impl ShardedStore {
     /// `nshards` structures (paper: 8 = one per Milan NUMA node).
     pub fn new(kind: StoreKind, nshards: usize, capacity_per_shard: usize, topology: Topology, threads: usize) -> ShardedStore {
-        assert!(nshards.is_power_of_two() && nshards <= 8);
+        assert!(nshards.is_power_of_two() && nshards as u64 <= PREFIXES);
         ShardedStore {
             shards: (0..nshards).map(|_| kind.build(capacity_per_shard)).collect(),
             topology,
@@ -178,8 +270,15 @@ impl ShardedStore {
     }
 
     #[inline]
-    pub fn shard(&self, key: u64) -> &dyn KvStore {
+    pub fn shard(&self, key: u64) -> &dyn OrderedKv {
         &*self.shards[self.shard_of(key)]
+    }
+
+    /// Direct access to shard `idx` (bulk-load workers drain one per-shard
+    /// queue each through this).
+    #[inline]
+    pub fn shard_at(&self, idx: usize) -> &dyn OrderedKv {
+        &*self.shards[idx]
     }
 
     pub fn insert(&self, key: u64, value: u64) -> bool {
@@ -192,6 +291,77 @@ impl ShardedStore {
 
     pub fn erase(&self, key: u64) -> bool {
         self.shard(key).erase(key)
+    }
+
+    /// Cross-shard range scan. The key space is split into 8 prefix
+    /// segments by the 3 MSBs; for every prefix intersecting `[lo, hi]` the
+    /// owning shard is queried with the prefix-clamped sub-range, and the
+    /// per-prefix results are concatenated in prefix order. Prefix order is
+    /// key order (the partition preserves global order), so the
+    /// concatenation is globally sorted and duplicate-free by construction
+    /// — no merge heap. This also holds when `nshards < 8` and several
+    /// prefixes fold onto one shard: each fold is queried only for its own
+    /// clamped sub-range, still in ascending prefix order. (Trade-off: a
+    /// folded hash-table shard re-snapshots once per intersecting prefix —
+    /// acceptable because the paper's configuration is 8 shards, where
+    /// every prefix maps to a distinct shard and no fold exists.)
+    pub fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)> {
+        if lo > hi {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for p in (lo >> 61)..=(hi >> 61) {
+            let base = p << 61;
+            let slo = lo.max(base);
+            let shi = hi.min(base | PREFIX_MASK);
+            out.extend(self.shards[(p as usize) % self.shards.len()].range(slo, shi));
+        }
+        out
+    }
+
+    /// Batch insert: partition the batch into per-shard groups (the "fill
+    /// the queues first" step of the paper's methodology), then drain each
+    /// group through its shard's native batch path. Returns the number of
+    /// pairs newly inserted.
+    pub fn insert_batch(&self, items: &[(u64, u64)]) -> u64 {
+        let mut per: Vec<Vec<(u64, u64)>> =
+            (0..self.shards.len()).map(|_| Vec::new()).collect();
+        for &(k, v) in items {
+            per[self.shard_of(k)].push((k, v));
+        }
+        let mut n = 0;
+        for (s, batch) in per.into_iter().enumerate() {
+            if !batch.is_empty() {
+                n += self.shards[s].insert_batch(&batch);
+            }
+        }
+        n
+    }
+
+    /// Batch erase, routed per shard like [`ShardedStore::insert_batch`].
+    /// Returns how many keys were present.
+    pub fn erase_batch(&self, keys: &[u64]) -> u64 {
+        let mut per: Vec<Vec<u64>> = (0..self.shards.len()).map(|_| Vec::new()).collect();
+        for &k in keys {
+            per[self.shard_of(k)].push(k);
+        }
+        let mut n = 0;
+        for (s, batch) in per.into_iter().enumerate() {
+            if !batch.is_empty() {
+                n += self.shards[s].erase_batch(&batch);
+            }
+        }
+        n
+    }
+
+    /// Retry counters summed across every shard (observability: workloads
+    /// report e.g. `find_retries` without `write_retries` inflation).
+    pub fn stats(&self) -> SkiplistStats {
+        let mut out = SkiplistStats::default();
+        for s in &self.shards {
+            out.merge(&s.stats());
+        }
+        out
     }
 
     pub fn len(&self) -> u64 {
@@ -223,6 +393,17 @@ impl ShardedStore {
 mod tests {
     use super::*;
 
+    const ALL_KINDS: [StoreKind; 8] = [
+        StoreKind::DetSkiplistLf,
+        StoreKind::DetSkiplistRwl,
+        StoreKind::RandomSkiplist,
+        StoreKind::HashFixed,
+        StoreKind::HashTwoLevel,
+        StoreKind::HashSpo,
+        StoreKind::HashTwoLevelSpo,
+        StoreKind::HashTbbLike,
+    ];
+
     #[test]
     fn shard_routing_by_msbs() {
         let s = ShardedStore::new(StoreKind::HashFixed, 8, 1 << 10, Topology::milan_virtual(), 128);
@@ -249,16 +430,7 @@ mod tests {
 
     #[test]
     fn all_kinds_build_and_work() {
-        for kind in [
-            StoreKind::DetSkiplistLf,
-            StoreKind::DetSkiplistRwl,
-            StoreKind::RandomSkiplist,
-            StoreKind::HashFixed,
-            StoreKind::HashTwoLevel,
-            StoreKind::HashSpo,
-            StoreKind::HashTwoLevelSpo,
-            StoreKind::HashTbbLike,
-        ] {
+        for kind in ALL_KINDS {
             let s = ShardedStore::new(kind, 2, 1 << 12, Topology::milan_virtual(), 8);
             assert!(s.insert(42, 1), "{kind:?}");
             assert!(!s.insert(42, 2), "{kind:?}");
@@ -266,6 +438,96 @@ mod tests {
             assert!(s.erase(42), "{kind:?}");
             assert_eq!(s.get(42), None, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn cross_shard_range_is_globally_sorted() {
+        for kind in ALL_KINDS {
+            let s = ShardedStore::new(kind, 8, 1 << 12, Topology::milan_virtual(), 8);
+            // 40 keys per prefix, all 8 prefixes
+            let mut want = Vec::new();
+            for p in 0..8u64 {
+                for i in 0..40u64 {
+                    let k = p << 61 | i * 7;
+                    assert!(s.insert(k, k ^ 1), "{kind:?}");
+                    want.push((k, k ^ 1));
+                }
+            }
+            want.sort_unstable_by_key(|e| e.0);
+            let got = s.range(0, u64::MAX - 2);
+            assert_eq!(got, want, "{kind:?}: full cross-shard scan");
+            // clamped scan spanning prefixes 2..=5
+            let lo = 2u64 << 61;
+            let hi = (5u64 << 61) | 100;
+            let got = s.range(lo, hi);
+            let wantw: Vec<(u64, u64)> =
+                want.iter().copied().filter(|&(k, _)| k >= lo && k <= hi).collect();
+            assert_eq!(got, wantw, "{kind:?}: prefix-clamped scan");
+            assert_eq!(s.range(10, 5), vec![], "{kind:?}: inverted bounds");
+        }
+    }
+
+    #[test]
+    fn folded_prefixes_still_sort_globally() {
+        // nshards = 2: prefixes 0,2,4,6 fold onto shard 0 and 1,3,5,7 onto
+        // shard 1, so shard-local key sets interleave in global key order.
+        // The per-prefix clamped queries must still produce a sorted scan.
+        let s = ShardedStore::new(StoreKind::DetSkiplistLf, 2, 1 << 12, Topology::milan_virtual(), 4);
+        let mut want = Vec::new();
+        for p in 0..8u64 {
+            for i in 0..25u64 {
+                let k = p << 61 | i;
+                assert!(s.insert(k, p));
+                want.push((k, p));
+            }
+        }
+        want.sort_unstable_by_key(|e| e.0);
+        assert_eq!(s.range(0, u64::MAX - 2), want);
+        // a window inside a single folded prefix
+        let lo = 4u64 << 61;
+        let got = s.range(lo, lo + 10);
+        assert_eq!(got.len(), 11);
+        assert!(got.iter().all(|&(k, v)| k >> 61 == 4 && v == 4));
+    }
+
+    #[test]
+    fn batch_ops_route_across_shards() {
+        for kind in ALL_KINDS {
+            let s = ShardedStore::new(kind, 4, 1 << 12, Topology::milan_virtual(), 8);
+            let items: Vec<(u64, u64)> =
+                (0..200u64).map(|i| ((i % 8) << 61 | i, i + 1)).collect();
+            assert_eq!(s.insert_batch(&items), 200, "{kind:?}");
+            assert_eq!(s.insert_batch(&items), 0, "{kind:?}: duplicates");
+            assert_eq!(s.len(), 200, "{kind:?}");
+            for &(k, v) in &items {
+                assert_eq!(s.get(k), Some(v), "{kind:?} key {k}");
+            }
+            let odd_keys: Vec<u64> =
+                items.iter().map(|&(k, _)| k).filter(|&k| k & 1 == 1).collect();
+            assert_eq!(s.erase_batch(&odd_keys), odd_keys.len() as u64, "{kind:?}");
+            assert_eq!(s.erase_batch(&odd_keys), 0, "{kind:?}");
+            assert_eq!(s.len(), 200 - odd_keys.len() as u64, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn stats_sum_across_shards() {
+        let s = ShardedStore::new(StoreKind::DetSkiplistLf, 4, 1 << 14, Topology::milan_virtual(), 8);
+        let items: Vec<(u64, u64)> = (0..2_000u64).map(|i| ((i % 4) << 61 | i, i)).collect();
+        s.insert_batch(&items);
+        let st = s.stats();
+        assert!(st.splits > 0, "bulk load must split across shards");
+        assert!(st.depth_increases > 0, "per-shard height growth must aggregate");
+        // a pure-read phase must not move the write-side counters
+        let before = s.stats();
+        for i in 0..200u64 {
+            let lo = (i % 4) << 61 | i;
+            let _ = s.range(lo, lo + 32);
+            let _ = s.get(lo);
+        }
+        let after = s.stats();
+        assert_eq!(after.write_retries, before.write_retries, "reads must not inflate write retries");
+        assert_eq!(after.splits, before.splits);
     }
 
     #[test]

@@ -67,7 +67,8 @@ fn store_run(
             cfg.topology.clone(),
             threads,
         ));
-        let spec = WorkloadSpec::new("exp", total_ops, mix, (total_ops / 2).max(1 << 14));
+        let spec = WorkloadSpec::new("exp", total_ops, mix, (total_ops / 2).max(1 << 14))
+            .with_range_window(64);
         let m = run_workload(&store, &spec, threads, router, cfg.seed + rep as u64);
         samples.push(m.drain_seconds);
         last = m;
@@ -245,6 +246,32 @@ pub fn t78_hash_compare(cfg: &ExpConfig, router: &KeyRouter) -> Vec<Table> {
     out
 }
 
+/// Table IX (beyond the paper, §IX motivation): range throughput of the
+/// mixed point/range workload (`OpMix::RANGE`, window 64) on the sharded
+/// stores. Skiplists answer scans off the terminal linked list; the
+/// hierarchical split-order table pays a full sorted snapshot per scan —
+/// the structural gap the paper's §IX argues for.
+pub fn t9_range(cfg: &ExpConfig, router: &KeyRouter) -> Table {
+    let ops = cfg.ops(10_000_000);
+    let mut t = Table::new(
+        &format!("Table IX (new) — mixed point/range workload ({ops} ops, window 64, scale 1/{})", cfg.scale),
+        "#threads",
+        &["det-lf(s)", "random(s)", "2lvl-spo(s)", "det rows/scan", "det Mops/s"],
+    );
+    for &th in cfg.threads.iter() {
+        let (det, dm) =
+            store_run(cfg, StoreKind::DetSkiplistLf, OpMix::RANGE, ops, th as usize, router);
+        let (rnd, _) =
+            store_run(cfg, StoreKind::RandomSkiplist, OpMix::RANGE, ops, th as usize, router);
+        let (spo, _) =
+            store_run(cfg, StoreKind::HashTwoLevelSpo, OpMix::RANGE, ops, th as usize, router);
+        let rows_per_scan =
+            if dm.ranges == 0 { 0.0 } else { dm.range_rows as f64 / dm.ranges as f64 };
+        t.push_row(th, vec![det.mean, rnd.mean, spo.mean, rows_per_scan, dm.throughput_mops()]);
+    }
+    t
+}
+
 /// Drive a bare map with threads doing 50/50 insert/find (T6 helper; no
 /// router fabric so the split-order stats isolate table behaviour).
 pub fn hammer_map<M: ConcurrentMap>(map: &M, threads: usize, ops: u64, seed: u64) -> f64 {
@@ -319,6 +346,17 @@ mod tests {
         // cache-miss proxy per op: two-level must not be worse
         for (_, row) in &t.rows {
             assert!(row[3] <= row[2] * 1.5, "2lvl proxy {} vs flat {}", row[3], row[2]);
+        }
+    }
+
+    #[test]
+    fn t9_range_runs_and_scans_rows() {
+        let cfg = tiny_cfg();
+        let t = t9_range(&cfg, &KeyRouter::Native);
+        assert_eq!(t.rows.len(), 2);
+        for (_, row) in &t.rows {
+            assert!(row[0] > 0.0 && row[1] > 0.0 && row[2] > 0.0, "all stores must run");
+            assert!(row[3] >= 0.0, "rows/scan is a count");
         }
     }
 

@@ -158,6 +158,22 @@ impl Bst {
         rec(&self.nodes, self.root)
     }
 
+    /// In-order `(key, value)` pairs (the snapshot primitive behind the
+    /// hash tables' ordered-map fallback).
+    pub fn entries(&self) -> Vec<(u64, u64)> {
+        fn rec(nodes: &[BstNode], cur: u32, out: &mut Vec<(u64, u64)>) {
+            if cur != NIL {
+                let n = &nodes[cur as usize];
+                rec(nodes, n.left, out);
+                out.push((n.key, n.value));
+                rec(nodes, n.right, out);
+            }
+        }
+        let mut out = Vec::with_capacity(self.len);
+        rec(&self.nodes, self.root, &mut out);
+        out
+    }
+
     /// In-order keys (test helper).
     pub fn keys(&self) -> Vec<u64> {
         fn rec(nodes: &[BstNode], cur: u32, out: &mut Vec<u64>) {

@@ -11,7 +11,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::sync::RwSpinLock;
 
 use super::bst::Bst;
-use super::hash::{hash_key, slot_of};
+use super::hash::{hash_key, slot_of, unhash_key};
 use super::traits::ConcurrentMap;
 
 struct Slot {
@@ -107,6 +107,15 @@ impl ConcurrentMap for FixedHashMap {
         self.len.load(Ordering::Relaxed)
     }
 
+    fn for_each(&self, f: &mut dyn FnMut(u64, u64)) {
+        for s in self.slots.iter() {
+            let _g = s.lock.read();
+            for (h, v) in unsafe { &*s.tree.get() }.entries() {
+                f(unhash_key(h), v);
+            }
+        }
+    }
+
     fn name(&self) -> &'static str {
         "fixed-binlist"
     }
@@ -169,6 +178,19 @@ mod tests {
         for t in 0..4u64 {
             assert_eq!(m.get(t * 1_000_000 + 7), Some(7));
         }
+    }
+
+    #[test]
+    fn for_each_reports_original_keys() {
+        let m = FixedHashMap::new(16);
+        for k in 0..500u64 {
+            m.insert(k * 11, k);
+        }
+        let mut got = Vec::new();
+        m.for_each(&mut |k, v| got.push((k, v)));
+        got.sort_unstable();
+        let want: Vec<(u64, u64)> = (0..500u64).map(|k| (k * 11, k)).collect();
+        assert_eq!(got, want, "hash inversion must recover original keys");
     }
 
     #[test]

@@ -4,12 +4,21 @@
 //! `util::rng::mix64`; this module just re-exports it under the hash-table
 //! vocabulary and adds slot/shard helpers.
 
-pub use crate::util::rng::{mix64, GOLDEN};
+pub use crate::util::rng::{mix64, unmix64, GOLDEN};
 
 /// H(k): scramble a 64-bit key (the `boost::hash` stand-in).
 #[inline(always)]
 pub fn hash_key(k: u64) -> u64 {
     mix64(k)
+}
+
+/// Inverse of [`hash_key`] (mix64 is a bijection): recovers the original
+/// key from a stored hash. The BST-backed tables key their trees by H(k)
+/// only; the ordered-map snapshot fallback inverts the hash to report the
+/// caller's keys.
+#[inline(always)]
+pub fn unhash_key(h: u64) -> u64 {
+    unmix64(h)
 }
 
 /// Slot for a hash in a power-of-two table of `m` slots (eq. 8 with the
@@ -69,6 +78,13 @@ mod tests {
     fn golden_matches_kernel() {
         for (i, want) in GOLDEN.iter().enumerate() {
             assert_eq!(hash_key(i as u64), *want);
+        }
+    }
+
+    #[test]
+    fn unhash_inverts_hash() {
+        for k in (0..100_000u64).step_by(7) {
+            assert_eq!(unhash_key(hash_key(k)), k);
         }
     }
 

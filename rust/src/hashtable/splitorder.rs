@@ -217,7 +217,10 @@ impl ConcurrentMap for SpoHashMap {
         } else {
             let prn = self.arena.node(pred);
             let (pk, pnext) = prn.key_next();
-            let node = self.arena.alloc(sokey, pnext, SENTINEL, value, 0);
+            // The split-order key drops one hash bit (`h | MSB` before the
+            // reversal), so the original key is NOT recoverable from the
+            // node — stash it in `bottom`, which flat list nodes never use.
+            let node = self.arena.alloc(sokey, pnext, key, value, 0);
             prn.set_key_next(pk, node);
             true
         };
@@ -276,6 +279,31 @@ impl ConcurrentMap for SpoHashMap {
 
     fn len(&self) -> u64 {
         self.len.load(Ordering::Relaxed)
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(u64, u64)) {
+        // Every op holds the table lock shared; taking it exclusive
+        // quiesces writers so the one-pass list walk is a true snapshot.
+        // The callback runs only AFTER the lock is dropped: it may panic or
+        // re-enter this map, and the manual spinlock would wedge the whole
+        // table in either case.
+        self.resize_lock.lock();
+        let mut pairs = Vec::new();
+        let mut cur = self.head;
+        while cur != SENTINEL {
+            let n = self.arena.node(cur);
+            let (sokey, next) = n.key_next();
+            if sokey & 1 == 1 {
+                // regular node (reversed MSB): original key stashed in
+                // `bottom` at insert time
+                pairs.push((n.bottom.load(Ordering::Acquire), n.value.load(Ordering::Relaxed)));
+            }
+            cur = next;
+        }
+        self.resize_lock.unlock();
+        for (k, v) in pairs {
+            f(k, v);
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -415,6 +443,25 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn for_each_reports_stashed_original_keys() {
+        let m = small();
+        let mut oracle = BTreeMap::new();
+        for k in 0..800u64 {
+            m.insert(k * 3, k + 1);
+            oracle.insert(k * 3, k + 1);
+        }
+        for k in (0..800u64).step_by(2) {
+            m.erase(k * 3);
+            oracle.remove(&(k * 3));
+        }
+        let mut got = Vec::new();
+        m.for_each(&mut |k, v| got.push((k, v)));
+        got.sort_unstable();
+        let want: Vec<(u64, u64)> = oracle.into_iter().collect();
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::sync::RwSpinLock;
 
-use super::hash::{hash_key, slot_of};
+use super::hash::{hash_key, slot_of, unhash_key};
 use super::traits::ConcurrentMap;
 
 struct Bucket {
@@ -160,6 +160,17 @@ impl ConcurrentMap for TbbLikeHashMap {
 
     fn len(&self) -> u64 {
         self.len.load(Ordering::Relaxed)
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(u64, u64)) {
+        let _g = self.table_lock.read();
+        let b = unsafe { &*self.buckets.get() };
+        for bucket in b.iter() {
+            let _bg = bucket.lock.read();
+            for &(h, v) in unsafe { &*bucket.chain.get() }.iter() {
+                f(unhash_key(h), v);
+            }
+        }
     }
 
     fn name(&self) -> &'static str {

@@ -15,6 +15,13 @@ pub trait ConcurrentMap: Send + Sync {
     /// Number of entries.
     fn len(&self) -> u64;
 
+    /// Visit every `(key, value)` pair with the *original* key (tables that
+    /// store only H(k) invert the hash or report a stashed key). The walk is
+    /// quiescent-consistent: pairs untouched for its duration are reported
+    /// exactly once; concurrent inserts/erases may or may not be seen. This
+    /// is the snapshot primitive behind the ordered-map (`range`) fallback.
+    fn for_each(&self, f: &mut dyn FnMut(u64, u64));
+
     fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::sync::RwSpinLock;
 
 use super::bst::Bst;
-use super::hash::{hash_key, slot_of};
+use super::hash::{hash_key, slot_of, unhash_key};
 use super::traits::ConcurrentMap;
 
 /// Expansion threshold: a slot grows its second level when it holds more
@@ -211,6 +211,19 @@ impl ConcurrentMap for TwoLevelHashMap {
 
     fn len(&self) -> u64 {
         self.len.load(Ordering::Relaxed)
+    }
+
+    fn for_each(&self, f: &mut dyn FnMut(u64, u64)) {
+        for s in self.slots.iter() {
+            let _g = s.lock.read();
+            let inner = unsafe { &*s.inner.get() };
+            for l2 in inner.iter() {
+                let _g2 = l2.lock.read();
+                for (h, v) in unsafe { &*l2.tree.get() }.entries() {
+                    f(unhash_key(h), v);
+                }
+            }
+        }
     }
 
     fn name(&self) -> &'static str {

@@ -89,6 +89,12 @@ impl ConcurrentMap for TwoLevelSpoHashMap {
         self.tables.iter().map(|t| t.len()).sum()
     }
 
+    fn for_each(&self, f: &mut dyn FnMut(u64, u64)) {
+        for t in self.tables.iter() {
+            t.for_each(&mut *f);
+        }
+    }
+
     fn name(&self) -> &'static str {
         "twolevel-spo"
     }
@@ -134,6 +140,19 @@ mod tests {
             }
         }
         assert_eq!(m.len() as usize, oracle.len());
+    }
+
+    #[test]
+    fn for_each_covers_every_table() {
+        let m = small();
+        for k in 0..2_000u64 {
+            m.insert(k, k ^ 5);
+        }
+        let mut got = Vec::new();
+        m.for_each(&mut |k, v| got.push((k, v)));
+        got.sort_unstable();
+        assert_eq!(got.len(), 2_000);
+        assert!(got.iter().enumerate().all(|(i, &(k, v))| k == i as u64 && v == k ^ 5));
     }
 
     #[test]

@@ -10,11 +10,20 @@
 //!   hierarchical coordinator ([`coordinator`]).
 //! - **L2/L1 (JAX + Pallas, `python/compile/`)** — the batched
 //!   keygen/hash/route/histogram data path, AOT-lowered to HLO text and
-//!   loaded at startup by [`runtime`] through the PJRT CPU client. Python
-//!   never runs on the request path.
+//!   loaded at startup by [`runtime`] through the PJRT CPU client (behind
+//!   the `aot` cargo feature; the bit-exact native router is the default).
+//!   Python never runs on the request path.
+//!
+//! Every structure speaks the ordered-map API
+//! ([`coordinator::OrderedKv`]): `range` scans plus `insert_batch` /
+//! `erase_batch`, answered natively off the skiplists' terminal linked
+//! list (§IX) and via sorted snapshot by the hash tables. The sharded
+//! store fans ranges out per 3-MSB key prefix and concatenates in prefix
+//! order — globally sorted by construction, no merge heap (§VI partition).
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index, and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! EXPERIMENTS.md for paper-vs-measured results and how to run the range
+//! workload (`OpMix::RANGE`, `exp t9`).
 
 pub mod coordinator;
 pub mod experiments;

@@ -2,10 +2,11 @@
 //!
 //! ```text
 //! cdskl info                           topology, artifacts, self-check
-//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|all> [--threads 4,8] [--reps N]
+//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|all> [--threads 4,8] [--reps N]
 //!           [--scale N] [--out FILE]   regenerate paper tables
 //! cdskl run [--store det|rwl|random|fixed|twolevel|spo|spo2|tbb]
-//!           [--ops N] [--threads N] [--mix w1|w2|hash]
+//!           [--ops N] [--threads N] [--mix w1|w2|hash|range]
+//!           [--range-window W]
 //!           [--inject-latency NS]      one workload run with metrics
 //! cdskl selfcheck                      AOT artifacts vs native mixer
 //! ```
@@ -116,8 +117,11 @@ fn exp(args: &Args) {
     if all || which == "t78" {
         tables.extend(experiments::t78_hash_compare(&cfg, &router));
     }
+    if all || which == "t9" || which == "range" {
+        tables.push(experiments::t9_range(&cfg, &router));
+    }
     if tables.is_empty() {
-        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 all)");
+        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 all)");
         std::process::exit(2);
     }
     let mut out = String::new();
@@ -143,8 +147,9 @@ fn run(args: &Args) {
         "w1" => OpMix::W1,
         "w2" => OpMix::W2,
         "hash" => OpMix::HASH,
+        "range" => OpMix::RANGE,
         other => {
-            eprintln!("unknown --mix '{other}' (w1 w2 hash)");
+            eprintln!("unknown --mix '{other}' (w1 w2 hash range)");
             std::process::exit(2);
         }
     };
@@ -157,7 +162,8 @@ fn run(args: &Args) {
     );
     let router = KeyRouter::auto(&artifacts_dir());
     let store = Arc::new(ShardedStore::new(kind, 8, (ops as usize / 4).max(1 << 16), topo, threads));
-    let spec = WorkloadSpec::new("run", ops, mix, args.u64_or("key-space", (ops / 2).max(1 << 16)));
+    let spec = WorkloadSpec::new("run", ops, mix, args.u64_or("key-space", (ops / 2).max(1 << 16)))
+        .with_range_window(args.u64_or("range-window", 64));
     let m = run_workload(&store, &spec, threads, &router, args.u64_or("seed", 7));
     println!(
         "store: {} x{} shards | threads {threads} | ops {ops}",
@@ -174,6 +180,15 @@ fn run(args: &Args) {
         "ops    : {} inserts, {} finds ({} hit), {} erases",
         m.inserts, m.finds, m.found, m.erases
     );
+    if m.ranges > 0 {
+        println!(
+            "ranges : {} scans, {} rows ({:.1} rows/scan, window {})",
+            m.ranges,
+            m.range_rows,
+            m.range_rows as f64 / m.ranges as f64,
+            spec.range_window
+        );
+    }
     println!("numa   : {} local, {} remote accesses", m.local_accesses, m.remote_accesses);
     println!("final  : {} keys resident", m.final_len);
 }

@@ -6,17 +6,25 @@
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 //!
+//! The PJRT engine needs the local `xla` bindings, which are not present in
+//! every build environment — it is compiled only under the **`aot` cargo
+//! feature**, and enabling that feature additionally requires adding the
+//! `xla` path dependency to `rust/Cargo.toml` (see the comment there; a
+//! missing path dep would break even default builds, so it is not
+//! pre-declared). Without the feature, [`RouteEngine::load`] reports the
+//! artifacts as unavailable and [`KeyRouter::auto`] falls back to
+//! [`native_route`], the bit-exact rust implementation of the same
+//! splitmix64 pipeline, so every experiment runs identically either way.
+//!
 //! `PjRtClient` is `Rc`-based (not `Send`), so a [`RouteEngine`] must be
 //! created and used on one thread. That matches the paper's methodology —
 //! "we filled the queues first before performing operations on the data
 //! structures": the coordinator generates + routes batches on the leader
 //! thread, workers drain per-thread queues.
 //!
-//! [`native_route`] is the bit-exact rust fallback (same splitmix64 mixer);
-//! [`RouteEngine::self_check`] cross-validates the loaded artifact against
-//! it at startup, so artifact drift is caught before any experiment runs.
-
-use anyhow::{bail, Context, Result};
+//! [`RouteEngine::self_check`] cross-validates a loaded artifact against
+//! the native mixer at startup, so artifact drift is caught before any
+//! experiment runs.
 
 use crate::hashtable::hash::{hash_key, shard_of};
 use crate::util::rng::mix64;
@@ -33,6 +41,7 @@ pub struct RoutedBatch {
     pub slots: Vec<u64>,
 }
 
+#[cfg_attr(not(feature = "aot"), allow(dead_code))]
 impl RoutedBatch {
     pub fn len(&self) -> usize {
         self.keys.len()
@@ -79,114 +88,165 @@ pub fn native_route(base: u64, m: u64, n: usize) -> RoutedBatch {
     out
 }
 
-/// One compiled batch-size variant of the routing pipeline.
-struct CompiledRoute {
-    batch: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "aot")]
+mod aot_engine {
+    use anyhow::{bail, Context, Result};
 
-/// The AOT routing engine: PJRT CPU client + compiled `route_batch_<N>`
-/// executables. Not `Send` — create and use on the leader thread.
-pub struct RouteEngine {
-    _client: xla::PjRtClient,
-    /// sorted descending by batch size
-    variants: Vec<CompiledRoute>,
-    pub dispatches: std::cell::Cell<u64>,
-}
+    use super::{native_route, RoutedBatch};
 
-impl RouteEngine {
-    /// Load every `route_batch_*.hlo.txt` under `artifacts_dir`.
-    pub fn load(artifacts_dir: &str) -> Result<RouteEngine> {
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let mut variants = Vec::new();
-        for entry in std::fs::read_dir(artifacts_dir)
-            .with_context(|| format!("artifacts dir {artifacts_dir} (run `make artifacts`)"))?
-        {
-            let path = entry?.path();
-            let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
-            if let Some(rest) = name.strip_prefix("route_batch_") {
-                if let Some(bs) = rest.strip_suffix(".hlo.txt") {
-                    let batch: usize = bs.parse().context("batch size in artifact name")?;
-                    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-                        .with_context(|| format!("parse {name}"))?;
-                    let comp = xla::XlaComputation::from_proto(&proto);
-                    let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
-                    variants.push(CompiledRoute { batch, exe });
+    /// One compiled batch-size variant of the routing pipeline.
+    struct CompiledRoute {
+        batch: usize,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The AOT routing engine: PJRT CPU client + compiled `route_batch_<N>`
+    /// executables. Not `Send` — create and use on the leader thread.
+    pub struct RouteEngine {
+        _client: xla::PjRtClient,
+        /// sorted descending by batch size
+        variants: Vec<CompiledRoute>,
+        pub dispatches: std::cell::Cell<u64>,
+    }
+
+    impl RouteEngine {
+        /// Load every `route_batch_*.hlo.txt` under `artifacts_dir`.
+        pub fn load(artifacts_dir: &str) -> Result<RouteEngine> {
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            let mut variants = Vec::new();
+            for entry in std::fs::read_dir(artifacts_dir)
+                .with_context(|| format!("artifacts dir {artifacts_dir} (run `make artifacts`)"))?
+            {
+                let path = entry?.path();
+                let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+                if let Some(rest) = name.strip_prefix("route_batch_") {
+                    if let Some(bs) = rest.strip_suffix(".hlo.txt") {
+                        let batch: usize = bs.parse().context("batch size in artifact name")?;
+                        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                            .with_context(|| format!("parse {name}"))?;
+                        let comp = xla::XlaComputation::from_proto(&proto);
+                        let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+                        variants.push(CompiledRoute { batch, exe });
+                    }
                 }
             }
-        }
-        if variants.is_empty() {
-            bail!("no route_batch_*.hlo.txt artifacts in {artifacts_dir}");
-        }
-        variants.sort_by(|a, b| b.batch.cmp(&a.batch));
-        let engine = RouteEngine { _client: client, variants, dispatches: std::cell::Cell::new(0) };
-        engine.self_check().context("artifact self-check vs native mixer")?;
-        Ok(engine)
-    }
-
-    /// Batch sizes available (descending).
-    pub fn batch_sizes(&self) -> Vec<usize> {
-        self.variants.iter().map(|v| v.batch).collect()
-    }
-
-    fn run_variant(&self, v: &CompiledRoute, base: u64, m: u64) -> Result<RoutedBatch> {
-        let base_l = xla::Literal::vec1(&[base]);
-        let m_l = xla::Literal::vec1(&[m]);
-        let result = v.exe.execute::<xla::Literal>(&[base_l, m_l])?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != 4 {
-            bail!("route artifact returned {} outputs, want 4", parts.len());
-        }
-        let mut it = parts.into_iter();
-        let keys = it.next().unwrap().to_vec::<u64>()?;
-        let hashes = it.next().unwrap().to_vec::<u64>()?;
-        let shards = it.next().unwrap().to_vec::<u64>()?;
-        let slots = it.next().unwrap().to_vec::<u64>()?;
-        self.dispatches.set(self.dispatches.get() + 1);
-        Ok(RoutedBatch { keys, hashes, shards, slots })
-    }
-
-    /// Route `n` keys starting at counter `base` for a table of `m` slots.
-    /// Runs as few compiled dispatches as possible (largest variants first),
-    /// padding the tail with the smallest variant and truncating.
-    pub fn route(&self, base: u64, m: u64, n: usize) -> Result<RoutedBatch> {
-        assert!(m.is_power_of_two());
-        let mut out = RoutedBatch::default();
-        let mut off = 0usize;
-        for v in &self.variants {
-            while n - off >= v.batch {
-                let mut b = self.run_variant(v, base.wrapping_add(off as u64), m)?;
-                out.append(&mut b);
-                off += v.batch;
+            if variants.is_empty() {
+                bail!("no route_batch_*.hlo.txt artifacts in {artifacts_dir}");
             }
+            variants.sort_by(|a, b| b.batch.cmp(&a.batch));
+            let engine =
+                RouteEngine { _client: client, variants, dispatches: std::cell::Cell::new(0) };
+            engine.self_check().context("artifact self-check vs native mixer")?;
+            Ok(engine)
         }
-        if off < n {
-            // tail: run the smallest variant once and truncate
-            let v = self.variants.last().unwrap();
-            let mut b = self.run_variant(v, base.wrapping_add(off as u64), m)?;
-            b.truncate(n - off);
-            out.append(&mut b);
-        }
-        Ok(out)
-    }
 
-    /// Cross-check the artifact against the rust mixer on a probe batch.
-    pub fn self_check(&self) -> Result<()> {
-        let v = self.variants.last().unwrap();
-        let got = self.run_variant(v, 0, 8192)?;
-        let want = native_route(0, 8192, v.batch);
-        if got.keys != want.keys || got.hashes != want.hashes {
-            bail!("artifact drift: AOT route != native splitmix64");
+        /// Batch sizes available (descending).
+        pub fn batch_sizes(&self) -> Vec<usize> {
+            self.variants.iter().map(|v| v.batch).collect()
         }
-        if got.shards != want.shards || got.slots != want.slots {
-            bail!("artifact drift: AOT shard/slot routing != native");
+
+        fn run_variant(&self, v: &CompiledRoute, base: u64, m: u64) -> Result<RoutedBatch> {
+            let base_l = xla::Literal::vec1(&[base]);
+            let m_l = xla::Literal::vec1(&[m]);
+            let result = v.exe.execute::<xla::Literal>(&[base_l, m_l])?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            if parts.len() != 4 {
+                bail!("route artifact returned {} outputs, want 4", parts.len());
+            }
+            let mut it = parts.into_iter();
+            let keys = it.next().unwrap().to_vec::<u64>()?;
+            let hashes = it.next().unwrap().to_vec::<u64>()?;
+            let shards = it.next().unwrap().to_vec::<u64>()?;
+            let slots = it.next().unwrap().to_vec::<u64>()?;
+            self.dispatches.set(self.dispatches.get() + 1);
+            Ok(RoutedBatch { keys, hashes, shards, slots })
         }
-        Ok(())
+
+        /// Route `n` keys starting at counter `base` for a table of `m`
+        /// slots. Runs as few compiled dispatches as possible (largest
+        /// variants first), padding the tail with the smallest variant and
+        /// truncating.
+        pub fn route(&self, base: u64, m: u64, n: usize) -> Result<RoutedBatch> {
+            assert!(m.is_power_of_two());
+            let mut out = RoutedBatch::default();
+            let mut off = 0usize;
+            for v in &self.variants {
+                while n - off >= v.batch {
+                    let mut b = self.run_variant(v, base.wrapping_add(off as u64), m)?;
+                    out.append(&mut b);
+                    off += v.batch;
+                }
+            }
+            if off < n {
+                // tail: run the smallest variant once and truncate
+                let v = self.variants.last().unwrap();
+                let mut b = self.run_variant(v, base.wrapping_add(off as u64), m)?;
+                b.truncate(n - off);
+                out.append(&mut b);
+            }
+            Ok(out)
+        }
+
+        /// Cross-check the artifact against the rust mixer on a probe batch.
+        pub fn self_check(&self) -> Result<()> {
+            let v = self.variants.last().unwrap();
+            let got = self.run_variant(v, 0, 8192)?;
+            let want = native_route(0, 8192, v.batch);
+            if got.keys != want.keys || got.hashes != want.hashes {
+                bail!("artifact drift: AOT route != native splitmix64");
+            }
+            if got.shards != want.shards || got.slots != want.slots {
+                bail!("artifact drift: AOT shard/slot routing != native");
+            }
+            Ok(())
+        }
     }
 }
 
-/// Key router: AOT engine when artifacts are present, else the bit-exact
-/// native path. Both produce identical batches.
+#[cfg(not(feature = "aot"))]
+mod aot_engine {
+    use anyhow::{bail, Result};
+
+    use super::RoutedBatch;
+
+    /// API-compatible stand-in for the PJRT engine in builds without the
+    /// `aot` feature: `load` always fails, so [`super::KeyRouter::auto`]
+    /// falls back to the bit-exact native router. The other methods exist
+    /// only so AOT-gated callers typecheck; they are unreachable because no
+    /// stub engine can ever be constructed.
+    pub struct RouteEngine {
+        _priv: (),
+        pub dispatches: std::cell::Cell<u64>,
+    }
+
+    impl RouteEngine {
+        pub fn load(artifacts_dir: &str) -> Result<RouteEngine> {
+            bail!(
+                "AOT engine disabled: rebuild with `--features aot` after wiring the \
+                 local xla bindings into rust/Cargo.toml, to load artifacts from \
+                 {artifacts_dir}"
+            )
+        }
+
+        pub fn batch_sizes(&self) -> Vec<usize> {
+            Vec::new()
+        }
+
+        pub fn route(&self, _base: u64, _m: u64, _n: usize) -> Result<RoutedBatch> {
+            bail!("AOT engine disabled (build without the `aot` feature)")
+        }
+
+        pub fn self_check(&self) -> Result<()> {
+            bail!("AOT engine disabled (build without the `aot` feature)")
+        }
+    }
+}
+
+pub use aot_engine::RouteEngine;
+
+/// Key router: AOT engine when artifacts are present (and the `aot` feature
+/// is compiled in), else the bit-exact native path. Both produce identical
+/// batches.
 pub enum KeyRouter {
     Aot(RouteEngine),
     Native,
@@ -247,6 +307,14 @@ mod tests {
         let b = r.route(7, 256, 100);
         assert_eq!(b.len(), 100);
         assert_eq!(b.keys[0], mix64(7));
+    }
+
+    #[cfg(not(feature = "aot"))]
+    #[test]
+    fn auto_falls_back_to_native_without_aot_feature() {
+        let r = KeyRouter::auto("artifacts");
+        assert!(!r.is_aot(), "stub engine must never load");
+        assert_eq!(r.route(3, 64, 10).keys, native_route(3, 64, 10).keys);
     }
 
     // AOT tests live in rust/tests/aot_roundtrip.rs (they need artifacts).

@@ -61,6 +61,20 @@ pub struct SkiplistStats {
     pub write_retries: u64,
 }
 
+impl SkiplistStats {
+    /// Accumulate `other` into `self` (per-shard aggregation: the sharded
+    /// store sums every shard's counters into one observable snapshot).
+    pub fn merge(&mut self, other: &SkiplistStats) {
+        self.splits += other.splits;
+        self.merges += other.merges;
+        self.borrows += other.borrows;
+        self.depth_increases += other.depth_increases;
+        self.depth_decreases += other.depth_decreases;
+        self.find_retries += other.find_retries;
+        self.write_retries += other.write_retries;
+    }
+}
+
 #[derive(Default)]
 struct AtomicSkiplistStats {
     splits: AtomicU64,
@@ -87,16 +101,20 @@ impl ChildVec {
         ChildVec { buf: [SENTINEL; 12], len: 0 }
     }
 
+    /// Append a child; `false` when the fixed arity bound would be
+    /// exceeded (the structure is transiently wider than any legal arity).
+    /// Callers must surface that as a RETRY — silently clamping would make
+    /// split/merge reason about a truncated child list and (in release
+    /// builds, where the old debug assert vanished) corrupt the segment.
     #[inline]
-    fn push(&mut self, r: NodeRef) {
+    #[must_use]
+    fn push(&mut self, r: NodeRef) -> bool {
         if self.len < self.buf.len() {
             self.buf[self.len] = r;
             self.len += 1;
+            true
         } else {
-            // Beyond any legal arity: structure is transiently wide; the
-            // caller's split logic only needs a prefix, so clamp (the next
-            // traversal splits again).
-            debug_assert!(false, "child arity overflow");
+            false
         }
     }
 }
@@ -238,7 +256,11 @@ impl DetSkiplist {
     /// `AcquireChildren`): the segment from `p.bottom` up to and including
     /// the first child with key >= p.key. Children cannot be retired while
     /// `p` is locked, so links resolve unconditionally.
-    fn acquire_children(&self, pkey: u64, pbottom: NodeRef) -> ChildVec {
+    ///
+    /// `Err` carries the already-locked prefix when the arity bound
+    /// overflows (transiently over-wide segment): the caller must release
+    /// those locks and retry the operation.
+    fn acquire_children(&self, pkey: u64, pbottom: NodeRef) -> Result<ChildVec, ChildVec> {
         let mut out = ChildVec::new();
         let mut d = pbottom;
         while d != SENTINEL {
@@ -252,13 +274,16 @@ impl DetSkiplist {
                 dn.lock.unlock();
                 break;
             }
-            out.push(d);
+            if !out.push(d) {
+                dn.lock.unlock();
+                return Err(out);
+            }
             if dk == pkey {
                 break;
             }
             d = dnext;
         }
-        out
+        Ok(out)
     }
 
     fn release_children(&self, children: &[NodeRef]) {
@@ -358,7 +383,14 @@ impl DetSkiplist {
             return Tri::Retry; // height increase pending (alg 3)
         }
         let nbottom = n.bottom.load(Ordering::Acquire);
-        let children = self.acquire_children(nkey, nbottom);
+        let children = match self.acquire_children(nkey, nbottom) {
+            Ok(c) => c,
+            Err(partial) => {
+                self.release_children(&partial);
+                n.lock.unlock();
+                return Tri::Retry; // over-wide segment: retry after help
+            }
+        };
         self.check_node_key(nref, &children);
         let (nkey, nnext) = n.key_next(); // may have been lowered
 
@@ -726,7 +758,14 @@ impl DetSkiplist {
             return Tri::Retry;
         }
         let nbottom = n.bottom.load(Ordering::Acquire);
-        let children = self.acquire_children(nkey, nbottom);
+        let children = match self.acquire_children(nkey, nbottom) {
+            Ok(c) => c,
+            Err(partial) => {
+                self.release_children(&partial);
+                n.lock.unlock();
+                return Tri::Retry; // over-wide segment: retry after help
+            }
+        };
         self.check_node_key(nref, &children);
         let (nkey, nnext) = n.key_next();
 
@@ -759,7 +798,12 @@ impl DetSkiplist {
         };
 
         let target = children[i];
-        let tchildren = self.count_children(target);
+        let Some(tchildren) = self.count_children(target) else {
+            // arity overflow while counting: retry the whole operation
+            self.release_children(&children);
+            n.lock.unlock();
+            return Tri::Retry;
+        };
         let mut descend = target;
 
         if tchildren == 0 {
@@ -785,9 +829,10 @@ impl DetSkiplist {
     }
 
     /// Count the children of locked node `c` (no locks needed: mutating
-    /// `c`'s child list requires `c`'s lock, which we hold).
-    fn count_children(&self, c: NodeRef) -> usize {
-        self.collect_children(c).len()
+    /// `c`'s child list requires `c`'s lock, which we hold). `None` on
+    /// arity overflow (caller retries).
+    fn count_children(&self, c: NodeRef) -> Option<usize> {
+        self.collect_children(c).map(|v| v.len())
     }
 
     /// Algorithm 5: merge the pair `(n1, n2)` (both locked children of the
@@ -799,8 +844,13 @@ impl DetSkiplist {
         let n2n = self.arena.node(n2);
         let (n1key, n1next) = n1n.key_next();
         debug_assert_eq!(n1next, n2, "pair must be adjacent");
-        let c1 = self.collect_children(n1);
-        let c2 = self.collect_children(n2);
+        let (c1, c2) = match (self.collect_children(n1), self.collect_children(n2)) {
+            (Some(a), Some(b)) => (a, b),
+            // Transiently over-wide sibling: skip the boost. The deletion
+            // still descends into the covering child; the next writer pass
+            // through this segment rebalances it.
+            _ => return if key <= n1key { n1 } else { n2 },
+        };
         let target_left = key <= n1key;
         let need = (target_left && c1.len() <= 2) || (!target_left && c2.len() <= 2);
         if !need {
@@ -844,7 +894,8 @@ impl DetSkiplist {
     /// Child refs of locked node `c`, without locking them (mutating `c`'s
     /// child list requires `c`'s lock, which the caller holds). Foreign
     /// boundary nodes (key > c.key) are excluded — see `acquire_children`.
-    fn collect_children(&self, c: NodeRef) -> ChildVec {
+    /// `None` on arity overflow (caller retries or skips the rebalance).
+    fn collect_children(&self, c: NodeRef) -> Option<ChildVec> {
         let cn = self.arena.node(c);
         let ckey = cn.key();
         let mut out = ChildVec::new();
@@ -854,13 +905,15 @@ impl DetSkiplist {
             if dk > ckey {
                 break;
             }
-            out.push(d);
+            if !out.push(d) {
+                return None;
+            }
             if dk == ckey {
                 break;
             }
             d = dn;
         }
-        out
+        Some(out)
     }
 
     /// Remove `key` from the terminal segment of locked leaf `p` (children
@@ -1254,6 +1307,36 @@ mod tests {
         // range on boundaries not present
         let r = s.range(11, 14);
         assert_eq!(r, vec![]);
+    }
+
+    #[test]
+    fn childvec_push_signals_overflow() {
+        let mut cv = ChildVec::new();
+        for i in 0..12u64 {
+            assert!(cv.push(i + 1), "push {i} within bound");
+        }
+        assert_eq!(cv.len(), 12);
+        assert!(!cv.push(99), "13th child must signal overflow");
+        assert_eq!(cv.len(), 12, "overflowing push must not clobber");
+        assert_eq!(cv[11], 12, "contents intact after rejected push");
+    }
+
+    #[test]
+    fn insert_and_erase_batches() {
+        // batch ops come from the OrderedKv capability (sorted default over
+        // the native insert/erase)
+        use crate::coordinator::OrderedKv;
+        let s = new_lf();
+        let items: Vec<(u64, u64)> = (0..300u64).rev().map(|k| (k * 2, k)).collect();
+        assert_eq!(s.insert_batch(&items), 300);
+        assert_eq!(s.insert_batch(&items), 0, "all duplicates");
+        assert_eq!(s.len(), 300);
+        assert_eq!(s.range(0, 10), vec![(0, 0), (2, 1), (4, 2), (6, 3), (8, 4), (10, 5)]);
+        let evens: Vec<u64> = (0..300u64).map(|k| k * 2).collect();
+        assert_eq!(s.erase_batch(&evens), 300);
+        assert_eq!(s.erase_batch(&evens), 0);
+        assert!(s.is_empty());
+        s.check_invariants().unwrap();
     }
 
     #[test]

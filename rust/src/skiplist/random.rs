@@ -416,6 +416,51 @@ impl RandomSkiplist {
         self.retries.load(Ordering::Relaxed)
     }
 
+    /// Collect all `(key, value)` with `lo <= key <= hi`: tower descent to
+    /// the first node >= `lo`, then a lock-free walk of the full-density
+    /// level-0 list (marked nodes are skipped; interference retries).
+    pub fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)> {
+        if lo > hi {
+            return Vec::new();
+        }
+        let mut b = Backoff::new();
+        'retry: loop {
+            let Ok(f) = self.find(lo) else {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+                b.wait();
+                continue 'retry;
+            };
+            let mut out = Vec::new();
+            let mut cur = f.succs[0];
+            loop {
+                if link_idx(cur) == NIL_IDX {
+                    return out;
+                }
+                let Some(n) = self.resolve(cur) else {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    b.wait();
+                    continue 'retry;
+                };
+                let succ = n.tower[0].load(Ordering::Acquire);
+                let k = n.key.load(Ordering::Relaxed);
+                let v = n.value.load(Ordering::Relaxed);
+                // re-validate: the snapshot above must predate any recycle
+                if self.resolve(cur).is_none() {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    b.wait();
+                    continue 'retry;
+                }
+                if k > hi {
+                    return out;
+                }
+                if !is_marked(succ) && k >= lo {
+                    out.push((k, v));
+                }
+                cur = unmarked(succ);
+            }
+        }
+    }
+
     /// Quiescent structural check: level-0 sorted, towers consistent.
     pub fn check_invariants(&self) -> Result<Vec<u64>, String> {
         let mut keys = Vec::new();
@@ -519,6 +564,33 @@ mod tests {
         }
         let keys = s.check_invariants().unwrap();
         assert_eq!(keys, oracle.into_iter().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn range_and_batches_match_btreemap() {
+        use crate::coordinator::OrderedKv;
+        use std::collections::BTreeMap;
+        let s = RandomSkiplist::with_capacity(1 << 14);
+        let mut oracle = BTreeMap::new();
+        // k*5 mod 997 is injective for k < 997 (5 coprime to the prime 997)
+        let items: Vec<(u64, u64)> = (0..400u64).map(|k| (k * 5 % 997, k)).collect();
+        for &(k, v) in &items {
+            oracle.insert(k, v);
+        }
+        assert_eq!(s.insert_batch(&items), 400);
+        assert_eq!(s.insert_batch(&items), 0, "all duplicates");
+        let got_keys: Vec<u64> = s.range(0, 1_000).iter().map(|&(k, _)| k).collect();
+        assert_eq!(got_keys, oracle.keys().copied().collect::<Vec<_>>());
+        // windowed ranges are sorted and bounded
+        let w = s.range(100, 300);
+        assert!(w.windows(2).all(|p| p[0].0 < p[1].0));
+        assert!(w.iter().all(|&(k, _)| (100..=300).contains(&k)));
+        // batch erase of half the keys
+        let evens: Vec<u64> = oracle.keys().copied().filter(|k| k % 2 == 0).collect();
+        assert_eq!(s.erase_batch(&evens), evens.len() as u64);
+        assert!(s.range(0, 1_000).iter().all(|&(k, _)| k % 2 == 1));
+        assert_eq!(s.range(500, 400), vec![]);
+        s.check_invariants().unwrap();
     }
 
     #[test]

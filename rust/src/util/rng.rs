@@ -21,6 +21,38 @@ pub fn mix64(x: u64) -> u64 {
     x ^ (x >> 31)
 }
 
+/// Inverse of `x ^ (x >> s)` for `0 < s < 64`: xor the original word back
+/// in at every multiple of the shift (`y ^ (y>>s) ^ (y>>2s) ^ ...`).
+#[inline(always)]
+fn unshift_xor(y: u64, s: u32) -> u64 {
+    let mut x = y;
+    let mut sh = s;
+    while sh < 64 {
+        x ^= y >> sh;
+        sh += s;
+    }
+    x
+}
+
+/// Exact inverse of [`mix64`] (splitmix64 is a bijection on `u64`):
+/// `unmix64(mix64(x)) == x` for every `x`.
+///
+/// The BST-backed hash tables key their trees by the *scrambled* hash and
+/// discard the original key; the ordered-map snapshot fallback uses this
+/// inverse to report original keys back out.
+#[inline(always)]
+pub fn unmix64(h: u64) -> u64 {
+    // Modular inverses (mod 2^64) of mix64's two multipliers.
+    const INV1: u64 = 0x96DE_1B17_3F11_9089;
+    const INV2: u64 = 0x3196_42B2_D24D_8EC3;
+    let mut x = unshift_xor(h, 31);
+    x = x.wrapping_mul(INV2);
+    x = unshift_xor(x, 27);
+    x = x.wrapping_mul(INV1);
+    x = unshift_xor(x, 30);
+    x.wrapping_sub(GAMMA)
+}
+
 /// Golden vectors: `mix64(i)` for `i = 0..5`. `mix64(0)` equals the first
 /// output of the canonical splitmix64 stream seeded with 0.
 pub const GOLDEN: [u64; 5] = [
@@ -85,6 +117,21 @@ mod tests {
     fn golden_vectors() {
         for (i, want) in GOLDEN.iter().enumerate() {
             assert_eq!(mix64(i as u64), *want, "mix64({i})");
+        }
+    }
+
+    #[test]
+    fn unmix64_inverts_mix64() {
+        for (i, &h) in GOLDEN.iter().enumerate() {
+            assert_eq!(unmix64(h), i as u64, "golden {i}");
+        }
+        for x in 0..1u64 << 16 {
+            assert_eq!(unmix64(mix64(x)), x);
+        }
+        // high/edge values
+        for x in [u64::MAX, u64::MAX - 1, 1 << 63, 0xDEAD_BEEF_CAFE_F00D] {
+            assert_eq!(unmix64(mix64(x)), x);
+            assert_eq!(mix64(unmix64(x)), x, "bijection both ways");
         }
     }
 

@@ -9,12 +9,14 @@
 
 use crate::util::rng::mix64;
 
-/// Operation kinds in the paper's workloads.
+/// Operation kinds in the paper's workloads, plus the §IX range scan.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OpKind {
     Insert,
     Find,
     Erase,
+    /// Range scan of `[key, key + range_window]` (see [`WorkloadSpec`]).
+    Range,
 }
 
 /// An operation mix in per-mille (supports the paper's 0.2% erase).
@@ -23,12 +25,21 @@ pub struct OpMix {
     pub insert_pm: u32,
     pub find_pm: u32,
     pub erase_pm: u32,
+    pub range_pm: u32,
 }
 
 impl OpMix {
+    /// Point-op mix (no range scans).
     pub const fn new(insert_pm: u32, find_pm: u32, erase_pm: u32) -> OpMix {
         assert!(insert_pm + find_pm + erase_pm == 1000);
-        OpMix { insert_pm, find_pm, erase_pm }
+        OpMix { insert_pm, find_pm, erase_pm, range_pm: 0 }
+    }
+
+    /// Mixed point/range mix: the range-op ratio is `range_pm` per mille;
+    /// each range op scans a window of [`WorkloadSpec::range_window`] keys.
+    pub const fn with_range(insert_pm: u32, find_pm: u32, erase_pm: u32, range_pm: u32) -> OpMix {
+        assert!(insert_pm + find_pm + erase_pm + range_pm == 1000);
+        OpMix { insert_pm, find_pm, erase_pm, range_pm }
     }
 
     /// Paper workload 1 (§VI): 10% insert, 90% find.
@@ -37,6 +48,9 @@ impl OpMix {
     pub const W2: OpMix = OpMix::new(100, 898, 2);
     /// Hash-table workload (§VIII): 50% insert, 50% find.
     pub const HASH: OpMix = OpMix::new(500, 500, 0);
+    /// Mixed point/range workload (§IX terminal-list advantage): 10%
+    /// insert, 70% find, 20% range scans.
+    pub const RANGE: OpMix = OpMix::with_range(100, 700, 0, 200);
 
     /// Deterministic op for a key: both the router (producer) and the
     /// worker (consumer) compute the same answer from the key alone.
@@ -48,8 +62,10 @@ impl OpMix {
             OpKind::Insert
         } else if roll < self.insert_pm + self.find_pm {
             OpKind::Find
-        } else {
+        } else if roll < self.insert_pm + self.find_pm + self.erase_pm {
             OpKind::Erase
+        } else {
+            OpKind::Range
         }
     }
 }
@@ -63,11 +79,20 @@ pub struct WorkloadSpec {
     /// Keys are folded into this many distinct values (0 = full u64 space).
     /// A bounded key space makes finds/erases hit earlier inserts.
     pub key_space: u64,
+    /// Window width of one `Range` op: the worker scans
+    /// `[key, key + range_window]`. Only meaningful when `mix.range_pm > 0`.
+    pub range_window: u64,
 }
 
 impl WorkloadSpec {
     pub fn new(name: &'static str, total_ops: u64, mix: OpMix, key_space: u64) -> WorkloadSpec {
-        WorkloadSpec { name, total_ops, mix, key_space }
+        WorkloadSpec { name, total_ops, mix, key_space, range_window: 64 }
+    }
+
+    /// Override the range-scan window width (builder style).
+    pub fn with_range_window(mut self, window: u64) -> WorkloadSpec {
+        self.range_window = window;
+        self
     }
 
     /// Map a raw generated key into the bounded key space while keeping the
@@ -95,6 +120,7 @@ impl WorkloadSpec {
             OpKind::Insert => 0u64,
             OpKind::Find => 1,
             OpKind::Erase => 2,
+            OpKind::Range => 3,
         };
         self.fold_key(raw) | (op << OP_SHIFT)
     }
@@ -105,7 +131,8 @@ impl WorkloadSpec {
         let op = match (word >> OP_SHIFT) & 0b11 {
             0 => OpKind::Insert,
             1 => OpKind::Find,
-            _ => OpKind::Erase,
+            2 => OpKind::Erase,
+            _ => OpKind::Range,
         };
         (op, word & !(0b11 << OP_SHIFT))
     }
@@ -129,6 +156,7 @@ mod tests {
                 OpKind::Insert => i += 1,
                 OpKind::Find => f += 1,
                 OpKind::Erase => e += 1,
+                OpKind::Range => unreachable!("W2 has no range ops"),
             }
         }
         let pct = |x: u64| x as f64 / n as f64 * 1000.0;
@@ -159,5 +187,25 @@ mod tests {
     #[should_panic]
     fn mix_must_sum_to_1000() {
         let _ = OpMix::new(500, 400, 0);
+    }
+
+    #[test]
+    fn range_mix_fraction_and_transport_roundtrip() {
+        let spec = WorkloadSpec::new("r", 0, OpMix::RANGE, 1 << 20).with_range_window(32);
+        assert_eq!(spec.range_window, 32);
+        let n = 100_000u64;
+        let mut r = 0u64;
+        for c in 0..n {
+            let raw = mix64(c);
+            let word = spec.encode(raw);
+            let (op, key) = WorkloadSpec::decode(word);
+            assert_eq!(key, spec.fold_key(raw), "key survives transport");
+            if op == OpKind::Range {
+                assert_eq!(spec.mix.op_of(raw), OpKind::Range, "op survives transport");
+                r += 1;
+            }
+        }
+        let pm = r as f64 / n as f64 * 1000.0;
+        assert!((pm - 200.0).abs() < 15.0, "range ratio {pm:.1}pm, want ~200pm");
     }
 }

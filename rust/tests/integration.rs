@@ -47,6 +47,7 @@ fn op_transport_roundtrip_is_lossless() {
             OpKind::Insert => i += 1,
             OpKind::Find => f += 1,
             OpKind::Erase => e += 1,
+            OpKind::Range => unreachable!("W2 has no range ops"),
         }
     }
     assert!(i > 800 && i < 1_200, "inserts {i}");

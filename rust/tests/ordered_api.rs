@@ -1,0 +1,226 @@
+//! Ordered-map API across the stack: cross-shard range scans under
+//! concurrency, routed batch ops, the mixed point/range workload through
+//! the coordinator engine, and end-to-end stats observability.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use cdskl::coordinator::{bulk_load, run_workload, ShardedStore, StoreKind};
+use cdskl::numa::Topology;
+use cdskl::runtime::KeyRouter;
+use cdskl::workload::{OpMix, WorkloadSpec};
+
+/// Writer keys set bit 20; committed keys keep it clear — the two
+/// populations never collide.
+const WRITER_BIT: u64 = 1 << 20;
+
+/// Multi-threaded stress (4 writers + 3 scanners over 8 shards): every
+/// cross-shard range result must be sorted, duplicate-free, and contain
+/// every key committed before the scan started.
+#[test]
+fn cross_shard_range_sorted_and_complete_under_writers() {
+    let store = Arc::new(ShardedStore::new(
+        StoreKind::DetSkiplistLf,
+        8,
+        1 << 16,
+        Topology::milan_virtual(),
+        8,
+    ));
+    // committed population: 500 keys in each of the 8 prefixes, loaded
+    // through the routed batch path before any scanner starts
+    let committed: Vec<(u64, u64)> = (0..8u64)
+        .flat_map(|p| (0..500u64).map(move |i| (p << 61 | i * 3, p)))
+        .collect();
+    assert_eq!(store.insert_batch(&committed), 4_000);
+    let committed_keys: Vec<u64> = committed.iter().map(|&(k, _)| k).collect();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        // 4 writers keep mutating a disjoint population while scans run
+        let mut writers = Vec::new();
+        for t in 0..4u64 {
+            let store = store.clone();
+            writers.push(scope.spawn(move || {
+                for i in 0..2_000u64 {
+                    let key = (i % 8) << 61 | WRITER_BIT | t << 21 | i;
+                    store.insert(key, t);
+                    if i % 3 == 0 {
+                        store.erase(key);
+                    }
+                }
+            }));
+        }
+        // 3 scanners: full scans + windowed scans, validated on every pass
+        for s in 0..3u64 {
+            let store = store.clone();
+            let stop = stop.clone();
+            let committed_keys = committed_keys.clone();
+            scope.spawn(move || {
+                let mut passes = 0u64;
+                loop {
+                    let done = stop.load(Ordering::Relaxed);
+                    let rows = store.range(0, u64::MAX - 2);
+                    assert!(
+                        rows.windows(2).all(|w| w[0].0 < w[1].0),
+                        "scanner {s}: cross-shard scan must be sorted and duplicate-free"
+                    );
+                    let keys: BTreeSet<u64> = rows.iter().map(|&(k, _)| k).collect();
+                    for &k in &committed_keys {
+                        assert!(keys.contains(&k), "scanner {s}: committed key {k:#x} missing");
+                    }
+                    // windowed scan inside one prefix
+                    let p = (passes % 8) << 61;
+                    let w = store.range(p, p | 300);
+                    assert!(w.windows(2).all(|x| x[0].0 < x[1].0));
+                    assert!(w.iter().all(|&(k, _)| k >= p && k <= (p | 300)));
+                    passes += 1;
+                    if done {
+                        break; // one full validated pass after writers stop
+                    }
+                }
+                assert!(passes > 0);
+            });
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    // quiescent: committed keys all present with their values
+    for &(k, v) in &committed {
+        assert_eq!(store.get(k), Some(v));
+    }
+}
+
+/// The same stress shape on the randomized skiplist backend (its range is
+/// a separate native implementation).
+#[test]
+fn cross_shard_range_on_random_skiplist_backend() {
+    let store = Arc::new(ShardedStore::new(
+        StoreKind::RandomSkiplist,
+        4,
+        1 << 16,
+        Topology::virtual_grid(2, 2),
+        4,
+    ));
+    let committed: Vec<(u64, u64)> = (0..8u64)
+        .flat_map(|p| (0..250u64).map(move |i| (p << 61 | i * 2, i)))
+        .collect();
+    assert_eq!(store.insert_batch(&committed), 2_000);
+    std::thread::scope(|scope| {
+        for t in 0..2u64 {
+            let store = store.clone();
+            scope.spawn(move || {
+                for i in 0..1_000u64 {
+                    store.insert((i % 8) << 61 | WRITER_BIT | t << 21 | i, i);
+                }
+            });
+        }
+        for _ in 0..2 {
+            let store = store.clone();
+            let committed = committed.clone();
+            scope.spawn(move || {
+                for _ in 0..20 {
+                    let rows = store.range(0, u64::MAX - 2);
+                    assert!(rows.windows(2).all(|w| w[0].0 < w[1].0), "sorted, dup-free");
+                    let keys: BTreeSet<u64> = rows.iter().map(|&(k, _)| k).collect();
+                    for &(k, _) in &committed {
+                        assert!(keys.contains(&k), "committed key {k:#x} missing");
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// The mixed point/range workload drains through the queue fabric with op
+/// conservation and NUMA-local routing intact.
+#[test]
+fn engine_mixed_range_workload_conserves_ops() {
+    let store = Arc::new(ShardedStore::new(
+        StoreKind::DetSkiplistLf,
+        8,
+        1 << 16,
+        Topology::virtual_grid(2, 2),
+        4,
+    ));
+    let spec = WorkloadSpec::new("range-it", 24_000, OpMix::RANGE, 1 << 12).with_range_window(32);
+    let m = run_workload(&store, &spec, 4, &KeyRouter::Native, 77);
+    assert_eq!(m.ops(), 24_000, "inserts + finds + erases + ranges must conserve");
+    assert!(m.ranges > 3_600 && m.ranges < 6_000, "~20% range ops, got {}", m.ranges);
+    assert!(m.range_rows > 0, "bounded key space: scans must return rows");
+    assert_eq!(m.remote_accesses, 0, "routing must stay NUMA-local");
+}
+
+/// Stats flow end-to-end: per-shard skiplist counters aggregate on the
+/// sharded store, and a range-heavy read phase moves only the find-side
+/// counters — write_retries must not inflate.
+#[test]
+fn range_heavy_phase_records_no_write_retries() {
+    let store = Arc::new(ShardedStore::new(
+        StoreKind::DetSkiplistLf,
+        4,
+        1 << 16,
+        Topology::virtual_grid(2, 2),
+        4,
+    ));
+    let items: Vec<(u64, u64)> = (0..8_000u64).map(|i| ((i % 8) << 61 | i, i)).collect();
+    let (_, loaded) = bulk_load(&store, &items, 4);
+    assert_eq!(loaded, 8_000);
+    let before = store.stats();
+    assert!(before.splits > 0, "load phase must have split nodes");
+
+    // range-heavy phase: concurrent scanners, zero writers
+    std::thread::scope(|scope| {
+        for t in 0..4u64 {
+            let store = store.clone();
+            scope.spawn(move || {
+                for i in 0..200u64 {
+                    let lo = ((i + t) % 8) << 61 | i * 7;
+                    let rows = store.range(lo, lo + 128);
+                    assert!(rows.windows(2).all(|w| w[0].0 < w[1].0));
+                }
+            });
+        }
+    });
+    let after = store.stats();
+    assert_eq!(
+        after.write_retries, before.write_retries,
+        "a pure range phase must not inflate write_retries"
+    );
+    assert!(
+        after.find_retries >= before.find_retries,
+        "find-side counters only ever grow"
+    );
+    assert_eq!(after.splits, before.splits, "no structural writes during scans");
+}
+
+/// Routed batch erase across shards composes with range: erased windows
+/// disappear from cross-shard scans.
+#[test]
+fn batch_erase_composes_with_cross_shard_range() {
+    let store = Arc::new(ShardedStore::new(
+        StoreKind::HashTwoLevelSpo,
+        8,
+        1 << 14,
+        Topology::milan_virtual(),
+        8,
+    ));
+    let items: Vec<(u64, u64)> = (0..8u64)
+        .flat_map(|p| (0..100u64).map(move |i| (p << 61 | i, i + 1)))
+        .collect();
+    assert_eq!(store.insert_batch(&items), 800);
+    // erase keys 25..50 in every prefix, in one routed batch
+    let doomed: Vec<u64> =
+        (0..8u64).flat_map(|p| (25..50u64).map(move |i| p << 61 | i)).collect();
+    assert_eq!(store.erase_batch(&doomed), 200);
+    let rows = store.range(0, u64::MAX - 2);
+    assert_eq!(rows.len(), 600);
+    assert!(rows.windows(2).all(|w| w[0].0 < w[1].0), "sorted after erase");
+    assert!(
+        rows.iter().all(|&(k, _)| !(25..50).contains(&(k & ((1 << 61) - 1)))),
+        "erased window must be gone in every shard"
+    );
+}

@@ -3,6 +3,7 @@
 
 use std::collections::BTreeMap;
 
+use cdskl::coordinator::{OrderedKv, StoreKind};
 use cdskl::hashtable::{
     ConcurrentMap, FixedHashMap, SpoHashMap, TbbLikeHashMap, TwoLevelHashMap, TwoLevelSpoHashMap,
 };
@@ -236,6 +237,104 @@ fn pool_block_accounting_bounds_on_any_sequence() {
         }
         Ok(())
     });
+}
+
+/// The ordered-map API (`range` / `insert_batch` / `erase_batch`) agrees
+/// with a BTreeMap oracle on any history, for every one of the seven
+/// structures behind `StoreKind` (skiplists answer natively, hash tables
+/// via the sorted-snapshot fallback).
+#[test]
+fn ordered_api_matches_btreemap_oracle_on_all_structures() {
+    fn check(kind: StoreKind, seed: u64) {
+        forall_ops(seed, 10, 220, 96, (45, 20), |ops| {
+            let s: Box<dyn OrderedKv> = kind.build(1 << 14);
+            let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    // Insert ops become a 3-pair batch around k. Every pair
+                    // carries value = key + 1, so intra-batch duplicate keys
+                    // cannot make the (sorted) native batch path and the
+                    // sequential oracle disagree on values.
+                    Op::Insert(k) => {
+                        let batch = [(k, k + 1), (k ^ 7, (k ^ 7) + 1), (k + 13, k + 14)];
+                        let mut fresh = 0;
+                        for &(bk, bv) in &batch {
+                            if !oracle.contains_key(&bk) {
+                                oracle.insert(bk, bv);
+                                fresh += 1;
+                            }
+                        }
+                        let got = s.insert_batch(&batch);
+                        if got != fresh {
+                            return Err(format!(
+                                "{}: op {i} insert_batch({k}): got {got} want {fresh}",
+                                s.name()
+                            ));
+                        }
+                    }
+                    // Find ops become a window range query around k.
+                    Op::Find(k) => {
+                        let (lo, hi) = (k.saturating_sub(16), k + 16);
+                        let got = s.range(lo, hi);
+                        let want: Vec<(u64, u64)> =
+                            oracle.range(lo..=hi).map(|(&a, &b)| (a, b)).collect();
+                        if got != want {
+                            return Err(format!(
+                                "{}: op {i} range({lo},{hi}): got {} want {} rows",
+                                s.name(),
+                                got.len(),
+                                want.len()
+                            ));
+                        }
+                    }
+                    // Erase ops become a 2-key batch.
+                    Op::Erase(k) => {
+                        let keys = [k, k + 13];
+                        let mut hit = 0;
+                        for bk in keys {
+                            if oracle.remove(&bk).is_some() {
+                                hit += 1;
+                            }
+                        }
+                        let got = s.erase_batch(&keys);
+                        if got != hit {
+                            return Err(format!(
+                                "{}: op {i} erase_batch({k}): got {got} want {hit}",
+                                s.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            // full sweep: the whole map, sorted, exactly once per key
+            let got = s.range(0, u64::MAX - 2);
+            let want: Vec<(u64, u64)> = oracle.iter().map(|(&a, &b)| (a, b)).collect();
+            if got != want {
+                return Err(format!("{}: full-range sweep != oracle", s.name()));
+            }
+            if s.len() as usize != oracle.len() {
+                return Err(format!("{}: len mismatch", s.name()));
+            }
+            // inverted bounds are empty
+            if !s.range(10, 9).is_empty() {
+                return Err(format!("{}: inverted bounds must be empty", s.name()));
+            }
+            Ok(())
+        });
+    }
+    let kinds = [
+        StoreKind::DetSkiplistLf,
+        StoreKind::DetSkiplistRwl,
+        StoreKind::RandomSkiplist,
+        StoreKind::HashFixed,
+        StoreKind::HashTwoLevel,
+        StoreKind::HashSpo,
+        StoreKind::HashTwoLevelSpo,
+        StoreKind::HashTbbLike,
+    ];
+    for (i, kind) in kinds.into_iter().enumerate() {
+        check(kind, 0xE0 + i as u64);
+    }
 }
 
 /// Range queries agree with the oracle on arbitrary contents and bounds.
