@@ -1,0 +1,11 @@
+//! Bench for Table X (new, paper §V): unified-arena churn — footprint vs
+//! the eq. (5) prediction, recycle rate, and the per-thread magazine
+//! ablation across every arena-backed structure.
+mod common;
+fn main() {
+    let cfg = common::config(100);
+    println!("# bench table10_mem (unified mem layer, paper §V)\n");
+    for t in cdskl::experiments::t10_mem(&cfg) {
+        t.print();
+    }
+}

@@ -10,6 +10,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
+use crate::mem::PoolStats;
 use crate::numa::pin_to_cpu;
 use crate::runtime::KeyRouter;
 use crate::util::rng::Rng;
@@ -34,6 +35,9 @@ pub struct RunMetrics {
     pub local_accesses: u64,
     pub remote_accesses: u64,
     pub final_len: u64,
+    /// §V memory-manager accounting summed over every shard arena
+    /// (allocs/recycled/capacity/magazine hits/locality-hit-rate).
+    pub mem: PoolStats,
 }
 
 impl RunMetrics {
@@ -163,6 +167,7 @@ pub fn run_workload(
         local_accesses: local,
         remote_accesses: remote,
         final_len: store.len(),
+        mem: store.mem_stats(),
     }
 }
 
@@ -231,6 +236,10 @@ mod tests {
         assert!(m.finds > 16_000, "finds {}", m.finds);
         assert!(m.final_len <= m.inserts);
         assert!(m.drain_seconds > 0.0);
+        // the unified arena's accounting reaches the run metrics
+        assert!(m.mem.allocs >= m.final_len, "every resident key has a node");
+        assert!(m.mem.capacity > 0);
+        assert_eq!(m.mem.retired, m.mem.recycled + m.mem.free_residue + m.mem.overflow);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 use crate::hashtable::{
     ConcurrentMap, FixedHashMap, SpoHashMap, TbbLikeHashMap, TwoLevelHashMap, TwoLevelSpoHashMap,
 };
+use crate::mem::{ArenaOptions, PoolStats};
 use crate::numa::{LocalityStats, Topology, LATENCY};
 use crate::skiplist::{DetSkiplist, FindMode, RandomSkiplist, SkiplistStats};
 
@@ -30,6 +31,13 @@ pub trait KvStore: Send + Sync {
     /// counters so the sharded store can aggregate them end-to-end.
     fn stats(&self) -> SkiplistStats {
         SkiplistStats::default()
+    }
+
+    /// §V memory-manager snapshot (allocs/recycled/capacity/locality).
+    /// All-zero for structures that do not run on the unified arena (the
+    /// BST-backed and chained hash tables).
+    fn mem_stats(&self) -> PoolStats {
+        PoolStats::default()
     }
 }
 
@@ -80,6 +88,9 @@ impl KvStore for DetSkiplist {
     fn stats(&self) -> SkiplistStats {
         DetSkiplist::stats(self)
     }
+    fn mem_stats(&self) -> PoolStats {
+        DetSkiplist::mem_stats(self)
+    }
 }
 
 impl OrderedKv for DetSkiplist {
@@ -112,6 +123,9 @@ impl KvStore for RandomSkiplist {
         // traversal interference — report it on the find side
         SkiplistStats { find_retries: self.retry_count(), ..SkiplistStats::default() }
     }
+    fn mem_stats(&self) -> PoolStats {
+        RandomSkiplist::mem_stats(self)
+    }
 }
 
 impl OrderedKv for RandomSkiplist {
@@ -121,7 +135,15 @@ impl OrderedKv for RandomSkiplist {
 }
 
 macro_rules! kv_for_map {
+    // plain tables: no unified-arena backing, mem_stats stays all-zero
     ($t:ty) => {
+        kv_for_map!(@impl $t, |_s: &$t| PoolStats::default());
+    };
+    // arena-backed tables: surface the structure's §V accounting
+    ($t:ty, arena) => {
+        kv_for_map!(@impl $t, <$t>::mem_stats);
+    };
+    (@impl $t:ty, $mem:expr) => {
         impl KvStore for $t {
             fn insert(&self, key: u64, value: u64) -> bool {
                 ConcurrentMap::insert(self, key, value)
@@ -137,6 +159,9 @@ macro_rules! kv_for_map {
             }
             fn name(&self) -> &'static str {
                 ConcurrentMap::name(self)
+            }
+            fn mem_stats(&self) -> PoolStats {
+                ($mem)(self)
             }
         }
 
@@ -162,8 +187,8 @@ macro_rules! kv_for_map {
 
 kv_for_map!(FixedHashMap);
 kv_for_map!(TwoLevelHashMap);
-kv_for_map!(SpoHashMap);
-kv_for_map!(TwoLevelSpoHashMap);
+kv_for_map!(SpoHashMap, arena);
+kv_for_map!(TwoLevelSpoHashMap, arena);
 kv_for_map!(TbbLikeHashMap);
 
 /// Which structure backs each shard.
@@ -197,21 +222,29 @@ impl StoreKind {
     /// Build one shard's structure. Public so tests and tools can exercise
     /// every [`OrderedKv`] implementation behind one constructor.
     pub fn build(self, capacity: usize) -> Box<dyn OrderedKv> {
+        self.build_placed(capacity, ArenaOptions::default())
+    }
+
+    /// Like [`StoreKind::build`] with explicit arena options: the sharded
+    /// store homes each shard's arena(s) on the shard's NUMA node (eq. 7),
+    /// so the §V memory managers are placed — and locality-accounted —
+    /// per shard. Structures without arenas ignore the options.
+    pub fn build_placed(self, capacity: usize, opts: ArenaOptions) -> Box<dyn OrderedKv> {
         match self {
             StoreKind::DetSkiplistLf => {
-                Box::new(DetSkiplist::with_capacity(FindMode::LockFree, capacity))
+                Box::new(DetSkiplist::with_capacity_on(FindMode::LockFree, capacity, opts))
             }
             StoreKind::DetSkiplistRwl => {
-                Box::new(DetSkiplist::with_capacity(FindMode::ReadLocked, capacity))
+                Box::new(DetSkiplist::with_capacity_on(FindMode::ReadLocked, capacity, opts))
             }
-            StoreKind::RandomSkiplist => Box::new(RandomSkiplist::with_capacity(capacity)),
+            StoreKind::RandomSkiplist => Box::new(RandomSkiplist::with_capacity_on(capacity, opts)),
             StoreKind::HashFixed => Box::new(FixedHashMap::new(1024)),
             StoreKind::HashTwoLevel => Box::new(TwoLevelHashMap::new(1024, 256)),
             StoreKind::HashSpo => {
-                Box::new(SpoHashMap::with_config(1024, 16, 1 << 17, capacity))
+                Box::new(SpoHashMap::with_config_on(1024, 16, 1 << 17, capacity, opts))
             }
             StoreKind::HashTwoLevelSpo => {
-                Box::new(TwoLevelSpoHashMap::with_config(32, 64, 16, 1 << 14, capacity / 16))
+                Box::new(TwoLevelSpoHashMap::with_config_on(32, 64, 16, 1 << 14, capacity / 16, opts))
             }
             StoreKind::HashTbbLike => Box::new(TbbLikeHashMap::with_config(1 << 14, 4)),
         }
@@ -233,11 +266,17 @@ pub struct ShardedStore {
 }
 
 impl ShardedStore {
-    /// `nshards` structures (paper: 8 = one per Milan NUMA node).
+    /// `nshards` structures (paper: 8 = one per Milan NUMA node); each
+    /// shard's arena is homed on its eq.-7 NUMA node.
     pub fn new(kind: StoreKind, nshards: usize, capacity_per_shard: usize, topology: Topology, threads: usize) -> ShardedStore {
         assert!(nshards.is_power_of_two() && nshards as u64 <= PREFIXES);
         ShardedStore {
-            shards: (0..nshards).map(|_| kind.build(capacity_per_shard)).collect(),
+            shards: (0..nshards)
+                .map(|i| {
+                    let home = topology.shard_home(i, threads);
+                    kind.build_placed(capacity_per_shard, ArenaOptions::placed(home, &topology, threads))
+                })
+                .collect(),
             topology,
             threads,
             locality: LocalityStats::new(),
@@ -360,6 +399,16 @@ impl ShardedStore {
         let mut out = SkiplistStats::default();
         for s in &self.shards {
             out.merge(&s.stats());
+        }
+        out
+    }
+
+    /// §V memory accounting summed across every shard's arena(s) — the
+    /// allocs/recycled/capacity/locality-hit-rate view the engine reports.
+    pub fn mem_stats(&self) -> PoolStats {
+        let mut out = PoolStats::default();
+        for s in &self.shards {
+            out.merge(&s.mem_stats());
         }
         out
     }
@@ -528,6 +577,34 @@ mod tests {
         let after = s.stats();
         assert_eq!(after.write_retries, before.write_retries, "reads must not inflate write retries");
         assert_eq!(after.splits, before.splits);
+    }
+
+    #[test]
+    fn mem_stats_aggregate_across_shards_for_arena_kinds() {
+        // reset: the test-runner thread may have been pinned by another test
+        crate::mem::note_thread_cpu(usize::MAX);
+        for kind in [StoreKind::DetSkiplistLf, StoreKind::RandomSkiplist, StoreKind::HashSpo, StoreKind::HashTwoLevelSpo] {
+            let s = ShardedStore::new(kind, 4, 1 << 12, Topology::milan_virtual(), 8);
+            for i in 0..400u64 {
+                let key = (i % 4) << 61 | i;
+                assert!(s.insert(key, i), "{kind:?}");
+            }
+            for i in 0..400u64 {
+                let key = (i % 4) << 61 | i;
+                assert!(s.erase(key), "{kind:?}");
+            }
+            let st = s.mem_stats();
+            assert!(st.allocs >= 400, "{kind:?}: allocs {}", st.allocs);
+            assert_eq!(st.retired, st.recycled + st.free_residue + st.overflow, "{kind:?}: lost nodes");
+            assert!(st.arenas >= 4, "{kind:?}: one arena per shard at least");
+            assert!(st.capacity > 0, "{kind:?}");
+            // unpinned test thread counts as local on every home node
+            assert_eq!(st.remote_allocs, 0, "{kind:?}");
+        }
+        // structures without arenas report all-zero
+        let s = ShardedStore::new(StoreKind::HashFixed, 2, 1 << 10, Topology::milan_virtual(), 8);
+        s.insert(1, 1);
+        assert_eq!(s.mem_stats().allocs, 0);
     }
 
     #[test]

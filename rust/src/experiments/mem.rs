@@ -1,0 +1,260 @@
+//! Table X (new, §V): memory behaviour of the unified block arena under
+//! churn — footprint vs the eq. (5) prediction, recycle rate, and the
+//! per-thread magazine ablation.
+//!
+//! Two tables:
+//!
+//! - **Xa** validates eq. (5) directly: Monte-Carlo samples of the paper's
+//!   model (k uniformly random news, i ≤ k deletes, uniformly random valid
+//!   interleaving) run against a raw [`NodePool`], measuring materialized
+//!   blocks. Measured/predicted sits near 1 (empirically ~0.7-1.0:
+//!   interleaved deletes keep the live-set peak — what block
+//!   materialization tracks — below the prefix average the closed form
+//!   sums). Single-threaded block counts are magazine-invariant (bump only
+//!   advances when no slot is parked anywhere), so the magazine ablation
+//!   is measured only by the multithreaded Xb.
+//! - **Xb** measures the structures: a multithreaded churn workload
+//!   (random insert-or-erase per step, per-thread key ranges) on every
+//!   arena-backed structure, reporting wall time with/without magazines,
+//!   recycle and magazine-hit rates, and footprint vs the eq. 5 node
+//!   prediction (per arena, floored at one block — every §V manager holds
+//!   at least the block it materialized). The acceptance bar is
+//!   footprint <= 2x prediction.
+
+use std::sync::Arc;
+
+use crate::coordinator::KvStore;
+use crate::hashtable::{SpoHashMap, TwoLevelSpoHashMap};
+use crate::mem::{eq5_average_blocks, ArenaOptions, NodePool, PoolStats};
+use crate::skiplist::{DetSkiplist, FindMode, RandomSkiplist};
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+
+use super::ExpConfig;
+
+/// eq. (5) average blocks, scaled linearly past the exact-sum cutoff (the
+/// closed form is O(N^2) to evaluate; its large-N behaviour is ~N/(3C), so
+/// linear extrapolation from the cutoff is accurate).
+pub fn eq5_blocks_extrapolated(n: u64, c: u64) -> f64 {
+    const CUTOFF: u64 = 2048;
+    if n == 0 {
+        return 0.0;
+    }
+    if n <= CUTOFF {
+        eq5_average_blocks(n, c)
+    } else {
+        eq5_average_blocks(CUTOFF, c) * (n as f64 / CUTOFF as f64)
+    }
+}
+
+/// Footprint prediction in **nodes** for an aggregated [`PoolStats`]
+/// snapshot: eq. (5) applied per arena (allocs split evenly), floored at
+/// one block per arena, times the block size.
+pub fn eq5_nodes_prediction(st: &PoolStats) -> f64 {
+    if st.blocks == 0 || st.arenas == 0 {
+        return 0.0;
+    }
+    let c = (st.capacity / st.blocks).max(1);
+    let per_arena = st.allocs / st.arenas;
+    st.arenas as f64 * eq5_blocks_extrapolated(per_arena, c).max(1.0) * c as f64
+}
+
+/// One Monte-Carlo sample of the §V model: `k` news and `i` deletes in a
+/// uniformly random valid interleaving against a fresh pool; returns the
+/// blocks materialized at the end (monotone, so this is the peak).
+fn eq5_sample(rng: &mut Rng, n: u64, c: u64) -> u64 {
+    let k = rng.below(n) + 1;
+    let i = rng.below(k + 1);
+    let pool: NodePool<u64> = NodePool::new(c as usize, (n / c + 8) as usize);
+    let mut live = Vec::with_capacity(k as usize);
+    let (mut news, mut dels) = (k, i);
+    while news + dels > 0 {
+        // choose uniformly among the remaining moves, subject to validity
+        let do_new = dels == 0 || live.is_empty() || rng.below(news + dels) < news;
+        if do_new {
+            live.push(pool.alloc() as usize);
+            news -= 1;
+        } else {
+            let at = rng.below(live.len() as u64) as usize;
+            let p = live.swap_remove(at);
+            pool.retire(p as *mut _);
+            dels -= 1;
+        }
+    }
+    pool.stats().blocks
+}
+
+/// Multithreaded churn against one arena-backed structure: each thread owns
+/// a key range and at every step inserts a fresh random key or erases a
+/// random live one. Returns (wall seconds, final §V stats).
+fn churn(store: Arc<dyn KvStore>, threads: usize, steps_per_thread: u64, seed: u64) -> (f64, PoolStats) {
+    use std::sync::Barrier;
+    use std::time::Instant;
+    let barrier = Arc::new(Barrier::new(threads + 1));
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let store = store.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            crate::numa::pin_to_cpu(t);
+            let mut rng = Rng::new(seed ^ (t as u64) << 40);
+            let base = (t as u64) << 32;
+            let span = 1u64 << 32;
+            let mut live: Vec<u64> = Vec::new();
+            barrier.wait();
+            for _ in 0..steps_per_thread {
+                if live.is_empty() || rng.chance(1, 2) {
+                    let k = base + rng.below(span);
+                    if store.insert(k, k) {
+                        live.push(k);
+                    }
+                } else {
+                    let at = rng.below(live.len() as u64) as usize;
+                    let k = live.swap_remove(at);
+                    store.erase(k);
+                }
+            }
+        }));
+    }
+    let t0 = Instant::now(); // before the barrier: see engine.rs timing note
+    barrier.wait();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (t0.elapsed().as_secs_f64(), store.mem_stats())
+}
+
+/// Build churn target `kind_idx` (0=det, 1=random, 2=spo, 3=2lvl-spo) with
+/// arena capacity `cap` and the given magazine setting.
+fn build_churn_store(kind_idx: usize, cap: usize, magazines: bool) -> Arc<dyn KvStore> {
+    let opts = if magazines { ArenaOptions::default() } else { ArenaOptions::without_magazines() };
+    match kind_idx {
+        0 => Arc::new(DetSkiplist::with_capacity_on(FindMode::LockFree, cap, opts)),
+        1 => Arc::new(RandomSkiplist::with_capacity_on(cap, opts)),
+        2 => Arc::new(SpoHashMap::with_config_on(256, 16, 1 << 17, cap, opts)),
+        3 => Arc::new(TwoLevelSpoHashMap::with_config_on(8, 32, 16, 1 << 14, (cap / 8).max(64), opts)),
+        _ => unreachable!(),
+    }
+}
+
+pub const T10_KINDS: [&str; 4] = ["det-lf", "random", "spo", "2lvl-spo"];
+
+/// Table X (new, §V): arena churn behaviour. See module docs.
+pub fn t10_mem(cfg: &ExpConfig) -> Vec<Table> {
+    let mut out = Vec::new();
+
+    // ---- Xa: eq. (5) Monte-Carlo validation on the raw pool ----
+    let n = (cfg.ops(10_000_000) / 100).clamp(64, 1024);
+    let samples = (cfg.reps as u64 * 150).max(50);
+    let mut ta = Table::new(
+        &format!("Table Xa (new) — §V eq. 5 validation, N={n}, {samples} samples (rows keyed by block size C)"),
+        "C",
+        &["avg blocks", "eq5 prediction", "measured/pred"],
+    );
+    for c in [4u64, 16, 64] {
+        let mut rng = Rng::new(cfg.seed ^ c);
+        let mut sum = 0u64;
+        for _ in 0..samples {
+            sum += eq5_sample(&mut rng, n, c);
+        }
+        let avg = sum as f64 / samples as f64;
+        let pred = eq5_average_blocks(n, c);
+        ta.push_row(c, vec![avg, pred, avg / pred.max(1e-9)]);
+    }
+    out.push(ta);
+
+    // ---- Xb: structure churn, with/without magazines ----
+    let ops = cfg.ops(10_000_000);
+    let threads = cfg.threads.first().copied().unwrap_or(4) as usize;
+    let steps = (ops / threads as u64).max(1);
+    let cap = (ops as usize).max(1 << 12);
+    let mut tb = Table::new(
+        &format!(
+            "Table Xb (new) — churn workload, {ops} ops x{threads} threads, scale 1/{} (rows: 0={} 1={} 2={} 3={})",
+            cfg.scale, T10_KINDS[0], T10_KINDS[1], T10_KINDS[2], T10_KINDS[3]
+        ),
+        "kind",
+        &["mag(s)", "nomag(s)", "recycle%", "mag-hit%", "capacity(nodes)", "eq5 pred(nodes)", "cap/pred"],
+    );
+    for kind_idx in 0..4 {
+        let mut secs = [0f64; 2];
+        let mut stats = PoolStats::default();
+        for (slot, mag) in [(0usize, true), (1, false)] {
+            let mut acc = Vec::new();
+            for r in 0..cfg.reps {
+                let store = build_churn_store(kind_idx, cap, mag);
+                let (s, st) = churn(store, threads, steps, cfg.seed + r as u64);
+                acc.push(s);
+                if mag {
+                    stats = st;
+                }
+            }
+            secs[slot] = acc.iter().sum::<f64>() / acc.len() as f64;
+        }
+        let pred = eq5_nodes_prediction(&stats);
+        tb.push_row(
+            kind_idx as u64,
+            vec![
+                secs[0],
+                secs[1],
+                100.0 * stats.recycle_rate(),
+                100.0 * stats.magazine_hit_rate(),
+                stats.capacity as f64,
+                pred,
+                stats.capacity as f64 / pred.max(1.0),
+            ],
+        );
+    }
+    out.push(tb);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numa::Topology;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig {
+            threads: vec![2],
+            reps: 1,
+            scale: 10_000,
+            topology: Topology::virtual_grid(2, 2),
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn t10_footprint_within_2x_of_eq5() {
+        let tabs = t10_mem(&tiny_cfg());
+        assert_eq!(tabs.len(), 2);
+        // Xa: the measured model average must track the closed form
+        for (c, row) in &tabs[0].rows {
+            assert!(row[1] > 0.0, "C={c}: prediction must be positive");
+            assert!(
+                row[2] > 0.3 && row[2] < 2.0,
+                "C={c}: measured/pred ratio {} out of range",
+                row[2]
+            );
+        }
+        // Xb: every structure's churn footprint is within 2x of eq. 5,
+        // recycling is visible, and magazines serve the hot path
+        for (kind, row) in &tabs[1].rows {
+            let name = T10_KINDS[*kind as usize];
+            assert!(row[0] > 0.0 && row[1] > 0.0, "{name}: wall times");
+            assert!(row[2] > 0.0, "{name}: recycle% must be visible");
+            assert!(row[3] > 0.0, "{name}: magazine hits must be visible");
+            assert!(row[4] > 0.0, "{name}: capacity");
+            assert!(row[6] <= 2.0, "{name}: footprint {}x eq5 prediction", row[6]);
+        }
+    }
+
+    #[test]
+    fn eq5_extrapolation_is_continuous_and_linear() {
+        let exact = eq5_average_blocks(2048, 16);
+        assert!((eq5_blocks_extrapolated(2048, 16) - exact).abs() < 1e-9);
+        let double = eq5_blocks_extrapolated(4096, 16);
+        assert!((double / exact - 2.0).abs() < 1e-9, "linear extrapolation");
+        assert_eq!(eq5_blocks_extrapolated(0, 16), 0.0);
+    }
+}

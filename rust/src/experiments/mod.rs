@@ -5,8 +5,11 @@
 //! divides the paper's op counts); pass `--full` / `scale = 1` on real
 //! hardware to run the original sizes.
 
+pub mod mem;
 pub mod paper;
 pub mod queues;
+
+pub use self::mem::t10_mem;
 
 use std::sync::Arc;
 

@@ -13,6 +13,7 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
+use crate::mem::{ArenaOptions, PoolStats};
 use crate::skiplist::node::{NodeArena, NodeRef, SENTINEL};
 use crate::sync::RwSpinLock;
 
@@ -65,10 +66,21 @@ impl SpoHashMap {
     /// `seed` initial active slots, growth capped at `max_slots`, arena
     /// capacity `capacity` nodes.
     pub fn with_config(seed: usize, max_collisions: usize, max_slots: usize, capacity: usize) -> SpoHashMap {
+        Self::with_config_on(seed, max_collisions, max_slots, capacity, ArenaOptions::default())
+    }
+
+    /// Like [`SpoHashMap::with_config`] with explicit arena placement (the
+    /// paper gives each first-level slot its own memory manager; per-shard
+    /// tables home it on the shard's NUMA node).
+    pub fn with_config_on(
+        seed: usize,
+        max_collisions: usize,
+        max_slots: usize,
+        capacity: usize,
+        opts: ArenaOptions,
+    ) -> SpoHashMap {
         assert!(seed.is_power_of_two() && max_slots.is_power_of_two() && seed <= max_slots);
-        let block = 8192.min(capacity.max(16));
-        let blocks = capacity.div_ceil(block) + 2;
-        let arena = NodeArena::new(block, blocks);
+        let arena = NodeArena::for_capacity(capacity, opts);
         // dummy for slot 0 heads the list.
         let head = arena.alloc(so_dummy_key(0), SENTINEL, SENTINEL, 0, 0);
         let slots: Box<[AtomicU64]> = (0..max_slots).map(|_| AtomicU64::new(UNINIT)).collect();
@@ -96,6 +108,11 @@ impl SpoHashMap {
 
     pub fn active_slots(&self) -> usize {
         self.active.load(Ordering::Acquire)
+    }
+
+    /// §V arena accounting (allocs/recycled/capacity/locality).
+    pub fn mem_stats(&self) -> PoolStats {
+        self.arena.stats()
     }
 
     /// Ensure `slot`'s dummy exists; recursively initializes parents.

@@ -8,6 +8,8 @@
 //! second-level table also gets its own node arena (the paper gives each
 //! first-level slot its own memory manager).
 
+use crate::mem::{ArenaOptions, PoolStats};
+
 use super::hash::hash_key;
 use super::splitorder::{SpoHashMap, SpoStats};
 use super::traits::ConcurrentMap;
@@ -33,10 +35,38 @@ impl TwoLevelSpoHashMap {
         max_slots: usize,
         capacity_per_table: usize,
     ) -> TwoLevelSpoHashMap {
+        Self::with_config_on(fanout, seed, max_collisions, max_slots, capacity_per_table, ArenaOptions::default())
+    }
+
+    /// Like [`TwoLevelSpoHashMap::with_config`] with explicit arena
+    /// placement: every second-level table's arena is homed on the same
+    /// (shard) NUMA node.
+    pub fn with_config_on(
+        fanout: usize,
+        seed: usize,
+        max_collisions: usize,
+        max_slots: usize,
+        capacity_per_table: usize,
+        opts: ArenaOptions,
+    ) -> TwoLevelSpoHashMap {
         assert!(fanout.is_power_of_two());
+        // Each sub-table sees only ~1/fanout of the shard's traffic, so an
+        // explicit thread hint is diluted before reaching the sub-arenas
+        // (the floor in `magazine_count` keeps collisions rare for the
+        // diluted stream) — a full-size magazine array per sub-table would
+        // multiply mostly-idle padded mutexes across fanout x shards. The
+        // 0 = "derive from host" sentinel is preserved untouched.
+        let sub_opts = ArenaOptions {
+            threads_hint: if opts.threads_hint == 0 {
+                0
+            } else {
+                opts.threads_hint.div_ceil(fanout).max(2)
+            },
+            ..opts
+        };
         TwoLevelSpoHashMap {
             tables: (0..fanout)
-                .map(|_| SpoHashMap::with_config(seed, max_collisions, max_slots, capacity_per_table))
+                .map(|_| SpoHashMap::with_config_on(seed, max_collisions, max_slots, capacity_per_table, sub_opts))
                 .collect(),
             // route on high hash bits so second-level tables (which consume
             // low bits) see independent distributions
@@ -63,6 +93,15 @@ impl TwoLevelSpoHashMap {
 
     pub fn fanout(&self) -> usize {
         self.tables.len()
+    }
+
+    /// §V arena accounting summed over every second-level table's arena.
+    pub fn mem_stats(&self) -> PoolStats {
+        let mut out = PoolStats::default();
+        for t in self.tables.iter() {
+            out.merge(&t.mem_stats());
+        }
+        out
     }
 }
 

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! cdskl info                           topology, artifacts, self-check
-//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|all> [--threads 4,8] [--reps N]
+//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|all> [--threads 4,8] [--reps N]
 //!           [--scale N] [--out FILE]   regenerate paper tables
 //! cdskl run [--store det|rwl|random|fixed|twolevel|spo|spo2|tbb]
 //!           [--ops N] [--threads N] [--mix w1|w2|hash|range]
@@ -120,8 +120,11 @@ fn exp(args: &Args) {
     if all || which == "t9" || which == "range" {
         tables.push(experiments::t9_range(&cfg, &router));
     }
+    if all || which == "t10" || which == "mem" {
+        tables.extend(experiments::t10_mem(&cfg));
+    }
     if tables.is_empty() {
-        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 all)");
+        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 all)");
         std::process::exit(2);
     }
     let mut out = String::new();
@@ -190,5 +193,17 @@ fn run(args: &Args) {
         );
     }
     println!("numa   : {} local, {} remote accesses", m.local_accesses, m.remote_accesses);
+    if m.mem.allocs > 0 {
+        println!(
+            "mem    : {} allocs ({:.1}% recycled, {:.1}% magazine), {} nodes in {} blocks / {} arenas, locality hit {:.1}%",
+            m.mem.allocs,
+            100.0 * m.mem.recycle_rate(),
+            100.0 * m.mem.magazine_hit_rate(),
+            m.mem.capacity,
+            m.mem.blocks,
+            m.mem.arenas,
+            100.0 * m.mem.locality_hit_rate(),
+        );
+    }
     println!("final  : {} keys resident", m.final_len);
 }

@@ -1,5 +1,12 @@
-//! Memory management (paper §V): block allocation + lock-free recycling.
+//! Memory management (paper §V): one unified block arena with per-thread
+//! magazines, generation-validated recycling and NUMA placement accounting.
+//!
+//! [`BlockArena`] is the single allocator body in the crate; both skiplists,
+//! both split-order hash tables and the typed [`NodePool`] façade run on it
+//! (DESIGN.md §Unified-mem-layer).
 
+pub mod arena;
 pub mod pool;
 
-pub use pool::{eq5_average_blocks, NodePool, PoolStats};
+pub use arena::{note_thread_cpu, ArenaHome, ArenaNode, ArenaOptions, BlockArena, PoolStats};
+pub use pool::{eq5_average_blocks, NodePool};

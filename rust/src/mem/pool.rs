@@ -1,166 +1,105 @@
-//! Block memory manager with recycling (paper §V).
+//! Typed pointer-handing façade over the unified [`BlockArena`] (paper §V).
 //!
-//! A [`NodePool<T>`] allocates node memory in blocks (one `malloc` per
-//! `block_size` nodes instead of one per node), hands out stable raw
-//! pointers, and recycles deleted nodes through a concurrent lock-free queue.
-//! Node memory is **never returned to the OS before the pool drops** — the
-//! property that makes the lock-free `Find` traversals of the skiplist and
-//! the split-order lists memory-safe (a stale pointer always points at node
-//! memory, and generation counters catch reuse).
+//! [`NodePool<T>`] keeps the historical address-based API (`alloc` returns a
+//! stable `*mut MaybeUninit<T>`, `retire` takes it back) but owns **no
+//! allocator body of its own** — blocks, bump index, magazines and the
+//! recycle free list all live in [`BlockArena`]. Node memory is never
+//! returned to the OS before the pool drops, which is what keeps stale
+//! pointers dereferenceable for lock-free traversals.
+//!
+//! Payloads are bounded `T: Copy`: a pool slot stores `MaybeUninit<T>` and
+//! the pool cannot know which slots were initialized, so it never runs `T`
+//! drops. The `Copy` bound turns the old "nodes need no drop" comment into
+//! a compile-time guarantee — a future `T: Drop` user fails to build
+//! instead of silently leaking. (Structures whose nodes are always fully
+//! constructed use [`BlockArena`] directly and *do* get slot drops.)
 //!
 //! Linearization points (per §V): `alloc` linearizes at the bump-index
-//! fetch-add or at the recycle-queue `pop`; `retire` linearizes at the
-//! recycle-queue `push`. Concurrent `alloc`s therefore always receive unique
+//! fetch-add or at the free-list/magazine pop; `retire` linearizes at the
+//! generation bump. Concurrent `alloc`s therefore always receive unique
 //! locations.
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::AtomicU32;
 
-use crate::queue::{ConcurrentQueue, LfQueue};
-use crate::sync::Backoff;
+use super::arena::{ArenaNode, ArenaOptions, BlockArena, PoolStats};
 
-/// Allocation statistics for the §V analysis (eq. 5 behaviour).
-#[derive(Debug, Default, Clone)]
-pub struct PoolStats {
-    /// Total `alloc` calls served.
-    pub allocs: u64,
-    /// `alloc`s served from recycled nodes.
-    pub recycled: u64,
-    /// `retire` calls.
-    pub retired: u64,
-    /// Blocks currently allocated.
-    pub blocks: u64,
-    /// `block_size * blocks` — capacity in nodes.
-    pub capacity: u64,
+/// One pool slot: the payload cell first (`repr(C)`), so a payload pointer
+/// is also a slot pointer and `retire` can recover the slot index without
+/// a reverse lookup.
+#[repr(C)]
+pub struct PoolSlot<T> {
+    cell: UnsafeCell<MaybeUninit<T>>,
+    gen: AtomicU32,
+    idx: u32,
 }
 
-struct Blocks<T> {
-    dir: Box<[AtomicPtr<UnsafeCell<MaybeUninit<T>>>]>,
-    count: AtomicUsize,
-    grow: Mutex<()>,
+unsafe impl<T: Send> Send for PoolSlot<T> {}
+unsafe impl<T: Send> Sync for PoolSlot<T> {}
+
+impl<T: Copy + Send> ArenaNode for PoolSlot<T> {
+    fn vacant() -> PoolSlot<T> {
+        PoolSlot { cell: UnsafeCell::new(MaybeUninit::uninit()), gen: AtomicU32::new(0), idx: 0 }
+    }
+
+    fn generation(&self) -> &AtomicU32 {
+        &self.gen
+    }
+
+    fn on_materialize(&mut self, idx: u32) {
+        self.idx = idx;
+    }
 }
 
-/// Concurrent block-pool allocator for nodes of type `T`.
-pub struct NodePool<T> {
-    blocks: Blocks<T>,
-    /// Global bump index: block = idx / block_size, slot = idx % block_size.
-    bump: AtomicUsize,
-    block_size: usize,
-    /// Recycled node addresses.
-    free: LfQueue,
-    allocs: AtomicU64,
-    recycled: AtomicU64,
-    retired: AtomicU64,
+/// Concurrent block-pool allocator for POD nodes of type `T`.
+pub struct NodePool<T: Copy + Send> {
+    arena: BlockArena<PoolSlot<T>>,
 }
 
-unsafe impl<T: Send> Send for NodePool<T> {}
-unsafe impl<T: Send + Sync> Sync for NodePool<T> {}
-
-impl<T> NodePool<T> {
+impl<T: Copy + Send> NodePool<T> {
     /// Pool with `block_size` nodes per block and room for `max_blocks`
     /// blocks (directory is preallocated; blocks themselves are lazy).
     pub fn new(block_size: usize, max_blocks: usize) -> NodePool<T> {
-        assert!(block_size >= 1 && max_blocks >= 1);
-        NodePool {
-            blocks: Blocks {
-                dir: (0..max_blocks).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
-                count: AtomicUsize::new(0),
-                grow: Mutex::new(()),
-            },
-            bump: AtomicUsize::new(0),
-            block_size,
-            free: LfQueue::with_config(4096, max_blocks.max(64), true),
-            allocs: AtomicU64::new(0),
-            recycled: AtomicU64::new(0),
-            retired: AtomicU64::new(0),
-        }
+        Self::with_options(block_size, max_blocks, ArenaOptions::default())
+    }
+
+    pub fn with_options(block_size: usize, max_blocks: usize, opts: ArenaOptions) -> NodePool<T> {
+        NodePool { arena: BlockArena::with_options(block_size, max_blocks, opts) }
     }
 
     /// Allocate one node slot, preferring recycled nodes. The returned
     /// pointer is valid until the pool is dropped.
     pub fn alloc(&self) -> *mut MaybeUninit<T> {
-        self.allocs.fetch_add(1, Ordering::Relaxed);
-        if let Some(addr) = self.free.pop() {
-            self.recycled.fetch_add(1, Ordering::Relaxed);
-            return addr as *mut MaybeUninit<T>;
-        }
-        let idx = self.bump.fetch_add(1, Ordering::AcqRel);
-        let (b, s) = (idx / self.block_size, idx % self.block_size);
-        assert!(
-            b < self.blocks.dir.len(),
-            "NodePool exhausted: {} blocks of {} nodes",
-            self.blocks.dir.len(),
-            self.block_size
-        );
-        let mut backoff = Backoff::new();
-        loop {
-            if b < self.blocks.count.load(Ordering::Acquire) {
-                let base = self.blocks.dir[b].load(Ordering::Acquire);
-                return unsafe { (*base.add(s)).get() };
-            }
-            // Need to materialize block b (once, under the grow lock).
-            {
-                let _g = self.blocks.grow.lock().unwrap();
-                let cur = self.blocks.count.load(Ordering::Acquire);
-                if cur <= b {
-                    for nb in cur..=b {
-                        let block: Box<[UnsafeCell<MaybeUninit<T>>]> = (0..self.block_size)
-                            .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
-                            .collect();
-                        let ptr = Box::into_raw(block) as *mut UnsafeCell<MaybeUninit<T>>;
-                        self.blocks.dir[nb].store(ptr, Ordering::Release);
-                    }
-                    self.blocks.count.store(b + 1, Ordering::Release);
-                }
-            }
-            backoff.wait();
-        }
+        let idx = self.arena.alloc_slot();
+        let slot = self.arena.raw_ptr(idx);
+        // Raw field projection keeps whole-block provenance, so the pointer
+        // can be cast back to its PoolSlot in `retire`.
+        unsafe { std::ptr::addr_of_mut!((*slot).cell) as *mut MaybeUninit<T> }
     }
 
     /// Return a node to the pool. The caller must guarantee no new
     /// operation will dereference `p` expecting the old value (generation
-    /// counters in the node types enforce this).
+    /// counters catch reuse). Never blocks, even under mass erase: the
+    /// unified arena parks overflow instead of spinning.
     pub fn retire(&self, p: *mut MaybeUninit<T>) {
-        self.retired.fetch_add(1, Ordering::Relaxed);
-        self.free.push(p as u64);
+        // `cell` is the first field of the repr(C) slot.
+        let idx = unsafe { (*(p as *const PoolSlot<T>)).idx };
+        self.arena.retire_slot(idx);
     }
 
     pub fn stats(&self) -> PoolStats {
-        let blocks = self.blocks.count.load(Ordering::Acquire) as u64;
-        PoolStats {
-            allocs: self.allocs.load(Ordering::Relaxed),
-            recycled: self.recycled.load(Ordering::Relaxed),
-            retired: self.retired.load(Ordering::Relaxed),
-            blocks,
-            capacity: blocks * self.block_size as u64,
-        }
+        self.arena.stats()
     }
 
     pub fn block_size(&self) -> usize {
-        self.block_size
-    }
-}
-
-impl<T> Drop for NodePool<T> {
-    fn drop(&mut self) {
-        // Nodes of `T` handed out by this pool are PODs in this codebase
-        // (atomics/integers) and need no drop; free the raw blocks.
-        let n = self.blocks.count.load(Ordering::Acquire);
-        for i in 0..n {
-            let p = self.blocks.dir[i].load(Ordering::Acquire);
-            if !p.is_null() {
-                let slice = std::ptr::slice_from_raw_parts_mut(p, self.block_size);
-                drop(unsafe { Box::from_raw(slice) });
-            }
-        }
+        self.arena.block_size()
     }
 }
 
 /// Average blocks in use for a uniformly random valid new/delete sequence —
-/// the closed form of paper §V eq. (5). Used by tests to validate the pool's
-/// accounting and by DESIGN.md discussion.
+/// the closed form of paper §V eq. (5). Used by tests and `exp t10` to
+/// validate the arena's accounting.
 pub fn eq5_average_blocks(n: u64, c: u64) -> f64 {
     // sum_{k=1..N} sum_{i=0..k} ceil((k-i)/C)   /   sum_{i=1..N} i
     let mut num = 0f64;
@@ -199,6 +138,7 @@ mod tests {
         let st = pool.stats();
         assert_eq!(st.recycled, 1);
         assert_eq!(st.retired, 1);
+        assert_eq!(st.magazine_hits, 1, "reuse must come from the magazine");
     }
 
     #[test]
@@ -222,6 +162,8 @@ mod tests {
         for p in ps {
             pool.retire(p);
         }
+        let st = pool.stats();
+        assert_eq!(st.retired, st.recycled + st.free_residue + st.overflow, "no lost nodes");
     }
 
     #[test]

@@ -6,7 +6,10 @@
 
 /// Pin the calling thread to `cpu` (mod the host's CPU count).
 /// Returns true when an affinity call actually succeeded.
+/// Also records the *virtual* CPU for the mem layer, so per-shard arenas
+/// can account local vs remote allocations against their home node.
 pub fn pin_to_cpu(cpu: usize) -> bool {
+    crate::mem::note_thread_cpu(cpu);
     let host_cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let target = cpu % host_cpus;
     unsafe {

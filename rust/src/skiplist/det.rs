@@ -29,6 +29,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::mem::{ArenaOptions, PoolStats};
 use crate::sync::Backoff;
 
 use super::node::{NodeArena, NodeRef, SENTINEL};
@@ -147,9 +148,13 @@ impl DetSkiplist {
 
     /// `capacity` bounds the number of live nodes (terminal + index).
     pub fn with_capacity(mode: FindMode, capacity: usize) -> DetSkiplist {
-        let block = 8192.min(capacity.max(16));
-        let blocks = capacity.div_ceil(block) + 2;
-        let arena = NodeArena::new(block, blocks);
+        Self::with_capacity_on(mode, capacity, ArenaOptions::default())
+    }
+
+    /// Like [`DetSkiplist::with_capacity`] with explicit arena placement
+    /// (per-shard skiplists home their arena on the shard's NUMA node).
+    pub fn with_capacity_on(mode: FindMode, capacity: usize, opts: ArenaOptions) -> DetSkiplist {
+        let arena = NodeArena::for_capacity(capacity, opts);
         // head: level-1 leaf, key MAX, no children yet.
         let head = arena.alloc(u64::MAX, SENTINEL, SENTINEL, 0, 1);
         DetSkiplist {
@@ -189,6 +194,11 @@ impl DetSkiplist {
 
     pub fn arena(&self) -> &NodeArena {
         &self.arena
+    }
+
+    /// §V arena accounting (allocs/recycled/capacity/locality).
+    pub fn mem_stats(&self) -> PoolStats {
+        self.arena.stats()
     }
 
     // ------------------------------------------------------------------
@@ -1274,7 +1284,7 @@ mod tests {
             assert!(s.is_empty(), "round {round}");
             assert_eq!(s.check_invariants().unwrap(), Vec::<u64>::new());
         }
-        assert!(s.arena().recycled_count() > 0, "nodes must recycle");
+        assert!(s.mem_stats().recycled > 0, "nodes must recycle");
     }
 
     #[test]

@@ -8,15 +8,19 @@
 //! stale link observes a generation mismatch and retries; recycled memory
 //! can never masquerade as the node a link meant.
 //!
+//! The allocator body lives in the unified [`crate::mem::BlockArena`]
+//! (block directory, per-thread magazines, capacity-sized free list);
+//! [`NodeArena`] only adds the skiplist-specific parts: the packed link
+//! format, the slot-0 sentinel, and `(key, next)` snapshot validation.
+//!
 //! The `(key, next)` pair lives in one [`AtomicU128`] (key in bits 127:64,
 //! next link in bits 63:0, exactly the paper's wide-integer layout), so the
 //! lock-free `Find` reads a consistent view with a single atomic load and
 //! rebalancing publishes `(key, next)` changes atomically.
 
-use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 
-use crate::queue::{ConcurrentQueue, LfQueue};
+use crate::mem::{ArenaNode, ArenaOptions, BlockArena, PoolStats};
 use crate::sync::{hi64, lo64, pack, AtomicU128, RwSpinLock};
 
 /// Packed node link: `(gen << 32) | idx`. `SENTINEL` (0) is the shared
@@ -89,54 +93,62 @@ impl Node {
     }
 }
 
-/// Index-addressed block arena for [`Node`]s with lock-free recycling.
-pub struct NodeArena {
-    dir: Box<[AtomicPtr<Node>]>, // one pointer per block
-    count: AtomicUsize,
-    grow: Mutex<()>,
-    bump: AtomicUsize,
-    block_size: usize,
-    free: LfQueue,
-    retired: AtomicU64,
-    recycled: AtomicU64,
+impl ArenaNode for Node {
+    fn vacant() -> Node {
+        Node {
+            kn: AtomicU128::new(0),
+            bottom: AtomicU64::new(SENTINEL),
+            value: AtomicU64::new(0),
+            lock: RwSpinLock::new(),
+            mark: AtomicBool::new(false),
+            gen: AtomicU32::new(0),
+            level: AtomicU32::new(0),
+        }
+    }
+
+    fn generation(&self) -> &AtomicU32 {
+        &self.gen
+    }
 }
 
-unsafe impl Send for NodeArena {}
-unsafe impl Sync for NodeArena {}
+/// Index-addressed arena of [`Node`]s with lock-free recycling — a typed
+/// façade over the unified [`BlockArena`].
+pub struct NodeArena {
+    arena: BlockArena<Node>,
+}
 
 impl NodeArena {
     /// Arena with `block_size` nodes per block, at most `max_blocks` blocks.
     /// Index 0 is pre-allocated as the self-referential sentinel.
     pub fn new(block_size: usize, max_blocks: usize) -> NodeArena {
-        let a = NodeArena {
-            dir: (0..max_blocks).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
-            count: AtomicUsize::new(0),
-            grow: Mutex::new(()),
-            bump: AtomicUsize::new(0),
-            block_size,
-            free: LfQueue::with_config(4096, max_blocks.max(64), true),
-            retired: AtomicU64::new(0),
-            recycled: AtomicU64::new(0),
-        };
+        Self::with_options(block_size, max_blocks, ArenaOptions::default())
+    }
+
+    /// Like [`NodeArena::new`] with explicit placement/magazine options
+    /// (per-shard arenas are homed on their shard's NUMA node).
+    pub fn with_options(block_size: usize, max_blocks: usize, opts: ArenaOptions) -> NodeArena {
+        Self::finish(BlockArena::with_options(block_size, max_blocks, opts))
+    }
+
+    /// Arena sized by the shared §V capacity policy
+    /// ([`BlockArena::for_capacity`]) for up to `capacity` live nodes.
+    pub fn for_capacity(capacity: usize, opts: ArenaOptions) -> NodeArena {
+        Self::finish(BlockArena::for_capacity(capacity, opts))
+    }
+
+    fn finish(arena: BlockArena<Node>) -> NodeArena {
+        let a = NodeArena { arena };
         // slot 0: the sentinel — key MAX, next/bottom self, never retired.
         let s = a.alloc(u64::MAX, SENTINEL, SENTINEL, 0, 0);
         debug_assert_eq!(s, SENTINEL);
         a
     }
 
-    #[inline]
-    fn raw(&self, idx: u32) -> &Node {
-        let b = idx as usize / self.block_size;
-        let s = idx as usize % self.block_size;
-        debug_assert!(b < self.count.load(Ordering::Acquire));
-        unsafe { &*self.dir[b].load(Ordering::Acquire).add(s) }
-    }
-
     /// Resolve a link; `None` if the node has been retired/recycled since
     /// the link was created (generation mismatch).
     #[inline]
     pub fn resolve(&self, r: NodeRef) -> Option<&Node> {
-        let n = self.raw(ref_idx(r));
+        let n = self.arena.raw(ref_idx(r));
         if n.gen.load(Ordering::Acquire) == ref_gen(r) {
             Some(n)
         } else {
@@ -147,7 +159,7 @@ impl NodeArena {
     /// Resolve without the generation check (sentinel / owned refs).
     #[inline]
     pub fn node(&self, r: NodeRef) -> &Node {
-        self.raw(ref_idx(r))
+        self.arena.raw(ref_idx(r))
     }
 
     /// Read a validated `(key, next)` snapshot of `r`: the generation is
@@ -155,7 +167,7 @@ impl NodeArena {
     /// the node was live under this link.
     #[inline]
     pub fn read_key_next(&self, r: NodeRef) -> Option<(u64, NodeRef)> {
-        let n = self.raw(ref_idx(r));
+        let n = self.arena.raw(ref_idx(r));
         if n.gen.load(Ordering::Acquire) != ref_gen(r) {
             return None;
         }
@@ -170,38 +182,8 @@ impl NodeArena {
     /// and generation are deliberately *not* reset (stragglers may still be
     /// spinning on them; they re-validate after acquiring).
     pub fn alloc(&self, key: u64, next: NodeRef, bottom: NodeRef, value: u64, level: u32) -> NodeRef {
-        let idx = if let Some(i) = self.free.pop() {
-            self.recycled.fetch_add(1, Ordering::Relaxed);
-            i as u32
-        } else {
-            let idx = self.bump.fetch_add(1, Ordering::AcqRel);
-            let b = idx / self.block_size;
-            assert!(b < self.dir.len(), "NodeArena exhausted ({} blocks)", self.dir.len());
-            while b >= self.count.load(Ordering::Acquire) {
-                let _g = self.grow.lock().unwrap();
-                let cur = self.count.load(Ordering::Acquire);
-                if cur <= b {
-                    for nb in cur..=b {
-                        let block: Box<[Node]> = (0..self.block_size)
-                            .map(|_| Node {
-                                kn: AtomicU128::new(0),
-                                bottom: AtomicU64::new(SENTINEL),
-                                value: AtomicU64::new(0),
-                                lock: RwSpinLock::new(),
-                                mark: AtomicBool::new(false),
-                                gen: AtomicU32::new(0),
-                                level: AtomicU32::new(0),
-                            })
-                            .collect();
-                        let ptr = Box::into_raw(block) as *mut Node;
-                        self.dir[nb].store(ptr, Ordering::Release);
-                    }
-                    self.count.store(b + 1, Ordering::Release);
-                }
-            }
-            idx as u32
-        };
-        let n = self.raw(idx);
+        let idx = self.arena.alloc_slot();
+        let n = self.arena.raw(idx);
         n.bottom.store(bottom, Ordering::Relaxed);
         n.value.store(value, Ordering::Relaxed);
         n.mark.store(false, Ordering::Relaxed);
@@ -212,40 +194,23 @@ impl NodeArena {
     }
 
     /// Retire a node: bump its generation (invalidating every existing link
-    /// to it) and return it to the free pool.
+    /// to it) and return it to the magazine/free pool.
     pub fn retire(&self, r: NodeRef) {
         debug_assert_ne!(r, SENTINEL, "cannot retire the sentinel");
-        let n = self.raw(ref_idx(r));
-        debug_assert!(n.is_marked(), "retiring an unmarked node");
-        n.gen.fetch_add(1, Ordering::AcqRel);
-        self.retired.fetch_add(1, Ordering::Relaxed);
-        self.free.push(ref_idx(r) as u64);
+        debug_assert!(self.arena.raw(ref_idx(r)).is_marked(), "retiring an unmarked node");
+        self.arena.retire_slot(ref_idx(r));
     }
 
     /// Nodes currently materialized (capacity in nodes).
     pub fn capacity(&self) -> u64 {
-        self.count.load(Ordering::Acquire) as u64 * self.block_size as u64
+        self.arena.capacity()
     }
 
-    pub fn retired_count(&self) -> u64 {
-        self.retired.load(Ordering::Relaxed)
-    }
-
-    pub fn recycled_count(&self) -> u64 {
-        self.recycled.load(Ordering::Relaxed)
-    }
-}
-
-impl Drop for NodeArena {
-    fn drop(&mut self) {
-        let n = self.count.load(Ordering::Acquire);
-        for i in 0..n {
-            let p = self.dir[i].load(Ordering::Acquire);
-            if !p.is_null() {
-                let slice = std::ptr::slice_from_raw_parts_mut(p, self.block_size);
-                drop(unsafe { Box::from_raw(slice) });
-            }
-        }
+    /// §V accounting snapshot (allocs/recycled/capacity/locality). Not a
+    /// cheap counter read: it locks every (thread-private, uncontended)
+    /// magazine once — take one snapshot and read the fields you need.
+    pub fn stats(&self) -> PoolStats {
+        self.arena.stats()
     }
 }
 
@@ -292,6 +257,21 @@ mod tests {
         assert_ne!(ref_gen(r1), ref_gen(r2), "generation bumped");
         assert!(a.resolve(r1).is_none());
         assert_eq!(a.resolve(r2).unwrap().key(), 2);
+    }
+
+    #[test]
+    fn stats_flow_through_the_unified_arena() {
+        let a = NodeArena::new(16, 16);
+        let r = a.alloc(1, SENTINEL, SENTINEL, 0, 0);
+        a.node(r).mark.store(true, Ordering::Release);
+        a.retire(r);
+        let _ = a.alloc(2, SENTINEL, SENTINEL, 0, 0);
+        let st = a.stats();
+        assert_eq!(st.allocs, 3, "sentinel + two allocs");
+        assert_eq!(st.recycled, 1);
+        assert_eq!(st.retired, 1);
+        assert_eq!(st.arenas, 1);
+        assert_eq!(st.capacity, a.capacity());
     }
 
     #[test]

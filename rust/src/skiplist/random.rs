@@ -4,15 +4,17 @@
 //! The classic Harris/Herlihy–Shavit lock-free skiplist: each node carries a
 //! tower of next links; removal marks links top-down (mark bit embedded in
 //! the link word) and traversals help unlink marked nodes with CAS.  Nodes
-//! come from a block arena with generation-tagged links (the §V memory
-//! manager): a link is `(mark:1 | gen:31 | idx:32)`, so CAS on a recycled
-//! node's link fails on the generation — the ABA defense the paper
-//! implements with per-node reference counters.
+//! come from the unified §V block arena ([`crate::mem::BlockArena`]) with
+//! generation-tagged links: a link is `(mark:1 | gen:31 | idx:32)`, so CAS
+//! on a recycled node's link fails on the generation — the ABA defense the
+//! paper implements with per-node reference counters. Alloc/retire churn
+//! runs off the arena's per-thread magazines, and recycle/retire accounting
+//! is uniform with the deterministic skiplist's arena (the old inline copy
+//! never counted recycled slots).
 
-use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
-use crate::queue::{ConcurrentQueue, LfQueue};
+use crate::mem::{ArenaNode, ArenaOptions, BlockArena, PoolStats};
 use crate::sync::Backoff;
 use crate::util::rng::mix64;
 
@@ -71,22 +73,24 @@ impl RNode {
     }
 }
 
+impl ArenaNode for RNode {
+    fn vacant() -> RNode {
+        RNode::empty()
+    }
+
+    fn generation(&self) -> &AtomicU32 {
+        &self.gen
+    }
+}
+
 /// Lock-free randomized skiplist mapping `u64 -> u64`.
 pub struct RandomSkiplist {
-    dir: Box<[AtomicPtr<RNode>]>,
-    count: AtomicUsize,
-    grow: Mutex<()>,
-    bump: AtomicUsize,
-    block_size: usize,
-    free: LfQueue,
+    arena: BlockArena<RNode>,
     head: Box<RNode>, // virtual -inf node; its tower anchors every level
     len: AtomicU64,
     seed: AtomicU64,
     retries: AtomicU64,
 }
-
-unsafe impl Send for RandomSkiplist {}
-unsafe impl Sync for RandomSkiplist {}
 
 struct FindResult {
     preds: [u64; MAX_LEVEL], // link to pred per level; HEAD_LINK for head
@@ -103,15 +107,14 @@ impl RandomSkiplist {
     }
 
     pub fn with_capacity(capacity: usize) -> RandomSkiplist {
-        let block = 8192.min(capacity.max(16));
-        let blocks = capacity.div_ceil(block) + 2;
+        Self::with_capacity_on(capacity, ArenaOptions::default())
+    }
+
+    /// Like [`RandomSkiplist::with_capacity`] with explicit arena placement
+    /// (per-shard skiplists home their arena on the shard's NUMA node).
+    pub fn with_capacity_on(capacity: usize, opts: ArenaOptions) -> RandomSkiplist {
         RandomSkiplist {
-            dir: (0..blocks).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
-            count: AtomicUsize::new(0),
-            grow: Mutex::new(()),
-            bump: AtomicUsize::new(0),
-            block_size: block,
-            free: LfQueue::with_config(4096, blocks.max(64), true),
+            arena: BlockArena::for_capacity(capacity, opts),
             head: Box::new(RNode::empty()),
             len: AtomicU64::new(0),
             seed: AtomicU64::new(0x5EED),
@@ -121,9 +124,7 @@ impl RandomSkiplist {
 
     #[inline]
     fn raw(&self, idx: u32) -> &RNode {
-        let b = idx as usize / self.block_size;
-        let s = idx as usize % self.block_size;
-        unsafe { &*self.dir[b].load(Ordering::Acquire).add(s) }
+        self.arena.raw(idx)
     }
 
     /// Resolve an unmarked link; None on generation mismatch (recycled).
@@ -148,26 +149,7 @@ impl RandomSkiplist {
     }
 
     fn alloc(&self, key: u64, value: u64, top: u32) -> u64 {
-        let idx = if let Some(i) = self.free.pop() {
-            i as u32
-        } else {
-            let idx = self.bump.fetch_add(1, Ordering::AcqRel);
-            let b = idx / self.block_size;
-            assert!(b < self.dir.len(), "RandomSkiplist arena exhausted");
-            while b >= self.count.load(Ordering::Acquire) {
-                let _g = self.grow.lock().unwrap();
-                let cur = self.count.load(Ordering::Acquire);
-                if cur <= b {
-                    for nb in cur..=b {
-                        let block: Box<[RNode]> =
-                            (0..self.block_size).map(|_| RNode::empty()).collect();
-                        self.dir[nb].store(Box::into_raw(block) as *mut RNode, Ordering::Release);
-                    }
-                    self.count.store(b + 1, Ordering::Release);
-                }
-            }
-            idx as u32
-        };
+        let idx = self.arena.alloc_slot();
         let n = self.raw(idx);
         n.key.store(key, Ordering::Relaxed);
         n.value.store(value, Ordering::Relaxed);
@@ -176,9 +158,13 @@ impl RandomSkiplist {
     }
 
     fn retire(&self, l: u64) {
-        let n = self.raw(link_idx(l));
-        n.gen.fetch_add(1, Ordering::AcqRel);
-        self.free.push(link_idx(l) as u64);
+        // generation bump + recycle accounting live in the unified arena
+        self.arena.retire_slot(link_idx(l));
+    }
+
+    /// §V arena accounting (allocs/recycled/capacity/locality).
+    pub fn mem_stats(&self) -> PoolStats {
+        self.arena.stats()
     }
 
     /// Geometric tower height (p = 1/2), capped at MAX_LEVEL.
@@ -513,19 +499,6 @@ impl Default for RandomSkiplist {
     }
 }
 
-impl Drop for RandomSkiplist {
-    fn drop(&mut self) {
-        let n = self.count.load(Ordering::Acquire);
-        for i in 0..n {
-            let p = self.dir[i].load(Ordering::Acquire);
-            if !p.is_null() {
-                let slice = std::ptr::slice_from_raw_parts_mut(p, self.block_size);
-                drop(unsafe { Box::from_raw(slice) });
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -641,6 +614,22 @@ mod tests {
             assert!(k < 128);
             assert_eq!(s.get(k), Some(k * 2));
         }
+    }
+
+    #[test]
+    fn recycled_allocs_are_counted() {
+        // Regression: the old inline arena's recycled path skipped recycle
+        // accounting entirely, so reuse was invisible to stats.
+        let s = RandomSkiplist::with_capacity(1 << 12);
+        for k in 0..500u64 {
+            assert!(s.insert(k, k));
+            assert!(s.erase(k));
+        }
+        let st = s.mem_stats();
+        assert_eq!(st.retired, 500);
+        assert!(st.recycled > 400, "reuse must be visible: recycled={}", st.recycled);
+        assert_eq!(st.retired, st.recycled + st.free_residue + st.overflow, "no lost nodes");
+        assert_eq!(st.blocks, 1, "alternating churn must stay in one block");
     }
 
     #[test]
