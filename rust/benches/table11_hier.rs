@@ -1,0 +1,12 @@
+//! Bench for Table XI (new, beyond the paper): the §VI–VII hierarchical
+//! delegation engine vs direct execution across every store kind, with the
+//! locality assertion (`remote_accesses == 0` when delegated) checked on
+//! every run.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(100);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table11_hier (delegation engine, paper §VI-VII)\n");
+    cdskl::experiments::t11_hier(&cfg, &router).print();
+}

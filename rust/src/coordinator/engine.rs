@@ -1,10 +1,25 @@
 //! The workload engine: leader fills the router queues (using the AOT
 //! routing pipeline when available), workers pinned to (virtual) CPUs drain
-//! their NUMA-local queues and apply operations to the sharded store.
+//! their queues and apply operations to the sharded store.
 //!
 //! Matches the paper's methodology: "we filled the queues first before
 //! performing operations on the data structures"; reported time is the
 //! drain (data-structure) phase.
+//!
+//! Two drain strategies run behind one [`ExecMode`] switch:
+//!
+//! - [`ExecMode::Direct`] — transport words are routed to a random thread
+//!   on each key's home node and workers apply ops straight to the sharded
+//!   store. Point ops stay node-local by routing, but cross-shard range
+//!   scans dereference every shard they intersect — remote accesses the
+//!   locality counters now charge honestly (`account_range`).
+//! - [`ExecMode::Delegated`] — words are spread uniformly; each worker is
+//!   simultaneously a *caller* (wrapping its words in typed
+//!   [`DelegatedOp`] envelopes, batching them per owner, flushing on-N /
+//!   on-drain) and an *owner* (draining its own envelope queue and
+//!   executing against its NUMA-local shards). Callers never dereference
+//!   remote shard memory: `remote_accesses == 0` by construction, the
+//!   paper's §VI–VII hierarchical proposal.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
@@ -13,11 +28,40 @@ use std::time::Instant;
 use crate::mem::PoolStats;
 use crate::numa::pin_to_cpu;
 use crate::runtime::KeyRouter;
+use crate::sync::Backoff;
 use crate::util::rng::Rng;
 use crate::workload::{OpKind, WorkloadSpec};
 
-use super::router::RouterFabric;
+use super::router::{DelegatedOp, FabricStats, OpFabric, PoisonOnUnwind, RouterFabric};
 use super::store::ShardedStore;
+
+/// How drained operations reach shard memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Workers execute popped ops in place, reaching into whichever shard
+    /// owns the key (the pre-delegation path).
+    Direct,
+    /// Workers delegate typed op envelopes to per-shard owner threads over
+    /// the [`OpFabric`]; only owners touch shard memory.
+    Delegated,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        Some(match s {
+            "direct" => ExecMode::Direct,
+            "delegated" | "del" | "hier" => ExecMode::Delegated,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Direct => "direct",
+            ExecMode::Delegated => "delegated",
+        }
+    }
+}
 
 /// Aggregated result of one workload run.
 #[derive(Debug, Clone, Default)]
@@ -38,6 +82,9 @@ pub struct RunMetrics {
     /// §V memory-manager accounting summed over every shard arena
     /// (allocs/recycled/capacity/magazine hits/locality-hit-rate).
     pub mem: PoolStats,
+    /// Delegation-fabric metrics (all-zero in Direct mode): queue depth,
+    /// batch occupancy, completion latency, backpressure.
+    pub fabric: FabricStats,
 }
 
 impl RunMetrics {
@@ -54,8 +101,8 @@ impl RunMetrics {
     }
 }
 
-/// Run `spec` against `store` with `threads` workers through the queue
-/// fabric. `router` generates+routes keys on the leader thread.
+/// Run `spec` against `store` with `threads` workers in [`ExecMode::Direct`]
+/// (the historical entry point; see [`run_with_mode`]).
 pub fn run_workload(
     store: &Arc<ShardedStore>,
     spec: &WorkloadSpec,
@@ -63,13 +110,54 @@ pub fn run_workload(
     key_router: &KeyRouter,
     seed: u64,
 ) -> RunMetrics {
-    let fabric = Arc::new(RouterFabric::new(
+    run_with_mode(store, spec, threads, key_router, seed, ExecMode::Direct)
+}
+
+/// Per-worker op-kind tallies, merged into the shared metrics at exit.
+#[derive(Default)]
+struct OpTally {
+    inserts: u64,
+    finds: u64,
+    erases: u64,
+    found: u64,
+    ranges: u64,
+    range_rows: u64,
+}
+
+/// Run `spec` against `store` with `threads` workers through the queue
+/// fabric in the given [`ExecMode`]. `key_router` generates keys on the
+/// leader thread.
+pub fn run_with_mode(
+    store: &Arc<ShardedStore>,
+    spec: &WorkloadSpec,
+    threads: usize,
+    key_router: &KeyRouter,
+    seed: u64,
+    mode: ExecMode,
+) -> RunMetrics {
+    let words = Arc::new(RouterFabric::new(
         threads,
         store.num_shards(),
-        store.topology().clone(),
+        store.topology(),
         // enough blocks for the whole fill phase
         (spec.total_ops as usize / 8192 + 2).next_power_of_two().max(64),
     ));
+    // Envelope batching: flush-on-64 amortizes the per-op handoff without
+    // letting completion counters lag far behind the op stream.
+    let batch_n = 64usize;
+    let fabric = match mode {
+        ExecMode::Direct => None,
+        ExecMode::Delegated => Some(Arc::new(OpFabric::new(
+            threads,
+            0,
+            store.num_shards(),
+            store.topology().clone(),
+            // worst case every batch lands on one owner: total batches over
+            // 256-slot queue blocks, plus slack
+            ((spec.total_ops as usize / batch_n) / 256 + 4).next_power_of_two().max(16),
+            batch_n,
+        ))),
+    };
 
     // ---- fill phase (leader thread; AOT pipeline) ----
     let t_fill = Instant::now();
@@ -81,7 +169,14 @@ pub fn run_workload(
         let n = remaining.min(chunk);
         let batch = key_router.route(base, 8192, n);
         for &raw in &batch.keys {
-            fabric.route_key(spec.encode(raw), &mut rng);
+            let word = spec.encode(raw);
+            match mode {
+                // Direct: home-node routing (the paper's word fabric).
+                ExecMode::Direct => words.route_key(word, &mut rng),
+                // Delegated: callers receive arbitrary slices; locality is
+                // established at delegation time by the op fabric.
+                ExecMode::Delegated => words.route_uniform(word),
+            }
         }
         base = base.wrapping_add(n as u64);
         remaining -= n;
@@ -90,58 +185,29 @@ pub fn run_workload(
 
     // ---- drain phase (workers) ----
     let barrier = Arc::new(Barrier::new(threads + 1));
-    let inserts = Arc::new(AtomicU64::new(0));
-    let finds = Arc::new(AtomicU64::new(0));
-    let erases = Arc::new(AtomicU64::new(0));
-    let found = Arc::new(AtomicU64::new(0));
-    let ranges = Arc::new(AtomicU64::new(0));
-    let range_rows = Arc::new(AtomicU64::new(0));
+    let tally = Arc::new(TallyAtomics::default());
     let window = spec.range_window;
     let mut handles = Vec::with_capacity(threads);
     for t in 0..threads {
         let store = store.clone();
+        let words = words.clone();
         let fabric = fabric.clone();
         let barrier = barrier.clone();
-        let (inserts, finds, erases, found) =
-            (inserts.clone(), finds.clone(), erases.clone(), found.clone());
-        let (ranges, range_rows) = (ranges.clone(), range_rows.clone());
+        let tally = tally.clone();
         handles.push(std::thread::spawn(move || {
             pin_to_cpu(t);
+            // Delegated: create the caller handle BEFORE the barrier, so
+            // once any worker starts polling all_quiet() the fabric's
+            // started-caller count is already final (no early-quiet race).
+            let caller = fabric.as_ref().map(|f| f.caller(t, Some(t)));
             barrier.wait(); // start together
-            let (mut li, mut lf, mut le, mut lfound) = (0u64, 0u64, 0u64, 0u64);
-            let (mut lr, mut lrows) = (0u64, 0u64);
-            while let Some(word) = fabric.pop_local(t) {
-                let (op, key) = WorkloadSpec::decode(word);
-                store.account(t, key);
-                match op {
-                    OpKind::Insert => {
-                        li += 1;
-                        store.insert(key, key ^ 0xDA7A);
-                    }
-                    OpKind::Find => {
-                        lf += 1;
-                        if store.get(key).is_some() {
-                            lfound += 1;
-                        }
-                    }
-                    OpKind::Erase => {
-                        le += 1;
-                        store.erase(key);
-                    }
-                    OpKind::Range => {
-                        // windows may span shards; the store concatenates
-                        // per-prefix results in key order (see store::range)
-                        lr += 1;
-                        lrows += store.range(key, key.saturating_add(window)).len() as u64;
-                    }
+            let local = match caller {
+                None => drain_direct(t, &store, &words, window),
+                Some(caller) => {
+                    drain_delegated(t, &store, &words, fabric.as_ref().unwrap(), window, caller)
                 }
-            }
-            inserts.fetch_add(li, Ordering::Relaxed);
-            finds.fetch_add(lf, Ordering::Relaxed);
-            erases.fetch_add(le, Ordering::Relaxed);
-            found.fetch_add(lfound, Ordering::Relaxed);
-            ranges.fetch_add(lr, Ordering::Relaxed);
-            range_rows.fetch_add(lrows, Ordering::Relaxed);
+            };
+            tally.merge(&local);
         }));
     }
     // Clock starts BEFORE the barrier release: on an oversubscribed host
@@ -154,21 +220,172 @@ pub fn run_workload(
     }
     let drain_seconds = t_drain.elapsed().as_secs_f64();
 
+    // Delegated completions live in the fabric's per-caller slots.
+    let (mut found, mut range_rows) = (
+        tally.found.load(Ordering::Relaxed),
+        tally.range_rows.load(Ordering::Relaxed),
+    );
+    let fabric_stats = match &fabric {
+        None => FabricStats::default(),
+        Some(f) => {
+            // Release-checked: a non-quiesced fabric would silently
+            // under-report found/range_rows and every Table XI metric.
+            // (A worker panic never reaches here — the joins above
+            // propagate it first.)
+            assert!(f.all_quiet(), "drain must quiesce the fabric");
+            found = (0..f.num_callers()).map(|c| f.slot_totals(c).hits).sum();
+            range_rows = (0..f.num_callers()).map(|c| f.slot_totals(c).rows).sum();
+            f.stats()
+        }
+    };
+
     let (local, remote) = store.locality.snapshot();
     RunMetrics {
         fill_seconds,
         drain_seconds,
-        inserts: inserts.load(Ordering::Relaxed),
-        finds: finds.load(Ordering::Relaxed),
-        erases: erases.load(Ordering::Relaxed),
-        found: found.load(Ordering::Relaxed),
-        ranges: ranges.load(Ordering::Relaxed),
-        range_rows: range_rows.load(Ordering::Relaxed),
+        inserts: tally.inserts.load(Ordering::Relaxed),
+        finds: tally.finds.load(Ordering::Relaxed),
+        erases: tally.erases.load(Ordering::Relaxed),
+        found,
+        ranges: tally.ranges.load(Ordering::Relaxed),
+        range_rows,
         local_accesses: local,
         remote_accesses: remote,
         final_len: store.len(),
         mem: store.mem_stats(),
+        fabric: fabric_stats,
     }
+}
+
+#[derive(Default)]
+struct TallyAtomics {
+    inserts: AtomicU64,
+    finds: AtomicU64,
+    erases: AtomicU64,
+    found: AtomicU64,
+    ranges: AtomicU64,
+    range_rows: AtomicU64,
+}
+
+impl TallyAtomics {
+    fn merge(&self, t: &OpTally) {
+        self.inserts.fetch_add(t.inserts, Ordering::Relaxed);
+        self.finds.fetch_add(t.finds, Ordering::Relaxed);
+        self.erases.fetch_add(t.erases, Ordering::Relaxed);
+        self.found.fetch_add(t.found, Ordering::Relaxed);
+        self.ranges.fetch_add(t.ranges, Ordering::Relaxed);
+        self.range_rows.fetch_add(t.range_rows, Ordering::Relaxed);
+    }
+}
+
+/// Direct drain: pop words from the thread's home-node queue and execute in
+/// place — reaching into remote shards for cross-prefix range windows.
+fn drain_direct(
+    t: usize,
+    store: &ShardedStore,
+    words: &RouterFabric,
+    window: u64,
+) -> OpTally {
+    let mut tally = OpTally::default();
+    while let Some(word) = words.pop_local(t) {
+        let (op, key) = WorkloadSpec::decode(word);
+        match op {
+            OpKind::Insert => {
+                tally.inserts += 1;
+                store.account(t, key);
+                store.insert(key, key ^ 0xDA7A);
+            }
+            OpKind::Find => {
+                tally.finds += 1;
+                store.account(t, key);
+                if store.get(key).is_some() {
+                    tally.found += 1;
+                }
+            }
+            OpKind::Erase => {
+                tally.erases += 1;
+                store.account(t, key);
+                store.erase(key);
+            }
+            OpKind::Range => {
+                // windows may span shards; the store concatenates
+                // per-prefix results in key order (see store::range), and
+                // every dereferenced shard is charged (account_range)
+                tally.ranges += 1;
+                let hi = key.saturating_add(window);
+                store.account_range(t, key, hi);
+                tally.range_rows += store.range(key, hi).len() as u64;
+            }
+        }
+    }
+    tally
+}
+
+/// Delegated drain: the worker is caller and owner at once. As caller it
+/// wraps its word slice into typed envelopes, staged per owner with
+/// flush-on-N; as owner it drains its envelope queue and executes against
+/// its NUMA-local shards. After its words run out it flushes (on-drain),
+/// then keeps serving its queue until the whole fabric is quiet. `found`
+/// and `range_rows` aggregate through the fabric's completion slots.
+fn drain_delegated(
+    t: usize,
+    store: &ShardedStore,
+    words: &RouterFabric,
+    fabric: &OpFabric,
+    window: u64,
+    mut caller: super::router::Caller<'_>,
+) -> OpTally {
+    // A worker that unwinds anywhere (caller or owner role) can never
+    // finish() or drain its queue again — poison the fabric so the
+    // surviving workers bail out and the join propagates the panic
+    // instead of the run hanging on all_quiet().
+    let _guard = PoisonOnUnwind(fabric);
+    let mut tally = OpTally::default();
+    let mut since_drain = 0usize;
+    while let Some(word) = words.pop_local(t) {
+        let (op, key) = WorkloadSpec::decode(word);
+        match op {
+            OpKind::Insert => {
+                tally.inserts += 1;
+                caller.delegate(DelegatedOp::Insert { key, value: key ^ 0xDA7A }, store);
+            }
+            OpKind::Find => {
+                tally.finds += 1;
+                caller.delegate(DelegatedOp::Find { key }, store);
+            }
+            OpKind::Erase => {
+                tally.erases += 1;
+                caller.delegate(DelegatedOp::Erase { key }, store);
+            }
+            OpKind::Range => {
+                tally.ranges += 1;
+                caller.delegate_range(key, key.saturating_add(window), store);
+            }
+        }
+        since_drain += 1;
+        if since_drain >= 128 {
+            // owner role: keep our queue moving while we still have input
+            since_drain = 0;
+            fabric.drain(t, store, 8);
+        }
+    }
+    caller.finish(store); // on-drain flush + termination bookkeeping
+    let mut b = Backoff::new();
+    loop {
+        if fabric.drain(t, store, 64) > 0 {
+            b.reset();
+        } else if fabric.all_quiet() {
+            break;
+        } else if fabric.is_poisoned() {
+            // A sibling worker died mid-execution: its queue will never
+            // drain and all_quiet can never hold. Bail out so the join
+            // surfaces the original panic instead of hanging the run.
+            break;
+        } else {
+            b.wait();
+        }
+    }
+    tally
 }
 
 /// Bulk-load `items` through per-shard staging queues: the leader fills one
@@ -216,7 +433,13 @@ mod tests {
     use crate::numa::Topology;
     use crate::workload::OpMix;
 
-    fn run(kind: StoreKind, threads: usize, ops: u64, mix: OpMix) -> RunMetrics {
+    fn run_mode(
+        kind: StoreKind,
+        threads: usize,
+        ops: u64,
+        mix: OpMix,
+        mode: ExecMode,
+    ) -> RunMetrics {
         let store = Arc::new(ShardedStore::new(
             kind,
             4,
@@ -225,7 +448,11 @@ mod tests {
             threads,
         ));
         let spec = WorkloadSpec::new("test", ops, mix, 1 << 16);
-        run_workload(&store, &spec, threads, &KeyRouter::Native, 42)
+        run_with_mode(&store, &spec, threads, &KeyRouter::Native, 42, mode)
+    }
+
+    fn run(kind: StoreKind, threads: usize, ops: u64, mix: OpMix) -> RunMetrics {
+        run_mode(kind, threads, ops, mix, ExecMode::Direct)
     }
 
     #[test]
@@ -240,6 +467,8 @@ mod tests {
         assert!(m.mem.allocs >= m.final_len, "every resident key has a node");
         assert!(m.mem.capacity > 0);
         assert_eq!(m.mem.retired, m.mem.recycled + m.mem.free_residue + m.mem.overflow);
+        // Direct mode never touches the delegation fabric
+        assert_eq!(m.fabric.submitted, 0);
     }
 
     #[test]
@@ -286,6 +515,90 @@ mod tests {
         assert!(m.ranges > 3_000 && m.ranges < 5_000, "~20% ranges, got {}", m.ranges);
         assert!(m.range_rows > 0, "scans over a bounded key space must hit rows");
         assert!(m.inserts > 1_000, "inserts {}", m.inserts);
+    }
+
+    #[test]
+    fn delegated_all_ops_execute_exactly_once() {
+        let m = run_mode(StoreKind::DetSkiplistLf, 4, 20_000, OpMix::W1, ExecMode::Delegated);
+        assert_eq!(m.ops(), 20_000);
+        assert!(m.inserts > 1_000 && m.inserts < 3_000, "inserts {}", m.inserts);
+        assert!(m.found > 0 && m.found <= m.finds, "slot hits aggregate: {}", m.found);
+        assert!(m.final_len <= m.inserts);
+        let f = &m.fabric;
+        assert_eq!(f.submitted, 20_000, "point ops map 1:1 to envelopes");
+        assert_eq!(f.executed, f.submitted, "drain quiesces the fabric");
+        assert_eq!(f.remote_exec, 0, "owners never execute off their node");
+        assert!(f.batches > 0 && f.batch_occupancy() > 1.0, "caller-side batching");
+    }
+
+    #[test]
+    fn delegated_is_numa_local_even_with_ranges() {
+        // The paper's locality assertion, now including cross-shard range
+        // windows: every sub-scan executes on its owning shard's node.
+        let m = run_mode(StoreKind::DetSkiplistLf, 4, 20_000, OpMix::RANGE, ExecMode::Delegated);
+        assert_eq!(m.ops(), 20_000);
+        assert!(m.ranges > 3_000, "ranges {}", m.ranges);
+        assert!(m.range_rows > 0, "rows aggregate through completion slots");
+        assert_eq!(m.remote_accesses, 0, "delegated mode must be fully NUMA-local");
+        assert!(m.local_accesses >= 20_000);
+    }
+
+    #[test]
+    fn direct_ranges_reach_remote_shards_delegated_ones_do_not() {
+        // The Table XI contrast in miniature: scans whose window spans a
+        // 3-MSB prefix boundary touch two shards. The Direct worker
+        // dereferences both itself (one is remote whenever adjacent shards
+        // home on different nodes); the delegated caller splits the window
+        // and ships each half to its owner, staying at zero remote.
+        let run = |mode| {
+            let store = Arc::new(ShardedStore::new(
+                StoreKind::DetSkiplistLf,
+                4,
+                1 << 16,
+                Topology::virtual_grid(2, 2),
+                4,
+            ));
+            let spec = WorkloadSpec::new("xshard", 10_000, OpMix::RANGE, 1 << 16)
+                .with_range_window(1 << 61); // window spans into the next prefix
+            run_with_mode(&store, &spec, 4, &KeyRouter::Native, 42, mode)
+        };
+        let d = run(ExecMode::Direct);
+        let g = run(ExecMode::Delegated);
+        assert!(
+            d.remote_accesses > 0,
+            "direct cross-shard scans must be charged as remote (got {})",
+            d.remote_accesses
+        );
+        assert_eq!(g.remote_accesses, 0);
+        assert_eq!(d.ops(), g.ops(), "both modes drain the same op stream");
+    }
+
+    #[test]
+    fn delegated_single_thread_runs_inline() {
+        let m = run_mode(StoreKind::DetSkiplistLf, 1, 5_000, OpMix::W1, ExecMode::Delegated);
+        assert_eq!(m.ops(), 5_000);
+        assert_eq!(m.fabric.executed, 5_000);
+        assert_eq!(m.fabric.inline_ops, 5_000, "one thread owns every shard");
+        assert_eq!(m.remote_accesses, 0);
+    }
+
+    #[test]
+    fn delegated_matches_direct_results_on_hash_mix() {
+        // Same seed + spec => same op stream => identical end state.
+        let d = run_mode(StoreKind::HashFixed, 4, 10_000, OpMix::HASH, ExecMode::Direct);
+        let g = run_mode(StoreKind::HashFixed, 4, 10_000, OpMix::HASH, ExecMode::Delegated);
+        assert_eq!(d.inserts, g.inserts);
+        assert_eq!(d.finds, g.finds);
+        assert_eq!(d.final_len, g.final_len, "resident sets agree");
+    }
+
+    #[test]
+    fn exec_mode_parses() {
+        assert_eq!(ExecMode::parse("direct"), Some(ExecMode::Direct));
+        assert_eq!(ExecMode::parse("delegated"), Some(ExecMode::Delegated));
+        assert_eq!(ExecMode::parse("hier"), Some(ExecMode::Delegated));
+        assert_eq!(ExecMode::parse("nope"), None);
+        assert_eq!(ExecMode::Delegated.name(), "delegated");
     }
 
     #[test]

@@ -1,6 +1,19 @@
 //! The hierarchical coordinator (the paper's system design): sharded
 //! stores homed on NUMA nodes, a per-thread lock-free queue fabric routing
-//! keys to NUMA-local workers, and the leader-driven workload engine.
+//! work to NUMA-local workers, and the leader-driven workload engine.
+//!
+//! Two execution modes share the machinery ([`ExecMode`]):
+//!
+//! - **Direct** — the classic fill-then-drain path: transport words are
+//!   routed to threads on each key's home node, and workers apply ops
+//!   straight to the sharded store (cross-shard range scans still
+//!   dereference remote shards).
+//! - **Delegated** — the paper's §VI–VII hierarchical proposal completed:
+//!   callers wrap ops in typed [`DelegatedOp`] envelopes, batch them
+//!   caller-side, and ship them over the [`OpFabric`] to the owner thread
+//!   of each shard; owners execute against their NUMA-local shard only, so
+//!   callers never dereference remote shard memory
+//!   (`remote_accesses == 0` by construction).
 //!
 //! The sharded store exposes the full ordered-map API ([`OrderedKv`]):
 //! cross-shard `range` (per-prefix fan-out, concatenated in key order) and
@@ -11,6 +24,35 @@ pub mod engine;
 pub mod router;
 pub mod store;
 
-pub use engine::{bulk_load, run_workload, RunMetrics};
-pub use router::RouterFabric;
+pub use engine::{bulk_load, run_with_mode, run_workload, ExecMode, RunMetrics};
+pub use router::{
+    Caller, DelegatedOp, FabricStats, OpFabric, OpResult, RouterFabric, SlotTotals,
+};
 pub use store::{KvStore, OrderedKv, ShardedStore, StoreKind};
+
+/// Shard of a key: the top 3 MSBs (the paper's 8 key-space segments) folded
+/// onto the shard count. The single source of truth for key→shard routing —
+/// the sharded store, the word router and the delegation fabric all call
+/// this, so their folded-prefix behaviour can never drift apart (see the
+/// cross-check test in `store.rs`).
+#[inline]
+pub fn shard_of_key(key: u64, nshards: usize) -> usize {
+    debug_assert!(nshards > 0);
+    ((key >> 61) as usize) % nshards
+}
+
+/// Visit every 3-MSB prefix segment intersecting `[lo, hi]` in ascending
+/// key order, passing the segment-clamped sub-bounds. The single splitter
+/// behind every cross-shard range path — the store's scan, Direct-mode
+/// accounting, and the fabric's per-owner sub-ops — so their segment
+/// arithmetic can never drift apart. No-op when `lo > hi`.
+#[inline]
+pub fn for_each_prefix_segment(lo: u64, hi: u64, mut f: impl FnMut(u64, u64)) {
+    if lo > hi {
+        return;
+    }
+    for p in (lo >> 61)..=(hi >> 61) {
+        let base = p << 61;
+        f(lo.max(base), hi.min(base | ((1u64 << 61) - 1)));
+    }
+}

@@ -1,25 +1,70 @@
-//! The per-thread queue fabric (paper §VI-VII): "We used lock-free queues,
-//! one per thread, for distributing keys. The queues distributed keys with
-//! upper 3-bits equal to S_i to a random thread in n_{s_i}."
+//! The queue fabrics of the hierarchical coordinator (paper §VI–VII).
+//!
+//! Two lanes share the generic lock-free queue:
+//!
+//! - [`RouterFabric`] — the paper's original *word lane*: "We used
+//!   lock-free queues, one per thread, for distributing keys. The queues
+//!   distributed keys with upper 3-bits equal to S_i to a random thread in
+//!   n_{s_i}." Bare `u64` transport words, used by the Direct engine mode.
+//! - [`OpFabric`] — the *delegation lane* that completes the paper's
+//!   closing proposal ("hierarchical usage of concurrent data structures …
+//!   to improve memory latencies by reducing memory accesses from remote
+//!   NUMA nodes", §VI–VII): typed [`DelegatedOp`] envelopes batched
+//!   caller-side and executed by the owner thread of each shard, so every
+//!   shard dereference happens on the shard's home NUMA node.
+//!
+//! ## Delegation protocol
+//!
+//! Each shard has exactly one *owner thread*, picked on the shard's eq.-7
+//! home node (round-robin across that node's threads when it hosts several
+//! shards). Callers stage ops in per-owner buffers and flush a buffer as
+//! one [`OpBatch`] when it reaches `batch_n` ops (flush-on-N) or when the
+//! caller runs out of input (flush-on-drain) — the batching amortizes the
+//! per-op handoff cache misses ("Skiplists with Foresight"). Batches for a
+//! caller's *own* shards execute inline (self-delegation needs no queue
+//! round-trip and can never self-deadlock on a full queue).
+//!
+//! Completions come back through padded per-caller [`CompletionSlot`]s:
+//! asynchronous ops aggregate counters (acks, find hits, range rows,
+//! applied mutations) with relaxed atomics; a synchronous [`Caller::call`]
+//! parks on its slot's state word until the owner publishes the full
+//! [`OpResult`] (WAITING → DONE, release/acquire paired).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
 
 use crate::numa::Topology;
-use crate::queue::{ConcurrentQueue, LfQueue};
+use crate::queue::{ConcurrentQueue, LfQueue, WordQueue};
+use crate::sync::Backoff;
 use crate::util::rng::Rng;
+
+use super::store::ShardedStore;
+use super::{for_each_prefix_segment, shard_of_key};
+
+// ---------------------------------------------------------------------------
+// Word lane (Direct mode)
+// ---------------------------------------------------------------------------
 
 /// One lock-free queue per worker thread; keys are routed to a random
 /// thread pinned to the home NUMA node of their shard.
 pub struct RouterFabric {
-    queues: Vec<LfQueue>,
-    #[allow(dead_code)]
-    topology: Topology,
+    queues: Vec<WordQueue>,
     nshards: usize,
     /// Precomputed thread ids per shard's home node (perf: `route_key` was
     /// O(threads) per key with iterator scans — see EXPERIMENTS.md §Perf).
     shard_threads: Vec<Vec<usize>>,
+    /// Round-robin cursor for [`RouterFabric::route_uniform`].
+    rr: AtomicUsize,
 }
 
 impl RouterFabric {
-    pub fn new(threads: usize, nshards: usize, topology: Topology, queue_blocks: usize) -> RouterFabric {
+    pub fn new(
+        threads: usize,
+        nshards: usize,
+        topology: &Topology,
+        queue_blocks: usize,
+    ) -> RouterFabric {
         assert!(threads >= 1 && nshards.is_power_of_two());
         let shard_threads = (0..nshards)
             .map(|shard| {
@@ -35,9 +80,9 @@ impl RouterFabric {
             .collect();
         RouterFabric {
             queues: (0..threads).map(|_| LfQueue::with_config(8192, queue_blocks, true)).collect(),
-            topology,
             nshards,
             shard_threads,
+            rr: AtomicUsize::new(0),
         }
     }
 
@@ -48,7 +93,7 @@ impl RouterFabric {
     /// Route one key to a random thread on its shard's home node.
     #[inline]
     pub fn route_key(&self, key: u64, rng: &mut Rng) {
-        let shard = ((key >> 61) as usize) % self.nshards;
+        let shard = shard_of_key(key, self.nshards);
         let region = &self.shard_threads[shard];
         let t = region[rng.below(region.len() as u64) as usize];
         self.queues[t].push(key);
@@ -61,32 +106,692 @@ impl RouterFabric {
         }
     }
 
+    /// Uniform round-robin distribution, ignoring home nodes: the Delegated
+    /// fill phase hands every caller an arbitrary slice of the op stream —
+    /// locality is established at delegation time, not at routing time.
+    #[inline]
+    pub fn route_uniform(&self, key: u64) {
+        let t = self.rr.fetch_add(1, Ordering::Relaxed) % self.queues.len();
+        self.queues[t].push(key);
+    }
+
     /// Worker-side pop from the thread's own (NUMA-local) queue.
     #[inline]
     pub fn pop_local(&self, thread_id: usize) -> Option<u64> {
         self.queues[thread_id].pop()
     }
 
-    /// Total keys still enqueued (diagnostics; approximate under churn).
+    /// Total keys still enqueued (diagnostics). Each queue is snapshotted
+    /// with a single `stats()` call that samples `pops` before `pushes`, so
+    /// a per-queue term can never underflow. Remaining approximation: the
+    /// per-queue snapshots are not taken at one instant, so under churn the
+    /// sum can over-count by the pushes that land while later queues are
+    /// being sampled — an upper bound within the sampling window, never a
+    /// phantom negative.
     pub fn pending(&self) -> u64 {
-        self.queues
-            .iter()
-            .map(|q| {
-                let s = q.stats();
-                s.pushes.saturating_sub(s.pops)
+        self.queues.iter().map(|q| q.stats().depth()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Delegation lane (Delegated mode)
+// ---------------------------------------------------------------------------
+
+/// A typed operation envelope. `Batch` and `Range` are pre-split by the
+/// caller so every envelope targets exactly one shard (and therefore one
+/// owner): `Range` bounds are clamped to a single 3-MSB prefix segment,
+/// `Batch` items all fold to the same shard.
+#[derive(Debug, Clone)]
+pub enum DelegatedOp {
+    Insert { key: u64, value: u64 },
+    Find { key: u64 },
+    Erase { key: u64 },
+    /// Bulk insert of a single-shard slice (see
+    /// [`Caller::delegate_insert_batch`]).
+    Batch { items: Vec<(u64, u64)> },
+    /// Range scan clamped to one prefix segment (see
+    /// [`Caller::delegate_range`]).
+    Range { lo: u64, hi: u64 },
+}
+
+impl DelegatedOp {
+    /// The single shard this envelope touches.
+    #[inline]
+    pub fn shard(&self, nshards: usize) -> usize {
+        let key = match self {
+            DelegatedOp::Insert { key, .. }
+            | DelegatedOp::Find { key }
+            | DelegatedOp::Erase { key } => *key,
+            DelegatedOp::Batch { items } => items.first().map(|e| e.0).unwrap_or(0),
+            DelegatedOp::Range { lo, .. } => *lo,
+        };
+        shard_of_key(key, nshards)
+    }
+}
+
+/// Result of one synchronous delegated op.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OpResult {
+    /// Placeholder while the owner has not published yet.
+    Pending,
+    /// `Find`: the value, if present.
+    Value(Option<u64>),
+    /// `Insert` / `Erase`: whether the mutation applied.
+    Applied(bool),
+    /// `Batch`: how many pairs were newly inserted.
+    Count(u64),
+    /// `Range`: the rows, sorted by key.
+    Rows(Vec<(u64, u64)>),
+}
+
+/// One flushed batch of envelopes from one caller to one owner.
+pub struct OpBatch {
+    caller: u32,
+    /// Sync batches carry exactly one op and publish a full [`OpResult`].
+    sync: bool,
+    /// Flush timestamp — the owner measures handoff (completion) latency
+    /// against it.
+    staged_at: Instant,
+    ops: Vec<DelegatedOp>,
+}
+
+const SLOT_IDLE: u32 = 0;
+const SLOT_WAITING: u32 = 1;
+const SLOT_DONE: u32 = 2;
+
+/// Per-caller completion slot, padded to its own cache line pair so two
+/// callers' completions never false-share.
+#[repr(align(128))]
+pub struct CompletionSlot {
+    /// Sync rendezvous word: IDLE → WAITING (caller) → DONE (owner).
+    state: AtomicU32,
+    /// Sync result cell; written by the owner while `state == WAITING`
+    /// (single writer), read by the caller after observing DONE (acquire).
+    result: UnsafeCell<OpResult>,
+    /// Async aggregation: ops completed for this caller.
+    acked: AtomicU64,
+    /// Async aggregation: finds that hit.
+    hits: AtomicU64,
+    /// Async aggregation: total rows returned by range scans.
+    rows: AtomicU64,
+    /// Async aggregation: mutations applied (inserts + erases + batch rows).
+    applied: AtomicU64,
+}
+
+// The UnsafeCell is guarded by the state-word protocol above.
+unsafe impl Sync for CompletionSlot {}
+
+impl CompletionSlot {
+    fn new() -> CompletionSlot {
+        CompletionSlot {
+            state: AtomicU32::new(SLOT_IDLE),
+            result: UnsafeCell::new(OpResult::Pending),
+            acked: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            applied: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Snapshot of one caller's async completion counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlotTotals {
+    pub acked: u64,
+    pub hits: u64,
+    pub rows: u64,
+    pub applied: u64,
+}
+
+#[derive(Default)]
+struct FabricAtomics {
+    submitted: AtomicU64,
+    executed: AtomicU64,
+    batches: AtomicU64,
+    queued_batches: AtomicU64,
+    inline_ops: AtomicU64,
+    sync_calls: AtomicU64,
+    backpressure: AtomicU64,
+    handoff_ns: AtomicU64,
+    peak_depth: AtomicU64,
+    remote_exec: AtomicU64,
+    callers_started: AtomicUsize,
+    callers_done: AtomicUsize,
+}
+
+/// Fabric health metrics (threaded into `RunMetrics` and the CLI).
+#[derive(Debug, Clone, Default)]
+pub struct FabricStats {
+    /// Ops handed to the fabric (queued or executed inline).
+    pub submitted: u64,
+    /// Ops executed by owners.
+    pub executed: u64,
+    /// Batches executed (queued + inline).
+    pub batches: u64,
+    /// Batches that travelled through an owner queue.
+    pub queued_batches: u64,
+    /// Ops executed via the inline self-delegation shortcut.
+    pub inline_ops: u64,
+    /// Synchronous calls (completion-slot rendezvous).
+    pub sync_calls: u64,
+    /// try_push rejections ridden out by the backpressure loop.
+    pub backpressure: u64,
+    /// Total flush→execute latency over all queued batches.
+    pub handoff_ns: u64,
+    /// Deepest owner-queue depth observed (in batches).
+    pub peak_depth: u64,
+    /// Ops an owner executed against a shard homed on a *different* node —
+    /// zero by construction; any other value is a routing bug.
+    pub remote_exec: u64,
+}
+
+impl FabricStats {
+    /// Average ops per executed batch (the §VII amortization knob).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.executed as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean flush→execute handoff latency per queued batch, microseconds.
+    pub fn avg_handoff_us(&self) -> f64 {
+        if self.queued_batches == 0 {
+            0.0
+        } else {
+            self.handoff_ns as f64 / self.queued_batches as f64 / 1000.0
+        }
+    }
+}
+
+/// The typed-op delegation fabric: one envelope queue per owner thread,
+/// one padded completion slot per caller.
+pub struct OpFabric {
+    queues: Vec<LfQueue<OpBatch>>,
+    slots: Box<[CompletionSlot]>,
+    topology: Topology,
+    threads: usize,
+    nshards: usize,
+    /// shard → owner thread (on the shard's eq.-7 home node).
+    owner_of: Vec<usize>,
+    batch_n: usize,
+    at: FabricAtomics,
+    /// Set when an owner dies mid-drain (panic unwound through
+    /// [`OpFabric::drain`]): parked callers and termination loops bail out
+    /// with a panic instead of waiting forever on completions that will
+    /// never come.
+    poisoned: AtomicBool,
+}
+
+impl OpFabric {
+    /// `threads` owner/worker threads (each gets an envelope queue and a
+    /// completion slot), plus `extra_callers` slot-only callers that never
+    /// own shards (tests and external clients). `queue_blocks` sizes each
+    /// owner queue's block directory; `batch_n` is the flush-on-N
+    /// threshold handed to [`OpFabric::caller`].
+    pub fn new(
+        threads: usize,
+        extra_callers: usize,
+        nshards: usize,
+        topology: Topology,
+        queue_blocks: usize,
+        batch_n: usize,
+    ) -> OpFabric {
+        assert!(threads >= 1 && nshards.is_power_of_two() && batch_n >= 1);
+        let owner_of = (0..nshards)
+            .map(|s| {
+                let home = topology.shard_home(s, threads);
+                let local: Vec<usize> =
+                    (0..threads).filter(|&t| topology.node_of_cpu(t) == home).collect();
+                if local.is_empty() {
+                    // Unreachable for id-ordered pinning (every engaged node
+                    // hosts a thread); kept as a safe fallback.
+                    s % threads
+                } else {
+                    // Shards homed on the same node are s, s + n_u, s + 2·n_u,
+                    // …; dividing by n_u round-robins them across the node's
+                    // threads so one thread doesn't own every local shard.
+                    local[(s / topology.nodes_in_use(threads)) % local.len()]
+                }
             })
-            .sum()
+            .collect();
+        OpFabric {
+            queues: (0..threads)
+                .map(|_| LfQueue::with_config(256, queue_blocks.max(2), true))
+                .collect(),
+            slots: (0..threads + extra_callers).map(|_| CompletionSlot::new()).collect(),
+            topology,
+            threads,
+            nshards,
+            owner_of,
+            batch_n,
+            at: FabricAtomics::default(),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Mark the fabric dead (an owner unwound mid-execution); see the
+    /// `poisoned` field.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn num_callers(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.nshards
+    }
+
+    /// Owner thread of a shard.
+    #[inline]
+    pub fn owner_of_shard(&self, shard: usize) -> usize {
+        self.owner_of[shard]
+    }
+
+    /// Owner thread of a key.
+    #[inline]
+    pub fn owner_of_key(&self, key: u64) -> usize {
+        self.owner_of[shard_of_key(key, self.nshards)]
+    }
+
+    /// Home NUMA node of a shard under this fabric's thread count (eq. 7).
+    #[inline]
+    pub fn home_node(&self, shard: usize) -> usize {
+        self.topology.shard_home(shard, self.threads)
+    }
+
+    /// Whether `thread` sits on `shard`'s home node.
+    #[inline]
+    pub fn local_to(&self, thread: usize, shard: usize) -> bool {
+        self.topology.node_of_cpu(thread) == self.home_node(shard)
+    }
+
+    /// Create the caller handle for completion slot `id`. Worker threads
+    /// that also own shards pass their own thread id as `as_owner` so
+    /// self-delegated batches execute inline (and so the backpressure loop
+    /// can drain their own queue while waiting); slot-only callers pass
+    /// `None`. One handle per slot at a time — the sync rendezvous assumes
+    /// a single outstanding call per slot. Every handle created MUST
+    /// eventually [`Caller::finish`]: [`OpFabric::all_quiet`] waits for all
+    /// started handles, so create them *before* any thread can start
+    /// polling quiescence (the engine creates one per worker ahead of the
+    /// drain barrier).
+    pub fn caller(&self, id: usize, as_owner: Option<usize>) -> Caller<'_> {
+        assert!(id < self.slots.len());
+        if let Some(t) = as_owner {
+            assert!(t < self.threads);
+        }
+        self.at.callers_started.fetch_add(1, Ordering::SeqCst);
+        Caller {
+            fabric: self,
+            id,
+            as_owner,
+            staged: (0..self.threads).map(|_| Vec::new()).collect(),
+            delegated: 0,
+            finished: false,
+        }
+    }
+
+    /// Owner-side drain: pop and execute up to `max_batches` batches from
+    /// `who`'s queue against the local shard(s). Returns ops executed.
+    /// Poisons the fabric if execution unwinds, so parked callers fail
+    /// fast instead of hanging on a completion that will never come.
+    pub fn drain(&self, who: usize, store: &ShardedStore, max_batches: usize) -> u64 {
+        let guard = PoisonOnUnwind(self);
+        let q = &self.queues[who];
+        // Depth sample: drain is also called from idle spin loops, so only
+        // pay the shared-line RMW when this could actually raise the peak.
+        let depth = q.stats().depth();
+        if depth > 0 && depth > self.at.peak_depth.load(Ordering::Relaxed) {
+            self.at.peak_depth.fetch_max(depth, Ordering::Relaxed);
+        }
+        let mut ops = 0;
+        for _ in 0..max_batches {
+            let Some(batch) = q.pop() else { break };
+            ops += batch.ops.len() as u64;
+            self.execute_batch(who, batch, store, true);
+        }
+        std::mem::forget(guard);
+        ops
+    }
+
+    /// Batches currently enqueued across all owner queues (single-snapshot
+    /// per queue; see [`RouterFabric::pending`] for the approximation).
+    pub fn pending_batches(&self) -> u64 {
+        self.queues.iter().map(|q| q.stats().depth()).sum()
+    }
+
+    /// True once every *started* caller handle has [`Caller::finish`]ed and
+    /// every submitted op has executed: no work is queued or in flight
+    /// anywhere, so owner loops can exit. Callers that will participate
+    /// must be created before quiescence polling starts (see
+    /// [`OpFabric::caller`]); unused completion slots don't count.
+    pub fn all_quiet(&self) -> bool {
+        // `started` is loaded first: a handle created after this load can
+        // only push `done` past the snapshot, which fails the equality —
+        // conservative, never a false "quiet".
+        let started = self.at.callers_started.load(Ordering::SeqCst);
+        started > 0
+            && self.at.callers_done.load(Ordering::SeqCst) == started
+            && self.at.executed.load(Ordering::SeqCst) == self.at.submitted.load(Ordering::SeqCst)
+    }
+
+    /// Async completion counters for caller `id`.
+    pub fn slot_totals(&self, id: usize) -> SlotTotals {
+        let s = &self.slots[id];
+        SlotTotals {
+            acked: s.acked.load(Ordering::Relaxed),
+            hits: s.hits.load(Ordering::Relaxed),
+            rows: s.rows.load(Ordering::Relaxed),
+            applied: s.applied.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn stats(&self) -> FabricStats {
+        FabricStats {
+            submitted: self.at.submitted.load(Ordering::SeqCst),
+            executed: self.at.executed.load(Ordering::SeqCst),
+            batches: self.at.batches.load(Ordering::Relaxed),
+            queued_batches: self.at.queued_batches.load(Ordering::Relaxed),
+            inline_ops: self.at.inline_ops.load(Ordering::Relaxed),
+            sync_calls: self.at.sync_calls.load(Ordering::Relaxed),
+            backpressure: self.at.backpressure.load(Ordering::Relaxed),
+            handoff_ns: self.at.handoff_ns.load(Ordering::Relaxed),
+            peak_depth: self.at.peak_depth.load(Ordering::Relaxed),
+            remote_exec: self.at.remote_exec.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Hand one sealed batch to `owner`: inline if the dispatching thread
+    /// *is* the owner (no queue round-trip, no self-deadlock on a full
+    /// queue), otherwise queued with a backpressure loop that keeps the
+    /// helper's own queue draining while it waits.
+    fn dispatch(&self, owner: usize, batch: OpBatch, helper: Option<usize>, store: &ShardedStore) {
+        self.at.submitted.fetch_add(batch.ops.len() as u64, Ordering::SeqCst);
+        if helper == Some(owner) {
+            self.at.inline_ops.fetch_add(batch.ops.len() as u64, Ordering::Relaxed);
+            self.execute_batch(owner, batch, store, false);
+            return;
+        }
+        let mut b = Backoff::new();
+        let mut batch = batch;
+        loop {
+            match self.queues[owner].try_push(batch) {
+                Ok(()) => return,
+                Err(back) => {
+                    assert!(!self.is_poisoned(), "delegation fabric poisoned: an owner died");
+                    batch = back;
+                    self.at.backpressure.fetch_add(1, Ordering::Relaxed);
+                    if let Some(h) = helper {
+                        // Make progress on our own queue instead of spinning:
+                        // breaks caller↔owner full-queue cycles.
+                        self.drain(h, store, 4);
+                    }
+                    b.wait();
+                }
+            }
+        }
+    }
+
+    /// Execute one batch on thread `who` (the owner, or a caller running
+    /// the inline shortcut — in which case `who == owner` by construction).
+    fn execute_batch(&self, who: usize, batch: OpBatch, store: &ShardedStore, queued: bool) {
+        let OpBatch { caller, sync, staged_at, ops } = batch;
+        if queued {
+            self.at
+                .handoff_ns
+                .fetch_add(staged_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.at.queued_batches.fetch_add(1, Ordering::Relaxed);
+        }
+        self.at.batches.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[caller as usize];
+        let n = ops.len() as u64;
+        debug_assert!(!sync || n == 1, "sync batches carry exactly one op");
+        for op in ops {
+            let shard = op.shard(self.nshards);
+            if !self.local_to(who, shard) {
+                // Never happens for fabric-routed batches; the counter
+                // surfaces any future routing regression in `stats()`.
+                self.at.remote_exec.fetch_add(1, Ordering::Relaxed);
+            }
+            store.account_shard(who, shard);
+            let result = match op {
+                DelegatedOp::Insert { key, value } => {
+                    let ok = store.shard_at(shard).insert(key, value);
+                    slot.applied.fetch_add(ok as u64, Ordering::Relaxed);
+                    OpResult::Applied(ok)
+                }
+                DelegatedOp::Find { key } => {
+                    let v = store.shard_at(shard).get(key);
+                    slot.hits.fetch_add(v.is_some() as u64, Ordering::Relaxed);
+                    OpResult::Value(v)
+                }
+                DelegatedOp::Erase { key } => {
+                    let ok = store.shard_at(shard).erase(key);
+                    slot.applied.fetch_add(ok as u64, Ordering::Relaxed);
+                    OpResult::Applied(ok)
+                }
+                DelegatedOp::Batch { items } => {
+                    // Release-checked: a mis-split batch would insert keys
+                    // into a shard that routed lookups never visit — a
+                    // silent wrong-answer, so fail loudly instead.
+                    assert!(
+                        items.iter().all(|&(k, _)| shard_of_key(k, self.nshards) == shard),
+                        "Batch envelope must be pre-split to one shard \
+                         (use Caller::delegate_insert_batch)"
+                    );
+                    let c = store.shard_at(shard).insert_batch(&items);
+                    slot.applied.fetch_add(c, Ordering::Relaxed);
+                    OpResult::Count(c)
+                }
+                DelegatedOp::Range { lo, hi } => {
+                    // Release-checked like Batch: an unclamped window would
+                    // silently drop every row outside the first segment.
+                    assert_eq!(
+                        lo >> 61,
+                        hi >> 61,
+                        "Range envelope must be pre-clamped to one prefix segment \
+                         (use Caller::delegate_range)"
+                    );
+                    let rows = store.shard_at(shard).range(lo, hi);
+                    slot.rows.fetch_add(rows.len() as u64, Ordering::Relaxed);
+                    OpResult::Rows(rows)
+                }
+            };
+            slot.acked.fetch_add(1, Ordering::Relaxed);
+            if sync {
+                debug_assert_eq!(slot.state.load(Ordering::Acquire), SLOT_WAITING);
+                // Single writer while WAITING; the release store publishes
+                // the result to the parked caller.
+                unsafe { *slot.result.get() = result };
+                slot.state.store(SLOT_DONE, Ordering::Release);
+            }
+        }
+        self.at.executed.fetch_add(n, Ordering::SeqCst);
+    }
+
+    fn note_caller_done(&self) {
+        self.at.callers_done.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// Caller-side handle: per-owner staging buffers with flush-on-N, plus the
+/// synchronous rendezvous path. Obtain via [`OpFabric::caller`].
+pub struct Caller<'f> {
+    fabric: &'f OpFabric,
+    id: usize,
+    as_owner: Option<usize>,
+    staged: Vec<Vec<DelegatedOp>>,
+    delegated: u64,
+    finished: bool,
+}
+
+impl Caller<'_> {
+    /// Completion-slot id of this caller.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Ops delegated through this handle so far.
+    pub fn delegated(&self) -> u64 {
+        self.delegated
+    }
+
+    /// Stage one envelope toward its shard's owner; flushes that owner's
+    /// buffer when it reaches the fabric's `batch_n`.
+    pub fn delegate(&mut self, op: DelegatedOp, store: &ShardedStore) {
+        let owner = self.fabric.owner_of[op.shard(self.fabric.nshards)];
+        self.staged[owner].push(op);
+        self.delegated += 1;
+        if self.staged[owner].len() >= self.fabric.batch_n {
+            self.flush_owner(owner, store);
+        }
+    }
+
+    /// Split a `[lo, hi]` range scan into per-prefix sub-scans and delegate
+    /// each to its owning shard's thread — the cross-shard case the Direct
+    /// path resolves by dereferencing remote shards. Returns the number of
+    /// sub-ops staged; their row counts aggregate into this caller's slot.
+    pub fn delegate_range(&mut self, lo: u64, hi: u64, store: &ShardedStore) -> u64 {
+        let mut n = 0;
+        for_each_prefix_segment(lo, hi, |slo, shi| {
+            self.delegate(DelegatedOp::Range { lo: slo, hi: shi }, store);
+            n += 1;
+        });
+        n
+    }
+
+    /// Split a bulk insert into per-shard slices and delegate each as one
+    /// [`DelegatedOp::Batch`] envelope. Returns the envelopes staged.
+    pub fn delegate_insert_batch(&mut self, items: &[(u64, u64)], store: &ShardedStore) -> u64 {
+        let mut per: Vec<Vec<(u64, u64)>> =
+            (0..self.fabric.nshards).map(|_| Vec::new()).collect();
+        for &(k, v) in items {
+            per[shard_of_key(k, self.fabric.nshards)].push((k, v));
+        }
+        let mut n = 0;
+        for items in per {
+            if !items.is_empty() {
+                self.delegate(DelegatedOp::Batch { items }, store);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Flush every staged buffer (the on-drain flush).
+    pub fn flush(&mut self, store: &ShardedStore) {
+        for owner in 0..self.staged.len() {
+            self.flush_owner(owner, store);
+        }
+    }
+
+    fn flush_owner(&mut self, owner: usize, store: &ShardedStore) {
+        if self.staged[owner].is_empty() {
+            return;
+        }
+        // Keep a batch_n-capacity buffer behind: flush-on-N would otherwise
+        // pay the 1→2→…→batch_n growth reallocations on every single batch.
+        let ops = std::mem::replace(
+            &mut self.staged[owner],
+            Vec::with_capacity(self.fabric.batch_n),
+        );
+        let batch =
+            OpBatch { caller: self.id as u32, sync: false, staged_at: Instant::now(), ops };
+        self.fabric.dispatch(owner, batch, self.as_owner, store);
+    }
+
+    /// Synchronous delegation: flush (preserving per-owner FIFO order with
+    /// everything staged so far), ship the op, park on this caller's
+    /// completion slot until the owner publishes the result. Owners must be
+    /// draining concurrently unless the op targets this caller's own shard
+    /// (then it executes inline).
+    pub fn call(&mut self, op: DelegatedOp, store: &ShardedStore) -> OpResult {
+        self.flush(store);
+        self.delegated += 1;
+        self.fabric.at.sync_calls.fetch_add(1, Ordering::Relaxed);
+        let owner = self.fabric.owner_of[op.shard(self.fabric.nshards)];
+        let slot = &self.fabric.slots[self.id];
+        debug_assert_eq!(slot.state.load(Ordering::Relaxed), SLOT_IDLE);
+        slot.state.store(SLOT_WAITING, Ordering::Release);
+        let batch =
+            OpBatch { caller: self.id as u32, sync: true, staged_at: Instant::now(), ops: vec![op] };
+        self.fabric.dispatch(owner, batch, self.as_owner, store);
+        let mut b = Backoff::new();
+        while slot.state.load(Ordering::Acquire) != SLOT_DONE {
+            assert!(
+                !self.fabric.is_poisoned(),
+                "delegation fabric poisoned: an owner died before completing a sync op"
+            );
+            if let Some(h) = self.as_owner {
+                // An owner-caller parked on a remote sync op keeps its own
+                // queue moving (other callers may be parked on *us*).
+                self.fabric.drain(h, store, 4);
+            }
+            b.wait();
+        }
+        let result = unsafe { std::mem::replace(&mut *slot.result.get(), OpResult::Pending) };
+        slot.state.store(SLOT_IDLE, Ordering::Release);
+        result
+    }
+
+    /// Final flush + publish "this caller is done" for
+    /// [`OpFabric::all_quiet`] termination detection.
+    pub fn finish(&mut self, store: &ShardedStore) {
+        self.flush(store);
+        if !self.finished {
+            self.finished = true;
+            self.fabric.note_caller_done();
+        }
+    }
+}
+
+impl Drop for Caller<'_> {
+    fn drop(&mut self) {
+        // Skipped while unwinding: asserting here would double-panic into
+        // an abort and defeat the fabric's poison-and-propagate path.
+        debug_assert!(
+            std::thread::panicking() || self.staged.iter().all(|s| s.is_empty()),
+            "Caller dropped with staged ops — call flush()/finish() first"
+        );
+    }
+}
+
+/// RAII guard: poisons the fabric if the holding scope unwinds (a dead
+/// owner/worker can never drain its queue or `finish()` again, so parked
+/// peers must fail fast instead of waiting forever). Shared by
+/// [`OpFabric::drain`] and the engine's delegated worker body.
+pub(crate) struct PoisonOnUnwind<'f>(pub(crate) &'f OpFabric);
+
+impl Drop for PoisonOnUnwind<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.poison();
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::store::StoreKind;
+    use std::sync::Arc;
 
     #[test]
     fn keys_land_on_home_node_threads() {
         let topo = Topology::virtual_grid(2, 2); // 2 nodes x 2 cpus
-        let fabric = RouterFabric::new(4, 8, topo.clone(), 64);
+        let fabric = RouterFabric::new(4, 8, &topo, 64);
         let mut rng = Rng::new(1);
         // shard 0 (MSBs 000) homes on node 0 -> threads 0,1
         // shard 1 (MSBs 001) homes on node 1 -> threads 2,3
@@ -103,7 +808,7 @@ mod tests {
     #[test]
     fn pop_local_drains() {
         let topo = Topology::virtual_grid(1, 2);
-        let fabric = RouterFabric::new(2, 8, topo, 64);
+        let fabric = RouterFabric::new(2, 8, &topo, 64);
         let mut rng = Rng::new(2);
         for i in 0..50u64 {
             fabric.route_key(i, &mut rng);
@@ -120,7 +825,7 @@ mod tests {
 
     #[test]
     fn single_thread_fabric() {
-        let fabric = RouterFabric::new(1, 8, Topology::milan_virtual(), 64);
+        let fabric = RouterFabric::new(1, 8, &Topology::milan_virtual(), 64);
         let mut rng = Rng::new(3);
         for i in 0..20u64 {
             fabric.route_key(i << 61 | i, &mut rng); // all shards
@@ -130,5 +835,126 @@ mod tests {
             got += 1;
         }
         assert_eq!(got, 20);
+    }
+
+    #[test]
+    fn route_uniform_spreads_round_robin() {
+        let topo = Topology::virtual_grid(2, 2);
+        let fabric = RouterFabric::new(4, 8, &topo, 64);
+        for i in 0..40u64 {
+            fabric.route_uniform(i); // all shard-0 keys, spread anyway
+        }
+        for t in 0..4 {
+            assert_eq!(fabric.queues[t].stats().pushes, 10, "thread {t}");
+        }
+    }
+
+    #[test]
+    fn owners_sit_on_home_nodes() {
+        let topo = Topology::milan_virtual();
+        for threads in [1usize, 4, 16, 17, 32, 128] {
+            let fabric = OpFabric::new(threads, 0, 8, topo.clone(), 8, 16);
+            for s in 0..8 {
+                let owner = fabric.owner_of_shard(s);
+                assert!(owner < threads);
+                assert!(
+                    fabric.local_to(owner, s),
+                    "threads={threads} shard={s}: owner {owner} must sit on the home node"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn owners_round_robin_within_a_node() {
+        // 2 nodes x 4 cpus, 8 threads, 8 shards: 4 shards per node must
+        // spread over that node's 4 threads instead of piling on one.
+        let fabric = OpFabric::new(8, 0, 8, Topology::virtual_grid(2, 4), 8, 16);
+        for node in 0..2 {
+            let owners: std::collections::HashSet<usize> = (0..8usize)
+                .filter(|s| s % 2 == node)
+                .map(|s| fabric.owner_of_shard(s))
+                .collect();
+            assert_eq!(owners.len(), 4, "node {node}: distinct owner per shard");
+        }
+    }
+
+    #[test]
+    fn delegated_ops_execute_on_owners_and_complete() {
+        let topo = Topology::virtual_grid(2, 2);
+        let threads = 4;
+        let store =
+            Arc::new(ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 12, topo.clone(), threads));
+        let fabric = OpFabric::new(threads, 1, 8, topo, 16, 4);
+        let caller_id = threads; // the extra, slot-only caller
+        let mut caller = fabric.caller(caller_id, None);
+        // stage async inserts across all shards, then drain as each owner
+        for i in 0..64u64 {
+            let key = (i % 8) << 61 | i;
+            caller.delegate(DelegatedOp::Insert { key, value: i }, &store);
+        }
+        caller.finish(&store);
+        for t in 0..threads {
+            while fabric.drain(t, &store, usize::MAX) > 0 {}
+        }
+        assert!(fabric.all_quiet());
+        assert_eq!(store.len(), 64);
+        let st = fabric.stats();
+        assert_eq!(st.submitted, 64);
+        assert_eq!(st.executed, 64);
+        assert_eq!(st.remote_exec, 0, "owners only touch home-node shards");
+        assert!(st.batch_occupancy() >= 2.0, "flush-on-4 batches multiple ops");
+        let totals = fabric.slot_totals(caller_id);
+        assert_eq!(totals.acked, 64);
+        assert_eq!(totals.applied, 64);
+        // locality: every executed op was accounted local
+        let (local, remote) = store.locality.snapshot();
+        assert_eq!(remote, 0);
+        assert_eq!(local, 64);
+    }
+
+    #[test]
+    fn inline_self_delegation_needs_no_queue() {
+        // Single thread owns every shard: all ops take the inline shortcut.
+        let topo = Topology::milan_virtual();
+        let store =
+            Arc::new(ShardedStore::new(StoreKind::HashFixed, 8, 1 << 10, topo.clone(), 1));
+        let fabric = OpFabric::new(1, 0, 8, topo, 4, 8);
+        let mut caller = fabric.caller(0, Some(0));
+        for i in 0..32u64 {
+            caller.delegate(DelegatedOp::Insert { key: (i % 8) << 61 | i, value: i }, &store);
+        }
+        // sync through the same path — executes inline, no owner thread
+        let r = caller.call(DelegatedOp::Find { key: 0 }, &store);
+        assert_eq!(r, OpResult::Value(Some(0)));
+        caller.finish(&store);
+        assert!(fabric.all_quiet());
+        let st = fabric.stats();
+        assert_eq!(st.executed, 33);
+        assert_eq!(st.inline_ops, 33);
+        assert_eq!(st.queued_batches, 0, "nothing travels a queue with one thread");
+    }
+
+    #[test]
+    fn range_splits_per_prefix_and_counts_rows() {
+        let topo = Topology::virtual_grid(2, 2);
+        let store =
+            Arc::new(ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 12, topo.clone(), 4));
+        for p in 0..8u64 {
+            for i in 0..10u64 {
+                store.insert(p << 61 | i, p);
+            }
+        }
+        let fabric = OpFabric::new(4, 1, 8, topo, 16, 64);
+        let mut caller = fabric.caller(4, None);
+        // full-space scan = 8 sub-ops
+        let subs = caller.delegate_range(0, u64::MAX, &store);
+        assert_eq!(subs, 8);
+        caller.finish(&store);
+        for t in 0..4 {
+            while fabric.drain(t, &store, usize::MAX) > 0 {}
+        }
+        assert_eq!(fabric.slot_totals(4).rows, 80, "all rows aggregate to the caller");
+        assert_eq!(caller.delegate_range(10, 5, &store), 0, "inverted bounds");
     }
 }

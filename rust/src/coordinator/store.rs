@@ -18,6 +18,8 @@ use crate::mem::{ArenaOptions, PoolStats};
 use crate::numa::{LocalityStats, Topology, LATENCY};
 use crate::skiplist::{DetSkiplist, FindMode, RandomSkiplist, SkiplistStats};
 
+use super::{for_each_prefix_segment, shard_of_key};
+
 /// Unified key-value interface over every structure in the repo.
 pub trait KvStore: Send + Sync {
     fn insert(&self, key: u64, value: u64) -> bool;
@@ -251,10 +253,9 @@ impl StoreKind {
     }
 }
 
-/// Number of key-space prefixes (the paper's 3 MSBs → 8 segments).
+/// Number of key-space prefixes (the paper's 3 MSBs → 8 segments; the
+/// per-segment clamp arithmetic lives in [`for_each_prefix_segment`]).
 const PREFIXES: u64 = 8;
-/// Width of one 3-MSB prefix segment in key space.
-const PREFIX_MASK: u64 = (1u64 << 61) - 1;
 
 /// The hierarchical store: one structure per shard, shards homed on
 /// (virtual) NUMA nodes by eqs (6)-(7).
@@ -283,10 +284,12 @@ impl ShardedStore {
         }
     }
 
-    /// Shard of a key: top 3 MSBs folded onto the shard count.
+    /// Shard of a key: top 3 MSBs folded onto the shard count (the shared
+    /// [`shard_of_key`] helper, so the store, the word router and the
+    /// delegation fabric can never disagree on routing).
     #[inline]
     pub fn shard_of(&self, key: u64) -> usize {
-        ((key >> 61) as usize) % self.shards.len()
+        shard_of_key(key, self.shards.len())
     }
 
     /// Home NUMA node of a shard under the current thread count (eq. 7).
@@ -299,13 +302,32 @@ impl ShardedStore {
     /// charge the latency model if the access is remote.
     #[inline]
     pub fn account(&self, thread_id: usize, key: u64) {
-        let home = self.home_node(self.shard_of(key));
+        self.account_shard(thread_id, self.shard_of(key));
+    }
+
+    /// Account one shard dereference from `thread_id` (the delegation
+    /// fabric's per-envelope accounting) and charge the latency model if
+    /// the access crosses NUMA nodes.
+    #[inline]
+    pub fn account_shard(&self, thread_id: usize, shard: usize) {
+        let home = self.home_node(shard);
         let from = self.topology.node_of_cpu(thread_id);
         let local = home == from;
         self.locality.record(local);
         if !local {
             LATENCY.charge_remote();
         }
+    }
+
+    /// Account every shard a `[lo, hi]` range scan dereferences — one touch
+    /// per intersecting 3-MSB prefix, mirroring the per-prefix queries
+    /// [`ShardedStore::range`] issues. Direct-mode workers use this: a
+    /// cross-shard window makes them reach into remote shards, which is
+    /// exactly the access pattern the Delegated mode eliminates.
+    pub fn account_range(&self, thread_id: usize, lo: u64, hi: u64) {
+        for_each_prefix_segment(lo, hi, |slo, _| {
+            self.account_shard(thread_id, shard_of_key(slo, self.shards.len()));
+        });
     }
 
     #[inline]
@@ -345,16 +367,10 @@ impl ShardedStore {
     /// acceptable because the paper's configuration is 8 shards, where
     /// every prefix maps to a distinct shard and no fold exists.)
     pub fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)> {
-        if lo > hi {
-            return Vec::new();
-        }
         let mut out = Vec::new();
-        for p in (lo >> 61)..=(hi >> 61) {
-            let base = p << 61;
-            let slo = lo.max(base);
-            let shi = hi.min(base | PREFIX_MASK);
-            out.extend(self.shards[(p as usize) % self.shards.len()].range(slo, shi));
-        }
+        for_each_prefix_segment(lo, hi, |slo, shi| {
+            out.extend(self.shards[shard_of_key(slo, self.shards.len())].range(slo, shi));
+        });
         out
     }
 
@@ -460,6 +476,38 @@ mod tests {
         assert_eq!(s.shard_of(u64::MAX), 7);
         assert_eq!(s.shard_of(1 << 61), 1);
         assert_eq!(s.num_shards(), 8);
+    }
+
+    #[test]
+    fn shard_of_matches_shared_helper_for_all_folds() {
+        // Satellite cross-check: store routing and the shared helper (used
+        // by the word router and the delegation fabric) must agree on every
+        // folded-prefix configuration, so a key delegated to an owner lands
+        // on the same shard the store itself would pick.
+        for nshards in [1usize, 2, 4, 8] {
+            let s = ShardedStore::new(
+                StoreKind::HashFixed,
+                nshards,
+                1 << 10,
+                Topology::milan_virtual(),
+                8,
+            );
+            for p in 0..8u64 {
+                for low in [0u64, 1, 0xFFFF, (1 << 59) - 1, (1 << 61) - 1] {
+                    let key = p << 61 | low;
+                    assert_eq!(
+                        s.shard_of(key),
+                        shard_of_key(key, nshards),
+                        "nshards={nshards} key={key:#x}"
+                    );
+                    assert_eq!(
+                        s.shard_of(key),
+                        (p as usize) % nshards,
+                        "folded prefix must be prefix mod nshards"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,124 @@
+//! Table XI (beyond the paper, §VI–VII proposal): the hierarchical
+//! delegation engine vs direct execution, across every store kind.
+//!
+//! Methodology (EXPERIMENTS.md §Table XI): the `OpMix::HIER` workload (all
+//! four op kinds, 10% range scans) with a prefix-spanning range window, so
+//! direct workers must dereference two shards per scan while delegated
+//! callers ship each half to its owner. The run asserts the paper's
+//! locality claim — `remote_accesses == 0` in delegated mode — and reports
+//! the fabric health metrics (batch occupancy, handoff latency).
+
+use crate::coordinator::{ExecMode, StoreKind};
+use crate::runtime::KeyRouter;
+use crate::util::bench::Table;
+use crate::workload::OpMix;
+
+use super::{store_run_with_mode, ExpConfig};
+
+/// The eight store kinds, in the row order of the table.
+pub const T11_KINDS: [StoreKind; 8] = [
+    StoreKind::DetSkiplistLf,
+    StoreKind::DetSkiplistRwl,
+    StoreKind::RandomSkiplist,
+    StoreKind::HashFixed,
+    StoreKind::HashTwoLevel,
+    StoreKind::HashSpo,
+    StoreKind::HashTwoLevelSpo,
+    StoreKind::HashTbbLike,
+];
+
+/// A range window of one full prefix segment: every scan that does not
+/// start in the last segment spans into the next shard — the cross-shard
+/// dereference the delegation engine eliminates.
+pub const T11_WINDOW: u64 = 1 << 61;
+
+/// Table XI: Direct vs Delegated over all 8 [`StoreKind`]s at the largest
+/// configured thread count. Rows are keyed by kind index (see
+/// [`T11_KINDS`]); the title spells out the mapping. Panics if any
+/// delegated run reports a remote access — the paper's locality assertion.
+pub fn t11_hier(cfg: &ExpConfig, router: &KeyRouter) -> Table {
+    let ops = cfg.ops(10_000_000);
+    let th = *cfg.threads.last().unwrap_or(&8) as usize;
+    let mut t = Table::new(
+        &format!(
+            "Table XI (new) — direct vs delegated execution ({ops} ops, {th} threads, \
+             mix HIER, window 2^61, scale 1/{}) | rows: 0=det-lf 1=det-rwl 2=random \
+             3=fixed 4=twolevel 5=spo 6=2lvl-spo 7=tbb",
+            cfg.scale
+        ),
+        "#kind",
+        &["direct(s)", "delegated(s)", "dir-remote", "del-remote", "batch-occ", "handoff-us"],
+    );
+    for (i, kind) in T11_KINDS.into_iter().enumerate() {
+        let (d, dm) = store_run_with_mode(
+            cfg,
+            kind,
+            OpMix::HIER,
+            ops,
+            th,
+            router,
+            ExecMode::Direct,
+            T11_WINDOW,
+        );
+        let (g, gm) = store_run_with_mode(
+            cfg,
+            kind,
+            OpMix::HIER,
+            ops,
+            th,
+            router,
+            ExecMode::Delegated,
+            T11_WINDOW,
+        );
+        assert_eq!(
+            gm.remote_accesses, 0,
+            "{kind:?}: delegated execution must be NUMA-local (paper §VI-VII)"
+        );
+        assert_eq!(
+            gm.fabric.executed, gm.fabric.submitted,
+            "{kind:?}: the fabric must quiesce"
+        );
+        t.push_row(
+            i as u64,
+            vec![
+                d.mean,
+                g.mean,
+                dm.remote_accesses as f64,
+                gm.remote_accesses as f64,
+                gm.fabric.batch_occupancy(),
+                gm.fabric.avg_handoff_us(),
+            ],
+        );
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numa::Topology;
+
+    #[test]
+    fn t11_hier_runs_all_kinds_and_asserts_locality() {
+        let cfg = ExpConfig {
+            threads: vec![4],
+            reps: 1,
+            scale: 10_000,
+            topology: Topology::virtual_grid(2, 2),
+            seed: 5,
+        };
+        let t = t11_hier(&cfg, &KeyRouter::Native);
+        assert_eq!(t.rows.len(), 8, "one row per store kind");
+        for (kind, row) in &t.rows {
+            assert!(row[0] > 0.0 && row[1] > 0.0, "kind {kind}: both modes must run");
+            assert_eq!(row[3], 0.0, "kind {kind}: delegated remote accesses");
+            assert!(row[4] >= 1.0, "kind {kind}: batches carry at least one op");
+        }
+        // the direct column must show the remote dereferences the delegated
+        // mode eliminates (2 engaged nodes => adjacent shards alternate)
+        assert!(
+            t.rows.iter().any(|(_, row)| row[2] > 0.0),
+            "direct cross-shard scans must register as remote"
+        );
+    }
+}

@@ -5,15 +5,17 @@
 //! divides the paper's op counts); pass `--full` / `scale = 1` on real
 //! hardware to run the original sizes.
 
+pub mod hier;
 pub mod mem;
 pub mod paper;
 pub mod queues;
 
+pub use self::hier::t11_hier;
 pub use self::mem::t10_mem;
 
 use std::sync::Arc;
 
-use crate::coordinator::{run_workload, RunMetrics, ShardedStore, StoreKind};
+use crate::coordinator::{run_with_mode, ExecMode, RunMetrics, ShardedStore, StoreKind};
 use crate::hashtable::{ConcurrentMap, SpoHashMap, TwoLevelSpoHashMap};
 use crate::numa::Topology;
 use crate::runtime::KeyRouter;
@@ -60,6 +62,22 @@ fn store_run(
     threads: usize,
     router: &KeyRouter,
 ) -> (Summary, RunMetrics) {
+    store_run_with_mode(cfg, kind, mix, total_ops, threads, router, ExecMode::Direct, 64)
+}
+
+/// One measured workload run per rep in the given [`ExecMode`] (Table XI
+/// compares Direct against Delegated; every older table runs Direct).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn store_run_with_mode(
+    cfg: &ExpConfig,
+    kind: StoreKind,
+    mix: OpMix,
+    total_ops: u64,
+    threads: usize,
+    router: &KeyRouter,
+    mode: ExecMode,
+    range_window: u64,
+) -> (Summary, RunMetrics) {
     let mut samples = Vec::with_capacity(cfg.reps);
     let mut last = RunMetrics::default();
     for rep in 0..cfg.reps {
@@ -71,8 +89,8 @@ fn store_run(
             threads,
         ));
         let spec = WorkloadSpec::new("exp", total_ops, mix, (total_ops / 2).max(1 << 14))
-            .with_range_window(64);
-        let m = run_workload(&store, &spec, threads, router, cfg.seed + rep as u64);
+            .with_range_window(range_window);
+        let m = run_with_mode(&store, &spec, threads, router, cfg.seed + rep as u64, mode);
         samples.push(m.drain_seconds);
         last = m;
     }

@@ -24,10 +24,12 @@ pub enum QueueImpl {
 impl QueueImpl {
     pub fn build(self, blocks: usize) -> Box<dyn ConcurrentQueue> {
         match self {
-            QueueImpl::Lkfree => Box::new(LfQueue::with_config(8192, blocks, true)),
-            QueueImpl::TbbLike => Box::new(TbbLikeQueue::with_config(8192, blocks.max(1 << 12))),
-            QueueImpl::MsBoostLike => Box::new(crate::queue::MsQueue::new()),
-            QueueImpl::Mutex => Box::new(crate::queue::MutexQueue::new()),
+            QueueImpl::Lkfree => Box::new(LfQueue::<u64>::with_config(8192, blocks, true)),
+            QueueImpl::TbbLike => {
+                Box::new(TbbLikeQueue::<u64>::with_config(8192, blocks.max(1 << 12)))
+            }
+            QueueImpl::MsBoostLike => Box::new(crate::queue::MsQueue::<u64>::new()),
+            QueueImpl::Mutex => Box::new(crate::queue::MutexQueue::<u64>::new()),
         }
     }
 }

@@ -21,6 +21,13 @@
 //! store fans ranges out per 3-MSB key prefix and concatenates in prefix
 //! order — globally sorted by construction, no merge heap (§VI partition).
 //!
+//! The paper's closing §VI–VII proposal — hierarchical delegation to cut
+//! remote-NUMA accesses — runs behind [`coordinator::ExecMode`]: the
+//! generic queues carry typed [`coordinator::DelegatedOp`] envelopes over
+//! the [`coordinator::OpFabric`] to per-shard owner threads, so in
+//! delegated mode no worker ever dereferences remote shard memory
+//! (Table XI, `exp t11`).
+//!
 //! See DESIGN.md for the system inventory and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results and how to run the range
 //! workload (`OpMix::RANGE`, `exp t9`).

@@ -2,18 +2,18 @@
 //!
 //! ```text
 //! cdskl info                           topology, artifacts, self-check
-//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|all> [--threads 4,8] [--reps N]
+//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|all> [--threads 4,8] [--reps N]
 //!           [--scale N] [--out FILE]   regenerate paper tables
 //! cdskl run [--store det|rwl|random|fixed|twolevel|spo|spo2|tbb]
-//!           [--ops N] [--threads N] [--mix w1|w2|hash|range]
-//!           [--range-window W]
+//!           [--ops N] [--threads N] [--mix w1|w2|hash|range|hier]
+//!           [--exec direct|delegated] [--range-window W]
 //!           [--inject-latency NS]      one workload run with metrics
 //! cdskl selfcheck                      AOT artifacts vs native mixer
 //! ```
 
 use std::sync::Arc;
 
-use cdskl::coordinator::{run_workload, ShardedStore, StoreKind};
+use cdskl::coordinator::{run_with_mode, ExecMode, ShardedStore, StoreKind};
 use cdskl::experiments::{self, ExpConfig};
 use cdskl::numa::{Topology, LATENCY};
 use cdskl::runtime::{KeyRouter, RouteEngine};
@@ -123,8 +123,11 @@ fn exp(args: &Args) {
     if all || which == "t10" || which == "mem" {
         tables.extend(experiments::t10_mem(&cfg));
     }
+    if all || which == "t11" || which == "hier" {
+        tables.push(experiments::t11_hier(&cfg, &router));
+    }
     if tables.is_empty() {
-        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 all)");
+        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 all)");
         std::process::exit(2);
     }
     let mut out = String::new();
@@ -151,11 +154,16 @@ fn run(args: &Args) {
         "w2" => OpMix::W2,
         "hash" => OpMix::HASH,
         "range" => OpMix::RANGE,
+        "hier" => OpMix::HIER,
         other => {
-            eprintln!("unknown --mix '{other}' (w1 w2 hash range)");
+            eprintln!("unknown --mix '{other}' (w1 w2 hash range hier)");
             std::process::exit(2);
         }
     };
+    let mode = ExecMode::parse(&args.str_or("exec", "direct")).unwrap_or_else(|| {
+        eprintln!("unknown --exec (direct delegated)");
+        std::process::exit(2);
+    });
     if let Some(ns) = args.get("inject-latency") {
         LATENCY.enable(ns.parse().expect("--inject-latency NS"));
     }
@@ -167,11 +175,12 @@ fn run(args: &Args) {
     let store = Arc::new(ShardedStore::new(kind, 8, (ops as usize / 4).max(1 << 16), topo, threads));
     let spec = WorkloadSpec::new("run", ops, mix, args.u64_or("key-space", (ops / 2).max(1 << 16)))
         .with_range_window(args.u64_or("range-window", 64));
-    let m = run_workload(&store, &spec, threads, &router, args.u64_or("seed", 7));
+    let m = run_with_mode(&store, &spec, threads, &router, args.u64_or("seed", 7), mode);
     println!(
-        "store: {} x{} shards | threads {threads} | ops {ops}",
+        "store: {} x{} shards | threads {threads} | ops {ops} | exec {}",
         store.kind_name(),
-        store.num_shards()
+        store.num_shards(),
+        mode.name()
     );
     println!(
         "fill   : {:.4}s (router={})",
@@ -193,6 +202,20 @@ fn run(args: &Args) {
         );
     }
     println!("numa   : {} local, {} remote accesses", m.local_accesses, m.remote_accesses);
+    if m.fabric.submitted > 0 {
+        println!(
+            "fabric : {} ops in {} batches (occupancy {:.1}, {} inline), handoff {:.1}us avg, \
+             peak depth {}, backpressure {}, remote-exec {}",
+            m.fabric.submitted,
+            m.fabric.batches,
+            m.fabric.batch_occupancy(),
+            m.fabric.inline_ops,
+            m.fabric.avg_handoff_us(),
+            m.fabric.peak_depth,
+            m.fabric.backpressure,
+            m.fabric.remote_exec,
+        );
+    }
     if m.mem.allocs > 0 {
         println!(
             "mem    : {} allocs ({:.1}% recycled, {:.1}% magazine), {} nodes in {} blocks / {} arenas, locality hit {:.1}%",

@@ -544,7 +544,7 @@ impl<N: ArenaNode> BlockArena<N> {
     fn push_free(&self, idx: u32) -> bool {
         let mut backoff = Backoff::new();
         for _ in 0..4 {
-            if self.free.try_push(idx as u64) {
+            if self.free.try_push(idx as u64).is_ok() {
                 return true;
             }
             backoff.wait();

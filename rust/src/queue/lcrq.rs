@@ -1,5 +1,5 @@
 //! Unbounded lock-free queue over an array of recycled blocks
-//! (paper §III, algorithms 7–10).
+//! (paper §III, algorithms 7–10), generic over the payload type.
 //!
 //! Layout: the queue is a linked chain of fixed-size *blocks*; each block is
 //! an array of `(data, fe)` slots.  `front`/`rear` are plain integers bumped
@@ -9,11 +9,19 @@
 //! block for writing/reading; retired blocks return to a pool and are
 //! recycled (the paper's memory-management contribution vs. stock LCRQ).
 //!
+//! The payload is any `T: Send` (the paper's experiments use the bare `u64`
+//! default; the delegation fabric ships typed op envelopes). Slots hold
+//! `MaybeUninit<T>` guarded by the `fe` protocol below, which hands each
+//! written value to exactly one owner: the consuming pop, the pusher taking
+//! it back off a killed slot, or the queue's `Drop` for values still in
+//! flight — so non-`Copy` payloads are dropped exactly once.
+//!
 //! ## fe slot protocol
 //!
 //! ```text
 //!   0 EMPTY    --push: fetch_add(+1)-->  1 FULL   --pop: CAS(1,3)-->  3 CONSUMED
-//!   0 EMPTY    --pop:  CAS(0,2)------->  2 KILLED (push fetch_add sees prev!=0 and retries)
+//!   0 EMPTY    --pop:  CAS(0,2)------->  2 KILLED (push fetch_add sees prev!=0,
+//!                                          takes its value back and retries)
 //! ```
 //!
 //! A pop that overtakes `rear` (the paper's "front gets ahead of rear") kills
@@ -29,8 +37,11 @@
 //! the epoch then requires `pins == 0`. The store-load pairing guarantees at
 //! least one side observes the other, so a block is never reset under an
 //! active operation. Block *memory* is never freed before queue drop, so
-//! stale pointers are always safe to dereference.
+//! stale pointers are always safe to dereference. A block is only recycled
+//! once fully drained, so recycling never touches a live payload.
 
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -45,7 +56,7 @@ const FE_FULL: u32 = 1;
 const FE_KILLED: u32 = 2;
 const FE_CONSUMED: u32 = 3;
 
-struct Block {
+struct Block<T> {
     front: AtomicUsize,
     rear: AtomicUsize,
     next: AtomicUsize,
@@ -55,12 +66,12 @@ struct Block {
     epoch: AtomicU64,
     /// Active operations pinning this block (SeqCst).
     pins: AtomicU64,
-    data: Box<[AtomicU64]>,
+    data: Box<[UnsafeCell<MaybeUninit<T>>]>,
     fe: Box<[AtomicU32]>,
 }
 
-impl Block {
-    fn new(size: usize) -> Block {
+impl<T> Block<T> {
+    fn new(size: usize) -> Block<T> {
         Block {
             front: AtomicUsize::new(0),
             rear: AtomicUsize::new(0),
@@ -69,13 +80,14 @@ impl Block {
             rclosed: AtomicBool::new(false),
             epoch: AtomicU64::new(0),
             pins: AtomicU64::new(0),
-            data: (0..size).map(|_| AtomicU64::new(0)).collect(),
+            data: (0..size).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect(),
             fe: (0..size).map(|_| AtomicU32::new(FE_EMPTY)).collect(),
         }
     }
 
     /// Reset for reuse. Caller holds the pool lock and has already bumped
-    /// `epoch` and verified `pins == 0`.
+    /// `epoch` and verified `pins == 0`. The block is drained (every claimed
+    /// slot consumed or killed), so no slot holds a live payload.
     fn reset(&self) {
         self.front.store(0, Ordering::Relaxed);
         self.rear.store(0, Ordering::Relaxed);
@@ -100,6 +112,15 @@ pub struct QueueStats {
     pub slots_killed: u64,
 }
 
+impl QueueStats {
+    /// Elements still enqueued in this snapshot. Never underflows: `stats()`
+    /// samples `pops` before `pushes`, so the snapshot over-approximates the
+    /// true depth by at most the pushes that landed between the two loads.
+    pub fn depth(&self) -> u64 {
+        self.pushes.saturating_sub(self.pops)
+    }
+}
+
 #[derive(Default)]
 struct AtomicStats {
     pushes: AtomicU64,
@@ -111,11 +132,12 @@ struct AtomicStats {
     slots_killed: AtomicU64,
 }
 
-/// The paper's unbounded lock-free queue ("lkfree" in Table I).
-pub struct LfQueue {
+/// The paper's unbounded lock-free queue ("lkfree" in Table I), generic over
+/// its payload (`u64` by default, matching the paper's experiments).
+pub struct LfQueue<T: Send = u64> {
     /// Stable directory of blocks; a slot is written once (block addresses
     /// never move or free until drop).
-    slots: Box<[AtomicPtr<Block>]>,
+    slots: Box<[AtomicPtr<Block<T>>]>,
     /// Number of `slots` entries ever populated.
     allocated: AtomicUsize,
     /// Most recent active block (paper's `cn`).
@@ -129,19 +151,19 @@ pub struct LfQueue {
     stats: AtomicStats,
 }
 
-unsafe impl Send for LfQueue {}
-unsafe impl Sync for LfQueue {}
+unsafe impl<T: Send> Send for LfQueue<T> {}
+unsafe impl<T: Send> Sync for LfQueue<T> {}
 
-impl LfQueue {
+impl<T: Send> LfQueue<T> {
     /// Default configuration: the paper's 8192-slot blocks, recycling on.
-    pub fn new() -> LfQueue {
+    pub fn new() -> LfQueue<T> {
         Self::with_config(8192, 4096, true)
     }
 
     /// `block_size` slots per block, at most `max_blocks` blocks live at
     /// once; `recycle=false` reproduces the TBB/LCRQ behaviour of always
     /// allocating fresh segments (see `tbb_like`).
-    pub fn with_config(block_size: usize, max_blocks: usize, recycle: bool) -> LfQueue {
+    pub fn with_config(block_size: usize, max_blocks: usize, recycle: bool) -> LfQueue<T> {
         assert!(block_size >= 2 && max_blocks >= 2);
         let q = LfQueue {
             slots: (0..max_blocks).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
@@ -159,7 +181,7 @@ impl LfQueue {
     }
 
     #[inline]
-    fn block(&self, id: usize) -> &Block {
+    fn block(&self, id: usize) -> &Block<T> {
         debug_assert!(id < self.allocated.load(Ordering::Acquire));
         unsafe { &*self.slots[id].load(Ordering::Acquire) }
     }
@@ -243,36 +265,31 @@ impl LfQueue {
         }
     }
 
-    /// Pin a block for use; returns false if the block was recycled since
-    /// `id` was read (caller must retry from the queue anchors).
+    /// Pin a block for use. Returns false if the block was recycled since
+    /// `seen_epoch` was read; the caller must unpin and retry from the queue
+    /// anchors either way (the pin count is incremented unconditionally so
+    /// pin/unpin always pair up exactly once).
     #[inline]
-    fn pin(&self, blk: &Block, seen_epoch: u64) -> bool {
+    fn pin(&self, blk: &Block<T>, seen_epoch: u64) -> bool {
         blk.pins.fetch_add(1, Ordering::SeqCst);
-        if blk.epoch.load(Ordering::SeqCst) == seen_epoch {
-            true
-        } else {
-            blk.pins.fetch_sub(1, Ordering::SeqCst);
-            false
-        }
+        blk.epoch.load(Ordering::SeqCst) == seen_epoch
     }
 
     #[inline]
-    fn unpin(&self, blk: &Block) {
+    fn unpin(&self, blk: &Block<T>) {
         blk.pins.fetch_sub(1, Ordering::SeqCst);
     }
 
-    /// Paper's Push (alg. 7). Returns false only if the directory is
-    /// exhausted and recycling cannot reclaim (try_push semantics).
-    fn push_inner(&self, v: u64, block_on_full: bool) -> bool {
+    /// Paper's Push (alg. 7). Returns the value back only if the directory
+    /// is exhausted and recycling cannot reclaim (try_push semantics).
+    fn push_inner(&self, mut v: T, block_on_full: bool) -> Result<(), T> {
         let mut b = Backoff::new();
         loop {
             let n = self.cn.load(Ordering::Acquire);
             let blk = self.block(n);
             let epoch = blk.epoch.load(Ordering::SeqCst);
             if !self.pin(blk, epoch) || self.cn.load(Ordering::Acquire) != n {
-                if blk.pins.load(Ordering::Relaxed) > 0 && self.cn.load(Ordering::Acquire) != n {
-                    // pinned a stale block; release before retrying
-                }
+                // pinned a stale/recycled block; release before retrying
                 self.unpin(blk);
                 self.stats.push_retries.fetch_add(1, Ordering::Relaxed);
                 b.wait();
@@ -282,14 +299,19 @@ impl LfQueue {
             if !blk.wclosed.load(Ordering::Acquire) {
                 let p = blk.rear.fetch_add(1, Ordering::AcqRel);
                 if p < self.block_size {
-                    blk.data[p].store(v, Ordering::Relaxed);
+                    unsafe { (*blk.data[p].get()).write(v) };
                     let prev = blk.fe[p].fetch_add(1, Ordering::AcqRel);
                     if prev == FE_EMPTY {
                         self.unpin(blk);
                         self.stats.pushes.fetch_add(1, Ordering::Relaxed);
-                        return true;
+                        return Ok(());
                     }
-                    // Slot was killed by an overtaking pop; retry elsewhere.
+                    // Slot was killed by an overtaking pop (KILLED -> CONSUMED
+                    // via our fetch_add): the killer already moved on, so the
+                    // value we just wrote belongs to us alone — take it back
+                    // and retry elsewhere.
+                    debug_assert_eq!(prev, FE_KILLED);
+                    v = unsafe { (*blk.data[p].get()).assume_init_read() };
                     self.stats.push_retries.fetch_add(1, Ordering::Relaxed);
                     self.unpin(blk);
                     continue;
@@ -309,7 +331,7 @@ impl LfQueue {
                 self.unpin(blk);
                 if !ok {
                     if !block_on_full {
-                        return false;
+                        return Err(v);
                     }
                     b.wait(); // wait for consumers to retire blocks
                 }
@@ -318,7 +340,7 @@ impl LfQueue {
     }
 
     /// Paper's Pop (alg. 9).
-    fn pop_inner(&self) -> Option<u64> {
+    fn pop_inner(&self) -> Option<T> {
         let mut b = Backoff::new();
         loop {
             let n = self.listhead.load(Ordering::Acquire);
@@ -379,10 +401,12 @@ impl LfQueue {
             loop {
                 match blk.fe[p].load(Ordering::Acquire) {
                     FE_FULL => {
-                        // Unique consumer for index p: CAS cannot fail.
+                        // Unique consumer for index p: CAS cannot fail, and
+                        // the Acquire pairs with the push's AcqRel fetch_add,
+                        // so the payload write is visible before we move it.
                         let prev = blk.fe[p].swap(FE_CONSUMED, Ordering::AcqRel);
                         debug_assert_eq!(prev, FE_FULL);
-                        let v = blk.data[p].load(Ordering::Relaxed);
+                        let v = unsafe { (*blk.data[p].get()).assume_init_read() };
                         self.unpin(blk);
                         self.stats.pops.fetch_add(1, Ordering::Relaxed);
                         return Some(v);
@@ -415,9 +439,15 @@ impl LfQueue {
     }
 
     pub fn stats(&self) -> QueueStats {
+        // `pops` is sampled before `pushes` so `pushes - pops` (the depth
+        // estimate used by RouterFabric::pending and OpFabric) can never
+        // underflow: pops only grow, so a later `pushes` load is >= the
+        // pushes that produced the sampled pops.
+        let pops = self.stats.pops.load(Ordering::Relaxed);
+        let pushes = self.stats.pushes.load(Ordering::Relaxed);
         QueueStats {
-            pushes: self.stats.pushes.load(Ordering::Relaxed),
-            pops: self.stats.pops.load(Ordering::Relaxed),
+            pushes,
+            pops,
             blocks_allocated: self.stats.blocks_allocated.load(Ordering::Relaxed),
             blocks_recycled: self.stats.blocks_recycled.load(Ordering::Relaxed),
             push_retries: self.stats.push_retries.load(Ordering::Relaxed),
@@ -431,35 +461,48 @@ impl LfQueue {
     }
 }
 
-impl Default for LfQueue {
+impl<T: Send> Default for LfQueue<T> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl Drop for LfQueue {
+impl<T: Send> Drop for LfQueue<T> {
     fn drop(&mut self) {
         let n = self.allocated.load(Ordering::Acquire);
         for i in 0..n {
             let p = self.slots[i].load(Ordering::Acquire);
-            if !p.is_null() {
-                drop(unsafe { Box::from_raw(p) });
+            if p.is_null() {
+                continue;
             }
+            if std::mem::needs_drop::<T>() {
+                // Values still in flight live exactly in the FULL slots:
+                // CONSUMED/KILLED slots had their value moved out (or never
+                // written), EMPTY slots were never written.
+                let blk = unsafe { &*p };
+                for (s, fe) in blk.fe.iter().enumerate() {
+                    if fe.load(Ordering::Acquire) == FE_FULL {
+                        unsafe { (*blk.data[s].get()).assume_init_drop() };
+                    }
+                }
+            }
+            drop(unsafe { Box::from_raw(p) });
         }
     }
 }
 
-impl ConcurrentQueue for LfQueue {
-    fn push(&self, v: u64) {
-        let ok = self.push_inner(v, true);
-        debug_assert!(ok);
+impl<T: Send> ConcurrentQueue<T> for LfQueue<T> {
+    fn push(&self, v: T) {
+        if self.push_inner(v, true).is_err() {
+            unreachable!("blocking push cannot fail");
+        }
     }
 
-    fn try_push(&self, v: u64) -> bool {
+    fn try_push(&self, v: T) -> Result<(), T> {
         self.push_inner(v, false)
     }
 
-    fn pop(&self) -> Option<u64> {
+    fn pop(&self) -> Option<T> {
         self.pop_inner()
     }
 
@@ -481,7 +524,7 @@ mod tests {
     #[test]
     fn fifo_single_thread() {
         let q = LfQueue::with_config(8, 16, true);
-        for i in 0..100 {
+        for i in 0..100u64 {
             q.push(i);
         }
         for i in 0..100 {
@@ -495,7 +538,7 @@ mod tests {
         let q = LfQueue::with_config(4, 8, true);
         // 25 rounds of fill/drain across 4-slot blocks with only 8 block ids:
         // impossible without recycling.
-        for round in 0..25 {
+        for round in 0..25u64 {
             for i in 0..16 {
                 q.push(round * 100 + i);
             }
@@ -506,6 +549,19 @@ mod tests {
         let st = q.stats();
         assert!(st.blocks_recycled > 0, "expected recycling: {st:?}");
         assert!(st.blocks_allocated <= 8);
+    }
+
+    #[test]
+    fn boxed_payloads_roundtrip_fifo() {
+        // Non-Copy payloads move through the generic slots intact.
+        let q: LfQueue<Box<u64>> = LfQueue::with_config(4, 8, true);
+        for i in 0..40u64 {
+            q.push(Box::new(i));
+        }
+        for i in 0..40u64 {
+            assert_eq!(q.pop().as_deref(), Some(&i));
+        }
+        assert_eq!(q.pop(), None);
     }
 
     #[test]
@@ -590,11 +646,25 @@ mod tests {
     fn try_push_fails_when_exhausted_without_consumers() {
         let q = LfQueue::with_config(2, 2, false);
         let mut pushed = 0;
-        while q.try_push(1) {
+        while q.try_push(1u64).is_ok() {
             pushed += 1;
             assert!(pushed < 100);
         }
         assert!(pushed >= 2);
+    }
+
+    #[test]
+    fn try_push_returns_the_value_on_failure() {
+        let q: LfQueue<Box<u64>> = LfQueue::with_config(2, 2, false);
+        loop {
+            match q.try_push(Box::new(7)) {
+                Ok(()) => {}
+                Err(v) => {
+                    assert_eq!(*v, 7, "rejected payload comes back intact");
+                    break;
+                }
+            }
+        }
     }
 
     #[test]

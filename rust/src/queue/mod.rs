@@ -1,4 +1,4 @@
-//! Concurrent queues (paper §III–IV).
+//! Concurrent queues (paper §III–IV), generic over the payload.
 //!
 //! - [`LfQueue`] — the paper's contribution: array-block lock-free queue
 //!   with pooled, recycled blocks (algorithms 7–10).
@@ -6,6 +6,12 @@
 //! - [`MsQueue`] — boost baseline: Michael–Scott linked queue, coarse-locked
 //!   free list.
 //! - [`MutexQueue`] — coarse-lock oracle.
+//!
+//! Every implementation takes a `T: Send` payload type parameter defaulting
+//! to `u64` (the paper's native element), so existing word-transport users
+//! are unchanged while the delegation fabric ([`crate::coordinator`]) ships
+//! typed op envelopes over the same queues. Non-`Copy` payloads are dropped
+//! exactly once across push/pop/queue-drop (see `tests/queue_payloads.rs`).
 
 pub mod lcrq;
 pub mod ms_queue;
@@ -18,3 +24,7 @@ pub use ms_queue::MsQueue;
 pub use mutex_queue::MutexQueue;
 pub use tbb_like::TbbLikeQueue;
 pub use traits::ConcurrentQueue;
+
+/// The paper's original `u64`-payload queue (keys / node pointers) — the
+/// transport word lane of the coordinator's router fabric.
+pub type WordQueue = LfQueue<u64>;

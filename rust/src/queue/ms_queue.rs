@@ -1,21 +1,39 @@
 //! Michael–Scott linked lock-free queue with a coarse-locked free list —
-//! the "boost-like" baseline of §III.
+//! the "boost-like" baseline of §III — generic over the payload type.
 //!
 //! Boost's `lockfree::queue` follows Michael & Scott [17]: each push/pop is two
 //! CAS operations over list pointers, and node memory management takes a
 //! coarse lock. The paper attributes its poor cache behaviour to exactly
 //! this shape; we reproduce it as a baseline. ABA on recycled nodes is
 //! prevented with tagged pointers in a 128-bit CAS word `(tag, ptr)`.
+//!
+//! ## Generic payloads
+//!
+//! The winning head CAS is unique per `(ptr, tag)` pair, so exactly one
+//! pop ever consumes a node's value: it moves the `MaybeUninit<T>` out
+//! *after* the CAS and then publishes the node's `taken` flag. The pop
+//! that later unlinks that node waits for `taken` before handing it to
+//! the free list, so a re-allocating pusher can never write the slot
+//! while the consumer's read is still in flight — value ownership
+//! transfers exactly once with no unsynchronized access. (The brief
+//! recycle wait mirrors the baseline's deliberately *blocking* memory
+//! management: the free list itself takes a coarse lock.)
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use crate::sync::{hi64, lo64, pack, AtomicU128, Backoff};
 
 use super::traits::ConcurrentQueue;
 
-struct MsNode {
-    value: AtomicU64,
+struct MsNode<T> {
+    value: UnsafeCell<MaybeUninit<T>>,
+    /// True once this node's value has been moved out (or never existed —
+    /// the initial dummy). The unlinking pop spins on it before recycling,
+    /// which makes the consumer's post-CAS `value` read race-free.
+    taken: AtomicBool,
     /// Tagged next: (tag << 64) | ptr.
     next: AtomicU128,
 }
@@ -23,22 +41,22 @@ struct MsNode {
 /// Arena that owns node memory for the queue's lifetime (addresses stable,
 /// nothing freed until drop), grown and recycled under a coarse lock —
 /// deliberately mirroring boost's blocking memory management.
-struct NodeArena {
-    blocks: Mutex<ArenaInner>,
+struct NodeArena<T> {
+    blocks: Mutex<ArenaInner<T>>,
 }
 
-struct ArenaInner {
-    blocks: Vec<Box<[MsNode]>>,
-    free: Vec<*mut MsNode>,
+struct ArenaInner<T> {
+    blocks: Vec<Box<[MsNode<T>]>>,
+    free: Vec<*mut MsNode<T>>,
     bump: usize,
     block_size: usize,
 }
 
-unsafe impl Send for NodeArena {}
-unsafe impl Sync for NodeArena {}
+unsafe impl<T: Send> Send for NodeArena<T> {}
+unsafe impl<T: Send> Sync for NodeArena<T> {}
 
-impl NodeArena {
-    fn new(block_size: usize) -> NodeArena {
+impl<T> NodeArena<T> {
+    fn new(block_size: usize) -> NodeArena<T> {
         NodeArena {
             blocks: Mutex::new(ArenaInner {
                 blocks: Vec::new(),
@@ -49,15 +67,19 @@ impl NodeArena {
         }
     }
 
-    fn alloc(&self) -> *mut MsNode {
+    fn alloc(&self) -> *mut MsNode<T> {
         let mut inner = self.blocks.lock().unwrap();
         if let Some(p) = inner.free.pop() {
             return p;
         }
         if inner.blocks.is_empty() || inner.bump == inner.block_size {
             let size = inner.block_size;
-            let block: Box<[MsNode]> = (0..size)
-                .map(|_| MsNode { value: AtomicU64::new(0), next: AtomicU128::new(0) })
+            let block: Box<[MsNode<T>]> = (0..size)
+                .map(|_| MsNode {
+                    value: UnsafeCell::new(MaybeUninit::uninit()),
+                    taken: AtomicBool::new(true), // no value until a push writes one
+                    next: AtomicU128::new(0),
+                })
                 .collect();
             inner.blocks.push(block);
             inner.bump = 0;
@@ -65,30 +87,30 @@ impl NodeArena {
         let i = inner.bump;
         inner.bump += 1;
         let last = inner.blocks.last_mut().unwrap();
-        &mut last[i] as *mut MsNode
+        &mut last[i] as *mut MsNode<T>
     }
 
-    fn free(&self, p: *mut MsNode) {
+    fn free(&self, p: *mut MsNode<T>) {
         self.blocks.lock().unwrap().free.push(p);
     }
 }
 
-/// Michael–Scott queue ("boost-like").
-pub struct MsQueue {
+/// Michael–Scott queue ("boost-like"), `u64` payloads by default.
+pub struct MsQueue<T: Send = u64> {
     head: AtomicU128, // (tag, ptr) — dummy-node convention
     tail: AtomicU128,
-    arena: NodeArena,
+    arena: NodeArena<T>,
 }
 
-unsafe impl Send for MsQueue {}
-unsafe impl Sync for MsQueue {}
+unsafe impl<T: Send> Send for MsQueue<T> {}
+unsafe impl<T: Send> Sync for MsQueue<T> {}
 
-impl MsQueue {
-    pub fn new() -> MsQueue {
+impl<T: Send> MsQueue<T> {
+    pub fn new() -> MsQueue<T> {
         Self::with_block_size(8192)
     }
 
-    pub fn with_block_size(block_size: usize) -> MsQueue {
+    pub fn with_block_size(block_size: usize) -> MsQueue<T> {
         let arena = NodeArena::new(block_size);
         let dummy = arena.alloc();
         unsafe { (*dummy).next.store(0) };
@@ -100,17 +122,40 @@ impl MsQueue {
     }
 }
 
-impl Default for MsQueue {
+impl<T: Send> Default for MsQueue<T> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl ConcurrentQueue for MsQueue {
-    fn push(&self, v: u64) {
+impl<T: Send> Drop for MsQueue<T> {
+    fn drop(&mut self) {
+        if !std::mem::needs_drop::<T>() {
+            return; // arena Boxes free the raw memory
+        }
+        // Live values sit strictly after the dummy: the dummy's own value
+        // was consumed when it became dummy (or never written, for the
+        // initial one). Nodes on the free list are off this chain.
+        let mut p = lo64(self.head.load()) as *mut MsNode<T>;
+        loop {
+            let next = lo64(unsafe { (*p).next.load() }) as *mut MsNode<T>;
+            if next.is_null() {
+                break;
+            }
+            unsafe { (*(*next).value.get()).assume_init_drop() };
+            p = next;
+        }
+    }
+}
+
+impl<T: Send> ConcurrentQueue<T> for MsQueue<T> {
+    fn push(&self, v: T) {
         let node = self.arena.alloc();
         unsafe {
-            (*node).value.store(v, Ordering::Relaxed);
+            // Exclusive owner until linked: the node came off the free list
+            // only after its previous consumer published `taken`.
+            (*node).value.get().write(MaybeUninit::new(v));
+            (*node).taken.store(false, Ordering::Relaxed);
             // bump our own tag so a recycled node's next CAS can't ABA
             let old = (*node).next.load();
             (*node).next.store(pack(hi64(old) + 1, 0));
@@ -118,7 +163,7 @@ impl ConcurrentQueue for MsQueue {
         let mut b = Backoff::new();
         loop {
             let tail = self.tail.load();
-            let tail_ptr = lo64(tail) as *mut MsNode;
+            let tail_ptr = lo64(tail) as *mut MsNode<T>;
             let next = unsafe { (*tail_ptr).next.load() };
             if tail != self.tail.load() {
                 continue;
@@ -143,17 +188,17 @@ impl ConcurrentQueue for MsQueue {
         }
     }
 
-    fn try_push(&self, v: u64) -> bool {
+    fn try_push(&self, v: T) -> Result<(), T> {
         self.push(v);
-        true
+        Ok(())
     }
 
-    fn pop(&self) -> Option<u64> {
+    fn pop(&self) -> Option<T> {
         let mut b = Backoff::new();
         loop {
             let head = self.head.load();
             let tail = self.tail.load();
-            let head_ptr = lo64(head) as *mut MsNode;
+            let head_ptr = lo64(head) as *mut MsNode<T>;
             let next = unsafe { (*head_ptr).next.load() };
             if head != self.head.load() {
                 continue;
@@ -167,13 +212,24 @@ impl ConcurrentQueue for MsQueue {
                     .tail
                     .compare_exchange(tail, pack(hi64(tail) + 1, lo64(next)));
             } else {
-                let next_ptr = lo64(next) as *mut MsNode;
-                let v = unsafe { (*next_ptr).value.load(Ordering::Relaxed) };
+                let next_ptr = lo64(next) as *mut MsNode<T>;
                 if self
                     .head
                     .compare_exchange(head, pack(hi64(head) + 1, lo64(next)))
                     .is_ok()
                 {
+                    // Unique consumer of next_ptr's value (the tag CAS wins
+                    // at most once per (ptr, tag)): read it, then publish
+                    // `taken` so the pop that later unlinks next_ptr can
+                    // recycle it (see module docs).
+                    let v = unsafe { (*next_ptr).value.get().read().assume_init() };
+                    unsafe { (*next_ptr).taken.store(true, Ordering::Release) };
+                    // Recycle the outgoing dummy only after its own value
+                    // read (by the pop that made it dummy) has completed.
+                    let mut spin = Backoff::new();
+                    while !unsafe { (*head_ptr).taken.load(Ordering::Acquire) } {
+                        spin.wait();
+                    }
                     self.arena.free(head_ptr);
                     return Some(v);
                 }
@@ -196,7 +252,7 @@ mod tests {
     #[test]
     fn fifo_single_thread() {
         let q = MsQueue::with_block_size(16);
-        for i in 0..100 {
+        for i in 0..100u64 {
             q.push(i);
         }
         for i in 0..100 {
@@ -208,7 +264,7 @@ mod tests {
     #[test]
     fn node_recycling_under_lock() {
         let q = MsQueue::with_block_size(4);
-        for round in 0..50 {
+        for round in 0..50u64 {
             for i in 0..10 {
                 q.push(round * 10 + i);
             }
@@ -218,6 +274,18 @@ mod tests {
         }
         // With recycling, 500 pushes fit comfortably in a few 4-node blocks.
         assert!(q.arena.blocks.lock().unwrap().blocks.len() < 20);
+    }
+
+    #[test]
+    fn boxed_payloads_roundtrip() {
+        let q: MsQueue<Box<u64>> = MsQueue::with_block_size(4);
+        for i in 0..30u64 {
+            q.push(Box::new(i));
+        }
+        for i in 0..30u64 {
+            assert_eq!(q.pop().as_deref(), Some(&i));
+        }
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -7,33 +7,33 @@ use std::sync::Mutex;
 
 use super::traits::ConcurrentQueue;
 
-pub struct MutexQueue {
-    inner: Mutex<VecDeque<u64>>,
+pub struct MutexQueue<T: Send = u64> {
+    inner: Mutex<VecDeque<T>>,
 }
 
-impl MutexQueue {
-    pub fn new() -> MutexQueue {
+impl<T: Send> MutexQueue<T> {
+    pub fn new() -> MutexQueue<T> {
         MutexQueue { inner: Mutex::new(VecDeque::new()) }
     }
 }
 
-impl Default for MutexQueue {
+impl<T: Send> Default for MutexQueue<T> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl ConcurrentQueue for MutexQueue {
-    fn push(&self, v: u64) {
+impl<T: Send> ConcurrentQueue<T> for MutexQueue<T> {
+    fn push(&self, v: T) {
         self.inner.lock().unwrap().push_back(v);
     }
 
-    fn try_push(&self, v: u64) -> bool {
+    fn try_push(&self, v: T) -> Result<(), T> {
         self.push(v);
-        true
+        Ok(())
     }
 
-    fn pop(&self) -> Option<u64> {
+    fn pop(&self) -> Option<T> {
         self.inner.lock().unwrap().pop_front()
     }
 
@@ -49,7 +49,7 @@ mod tests {
     #[test]
     fn fifo() {
         let q = MutexQueue::new();
-        q.push(1);
+        q.push(1u64);
         q.push(2);
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));

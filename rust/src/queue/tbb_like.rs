@@ -10,18 +10,18 @@
 use super::lcrq::{LfQueue, QueueStats};
 use super::traits::ConcurrentQueue;
 
-pub struct TbbLikeQueue {
-    inner: LfQueue,
+pub struct TbbLikeQueue<T: Send = u64> {
+    inner: LfQueue<T>,
 }
 
-impl TbbLikeQueue {
+impl<T: Send> TbbLikeQueue<T> {
     /// Paper's block size (8192) with a generous segment directory, matching
     /// TBB's eager reservation behaviour.
-    pub fn new() -> TbbLikeQueue {
+    pub fn new() -> TbbLikeQueue<T> {
         Self::with_config(8192, 1 << 16)
     }
 
-    pub fn with_config(block_size: usize, max_blocks: usize) -> TbbLikeQueue {
+    pub fn with_config(block_size: usize, max_blocks: usize) -> TbbLikeQueue<T> {
         TbbLikeQueue { inner: LfQueue::with_config(block_size, max_blocks, false) }
     }
 
@@ -30,22 +30,22 @@ impl TbbLikeQueue {
     }
 }
 
-impl Default for TbbLikeQueue {
+impl<T: Send> Default for TbbLikeQueue<T> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl ConcurrentQueue for TbbLikeQueue {
-    fn push(&self, v: u64) {
+impl<T: Send> ConcurrentQueue<T> for TbbLikeQueue<T> {
+    fn push(&self, v: T) {
         self.inner.push(v)
     }
 
-    fn try_push(&self, v: u64) -> bool {
+    fn try_push(&self, v: T) -> Result<(), T> {
         self.inner.try_push(v)
     }
 
-    fn pop(&self) -> Option<u64> {
+    fn pop(&self) -> Option<T> {
         self.inner.pop()
     }
 
@@ -61,7 +61,7 @@ mod tests {
     #[test]
     fn basic_fifo() {
         let q = TbbLikeQueue::with_config(8, 64);
-        for i in 0..50 {
+        for i in 0..50u64 {
             q.push(i);
         }
         for i in 0..50 {
@@ -73,7 +73,7 @@ mod tests {
     #[test]
     fn never_recycles() {
         let q = TbbLikeQueue::with_config(4, 1024);
-        for round in 0..20 {
+        for round in 0..20u64 {
             for i in 0..8 {
                 q.push(round * 8 + i);
             }

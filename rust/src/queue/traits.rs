@@ -1,19 +1,23 @@
-//! Common interface over all queue implementations so benchmarks and the
-//! router can swap them.
+//! Common interface over all queue implementations so benchmarks, the
+//! router and the delegation fabric can swap them.
 
-/// A multi-producer multi-consumer queue of `u64` payloads.
+/// A multi-producer multi-consumer queue of `T` payloads.
 ///
-/// `u64` is the native payload of the paper's experiments (keys / node
-/// pointers); richer types go through an arena index.
-pub trait ConcurrentQueue: Send + Sync {
+/// `u64` is the default payload — the native element of the paper's
+/// experiments (keys / node pointers). The delegation fabric instantiates
+/// the same implementations with typed op envelopes; implementations own a
+/// pushed value until it is popped (or returned by a failed `try_push`) and
+/// drop any still-enqueued values exactly once when the queue drops.
+pub trait ConcurrentQueue<T: Send = u64>: Send + Sync {
     /// Enqueue, blocking (with backoff) if the implementation is at capacity.
-    fn push(&self, v: u64);
+    fn push(&self, v: T);
 
-    /// Try to enqueue; `false` if the queue is at capacity right now.
-    fn try_push(&self, v: u64) -> bool;
+    /// Try to enqueue; hands the value back if the queue is at capacity
+    /// right now (so non-`Copy` payloads are never silently lost).
+    fn try_push(&self, v: T) -> Result<(), T>;
 
     /// Dequeue; `None` if the queue is observed empty.
-    fn pop(&self) -> Option<u64>;
+    fn pop(&self) -> Option<T>;
 
     /// Implementation name for reports.
     fn name(&self) -> &'static str;

@@ -51,6 +51,12 @@ impl OpMix {
     /// Mixed point/range workload (§IX terminal-list advantage): 10%
     /// insert, 70% find, 20% range scans.
     pub const RANGE: OpMix = OpMix::with_range(100, 700, 0, 200);
+    /// Hierarchical-delegation workload (Table XI): all four op kinds —
+    /// 20% insert, 64% find, 6% erase, 10% range scans — so the Direct vs
+    /// Delegated comparison exercises every envelope type, including the
+    /// cross-shard scans that make Direct reach into remote shards (pair
+    /// with a prefix-spanning `range_window`).
+    pub const HIER: OpMix = OpMix::with_range(200, 640, 60, 100);
 
     /// Deterministic op for a key: both the router (producer) and the
     /// worker (consumer) compute the same answer from the key alone.

@@ -1,0 +1,267 @@
+//! Hierarchical-delegation correctness tests (run in CI as the release
+//! delegation-stress step: `CDSKL_SCALE=... cargo test --release -q hier_`).
+//!
+//! A `BTreeMap` oracle drives the typed-op fabric end to end for every
+//! `StoreKind`: synchronous calls must return exactly what the oracle
+//! predicts (insert/erase applied-ness, find values, range rows), async
+//! batched delegation must quiesce with every completion aggregated into
+//! the caller's padded slot, and — the paper's §VI–VII claim — every
+//! delegated shard dereference must land on the shard's home NUMA node
+//! (`remote == 0`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use cdskl::coordinator::{
+    for_each_prefix_segment, DelegatedOp, OpFabric, OpResult, ShardedStore, StoreKind,
+};
+// The canonical 8-kind list, shared with Table XI so the two can't drift.
+use cdskl::experiments::hier::T11_KINDS as ALL_KINDS;
+use cdskl::numa::{pin_to_cpu, Topology};
+use cdskl::util::rng::Rng;
+
+/// CDSKL_SCALE divides the op counts, mirroring the experiment harness
+/// (release CI runs with a small scale => more ops).
+fn scaled_ops(paper_ops: u64) -> u64 {
+    let scale = std::env::var("CDSKL_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(40u64);
+    (paper_ops / scale.max(1)).clamp(800, 200_000)
+}
+
+/// Key universe: all 8 prefix segments, small per-segment offsets so finds
+/// and erases collide with earlier inserts.
+fn gen_key(rng: &mut Rng) -> u64 {
+    (rng.below(8) << 61) | rng.below(512)
+}
+
+/// Run `body(caller_id, fabric, store)` while `threads` pinned owner
+/// threads drain the fabric; owners exit once `body` returns and their
+/// queues are empty.
+fn with_owner_pool<R>(
+    kind: StoreKind,
+    threads: usize,
+    topo: Topology,
+    batch_n: usize,
+    body: impl FnOnce(usize, &OpFabric, &ShardedStore) -> R,
+) -> (R, Arc<ShardedStore>, Arc<OpFabric>) {
+    let store = Arc::new(ShardedStore::new(kind, 8, 1 << 13, topo.clone(), threads));
+    let fabric = Arc::new(OpFabric::new(threads, 1, 8, topo, 64, batch_n));
+    let stop = Arc::new(AtomicBool::new(false));
+    let out = std::thread::scope(|scope| {
+        for t in 0..threads {
+            let fabric = fabric.clone();
+            let store = store.clone();
+            let stop = stop.clone();
+            scope.spawn(move || {
+                pin_to_cpu(t);
+                loop {
+                    let n = fabric.drain(t, &store, 16);
+                    if n == 0 {
+                        if stop.load(Ordering::Acquire) && fabric.pending_batches() == 0 {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+        let r = body(threads, &fabric, &store);
+        stop.store(true, Ordering::Release);
+        r
+    });
+    (out, store, fabric)
+}
+
+/// Acceptance: synchronous delegated insert/find/erase/range agree with a
+/// sequential BTreeMap oracle on every store kind.
+#[test]
+fn hier_delegated_matches_btreemap_oracle_all_kinds() {
+    let ops = scaled_ops(200_000).min(4_000); // sync round-trips are costly
+    for (i, kind) in ALL_KINDS.into_iter().enumerate() {
+        let ((), store, fabric) = with_owner_pool(
+            kind,
+            4,
+            Topology::virtual_grid(2, 2),
+            8,
+            |caller_id, fabric, store| {
+                let mut caller = fabric.caller(caller_id, None);
+                let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+                let mut rng = Rng::new(0x11E8 + i as u64);
+                for n in 0..ops {
+                    let k = gen_key(&mut rng);
+                    match rng.below(100) {
+                        0..=39 => {
+                            let v = n ^ 0xABCD;
+                            let got = caller.call(DelegatedOp::Insert { key: k, value: v }, store);
+                            // set semantics: a duplicate insert keeps the
+                            // old value and reports not-applied
+                            let fresh = !oracle.contains_key(&k);
+                            if fresh {
+                                oracle.insert(k, v);
+                            }
+                            assert_eq!(got, OpResult::Applied(fresh), "{kind:?} insert {k}");
+                        }
+                        40..=64 => {
+                            let got = caller.call(DelegatedOp::Find { key: k }, store);
+                            assert_eq!(
+                                got,
+                                OpResult::Value(oracle.get(&k).copied()),
+                                "{kind:?} find {k}"
+                            );
+                        }
+                        65..=84 => {
+                            let got = caller.call(DelegatedOp::Erase { key: k }, store);
+                            assert_eq!(
+                                got,
+                                OpResult::Applied(oracle.remove(&k).is_some()),
+                                "{kind:?} erase {k}"
+                            );
+                        }
+                        _ => {
+                            // windows sized to cross prefix boundaries now
+                            // and then (lo near a segment top)
+                            let lo = if rng.below(4) == 0 {
+                                (rng.below(7) << 61) | (((1u64 << 61) - 1) - rng.below(64))
+                            } else {
+                                k
+                            };
+                            let hi = lo.saturating_add(rng.below(1u64 << 62));
+                            let rows = sync_range(&mut caller, lo, hi, store);
+                            let want: Vec<(u64, u64)> =
+                                oracle.range(lo..=hi).map(|(k, v)| (*k, *v)).collect();
+                            assert_eq!(rows, want, "{kind:?} range [{lo:#x}, {hi:#x}]");
+                        }
+                    }
+                }
+                caller.finish(store);
+            },
+        );
+        // end state agrees and every dereference was NUMA-local
+        let (_, remote) = store.locality.snapshot();
+        assert_eq!(remote, 0, "{kind:?}: delegated ops must stay on home nodes");
+        assert_eq!(fabric.stats().remote_exec, 0, "{kind:?}: fabric routing invariant");
+    }
+}
+
+/// Sync cross-shard range: split per prefix (like the async
+/// `delegate_range`) and concatenate the per-owner results in prefix
+/// order — globally sorted by construction.
+fn sync_range(
+    caller: &mut cdskl::coordinator::Caller<'_>,
+    lo: u64,
+    hi: u64,
+    store: &ShardedStore,
+) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    for_each_prefix_segment(lo, hi, |slo, shi| {
+        match caller.call(DelegatedOp::Range { lo: slo, hi: shi }, store) {
+            OpResult::Rows(rows) => out.extend(rows),
+            other => panic!("range returned {other:?}"),
+        }
+    });
+    out
+}
+
+/// Acceptance: async batched delegation (the engine's fast path) quiesces,
+/// aggregates completions into the caller's slot, and matches the oracle
+/// at quiescence — including `Batch` envelopes and cross-shard ranges.
+#[test]
+fn hier_async_batched_delegation_quiesces_and_aggregates() {
+    let n = scaled_ops(400_000);
+    for kind in [StoreKind::DetSkiplistLf, StoreKind::HashTwoLevelSpo] {
+        let ((), store, fabric) = with_owner_pool(
+            kind,
+            4,
+            Topology::virtual_grid(2, 2),
+            16,
+            |caller_id, fabric, store| {
+                let mut caller = fabric.caller(caller_id, None);
+                let mut rng = Rng::new(0xA57C);
+                let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+                // phase 1: a bulk Batch envelope per shard
+                let bulk: Vec<(u64, u64)> =
+                    (0..256u64).map(|i| ((i % 8) << 61 | i, i + 1)).collect();
+                for &(k, v) in &bulk {
+                    oracle.insert(k, v);
+                }
+                caller.delegate_insert_batch(&bulk, store);
+                // phase 2: async singles — per-owner FIFO keeps each key's
+                // insert ahead of its erase within this caller
+                for _ in 0..n {
+                    let k = gen_key(&mut rng);
+                    if rng.below(3) < 2 {
+                        // set semantics: a duplicate insert keeps the old value
+                        oracle.entry(k).or_insert(k ^ 7);
+                        caller.delegate(DelegatedOp::Insert { key: k, value: k ^ 7 }, store);
+                    } else {
+                        oracle.remove(&k);
+                        caller.delegate(DelegatedOp::Erase { key: k }, store);
+                    }
+                }
+                // phase 3: full-space scans aggregate rows into our slot
+                let subs = caller.delegate_range(0, u64::MAX, store);
+                assert_eq!(subs, 8);
+                caller.finish(store);
+                // quiesce: every submitted op executed
+                let t0 = std::time::Instant::now();
+                while fabric.stats().executed != fabric.stats().submitted {
+                    std::thread::yield_now();
+                    assert!(t0.elapsed().as_secs() < 120, "{kind:?}: fabric failed to quiesce");
+                }
+                // resident state matches the oracle exactly
+                let got = store.range(0, u64::MAX);
+                let want: Vec<(u64, u64)> = oracle.iter().map(|(k, v)| (*k, *v)).collect();
+                assert_eq!(got, want, "{kind:?}: end state vs oracle");
+            },
+        );
+        let st = fabric.stats();
+        assert_eq!(st.executed, st.submitted, "{kind:?}");
+        assert!(st.batch_occupancy() > 1.0, "{kind:?}: flush-on-N must batch");
+        assert!(st.queued_batches > 0, "{kind:?}: a slot-only caller always queues");
+        let totals = fabric.slot_totals(4);
+        assert_eq!(totals.acked, st.executed, "{kind:?}: single caller acks everything");
+        assert!(totals.rows > 0, "{kind:?}: scan rows aggregate to the caller");
+        let (_, remote) = store.locality.snapshot();
+        assert_eq!(remote, 0, "{kind:?}: async path is NUMA-local too");
+    }
+}
+
+/// Every store kind survives a quick async churn through the fabric with
+/// zero remote shard dereferences (the t11 assertion at test scale).
+#[test]
+fn hier_delegation_is_numa_local_for_every_kind() {
+    let n = scaled_ops(100_000);
+    for kind in ALL_KINDS {
+        let ((), store, fabric) = with_owner_pool(
+            kind,
+            4,
+            Topology::virtual_grid(2, 2),
+            16,
+            |caller_id, fabric, store| {
+                let mut caller = fabric.caller(caller_id, None);
+                let mut rng = Rng::new(0x10CA1);
+                for _ in 0..n {
+                    let k = gen_key(&mut rng);
+                    match rng.below(4) {
+                        0 => caller.delegate(DelegatedOp::Insert { key: k, value: k }, store),
+                        1 => caller.delegate(DelegatedOp::Erase { key: k }, store),
+                        2 => {
+                            caller.delegate_range(k, k.saturating_add(1 << 61), store);
+                        }
+                        _ => caller.delegate(DelegatedOp::Find { key: k }, store),
+                    }
+                }
+                caller.finish(store);
+                let t0 = std::time::Instant::now();
+                while fabric.stats().executed != fabric.stats().submitted {
+                    std::thread::yield_now();
+                    assert!(t0.elapsed().as_secs() < 120, "{kind:?}: fabric failed to quiesce");
+                }
+            },
+        );
+        let (local, remote) = store.locality.snapshot();
+        assert_eq!(remote, 0, "{kind:?}: delegated execution must be NUMA-local");
+        assert!(local > 0, "{kind:?}");
+        assert_eq!(fabric.stats().remote_exec, 0, "{kind:?}");
+    }
+}
