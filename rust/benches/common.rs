@@ -2,8 +2,21 @@
 //! plain `harness = false` binaries). Env vars tune the sweep:
 //! CDSKL_THREADS="4,8,...", CDSKL_REPS, CDSKL_SCALE (divides paper op
 //! counts; default keeps each bench to roughly a minute on one CPU).
+//! Passing `--smoke` (e.g. `cargo bench --bench table12_cache -- --smoke`)
+//! shrinks the run to a CI-sized smoke test.
+//!
+//! Every bench finishes with [`emit`], which writes a machine-readable
+//! `BENCH_<bench>.json` artifact next to the working directory so the perf
+//! trajectory is tracked across PRs (schema: EXPERIMENTS.md
+//! §Bench-artifacts).
 
 use cdskl::experiments::ExpConfig;
+use cdskl::util::bench::Table;
+
+/// `--smoke` anywhere on the bench's argv (cargo forwards args after `--`).
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
 
 pub fn config(default_scale: u64) -> ExpConfig {
     let mut cfg = ExpConfig::default();
@@ -18,5 +31,31 @@ pub fn config(default_scale: u64) -> ExpConfig {
     if let Ok(s) = std::env::var("CDSKL_SCALE") {
         cfg.scale = s.parse().expect("CDSKL_SCALE");
     }
+    if smoke() {
+        // CI smoke: one tiny rep, two thread points, minimum op counts
+        cfg.scale = cfg.scale.max(100_000);
+        cfg.threads = vec![2, 4];
+        cfg.reps = 1;
+    }
     cfg
+}
+
+/// Print every table and write the `BENCH_<bench>.json` artifact:
+/// `{"bench", "scale", "reps", "threads": [...], "tables": [Table::to_json]}`.
+pub fn emit(bench: &str, cfg: &ExpConfig, tables: &[Table]) {
+    for t in tables {
+        t.print();
+    }
+    let tjson = tables.iter().map(|t| t.to_json()).collect::<Vec<_>>().join(",");
+    let threads =
+        cfg.threads.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",");
+    let json = format!(
+        "{{\"bench\":\"{bench}\",\"scale\":{},\"reps\":{},\"threads\":[{threads}],\"tables\":[{tjson}]}}\n",
+        cfg.scale, cfg.reps
+    );
+    let path = format!("BENCH_{bench}.json");
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("(bench artifact written to {path})"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
 }

@@ -5,7 +5,6 @@ mod common;
 fn main() {
     let cfg = common::config(100);
     println!("# bench table10_mem (unified mem layer, paper §V)\n");
-    for t in cdskl::experiments::t10_mem(&cfg) {
-        t.print();
-    }
+    let tables = cdskl::experiments::t10_mem(&cfg);
+    common::emit("table10_mem", &cfg, &tables);
 }

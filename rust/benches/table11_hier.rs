@@ -8,5 +8,6 @@ fn main() {
     let cfg = common::config(100);
     let router = KeyRouter::auto("artifacts");
     println!("# bench table11_hier (delegation engine, paper §VI-VII)\n");
-    cdskl::experiments::t11_hier(&cfg, &router).print();
+    let tables = vec![cdskl::experiments::t11_hier(&cfg, &router)];
+    common::emit("table11_hier", &cfg, &tables);
 }

@@ -1,0 +1,16 @@
+//! Bench for Table XII (new, beyond the paper): the cache-conscious search
+//! path — hot/cold node split + descent prefetching + per-thread search
+//! fingers — baseline vs finger-accelerated derefs/op under the
+//! repeated-nearby-key workload, Direct and Delegated. Self-asserts hit
+//! rate > 50% and a strict deref reduction in both modes.
+//!
+//! `cargo bench --bench table12_cache -- --smoke` runs the CI-sized smoke.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(100);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table12_cache (cache-conscious search path, Table XII)\n");
+    let tables = vec![cdskl::experiments::t12_cache(&cfg, &router)];
+    common::emit("table12_cache", &cfg, &tables);
+}

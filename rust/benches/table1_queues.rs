@@ -4,7 +4,6 @@ mod common;
 fn main() {
     let cfg = common::config(1000);
     println!("# bench table1_queues (paper Table I / fig 3)\n");
-    for t in cdskl::experiments::t1_queues(&cfg) {
-        t.print();
-    }
+    let tables = cdskl::experiments::t1_queues(&cfg);
+    common::emit("table1_queues", &cfg, &tables);
 }

@@ -6,5 +6,6 @@ fn main() {
     let cfg = common::config(100);
     let router = KeyRouter::auto("artifacts");
     println!("# bench table2_skiplist_w1 (paper Table II / fig 4)\n");
-    cdskl::experiments::t2_skiplist_w1(&cfg, &router).print();
+    let tables = vec![cdskl::experiments::t2_skiplist_w1(&cfg, &router)];
+    common::emit("table2_skiplist_w1", &cfg, &tables);
 }

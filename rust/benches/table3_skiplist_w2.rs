@@ -6,5 +6,6 @@ fn main() {
     let cfg = common::config(400);
     let router = KeyRouter::auto("artifacts");
     println!("# bench table3_skiplist_w2 (paper Table III / fig 5)\n");
-    cdskl::experiments::t3_skiplist_w2(&cfg, &router).print();
+    let tables = vec![cdskl::experiments::t3_skiplist_w2(&cfg, &router)];
+    common::emit("table3_skiplist_w2", &cfg, &tables);
 }

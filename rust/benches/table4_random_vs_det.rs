@@ -8,12 +8,13 @@ fn main() {
     let router = KeyRouter::auto("artifacts");
     println!("# bench table4_random_vs_det (paper Table IV / fig 6)\n");
     let t = cdskl::experiments::t4_random_vs_det(&cfg, &router);
-    t.print();
     // shape check: randomized skiplist must win overall
     let (mut det, mut rnd) = (0.0, 0.0);
     for (_, row) in &t.rows {
         det += row[0];
         rnd += row[1];
     }
+    let tables = vec![t];
+    common::emit("table4_random_vs_det", &cfg, &tables);
     println!("shape: random/deterministic speedup = {:.2}x (paper: 3-12x)", det / rnd);
 }

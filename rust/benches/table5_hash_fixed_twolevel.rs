@@ -6,5 +6,6 @@ fn main() {
     let cfg = common::config(200);
     let router = KeyRouter::auto("artifacts");
     println!("# bench table5_hash_fixed_twolevel (paper Table V / fig 7)\n");
-    cdskl::experiments::t5_hash_fixed_twolevel(&cfg, &router).print();
+    let tables = vec![cdskl::experiments::t5_hash_fixed_twolevel(&cfg, &router)];
+    common::emit("table5_hash_fixed_twolevel", &cfg, &tables);
 }

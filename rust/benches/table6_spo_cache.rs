@@ -5,11 +5,12 @@ fn main() {
     let cfg = common::config(100);
     println!("# bench table6_spo_cache (paper Table VI / fig 8)\n");
     let t = cdskl::experiments::t6_spo_cache(&cfg);
-    t.print();
     let worst = t
         .rows
         .iter()
         .map(|(_, r)| r[2] / r[3].max(1e-9))
         .fold(0.0f64, f64::max);
+    let tables = vec![t];
+    common::emit("table6_spo_cache", &cfg, &tables);
     println!("shape: flat/two-level miss-proxy ratio up to {worst:.1}x (paper: up to ~17x wall)");
 }

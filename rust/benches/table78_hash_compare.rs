@@ -6,7 +6,6 @@ fn main() {
     let cfg = common::config(1000);
     let router = KeyRouter::auto("artifacts");
     println!("# bench table78_hash_compare (paper Tables VII-VIII / fig 9)\n");
-    for t in cdskl::experiments::t78_hash_compare(&cfg, &router) {
-        t.print();
-    }
+    let tables = cdskl::experiments::t78_hash_compare(&cfg, &router);
+    common::emit("table78_hash_compare", &cfg, &tables);
 }

@@ -7,5 +7,6 @@ fn main() {
     let cfg = common::config(100);
     let router = KeyRouter::auto("artifacts");
     println!("# bench table9_range (ordered-map API, paper §IX)\n");
-    cdskl::experiments::t9_range(&cfg, &router).print();
+    let tables = vec![cdskl::experiments::t9_range(&cfg, &router)];
+    common::emit("table9_range", &cfg, &tables);
 }

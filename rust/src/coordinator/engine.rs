@@ -165,11 +165,13 @@ pub fn run_with_mode(
     let chunk = 65_536usize;
     let mut base = seed.wrapping_mul(0x9E37_79B9);
     let mut remaining = spec.total_ops as usize;
+    let mut seq = 0u64; // fill position: drives the hot-window keygen
     while remaining > 0 {
         let n = remaining.min(chunk);
         let batch = key_router.route(base, 8192, n);
         for &raw in &batch.keys {
-            let word = spec.encode(raw);
+            let word = spec.encode(raw, seq);
+            seq += 1;
             match mode {
                 // Direct: home-node routing (the paper's word fabric).
                 ExecMode::Direct => words.route_key(word, &mut rng),

@@ -41,6 +41,11 @@ pub trait KvStore: Send + Sync {
     fn mem_stats(&self) -> PoolStats {
         PoolStats::default()
     }
+
+    /// Toggle the per-thread search-finger cache (Table XII ablation). A
+    /// no-op for structures without fingers; the deterministic skiplist
+    /// overrides it.
+    fn set_finger_cache(&self, _on: bool) {}
 }
 
 /// Ordered-map capability layered on [`KvStore`]: range scans and batch
@@ -93,6 +98,9 @@ impl KvStore for DetSkiplist {
     fn mem_stats(&self) -> PoolStats {
         DetSkiplist::mem_stats(self)
     }
+    fn set_finger_cache(&self, on: bool) {
+        DetSkiplist::set_finger_cache(self, on)
+    }
 }
 
 impl OrderedKv for DetSkiplist {
@@ -122,8 +130,14 @@ impl KvStore for RandomSkiplist {
     }
     fn stats(&self) -> SkiplistStats {
         // the randomized skiplist keeps one retry counter, incremented on
-        // traversal interference — report it on the find side
-        SkiplistStats { find_retries: self.retry_count(), ..SkiplistStats::default() }
+        // traversal interference — report it on the find side, along with
+        // its Table XII cache-path counters
+        SkiplistStats {
+            find_retries: self.retry_count(),
+            node_derefs: self.deref_count(),
+            prefetches: self.prefetch_count(),
+            ..SkiplistStats::default()
+        }
     }
     fn mem_stats(&self) -> PoolStats {
         RandomSkiplist::mem_stats(self)
@@ -407,6 +421,14 @@ impl ShardedStore {
             }
         }
         n
+    }
+
+    /// Toggle every shard's search-finger cache (Table XII runs the same
+    /// workload with and without fingers; no-op for non-skiplist kinds).
+    pub fn set_finger_cache(&self, on: bool) {
+        for s in &self.shards {
+            s.set_finger_cache(on);
+        }
     }
 
     /// Retry counters summed across every shard (observability: workloads

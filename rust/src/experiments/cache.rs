@@ -1,0 +1,166 @@
+//! Table XII (beyond the paper): the cache-conscious search path —
+//! hot/cold node split, descent prefetching and per-thread search fingers
+//! — measured end to end through the engine.
+//!
+//! Methodology (EXPERIMENTS.md §Table XII): a repeated-nearby-key workload
+//! (`OpMix::W2` with a 64-key moving hot window, the zipf-ish working set
+//! the fingers exploit) runs on the deterministic skiplist store twice per
+//! mode — once with fingers disabled (the pure top-down baseline) and once
+//! enabled — in both [`ExecMode::Direct`] and [`ExecMode::Delegated`].
+//! Reported per run: hot-line node dereferences per op (the cache-cost
+//! proxy), the finger hit rate, prefetches per op and throughput.
+//!
+//! The run self-asserts the PR's acceptance bar: finger hit rate > 50% and
+//! *strictly fewer* node dereferences per op than the baseline, in both
+//! execution modes.
+
+use std::sync::Arc;
+
+use crate::coordinator::{run_with_mode, ExecMode, ShardedStore, StoreKind};
+use crate::runtime::KeyRouter;
+use crate::util::bench::Table;
+use crate::workload::{OpMix, WorkloadSpec};
+
+use super::ExpConfig;
+
+/// Width of the moving hot key window (keys per locality neighbourhood).
+pub const T12_HOT_SPAN: u64 = 64;
+/// Ops per hot window before the neighbourhood moves.
+pub const T12_HOT_PHASE: u64 = 2048;
+/// Bounded key space: small enough that finds hit resident keys, large
+/// enough that the per-shard structures grow real height to descend.
+pub const T12_KEY_SPACE: u64 = 4096;
+
+struct CacheRun {
+    derefs_per_op: f64,
+    hit_rate: f64,
+    prefetch_per_op: f64,
+    mops: f64,
+}
+
+/// One measured cell, averaged over `cfg.reps` fresh-store runs (every rep
+/// rebuilds the store so counters and resident sets start clean).
+fn run_cache(
+    cfg: &ExpConfig,
+    ops: u64,
+    threads: usize,
+    router: &KeyRouter,
+    mode: ExecMode,
+    fingers: bool,
+) -> CacheRun {
+    let reps = cfg.reps.max(1);
+    let mut acc = CacheRun { derefs_per_op: 0.0, hit_rate: 0.0, prefetch_per_op: 0.0, mops: 0.0 };
+    for rep in 0..reps {
+        let store = Arc::new(ShardedStore::new(
+            StoreKind::DetSkiplistLf,
+            8,
+            (ops as usize / 4).max(1 << 14),
+            cfg.topology.clone(),
+            threads,
+        ));
+        store.set_finger_cache(fingers);
+        let spec = WorkloadSpec::new("cache", ops, OpMix::W2, T12_KEY_SPACE)
+            .with_hot_span(T12_HOT_SPAN, T12_HOT_PHASE);
+        let m = run_with_mode(&store, &spec, threads, router, cfg.seed + rep as u64, mode);
+        let st = store.stats();
+        let done = m.ops().max(1);
+        acc.derefs_per_op += st.node_derefs as f64 / done as f64;
+        acc.hit_rate += st.finger_hit_rate();
+        acc.prefetch_per_op += st.prefetches as f64 / done as f64;
+        acc.mops += m.throughput_mops();
+    }
+    let n = reps as f64;
+    CacheRun {
+        derefs_per_op: acc.derefs_per_op / n,
+        hit_rate: acc.hit_rate / n,
+        prefetch_per_op: acc.prefetch_per_op / n,
+        mops: acc.mops / n,
+    }
+}
+
+/// Table XII: baseline (fingers off) vs finger-accelerated derefs/op, hit
+/// rate and prefetch distance, per thread count, in Direct and Delegated
+/// modes. Panics if the acceptance bar is missed (hit rate <= 50% or no
+/// strict deref reduction) — the same role the locality assert plays in
+/// Table XI.
+pub fn t12_cache(cfg: &ExpConfig, router: &KeyRouter) -> Table {
+    let ops = cfg.ops(10_000_000);
+    let mut t = Table::new(
+        &format!(
+            "Table XII (new) — cache-conscious search path ({ops} ops, mix W2, \
+             hot window {T12_HOT_SPAN}x{T12_HOT_PHASE}, key space {T12_KEY_SPACE}, \
+             scale 1/{})",
+            cfg.scale
+        ),
+        "#threads",
+        &[
+            "dir base d/op",
+            "dir finger d/op",
+            "dir hit%",
+            "del base d/op",
+            "del finger d/op",
+            "del hit%",
+            "dir pf/op",
+            "dir Mops/s",
+            "del Mops/s",
+        ],
+    );
+    for &th in cfg.threads.iter() {
+        let mut cols = [0f64; 9];
+        for (mi, mode) in [ExecMode::Direct, ExecMode::Delegated].into_iter().enumerate() {
+            let base = run_cache(cfg, ops, th as usize, router, mode, false);
+            let fing = run_cache(cfg, ops, th as usize, router, mode, true);
+            assert!(
+                fing.hit_rate > 0.5,
+                "{} mode, {th} threads: finger hit rate {:.1}% must exceed 50% \
+                 under the repeated-nearby-key workload",
+                mode.name(),
+                fing.hit_rate * 100.0
+            );
+            assert!(
+                fing.derefs_per_op < base.derefs_per_op,
+                "{} mode, {th} threads: fingers must strictly cut derefs/op \
+                 (finger {:.2} vs baseline {:.2})",
+                mode.name(),
+                fing.derefs_per_op,
+                base.derefs_per_op
+            );
+            cols[mi * 3] = base.derefs_per_op;
+            cols[mi * 3 + 1] = fing.derefs_per_op;
+            cols[mi * 3 + 2] = fing.hit_rate * 100.0;
+            cols[7 + mi] = fing.mops;
+            if mi == 0 {
+                cols[6] = fing.prefetch_per_op;
+            }
+        }
+        t.push_row(th, cols.to_vec());
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numa::Topology;
+
+    #[test]
+    fn t12_cache_asserts_hit_rate_and_deref_cut() {
+        let cfg = ExpConfig {
+            threads: vec![4],
+            reps: 1,
+            scale: 10_000,
+            topology: Topology::virtual_grid(2, 2),
+            seed: 9,
+        };
+        // t12 self-asserts (hit rate > 50%, strict deref reduction in both
+        // modes); reaching the shape checks below means the bar held
+        let t = t12_cache(&cfg, &KeyRouter::Native);
+        assert_eq!(t.rows.len(), 1);
+        let row = &t.rows[0].1;
+        assert!(row[0] > 0.0 && row[3] > 0.0, "baselines must count derefs");
+        assert!(row[1] < row[0], "direct: finger derefs strictly below baseline");
+        assert!(row[4] < row[3], "delegated: finger derefs strictly below baseline");
+        assert!(row[2] > 50.0 && row[5] > 50.0, "hit rates above 50%");
+        assert!(row[6] > 0.0, "prefetches must be issued");
+    }
+}

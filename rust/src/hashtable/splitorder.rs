@@ -259,7 +259,7 @@ impl ConcurrentMap for SpoHashMap {
         let lock = &self.locks[slot];
         lock.lock_shared();
         let (_, found) = self.locate(dummy, sokey);
-        let r = found.map(|n| self.arena.node(n).value.load(Ordering::Relaxed));
+        let r = found.map(|n| self.arena.node(n).cold.value.load(Ordering::Relaxed));
         lock.unlock_shared();
         self.resize_lock.unlock_shared();
         r
@@ -280,7 +280,7 @@ impl ConcurrentMap for SpoHashMap {
             let nn = self.arena.node(node);
             let (_, nnext) = nn.key_next();
             prn.set_key_next(pk, nnext);
-            nn.mark.store(true, Ordering::Release);
+            nn.cold.mark.store(true, Ordering::Release);
             self.arena.retire(node);
             true
         } else {
@@ -313,7 +313,7 @@ impl ConcurrentMap for SpoHashMap {
             if sokey & 1 == 1 {
                 // regular node (reversed MSB): original key stashed in
                 // `bottom` at insert time
-                pairs.push((n.bottom.load(Ordering::Acquire), n.value.load(Ordering::Relaxed)));
+                pairs.push((n.hot.bottom.load(Ordering::Acquire), n.cold.value.load(Ordering::Relaxed)));
             }
             cur = next;
         }

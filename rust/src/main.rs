@@ -2,12 +2,13 @@
 //!
 //! ```text
 //! cdskl info                           topology, artifacts, self-check
-//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|all> [--threads 4,8] [--reps N]
+//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|all> [--threads 4,8] [--reps N]
 //!           [--scale N] [--out FILE]   regenerate paper tables
 //! cdskl run [--store det|rwl|random|fixed|twolevel|spo|spo2|tbb]
 //!           [--ops N] [--threads N] [--mix w1|w2|hash|range|hier]
 //!           [--exec direct|delegated] [--range-window W]
-//!           [--inject-latency NS]      one workload run with metrics
+//!           [--inject-latency NS] [--fingers true|false]
+//!                                      one workload run with metrics
 //! cdskl selfcheck                      AOT artifacts vs native mixer
 //! ```
 
@@ -126,8 +127,11 @@ fn exp(args: &Args) {
     if all || which == "t11" || which == "hier" {
         tables.push(experiments::t11_hier(&cfg, &router));
     }
+    if all || which == "t12" || which == "cache" {
+        tables.push(experiments::t12_cache(&cfg, &router));
+    }
     if tables.is_empty() {
-        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 all)");
+        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 all)");
         std::process::exit(2);
     }
     let mut out = String::new();
@@ -173,6 +177,7 @@ fn run(args: &Args) {
     );
     let router = KeyRouter::auto(&artifacts_dir());
     let store = Arc::new(ShardedStore::new(kind, 8, (ops as usize / 4).max(1 << 16), topo, threads));
+    store.set_finger_cache(args.bool_or("fingers", true));
     let spec = WorkloadSpec::new("run", ops, mix, args.u64_or("key-space", (ops / 2).max(1 << 16)))
         .with_range_window(args.u64_or("range-window", 64));
     let m = run_with_mode(&store, &spec, threads, &router, args.u64_or("seed", 7), mode);
@@ -214,6 +219,18 @@ fn run(args: &Args) {
             m.fabric.peak_depth,
             m.fabric.backpressure,
             m.fabric.remote_exec,
+        );
+    }
+    let sl = store.stats();
+    if sl.node_derefs > 0 {
+        let ops_done = m.ops().max(1);
+        println!(
+            "cache  : {:.1} node derefs/op, {:.1} prefetches/op, finger hit {:.1}% ({} of {} consults)",
+            sl.node_derefs as f64 / ops_done as f64,
+            sl.prefetches as f64 / ops_done as f64,
+            100.0 * sl.finger_hit_rate(),
+            sl.finger_hits,
+            sl.finger_attempts,
         );
     }
     if m.mem.allocs > 0 {

@@ -12,6 +12,19 @@
 //! fetch-add or at a free-list pop; `retire_slot` linearizes at the
 //! generation bump (every existing reference is invalidated there).
 //!
+//! **Two-plane (hot/cold) layout.** Every block is stored as a *pair* of
+//! parallel arrays: a **hot** plane holding the fields a traversal actually
+//! reads (for the deterministic skiplist: the packed `(key, next)` word,
+//! `bottom` and `level`, packed into one 64-byte line), and a **cold**
+//! plane holding control state touched only by writers or validation
+//! (lock, mark, generation, value). A descent therefore streams through
+//! tightly packed hot lines instead of dragging every node's lock word and
+//! value into cache — the locality discipline the B-skiplist line of work
+//! (arXiv:2506.13864-style hot/cold splitting) shows is where skiplist
+//! throughput actually lives. Each [`ArenaNode`] implementation chooses its
+//! own split; single-plane users put everything in `Hot` and only the
+//! generation word in `Cold`.
+//!
 //! On top of §V this adds two things the paper's evaluation motivates:
 //!
 //! - **Per-thread magazines.** Each thread exchanges slots through a small
@@ -47,6 +60,7 @@ use std::sync::Mutex;
 use crate::numa::Topology;
 use crate::queue::{ConcurrentQueue, LfQueue};
 use crate::sync::Backoff;
+use crate::util::prefetch::prefetch_read;
 
 /// Slots cached per magazine before spilling to the shared free list.
 const MAG_SLOTS: usize = 32;
@@ -60,7 +74,9 @@ const MAG_SPILL: usize = MAG_SLOTS / 2;
 /// 0 means "size from the host" — note the engine oversubscribes a small
 /// host with up to 128 virtual workers, which is why `ShardedStore` passes
 /// its real thread count instead of relying on the host default.
-fn magazine_count(threads_hint: usize) -> usize {
+/// (Also reused by the skiplist's per-thread search-finger array, which
+/// hashes threads onto padded slots with exactly the same policy.)
+pub(crate) fn magazine_count(threads_hint: usize) -> usize {
     let threads = if threads_hint > 0 {
         threads_hint
     } else {
@@ -78,8 +94,9 @@ thread_local! {
     static THREAD_CPU: Cell<usize> = const { Cell::new(usize::MAX) };
 }
 
+/// Dense per-OS-thread id; the magazine AND search-finger arrays hash on it.
 #[inline]
-fn thread_slot() -> usize {
+pub(crate) fn thread_slot() -> usize {
     THREAD_SLOT.with(|s| *s)
 }
 
@@ -90,29 +107,82 @@ pub fn note_thread_cpu(cpu: usize) {
     THREAD_CPU.with(|c| c.set(cpu));
 }
 
+/// One cache-line-padded slot of `K` relaxed counters (padded so
+/// hashed-slot neighbours never false-share).
+#[repr(align(128))]
+pub(crate) struct TallySlot<const K: usize>(pub [AtomicU64; K]);
+
+/// Hashed per-thread counter array — the **one** hot-path instrumentation
+/// primitive in the crate (both skiplists count derefs/prefetches/finger
+/// traffic through it). Sized exactly like the magazines
+/// ([`magazine_count`]), keyed by [`thread_slot`]: per-op counting lands on
+/// an effectively thread-private padded line, never a shared stats word
+/// that would make the instrumentation the bottleneck it measures.
+pub(crate) struct ThreadTallies<const K: usize> {
+    slots: Box<[TallySlot<K>]>,
+}
+
+impl<const K: usize> ThreadTallies<K> {
+    pub(crate) fn new(threads_hint: usize) -> ThreadTallies<K> {
+        ThreadTallies {
+            slots: (0..magazine_count(threads_hint))
+                .map(|_| TallySlot(std::array::from_fn(|_| AtomicU64::new(0))))
+                .collect(),
+        }
+    }
+
+    /// The calling thread's padded counter line.
+    #[inline]
+    pub(crate) fn slot(&self) -> &TallySlot<K> {
+        &self.slots[thread_slot() & (self.slots.len() - 1)]
+    }
+
+    /// Sum counter `i` across every thread's slot.
+    pub(crate) fn sum(&self, i: usize) -> u64 {
+        self.slots.iter().map(|s| s.0[i].load(Ordering::Relaxed)).sum()
+    }
+}
+
 #[inline]
 fn thread_cpu() -> usize {
     THREAD_CPU.with(|c| c.get())
 }
 
-/// A type that can live in a [`BlockArena`] slot.
+/// A type that can live in a [`BlockArena`] slot, split into a hot plane
+/// (fields the traversal fast path reads) and a cold plane (control state:
+/// at minimum the recycle generation).
 ///
-/// Slots are **fully constructed** when their block materializes (via
-/// [`ArenaNode::vacant`]) and dropped normally when the arena drops — there
-/// is no `MaybeUninit` in the generic layer, so a future node type with a
-/// `Drop` impl cannot silently leak (the typed `NodePool` façade keeps the
-/// uninitialized-payload model and therefore bounds its payload on `Copy`).
-pub trait ArenaNode: Send + Sync {
-    /// A vacant slot value (generation 0, links cleared).
-    fn vacant() -> Self;
+/// Both planes are **fully constructed** when their block materializes (via
+/// [`ArenaNode::vacant_hot`] / [`ArenaNode::vacant_cold`]) and dropped
+/// normally when the arena drops — there is no `MaybeUninit` in the generic
+/// layer, so a future node type with a `Drop` impl cannot silently leak
+/// (the typed `NodePool` façade keeps the uninitialized-payload model and
+/// therefore bounds its payload on `Copy`).
+///
+/// `Self` is only a *tag* naming the split (implementations are usually
+/// empty marker types); the arena stores `Hot` and `Cold` values, never
+/// `Self`.
+pub trait ArenaNode {
+    /// Hot-plane slot: what a descent dereferences.
+    type Hot: Send + Sync;
+    /// Cold-plane slot: control words (lock/mark/value) plus the generation.
+    type Cold: Send + Sync;
+
+    /// A vacant hot slot (links cleared).
+    fn vacant_hot() -> Self::Hot;
+
+    /// A vacant cold slot (generation 0).
+    fn vacant_cold() -> Self::Cold;
 
     /// The recycle-generation word; [`BlockArena::retire_slot`] bumps it,
-    /// invalidating every reference that embeds the old generation.
-    fn generation(&self) -> &AtomicU32;
+    /// invalidating every reference that embeds the old generation. It
+    /// lives in the cold plane so retire/validation traffic never dirties
+    /// hot descent lines.
+    fn generation(cold: &Self::Cold) -> &AtomicU32;
 
-    /// Called once, with the slot's global index, when its block
-    /// materializes (before any other thread can observe the slot).
-    fn on_materialize(&mut self, _idx: u32) {}
+    /// Called once per plane pair, with the slot's global index, when its
+    /// block materializes (before any other thread can observe the slot).
+    fn on_materialize(_hot: &mut Self::Hot, _cold: &mut Self::Cold, _idx: u32) {}
 }
 
 /// Home placement of an arena on the (virtual) NUMA grid.
@@ -331,10 +401,17 @@ struct SharedCounters {
     remote: AtomicU64,
 }
 
-/// The unified §V block arena: index-addressed slots of `N`, generation
-/// validation, magazine-cached recycling, placement accounting.
+/// One block's pair of plane pointers (hot array + cold array, allocated
+/// and freed together).
+struct BlockPlanes<N: ArenaNode> {
+    hot: AtomicPtr<N::Hot>,
+    cold: AtomicPtr<N::Cold>,
+}
+
+/// The unified §V block arena: index-addressed two-plane slots of `N`,
+/// generation validation, magazine-cached recycling, placement accounting.
 pub struct BlockArena<N: ArenaNode> {
-    dir: Box<[AtomicPtr<N>]>, // one pointer per block
+    dir: Box<[BlockPlanes<N>]>, // one plane pair per block
     count: AtomicUsize,
     grow: Mutex<()>,
     bump: AtomicUsize,
@@ -349,8 +426,8 @@ pub struct BlockArena<N: ArenaNode> {
     home: Option<ArenaHome>,
 }
 
-// The directory owns raw block pointers; ArenaNode already requires
-// Send + Sync for the slots themselves.
+// The directory owns raw plane pointers; ArenaNode already requires
+// Send + Sync for both plane slot types.
 unsafe impl<N: ArenaNode> Send for BlockArena<N> {}
 unsafe impl<N: ArenaNode> Sync for BlockArena<N> {}
 
@@ -379,7 +456,12 @@ impl<N: ArenaNode> BlockArena<N> {
         let qblock = nodes.clamp(2, 4096);
         let qblocks = (nodes / qblock + 2).max(2);
         BlockArena {
-            dir: (0..max_blocks).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+            dir: (0..max_blocks)
+                .map(|_| BlockPlanes {
+                    hot: AtomicPtr::new(std::ptr::null_mut()),
+                    cold: AtomicPtr::new(std::ptr::null_mut()),
+                })
+                .collect(),
             count: AtomicUsize::new(0),
             grow: Mutex::new(()),
             bump: AtomicUsize::new(0),
@@ -399,24 +481,50 @@ impl<N: ArenaNode> BlockArena<N> {
         &self.mags[thread_slot() & (self.mags.len() - 1)].0
     }
 
-    /// Slot reference. The caller must hold a live index (allocated and not
-    /// recycled past its generation window).
+    /// Hot-plane slot reference. The caller must hold a live index
+    /// (allocated and not recycled past its generation window).
     #[inline]
-    pub fn raw(&self, idx: u32) -> &N {
+    pub fn hot(&self, idx: u32) -> &N::Hot {
         let b = idx as usize / self.block_size;
         let s = idx as usize % self.block_size;
         debug_assert!(b < self.count.load(Ordering::Acquire));
-        unsafe { &*self.dir[b].load(Ordering::Acquire).add(s) }
+        unsafe { &*self.dir[b].hot.load(Ordering::Acquire).add(s) }
     }
 
-    /// Raw slot pointer with whole-block provenance (the `NodePool` façade
-    /// projects its payload field through this).
+    /// Cold-plane slot reference (lock/mark/generation/value words).
     #[inline]
-    pub fn raw_ptr(&self, idx: u32) -> *mut N {
+    pub fn cold(&self, idx: u32) -> &N::Cold {
         let b = idx as usize / self.block_size;
         let s = idx as usize % self.block_size;
         debug_assert!(b < self.count.load(Ordering::Acquire));
-        unsafe { self.dir[b].load(Ordering::Acquire).add(s) }
+        unsafe { &*self.dir[b].cold.load(Ordering::Acquire).add(s) }
+    }
+
+    /// Raw hot-plane slot pointer with whole-block provenance (the
+    /// `NodePool` façade projects its payload field through this).
+    #[inline]
+    pub fn hot_ptr(&self, idx: u32) -> *mut N::Hot {
+        let b = idx as usize / self.block_size;
+        let s = idx as usize % self.block_size;
+        debug_assert!(b < self.count.load(Ordering::Acquire));
+        unsafe { self.dir[b].hot.load(Ordering::Acquire).add(s) }
+    }
+
+    /// Issue a software prefetch for `idx`'s hot line. Returns whether a
+    /// prefetch was actually issued (no-op `false` when the slot's block is
+    /// not materialized — a torn/stale/NIL index must never turn into
+    /// out-of-bounds pointer arithmetic — so callers can keep honest
+    /// prefetch counts).
+    #[inline]
+    pub fn prefetch_hot(&self, idx: u32) -> bool {
+        let b = idx as usize / self.block_size;
+        if b < self.count.load(Ordering::Acquire) {
+            let p = self.dir[b].hot.load(Ordering::Acquire);
+            prefetch_read(unsafe { p.add(idx as usize % self.block_size) });
+            true
+        } else {
+            false
+        }
     }
 
     /// Allocate one slot: thread magazine, then shared free list, then bump.
@@ -488,13 +596,17 @@ impl<N: ArenaNode> BlockArena<N> {
             let cur = self.count.load(Ordering::Acquire);
             if cur <= b {
                 for nb in cur..=b {
-                    let mut block: Box<[N]> =
-                        (0..self.block_size).map(|_| N::vacant()).collect();
-                    for (s, n) in block.iter_mut().enumerate() {
-                        n.on_materialize((nb * self.block_size + s) as u32);
+                    let mut hot: Box<[N::Hot]> =
+                        (0..self.block_size).map(|_| N::vacant_hot()).collect();
+                    let mut cold: Box<[N::Cold]> =
+                        (0..self.block_size).map(|_| N::vacant_cold()).collect();
+                    for (s, (h, c)) in hot.iter_mut().zip(cold.iter_mut()).enumerate() {
+                        N::on_materialize(h, c, (nb * self.block_size + s) as u32);
                     }
-                    let ptr = Box::into_raw(block) as *mut N;
-                    self.dir[nb].store(ptr, Ordering::Release);
+                    self.dir[nb].hot.store(Box::into_raw(hot) as *mut N::Hot, Ordering::Release);
+                    self.dir[nb]
+                        .cold
+                        .store(Box::into_raw(cold) as *mut N::Cold, Ordering::Release);
                 }
                 self.count.store(b + 1, Ordering::Release);
             }
@@ -507,7 +619,7 @@ impl<N: ArenaNode> BlockArena<N> {
     /// Never blocks: a full shared free list leaks the slot and counts it
     /// in `overflow` instead of spinning (the old copies deadlocked here).
     pub fn retire_slot(&self, idx: u32) {
-        self.raw(idx).generation().fetch_add(1, Ordering::AcqRel);
+        N::generation(self.cold(idx)).fetch_add(1, Ordering::AcqRel);
         if !self.magazines {
             self.shared.retired.fetch_add(1, Ordering::Relaxed);
             if !self.push_free(idx) {
@@ -594,14 +706,20 @@ impl<N: ArenaNode> BlockArena<N> {
 
 impl<N: ArenaNode> Drop for BlockArena<N> {
     fn drop(&mut self) {
-        // Every slot of a materialized block is a fully constructed `N`
-        // (see ArenaNode::vacant), so dropping the boxed slices runs slot
-        // drops correctly even for node types that own resources.
+        // Every slot of a materialized block is a fully constructed plane
+        // value (see ArenaNode::vacant_hot/vacant_cold), so dropping the
+        // boxed slices runs slot drops correctly even for node types that
+        // own resources.
         let n = self.count.load(Ordering::Acquire);
         for i in 0..n {
-            let p = self.dir[i].load(Ordering::Acquire);
-            if !p.is_null() {
-                let slice = std::ptr::slice_from_raw_parts_mut(p, self.block_size);
+            let h = self.dir[i].hot.load(Ordering::Acquire);
+            if !h.is_null() {
+                let slice = std::ptr::slice_from_raw_parts_mut(h, self.block_size);
+                drop(unsafe { Box::from_raw(slice) });
+            }
+            let c = self.dir[i].cold.load(Ordering::Acquire);
+            if !c.is_null() {
+                let slice = std::ptr::slice_from_raw_parts_mut(c, self.block_size);
                 drop(unsafe { Box::from_raw(slice) });
             }
         }
@@ -615,21 +733,31 @@ mod tests {
     use std::sync::atomic::AtomicU64;
     use std::sync::Arc;
 
-    struct Slot {
-        gen: AtomicU32,
+    struct Slot;
+
+    struct SlotHot {
         idx: AtomicU32,
         payload: AtomicU64,
     }
 
+    struct SlotCold {
+        gen: AtomicU32,
+    }
+
     impl ArenaNode for Slot {
-        fn vacant() -> Slot {
-            Slot { gen: AtomicU32::new(0), idx: AtomicU32::new(0), payload: AtomicU64::new(0) }
+        type Hot = SlotHot;
+        type Cold = SlotCold;
+        fn vacant_hot() -> SlotHot {
+            SlotHot { idx: AtomicU32::new(0), payload: AtomicU64::new(0) }
         }
-        fn generation(&self) -> &AtomicU32 {
-            &self.gen
+        fn vacant_cold() -> SlotCold {
+            SlotCold { gen: AtomicU32::new(0) }
         }
-        fn on_materialize(&mut self, idx: u32) {
-            self.idx.store(idx, Ordering::Relaxed);
+        fn generation(cold: &SlotCold) -> &AtomicU32 {
+            &cold.gen
+        }
+        fn on_materialize(hot: &mut SlotHot, _cold: &mut SlotCold, idx: u32) {
+            hot.idx.store(idx, Ordering::Relaxed);
         }
     }
 
@@ -637,7 +765,7 @@ mod tests {
     fn bump_then_magazine_reuse() {
         let a: BlockArena<Slot> = BlockArena::new(4, 16);
         let i1 = a.alloc_slot();
-        assert_eq!(a.raw(i1).idx.load(Ordering::Relaxed), i1);
+        assert_eq!(a.hot(i1).idx.load(Ordering::Relaxed), i1);
         a.retire_slot(i1);
         let i2 = a.alloc_slot();
         assert_eq!(i1, i2, "magazine must hand the slot back");
@@ -653,9 +781,28 @@ mod tests {
     fn generation_bumps_on_retire() {
         let a: BlockArena<Slot> = BlockArena::new(4, 16);
         let i = a.alloc_slot();
-        let g0 = a.raw(i).gen.load(Ordering::Acquire);
+        let g0 = a.cold(i).gen.load(Ordering::Acquire);
         a.retire_slot(i);
-        assert_eq!(a.raw(i).gen.load(Ordering::Acquire), g0 + 1);
+        assert_eq!(a.cold(i).gen.load(Ordering::Acquire), g0 + 1);
+    }
+
+    #[test]
+    fn planes_are_parallel_and_prefetchable() {
+        let a: BlockArena<Slot> = BlockArena::new(8, 8);
+        let idxs: Vec<u32> = (0..20).map(|_| a.alloc_slot()).collect();
+        for &i in &idxs {
+            assert_eq!(a.hot(i).idx.load(Ordering::Relaxed), i, "hot plane indexed per slot");
+            a.hot(i).payload.store(i as u64 * 3, Ordering::Relaxed);
+            // the cold plane exists for the same index and carries the gen
+            assert_eq!(a.cold(i).gen.load(Ordering::Relaxed), 0);
+            // prefetching any live index is harmless and reported issued
+            assert!(a.prefetch_hot(i));
+        }
+        // out of range: must be a guarded no-op and report not-issued
+        assert!(!a.prefetch_hot(u32::MAX));
+        for &i in &idxs {
+            assert_eq!(a.hot(i).payload.load(Ordering::Relaxed), i as u64 * 3);
+        }
     }
 
     #[test]
@@ -719,7 +866,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 for _ in 0..2_000 {
                     let i = a.alloc_slot();
-                    a.raw(i).payload.store(42, Ordering::Relaxed);
+                    a.hot(i).payload.store(42, Ordering::Relaxed);
                     a.retire_slot(i);
                 }
             }));

@@ -1,11 +1,16 @@
 //! Typed pointer-handing façade over the unified [`BlockArena`] (paper §V).
 //!
 //! [`NodePool<T>`] keeps the historical address-based API (`alloc` returns a
-//! stable `*mut MaybeUninit<T>`, `retire` takes it back) but owns **no
-//! allocator body of its own** — blocks, bump index, magazines and the
+//! stable `*mut MaybeUninit<T>`, `retire` takes it back) but owns **no**
+//! allocator body of its own — blocks, bump index, magazines and the
 //! recycle free list all live in [`BlockArena`]. Node memory is never
 //! returned to the OS before the pool drops, which is what keeps stale
 //! pointers dereferenceable for lock-free traversals.
+//!
+//! Under the arena's two-plane layout the pool's **hot plane is the payload
+//! itself** (plus the slot index needed to take a pointer back) and the
+//! cold plane is just the recycle generation — so payload traffic never
+//! shares a line with allocator control words.
 //!
 //! Payloads are bounded `T: Copy`: a pool slot stores `MaybeUninit<T>` and
 //! the pool cannot know which slots were initialized, so it never runs `T`
@@ -20,35 +25,50 @@
 //! locations.
 
 use std::cell::UnsafeCell;
+use std::marker::PhantomData;
 use std::mem::MaybeUninit;
 use std::sync::atomic::AtomicU32;
 
 use super::arena::{ArenaNode, ArenaOptions, BlockArena, PoolStats};
 
-/// One pool slot: the payload cell first (`repr(C)`), so a payload pointer
-/// is also a slot pointer and `retire` can recover the slot index without
-/// a reverse lookup.
+/// One hot-plane pool slot: the payload cell first (`repr(C)`), so a
+/// payload pointer is also a slot pointer and `retire` can recover the slot
+/// index without a reverse lookup.
 #[repr(C)]
-pub struct PoolSlot<T> {
+pub struct PoolSlotHot<T> {
     cell: UnsafeCell<MaybeUninit<T>>,
-    gen: AtomicU32,
     idx: u32,
 }
 
-unsafe impl<T: Send> Send for PoolSlot<T> {}
-unsafe impl<T: Send> Sync for PoolSlot<T> {}
+unsafe impl<T: Send> Send for PoolSlotHot<T> {}
+unsafe impl<T: Send> Sync for PoolSlotHot<T> {}
+
+/// Cold-plane pool slot: the recycle generation only.
+pub struct PoolSlotCold {
+    gen: AtomicU32,
+}
+
+/// Tag type naming the pool's hot/cold split (never instantiated).
+pub struct PoolSlot<T>(PhantomData<fn() -> T>);
 
 impl<T: Copy + Send> ArenaNode for PoolSlot<T> {
-    fn vacant() -> PoolSlot<T> {
-        PoolSlot { cell: UnsafeCell::new(MaybeUninit::uninit()), gen: AtomicU32::new(0), idx: 0 }
+    type Hot = PoolSlotHot<T>;
+    type Cold = PoolSlotCold;
+
+    fn vacant_hot() -> PoolSlotHot<T> {
+        PoolSlotHot { cell: UnsafeCell::new(MaybeUninit::uninit()), idx: 0 }
     }
 
-    fn generation(&self) -> &AtomicU32 {
-        &self.gen
+    fn vacant_cold() -> PoolSlotCold {
+        PoolSlotCold { gen: AtomicU32::new(0) }
     }
 
-    fn on_materialize(&mut self, idx: u32) {
-        self.idx = idx;
+    fn generation(cold: &PoolSlotCold) -> &AtomicU32 {
+        &cold.gen
+    }
+
+    fn on_materialize(hot: &mut PoolSlotHot<T>, _cold: &mut PoolSlotCold, idx: u32) {
+        hot.idx = idx;
     }
 }
 
@@ -72,9 +92,9 @@ impl<T: Copy + Send> NodePool<T> {
     /// pointer is valid until the pool is dropped.
     pub fn alloc(&self) -> *mut MaybeUninit<T> {
         let idx = self.arena.alloc_slot();
-        let slot = self.arena.raw_ptr(idx);
+        let slot = self.arena.hot_ptr(idx);
         // Raw field projection keeps whole-block provenance, so the pointer
-        // can be cast back to its PoolSlot in `retire`.
+        // can be cast back to its PoolSlotHot in `retire`.
         unsafe { std::ptr::addr_of_mut!((*slot).cell) as *mut MaybeUninit<T> }
     }
 
@@ -83,8 +103,8 @@ impl<T: Copy + Send> NodePool<T> {
     /// counters catch reuse). Never blocks, even under mass erase: the
     /// unified arena parks overflow instead of spinning.
     pub fn retire(&self, p: *mut MaybeUninit<T>) {
-        // `cell` is the first field of the repr(C) slot.
-        let idx = unsafe { (*(p as *const PoolSlot<T>)).idx };
+        // `cell` is the first field of the repr(C) hot slot.
+        let idx = unsafe { (*(p as *const PoolSlotHot<T>)).idx };
         self.arena.retire_slot(idx);
     }
 

@@ -26,9 +26,39 @@
 //!
 //! Deadlock freedom: every writer acquires locks parent-before-child and
 //! left-before-right, and releases before recursing; the order is acyclic.
+//! The finger fast path (below) locks a leaf without holding its parent,
+//! which preserves acyclicity: terminal locks are only ever taken by the
+//! holder of their leaf's lock, and no finger path ever waits on a lock
+//! while holding a lock above it.
+//!
+//! # Cache-conscious search path
+//!
+//! Three mechanisms cut the descent's memory cost (measured by
+//! `experiments::t12_cache` / Table XII):
+//!
+//! - **Hot/cold node split** — descents touch only the 64-byte
+//!   [`super::node::NodeHot`] lines (see `node.rs`).
+//! - **Descent prefetching** — while a node is being examined, its `next`
+//!   and `bottom` hot lines are software-prefetched so the two dependent
+//!   misses overlap instead of serializing (`util::prefetch`).
+//! - **Per-thread search fingers** — a padded per-thread cache of the last
+//!   descent's per-level predecessors (one finger array per skiplist, so
+//!   per *shard* in the sharded store). A finger entry is only a *hint*:
+//!   before use it is validated live — generation match, unmarked, and
+//!   `first_child.key <= key <= node.key`, which proves the key lies in the
+//!   node's segment at validation time (the segment's lower bound is
+//!   strictly below its first child's key). A stale finger therefore fails
+//!   validation and falls back to a full top-down descent; it can make a
+//!   search slower, never wrong. Reads may start mid-structure at any
+//!   validated level; writes use only the *leaf* finger and additionally
+//!   require an arity window (≤ 4 children for insert, ≥ 3 for erase) so
+//!   the fast path can never split or underflow a segment — rebalancing
+//!   work always happens on full descents, preserving the 1-2-3-4
+//!   discipline's "rebalance on the way down" invariant.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
+use crate::mem::arena::{magazine_count, thread_slot, ThreadTallies};
 use crate::mem::{ArenaOptions, PoolStats};
 use crate::sync::Backoff;
 
@@ -60,6 +90,20 @@ pub struct SkiplistStats {
     pub depth_decreases: u64,
     pub find_retries: u64,
     pub write_retries: u64,
+    /// Node (hot-line) dereferences across all operations — the cache-cost
+    /// proxy Table XII tracks per op.
+    pub node_derefs: u64,
+    /// Operations that consulted the per-thread finger cache.
+    pub finger_attempts: u64,
+    /// Consultations that validated and skipped the full top-down descent.
+    pub finger_hits: u64,
+    /// Validated finger starts whose traversal then raced a restructure and
+    /// fell back to a full descent. Kept separate from `find_retries` so
+    /// the pre-finger meaning of that counter (lock-free traversal
+    /// interference) stays intact.
+    pub finger_fallbacks: u64,
+    /// Software prefetches issued on the search path.
+    pub prefetches: u64,
 }
 
 impl SkiplistStats {
@@ -73,9 +117,28 @@ impl SkiplistStats {
         self.depth_decreases += other.depth_decreases;
         self.find_retries += other.find_retries;
         self.write_retries += other.write_retries;
+        self.node_derefs += other.node_derefs;
+        self.finger_attempts += other.finger_attempts;
+        self.finger_hits += other.finger_hits;
+        self.finger_fallbacks += other.finger_fallbacks;
+        self.prefetches += other.prefetches;
+    }
+
+    /// Fraction of finger consultations that skipped the full descent.
+    pub fn finger_hit_rate(&self) -> f64 {
+        if self.finger_attempts == 0 {
+            0.0
+        } else {
+            self.finger_hits as f64 / self.finger_attempts as f64
+        }
     }
 }
 
+/// Shared counters for *rare* events only (restructures and retries). The
+/// per-op hot counters live in the padded per-thread
+/// [`ThreadTallies`] array — a find must not bounce a shared stats line on
+/// every operation, or the instrumentation itself would suppress the read
+/// scalability Table XII exists to measure.
 #[derive(Default)]
 struct AtomicSkiplistStats {
     splits: AtomicU64,
@@ -85,8 +148,52 @@ struct AtomicSkiplistStats {
     depth_decreases: AtomicU64,
     find_retries: AtomicU64,
     write_retries: AtomicU64,
+    finger_fallbacks: AtomicU64,
 }
 
+// Counter indices in the per-thread tally slots.
+const TALLY_DEREFS: usize = 0;
+const TALLY_PREFETCHES: usize = 1;
+const TALLY_ATTEMPTS: usize = 2;
+const TALLY_HITS: usize = 3;
+const TALLY_WIDTH: usize = 4;
+
+/// Per-operation cost tally, accumulated in registers on the hot path and
+/// flushed to this thread's padded tally line once per public operation
+/// (a single slot lookup and at most four thread-private `fetch_add`s per
+/// op, instead of shared-atomic traffic per node).
+#[derive(Default)]
+struct PathCost {
+    derefs: u64,
+    prefetches: u64,
+    finger_attempts: u64,
+    finger_hits: u64,
+}
+
+/// Levels of the descent path a finger slot remembers (leaf = index 0).
+const FINGER_LEVELS: usize = 8;
+
+/// One thread's finger: the last descent's per-level predecessors plus the
+/// key bounds each covered when recorded. Padded so hashed-slot neighbours
+/// never false-share. The stored bounds are a *predictor* only (torn or
+/// stale values at worst cause a failed validation); correctness comes from
+/// the live generation + key-bounds check in `finger_start`.
+#[repr(align(128))]
+struct FingerSlot {
+    refs: [AtomicU64; FINGER_LEVELS],
+    lo: [AtomicU64; FINGER_LEVELS],
+    hi: [AtomicU64; FINGER_LEVELS],
+}
+
+impl FingerSlot {
+    fn new() -> FingerSlot {
+        FingerSlot {
+            refs: std::array::from_fn(|_| AtomicU64::new(SENTINEL)),
+            lo: std::array::from_fn(|_| AtomicU64::new(0)),
+            hi: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
 
 /// Fixed-capacity child list (arity is bounded by ~7 plus the boundary
 /// node): avoids a heap allocation per visited node on the write path —
@@ -128,6 +235,12 @@ impl std::ops::Deref for ChildVec {
     }
 }
 
+/// Which terminal mutation a finger fast path is attempting.
+enum FingerOp {
+    Insert(u64),
+    Erase,
+}
+
 /// The concurrent deterministic 1-2-3-4 skiplist.
 pub struct DetSkiplist {
     arena: NodeArena,
@@ -135,6 +248,12 @@ pub struct DetSkiplist {
     mode: FindMode,
     len: AtomicU64,
     stats: AtomicSkiplistStats,
+    /// Hashed per-thread finger slots (same sizing policy as the arena's
+    /// magazines; collisions only degrade the hint, never correctness).
+    fingers: Box<[FingerSlot]>,
+    /// Hashed per-thread hot-path counter lines (see [`ThreadTallies`]).
+    tallies: ThreadTallies<TALLY_WIDTH>,
+    fingers_on: AtomicBool,
 }
 
 /// Keys must stay below `u64::MAX` (reserved for the head/sentinel spine).
@@ -153,6 +272,7 @@ impl DetSkiplist {
 
     /// Like [`DetSkiplist::with_capacity`] with explicit arena placement
     /// (per-shard skiplists home their arena on the shard's NUMA node).
+    /// `opts.threads_hint` also sizes the per-thread finger array.
     pub fn with_capacity_on(mode: FindMode, capacity: usize, opts: ArenaOptions) -> DetSkiplist {
         let arena = NodeArena::for_capacity(capacity, opts);
         // head: level-1 leaf, key MAX, no children yet.
@@ -163,6 +283,9 @@ impl DetSkiplist {
             mode,
             len: AtomicU64::new(0),
             stats: AtomicSkiplistStats::default(),
+            fingers: (0..magazine_count(opts.threads_hint)).map(|_| FingerSlot::new()).collect(),
+            tallies: ThreadTallies::new(opts.threads_hint),
+            fingers_on: AtomicBool::new(true),
         }
     }
 
@@ -181,7 +304,7 @@ impl DetSkiplist {
     }
 
     pub fn stats(&self) -> SkiplistStats {
-        SkiplistStats {
+        let mut out = SkiplistStats {
             splits: self.stats.splits.load(Ordering::Relaxed),
             merges: self.stats.merges.load(Ordering::Relaxed),
             borrows: self.stats.borrows.load(Ordering::Relaxed),
@@ -189,7 +312,14 @@ impl DetSkiplist {
             depth_decreases: self.stats.depth_decreases.load(Ordering::Relaxed),
             find_retries: self.stats.find_retries.load(Ordering::Relaxed),
             write_retries: self.stats.write_retries.load(Ordering::Relaxed),
-        }
+            finger_fallbacks: self.stats.finger_fallbacks.load(Ordering::Relaxed),
+            ..SkiplistStats::default()
+        };
+        out.node_derefs = self.tallies.sum(TALLY_DEREFS);
+        out.prefetches = self.tallies.sum(TALLY_PREFETCHES);
+        out.finger_attempts = self.tallies.sum(TALLY_ATTEMPTS);
+        out.finger_hits = self.tallies.sum(TALLY_HITS);
+        out
     }
 
     pub fn arena(&self) -> &NodeArena {
@@ -201,6 +331,108 @@ impl DetSkiplist {
         self.arena.stats()
     }
 
+    /// Enable/disable the per-thread finger cache (enabled by default).
+    /// Disabling it restores the pure top-down descent — the Table XII
+    /// baseline.
+    pub fn set_finger_cache(&self, on: bool) {
+        self.fingers_on.store(on, Ordering::Relaxed);
+    }
+
+    pub fn finger_cache_enabled(&self) -> bool {
+        self.fingers_on.load(Ordering::Relaxed)
+    }
+
+    /// Flush a per-op cost tally into this thread's padded counter line
+    /// (one slot lookup per op; zero-count fields skip their `fetch_add`).
+    #[inline]
+    fn flush_cost(&self, cost: &PathCost) {
+        let t = self.tallies.slot();
+        t.0[TALLY_DEREFS].fetch_add(cost.derefs, Ordering::Relaxed);
+        if cost.prefetches > 0 {
+            t.0[TALLY_PREFETCHES].fetch_add(cost.prefetches, Ordering::Relaxed);
+        }
+        if cost.finger_attempts > 0 {
+            t.0[TALLY_ATTEMPTS].fetch_add(cost.finger_attempts, Ordering::Relaxed);
+        }
+        if cost.finger_hits > 0 {
+            t.0[TALLY_HITS].fetch_add(cost.finger_hits, Ordering::Relaxed);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Finger cache (per-thread, per-shard search fingers)
+    // ------------------------------------------------------------------
+
+    #[inline]
+    fn finger_slot(&self) -> &FingerSlot {
+        &self.fingers[thread_slot() & (self.fingers.len() - 1)]
+    }
+
+    /// Remember node `r` (level >= 1) as the descent's entry at its level,
+    /// covering (predicted) inclusive key bounds `[lo, hi]`.
+    #[inline]
+    fn finger_record(&self, level: u32, r: NodeRef, lo: u64, hi: u64) {
+        if level == 0 || level > FINGER_LEVELS as u32 || !self.fingers_on.load(Ordering::Relaxed) {
+            return;
+        }
+        let s = self.finger_slot();
+        let i = (level - 1) as usize;
+        s.refs[i].store(r, Ordering::Relaxed);
+        s.lo[i].store(lo, Ordering::Relaxed);
+        s.hi[i].store(hi, Ordering::Relaxed);
+    }
+
+    /// Validate a finger entry as a safe descent start for `key`. Returns
+    /// `(start, seg_lo)` where `seg_lo` is the proven inclusive lower bound
+    /// (the first child's key).
+    ///
+    /// Safety argument: at the instant the second generation check passes,
+    /// the node is live and unmarked, its key is `>= key`, and its first
+    /// child's key is `<= key`. Since a node's segment covers
+    /// `(prev sibling key, node.key]` and its first child's key is strictly
+    /// greater than that lower bound, `key` provably lies inside the
+    /// node's segment *at that instant* — so starting the lock-free find
+    /// here is indistinguishable from a full descent that reached this node
+    /// at that moment. Any interference afterwards is caught by the find
+    /// loop's own generation/mark checks (RETRY → full descent), making a
+    /// stale finger safe, never just slow-and-wrong.
+    fn finger_start(&self, key: u64, cost: &mut PathCost) -> Option<(NodeRef, u64)> {
+        let slot = self.finger_slot();
+        let mut tried = 0;
+        // deepest predicted-covering entry first: the deeper the start, the
+        // more of the descent it skips
+        for i in 0..FINGER_LEVELS {
+            let r = slot.refs[i].load(Ordering::Relaxed);
+            if r == SENTINEL || r == self.head {
+                continue;
+            }
+            if !(slot.lo[i].load(Ordering::Relaxed) <= key
+                && key <= slot.hi[i].load(Ordering::Relaxed))
+            {
+                continue;
+            }
+            tried += 1;
+            cost.derefs += 2;
+            if let Some(n) = self.arena.resolve(r) {
+                if !n.is_marked() {
+                    let (nkey, _) = n.key_next();
+                    let bottom = n.hot.bottom.load(Ordering::Acquire);
+                    if key <= nkey {
+                        if let Some((blo, _)) = self.arena.read_key_next(bottom) {
+                            if blo <= key && !n.is_marked() && self.arena.resolve(r).is_some() {
+                                return Some((r, blo));
+                            }
+                        }
+                    }
+                }
+            }
+            if tried >= 2 {
+                break; // bound the validation cost of a cold/stale slot
+            }
+        }
+        None
+    }
+
     // ------------------------------------------------------------------
     // Height management (algorithms 3 and 6)
     // ------------------------------------------------------------------
@@ -208,54 +440,54 @@ impl DetSkiplist {
     /// Algorithm 3: push the head's level down one if it gained a sibling.
     fn increase_depth(&self) {
         let head = self.arena.node(self.head);
-        head.lock.lock();
+        head.cold.lock.lock();
         let (hkey, hnext) = head.key_next();
         if hnext == SENTINEL {
-            head.lock.unlock();
+            head.cold.lock.unlock();
             return;
         }
-        let level = head.level.load(Ordering::Relaxed);
-        let hbot = head.bottom.load(Ordering::Acquire);
+        let level = head.hot.level.load(Ordering::Relaxed);
+        let hbot = head.hot.bottom.load(Ordering::Acquire);
         // d inherits the head's current (key, next, bottom) at the old level.
         let d = self.arena.alloc(hkey, hnext, hbot, 0, level);
-        head.bottom.store(d, Ordering::Release);
-        head.level.store(level + 1, Ordering::Relaxed);
+        head.hot.bottom.store(d, Ordering::Release);
+        head.hot.level.store(level + 1, Ordering::Relaxed);
         head.set_key_next(u64::MAX, SENTINEL);
-        head.lock.unlock();
+        head.cold.lock.unlock();
         self.stats.depth_increases.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Algorithm 6: collapse a root whose single child spans everything.
     fn decrease_depth(&self) {
         let head = self.arena.node(self.head);
-        head.lock.lock();
+        head.cold.lock.lock();
         let (hkey, hnext) = head.key_next();
-        let level = head.level.load(Ordering::Relaxed);
+        let level = head.hot.level.load(Ordering::Relaxed);
         if hnext != SENTINEL || level <= 1 {
-            head.lock.unlock();
+            head.cold.lock.unlock();
             return;
         }
-        let b = head.bottom.load(Ordering::Acquire);
+        let b = head.hot.bottom.load(Ordering::Acquire);
         if b == SENTINEL {
-            head.lock.unlock();
+            head.cold.lock.unlock();
             return;
         }
         let bn = self.arena.node(b);
-        bn.lock.lock();
+        bn.cold.lock.lock();
         let (bkey, bnext) = bn.key_next();
-        let bb = bn.bottom.load(Ordering::Acquire);
+        let bb = bn.hot.bottom.load(Ordering::Acquire);
         // Collapse only when b is the sole child (key MAX), not terminal.
         if bkey == hkey && bnext == SENTINEL && bb != SENTINEL {
-            head.bottom.store(bb, Ordering::Release);
-            head.level.store(level - 1, Ordering::Relaxed);
-            bn.mark.store(true, Ordering::Release);
-            bn.lock.unlock();
+            head.hot.bottom.store(bb, Ordering::Release);
+            head.hot.level.store(level - 1, Ordering::Relaxed);
+            bn.cold.mark.store(true, Ordering::Release);
+            bn.cold.lock.unlock();
             self.arena.retire(b);
             self.stats.depth_decreases.fetch_add(1, Ordering::Relaxed);
         } else {
-            bn.lock.unlock();
+            bn.cold.lock.unlock();
         }
-        head.lock.unlock();
+        head.cold.lock.unlock();
     }
 
     // ------------------------------------------------------------------
@@ -265,27 +497,35 @@ impl DetSkiplist {
     /// Lock and collect the children of locked node `p` (the paper's
     /// `AcquireChildren`): the segment from `p.bottom` up to and including
     /// the first child with key >= p.key. Children cannot be retired while
-    /// `p` is locked, so links resolve unconditionally.
+    /// `p` is locked, so links resolve unconditionally. The next sibling's
+    /// hot line is prefetched while the current child's lock is acquired.
     ///
     /// `Err` carries the already-locked prefix when the arity bound
     /// overflows (transiently over-wide segment): the caller must release
     /// those locks and retry the operation.
-    fn acquire_children(&self, pkey: u64, pbottom: NodeRef) -> Result<ChildVec, ChildVec> {
+    fn acquire_children(
+        &self,
+        pkey: u64,
+        pbottom: NodeRef,
+        cost: &mut PathCost,
+    ) -> Result<ChildVec, ChildVec> {
         let mut out = ChildVec::new();
         let mut d = pbottom;
         while d != SENTINEL {
+            cost.derefs += 1;
             let dn = self.arena.node(d);
-            dn.lock.lock();
+            dn.cold.lock.lock();
             let (dk, dnext) = dn.key_next();
+            cost.prefetches += self.arena.prefetch(dnext) as u64;
             if dk > pkey {
                 // Foreign boundary: this node already belongs to the next
                 // parent (we are stale-high). Exclude it — CheckNodeKey will
                 // lower our key and the operation moves right.
-                dn.lock.unlock();
+                dn.cold.lock.unlock();
                 break;
             }
             if !out.push(d) {
-                dn.lock.unlock();
+                dn.cold.lock.unlock();
                 return Err(out);
             }
             if dk == pkey {
@@ -298,7 +538,7 @@ impl DetSkiplist {
 
     fn release_children(&self, children: &[NodeRef]) {
         for &c in children {
-            self.arena.node(c).lock.unlock();
+            self.arena.node(c).cold.lock.unlock();
         }
     }
 
@@ -309,7 +549,7 @@ impl DetSkiplist {
         for &c in children {
             let n = self.arena.node(c);
             let marked = n.is_marked();
-            n.lock.unlock();
+            n.cold.lock.unlock();
             if marked {
                 self.arena.retire(c);
             }
@@ -344,11 +584,108 @@ impl DetSkiplist {
         }
         let pn = self.arena.node(p);
         let (pkey, pnext) = pn.key_next();
-        let level = pn.level.load(Ordering::Relaxed);
+        let level = pn.hot.level.load(Ordering::Relaxed);
         let nn = self.arena.alloc(pkey, pnext, children[2], 0, level);
         let c1key = self.arena.node(children[1]).key();
         pn.set_key_next(c1key, nn);
         self.stats.splits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // ------------------------------------------------------------------
+    // Finger fast path for terminal mutations
+    // ------------------------------------------------------------------
+
+    /// Attempt the leaf-finger fast path for a terminal insert/erase.
+    /// `None` = conditions not met (caller runs the full descent); `Some`
+    /// carries the operation's result.
+    ///
+    /// The fast path is confined to states where the mutation is purely
+    /// segment-local:
+    /// - the recorded leaf resolves (generation), is unmarked and level 1,
+    ///   locked like any writer would lock it;
+    /// - its (locked) children prove coverage:
+    ///   `first_child.key <= key <= leaf.key`;
+    /// - insert requires `<= 4` children (after the insert the leaf holds at
+    ///   most 5, the same transient bound the full descent leaves behind —
+    ///   and the *next* insert into a 5-wide leaf falls back to the full
+    ///   descent, whose `addition_rebalance` splits it on the way down);
+    /// - erase requires `>= 3` children (after the erase the leaf holds at
+    ///   least 2 — no merge/borrow boost is ever needed).
+    ///
+    /// Under those guards the fast path can never split a leaf or underflow
+    /// one, so ancestor arities only ever change on full descents and the
+    /// paper's rebalance-on-the-way-down discipline is preserved.
+    fn finger_write(&self, key: u64, op: FingerOp, cost: &mut PathCost) -> Option<bool> {
+        let slot = self.finger_slot();
+        let r = slot.refs[0].load(Ordering::Relaxed);
+        if r == SENTINEL || r == self.head {
+            return None;
+        }
+        if !(slot.lo[0].load(Ordering::Relaxed) <= key && key <= slot.hi[0].load(Ordering::Relaxed))
+        {
+            return None;
+        }
+        cost.derefs += 1;
+        let n = self.arena.resolve(r)?;
+        n.cold.lock.lock();
+        if n.is_marked()
+            || self.arena.resolve(r).is_none()
+            || n.hot.level.load(Ordering::Relaxed) != 1
+        {
+            n.cold.lock.unlock();
+            return None;
+        }
+        let (nkey, _) = n.key_next();
+        let bottom = n.hot.bottom.load(Ordering::Acquire);
+        let children = match self.acquire_children(nkey, bottom, cost) {
+            Ok(c) => c,
+            Err(partial) => {
+                self.release_children(&partial);
+                n.cold.lock.unlock();
+                return None;
+            }
+        };
+        self.check_node_key(r, &children);
+        let (nkey, _) = n.key_next(); // may have been lowered
+        let covered = !children.is_empty() && {
+            let first_k = self.arena.node(children[0]).key();
+            first_k <= key && key <= nkey
+        };
+        let arity_ok = match op {
+            FingerOp::Insert(_) => children.len() <= 4,
+            FingerOp::Erase => children.len() >= 3,
+        };
+        if !covered || !arity_ok {
+            self.release_children(&children);
+            n.cold.lock.unlock();
+            return None;
+        }
+        let out = match op {
+            FingerOp::Insert(v) => {
+                let t = self.add_terminal(r, &children, key, v);
+                // refresh the leaf finger with post-op live bounds
+                let (nk2, _) = n.key_next();
+                self.finger_record(1, r, self.arena.node(children[0]).key(), nk2);
+                self.release_children(&children);
+                t
+            }
+            FingerOp::Erase => {
+                let t = self.drop_key(r, &children, key);
+                // children[0] always survives drop_key under the >= 3 arity
+                // guard (first-child removal is delete-by-copy)
+                let (nk2, _) = n.key_next();
+                self.finger_record(1, r, self.arena.node(children[0]).key(), nk2);
+                self.release_children_retiring(&children);
+                t
+            }
+        };
+        n.cold.lock.unlock();
+        match out {
+            Tri::True => Some(true),
+            Tri::False => Some(false),
+            // add_terminal/drop_key never RETRY under a locked, covered leaf
+            Tri::Retry => unreachable!("terminal ops cannot retry under lock"),
+        }
     }
 
     // ------------------------------------------------------------------
@@ -358,46 +695,59 @@ impl DetSkiplist {
     /// Insert `key -> value`. Returns `false` if the key already exists.
     pub fn insert(&self, key: u64, value: u64) -> bool {
         assert!(key <= MAX_KEY, "key {key} reserved for sentinels");
-        let mut b = Backoff::new();
-        loop {
-            match self.addition(self.head, key, value) {
-                Tri::True => {
-                    self.len.fetch_add(1, Ordering::Relaxed);
-                    return true;
-                }
-                Tri::False => return false,
-                Tri::Retry => {
-                    self.stats.write_retries.fetch_add(1, Ordering::Relaxed);
-                    self.increase_depth();
-                    b.wait();
+        let mut cost = PathCost::default();
+        let inserted = 'result: {
+            if self.fingers_on.load(Ordering::Relaxed) {
+                cost.finger_attempts += 1;
+                if let Some(ok) = self.finger_write(key, FingerOp::Insert(value), &mut cost) {
+                    cost.finger_hits += 1;
+                    break 'result ok;
                 }
             }
+            let mut b = Backoff::new();
+            loop {
+                match self.addition(self.head, key, value, &mut cost) {
+                    Tri::True => break 'result true,
+                    Tri::False => break 'result false,
+                    Tri::Retry => {
+                        self.stats.write_retries.fetch_add(1, Ordering::Relaxed);
+                        self.increase_depth();
+                        b.wait();
+                    }
+                }
+            }
+        };
+        if inserted {
+            self.len.fetch_add(1, Ordering::Relaxed);
         }
+        self.flush_cost(&cost);
+        inserted
     }
 
-    fn addition(&self, nref: NodeRef, key: u64, value: u64) -> Tri {
+    fn addition(&self, nref: NodeRef, key: u64, value: u64, cost: &mut PathCost) -> Tri {
         if nref == SENTINEL {
             return Tri::Retry; // fell off the structure; restart
         }
+        cost.derefs += 1;
         let Some(n) = self.arena.resolve(nref) else {
             return Tri::Retry;
         };
-        n.lock.lock();
+        n.cold.lock.lock();
         if n.is_marked() || self.arena.resolve(nref).is_none() {
-            n.lock.unlock();
+            n.cold.lock.unlock();
             return Tri::Retry;
         }
         let (nkey, nnext) = n.key_next();
         if self.is_head(nref) && nnext != SENTINEL {
-            n.lock.unlock();
+            n.cold.lock.unlock();
             return Tri::Retry; // height increase pending (alg 3)
         }
-        let nbottom = n.bottom.load(Ordering::Acquire);
-        let children = match self.acquire_children(nkey, nbottom) {
+        let nbottom = n.hot.bottom.load(Ordering::Acquire);
+        let children = match self.acquire_children(nkey, nbottom, cost) {
             Ok(c) => c,
             Err(partial) => {
                 self.release_children(&partial);
-                n.lock.unlock();
+                n.cold.lock.unlock();
                 return Tri::Retry; // over-wide segment: retry after help
             }
         };
@@ -407,18 +757,23 @@ impl DetSkiplist {
         if nkey < key {
             // Move right.
             self.release_children(&children);
-            n.lock.unlock();
-            return self.addition(nnext, key, value);
+            n.cold.lock.unlock();
+            return self.addition(nnext, key, value, cost);
         }
 
         self.addition_rebalance(nref, &children);
-        let level = n.level.load(Ordering::Relaxed);
+        let level = n.hot.level.load(Ordering::Relaxed);
+
+        // record the descent entry at this level for the finger cache
+        if !self.is_head(nref) && !children.is_empty() {
+            self.finger_record(level, nref, self.arena.node(children[0]).key(), nkey);
+        }
 
         if level == 1 {
             // Leaf: insert into the terminal segment (paper's AddNode).
             let r = self.add_terminal(nref, &children, key, value);
             self.release_children(&children);
-            n.lock.unlock();
+            n.cold.lock.unlock();
             return r;
         }
 
@@ -431,9 +786,9 @@ impl DetSkiplist {
             }
         }
         self.release_children(&children);
-        n.lock.unlock();
+        n.cold.lock.unlock();
         match target {
-            Some(c) => self.addition(c, key, value),
+            Some(c) => self.addition(c, key, value, cost),
             // Can only happen transiently (concurrent restructure): retry.
             None => Tri::Retry,
         }
@@ -464,9 +819,9 @@ impl DetSkiplist {
                 return Tri::False; // duplicate
             }
             // insert-before-c: nn duplicates c; c becomes the new key.
-            let cval = cn.value.load(Ordering::Relaxed);
+            let cval = cn.cold.value.load(Ordering::Relaxed);
             let nn = self.arena.alloc(ck, cnext, SENTINEL, cval, 0);
-            cn.value.store(value, Ordering::Relaxed);
+            cn.cold.value.store(value, Ordering::Relaxed);
             cn.set_key_next(key, nn);
             return Tri::True;
         }
@@ -482,7 +837,7 @@ impl DetSkiplist {
             }
             None => {
                 let t = self.arena.alloc(key, SENTINEL, SENTINEL, value, 0);
-                pn.bottom.store(t, Ordering::Release);
+                pn.hot.bottom.store(t, Ordering::Release);
                 t
             }
         };
@@ -496,11 +851,35 @@ impl DetSkiplist {
 
     /// Lookup: returns the value if present.
     pub fn get(&self, key: u64) -> Option<u64> {
+        let mut cost = PathCost::default();
+        let out = self.get_inner(key, &mut cost);
+        self.flush_cost(&cost);
+        out
+    }
+
+    fn get_inner(&self, key: u64, cost: &mut PathCost) -> Option<u64> {
+        // finger fast path: start the lock-free descent at the deepest
+        // validated entry of this thread's last descent
+        if self.mode == FindMode::LockFree && self.fingers_on.load(Ordering::Relaxed) {
+            cost.finger_attempts += 1;
+            if let Some((start, seg_lo)) = self.finger_start(key, cost) {
+                if let Ok(v) = self.find_lockfree_from(start, seg_lo, key, cost) {
+                    // a hit = the op genuinely skipped the full descent
+                    cost.finger_hits += 1;
+                    return v;
+                }
+                // the finger raced a restructure mid-traversal: fall back to
+                // a full top-down descent (correctness never depended on it).
+                // Counted separately from find_retries, whose pre-finger
+                // meaning (traversal interference) must stay comparable.
+                self.stats.finger_fallbacks.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         let mut b = Backoff::new();
         loop {
             let r = match self.mode {
-                FindMode::LockFree => self.find_lockfree(key),
-                FindMode::ReadLocked => self.find_readlocked(key),
+                FindMode::LockFree => self.find_lockfree_from(self.head, 0, key, cost),
+                FindMode::ReadLocked => self.find_readlocked(key, cost),
             };
             match r {
                 Ok(v) => return v,
@@ -520,13 +899,28 @@ impl DetSkiplist {
         self.get(key).is_some()
     }
 
-    /// One lock-free traversal attempt. `Err(())` = RETRY.
-    fn find_lockfree(&self, key: u64) -> Result<Option<u64>, ()> {
-        let mut cur = self.head;
+    /// One lock-free traversal attempt from `start` (the head, or a
+    /// validated finger entry whose proven segment lower bound is
+    /// `seg_lo`). `Err(())` = RETRY.
+    ///
+    /// While a node is examined, its `next` and `bottom` hot lines are
+    /// prefetched — the two dependent misses of the descent overlap instead
+    /// of serializing. The descent path is recorded into the per-thread
+    /// finger slot as it goes.
+    fn find_lockfree_from(
+        &self,
+        start: NodeRef,
+        start_lo: u64,
+        key: u64,
+        cost: &mut PathCost,
+    ) -> Result<Option<u64>, ()> {
+        let mut cur = start;
+        let mut seg_lo = start_lo; // inclusive lower bound of cur's coverage
         loop {
             if cur == SENTINEL {
                 return Ok(None);
             }
+            cost.derefs += 1;
             let Some(n) = self.arena.resolve(cur) else {
                 return Err(());
             };
@@ -534,18 +928,21 @@ impl DetSkiplist {
                 return Err(());
             }
             let (nkey, nnext) = n.key_next();
-            let bottom = n.bottom.load(Ordering::Acquire);
+            let bottom = n.hot.bottom.load(Ordering::Acquire);
             // validate the snapshot was taken while `cur` was live
             if self.arena.resolve(cur).is_none() {
                 return Err(());
             }
+            // overlap the next dependent misses with this node's processing
+            cost.prefetches +=
+                self.arena.prefetch(nnext) as u64 + self.arena.prefetch(bottom) as u64;
             if self.is_head(cur) && nnext != SENTINEL {
                 return Err(()); // height change pending
             }
             if bottom == SENTINEL && !self.is_head(cur) {
                 // terminal node
                 if nkey == key {
-                    let v = n.value.load(Ordering::Relaxed);
+                    let v = n.cold.value.load(Ordering::Relaxed);
                     if n.is_marked() || self.arena.resolve(cur).is_none() {
                         return Err(());
                     }
@@ -561,16 +958,23 @@ impl DetSkiplist {
                 return Ok(None); // empty structure
             }
             if nkey < key {
+                seg_lo = nkey.wrapping_add(1);
                 cur = nnext;
                 continue;
+            }
+            // remember this level's entry for the next nearby search
+            if !self.is_head(cur) {
+                self.finger_record(n.hot.level.load(Ordering::Relaxed), cur, seg_lo, nkey);
             }
             // collect children lock-free; stop at first covering child
             let mut d = bottom;
             let mut target = None;
+            let mut child_lo = seg_lo;
             loop {
                 if d == SENTINEL {
                     break;
                 }
+                cost.derefs += 1;
                 let Some((dk, dn)) = self.arena.read_key_next(d) else {
                     return Err(());
                 };
@@ -582,6 +986,8 @@ impl DetSkiplist {
                     target = Some(d);
                     break;
                 }
+                cost.prefetches += self.arena.prefetch(dn) as u64;
+                child_lo = dk.wrapping_add(1);
                 if dk >= nkey {
                     break; // boundary child passed without covering `key`
                 }
@@ -591,22 +997,28 @@ impl DetSkiplist {
                 // Descending into a foreign boundary child (key > nkey,
                 // stale-high parent) is correct: the gap (last child, nkey]
                 // belongs to the next parent's first subtree.
-                Some(t) => cur = t,
+                Some(t) => {
+                    seg_lo = child_lo;
+                    cur = t;
+                }
                 // No cover: every child key < key, so this subtree's max is
                 // below `key` — continue right (paper: "the search can
                 // continue to the right").
-                None => cur = nnext,
+                None => {
+                    seg_lo = nkey.wrapping_add(1);
+                    cur = nnext;
+                }
             }
         }
     }
 
     /// RWL baseline: hand-over-hand shared locks.
-    fn find_readlocked(&self, key: u64) -> Result<Option<u64>, ()> {
+    fn find_readlocked(&self, key: u64, cost: &mut PathCost) -> Result<Option<u64>, ()> {
         let mut cur = self.head;
         let mut held: Option<NodeRef> = None;
-        let r = self.find_readlocked_inner(&mut cur, &mut held, key);
+        let r = self.find_readlocked_inner(&mut cur, &mut held, key, cost);
         if let Some(h) = held {
-            self.arena.node(h).lock.unlock_shared();
+            self.arena.node(h).cold.lock.unlock_shared();
         }
         r
     }
@@ -616,13 +1028,15 @@ impl DetSkiplist {
         cur: &mut NodeRef,
         held: &mut Option<NodeRef>,
         key: u64,
+        cost: &mut PathCost,
     ) -> Result<Option<u64>, ()> {
         // lock the starting node
         let n0 = self.arena.node(*cur);
-        n0.lock.lock_shared();
+        n0.cold.lock.lock_shared();
         *held = Some(*cur);
         loop {
             let curref = (*held).unwrap();
+            cost.derefs += 1;
             let n = self.arena.node(curref);
             if n.is_marked() || self.arena.resolve(curref).is_none() {
                 return Err(());
@@ -631,11 +1045,11 @@ impl DetSkiplist {
             if self.is_head(curref) && nnext != SENTINEL {
                 return Err(());
             }
-            let bottom = n.bottom.load(Ordering::Acquire);
+            let bottom = n.hot.bottom.load(Ordering::Acquire);
             if bottom == SENTINEL && !self.is_head(curref) {
                 // terminal
                 if nkey == key {
-                    return Ok(Some(n.value.load(Ordering::Relaxed)));
+                    return Ok(Some(n.cold.value.load(Ordering::Relaxed)));
                 }
                 if nkey > key {
                     return Ok(None);
@@ -661,6 +1075,7 @@ impl DetSkiplist {
             let mut d = bottom;
             let mut target = None;
             while d != SENTINEL {
+                cost.derefs += 1;
                 let dn = self.arena.node(d);
                 let (dk, dnext) = dn.key_next();
                 if key <= dk {
@@ -692,14 +1107,14 @@ impl DetSkiplist {
     fn step_read(&self, held: &mut Option<NodeRef>, to: NodeRef) -> Result<bool, ()> {
         if to == SENTINEL {
             if let Some(h) = held.take() {
-                self.arena.node(h).lock.unlock_shared();
+                self.arena.node(h).cold.lock.unlock_shared();
             }
             return Ok(false);
         }
         let tn = self.arena.node(to);
-        tn.lock.lock_shared();
+        tn.cold.lock.lock_shared();
         if let Some(h) = held.take() {
-            self.arena.node(h).lock.unlock_shared();
+            self.arena.node(h).cold.lock.unlock_shared();
         }
         *held = Some(to);
         if self.arena.resolve(to).is_none() || tn.is_marked() {
@@ -714,32 +1129,45 @@ impl DetSkiplist {
 
     /// Remove `key`. Returns `false` if it was not present.
     pub fn erase(&self, key: u64) -> bool {
-        let mut b = Backoff::new();
-        loop {
-            match self.deletion(self.head, key) {
-                Tri::True => {
-                    self.len.fetch_sub(1, Ordering::Relaxed);
-                    // opportunistic height collapse (cheap check first)
-                    self.maybe_decrease_depth();
-                    return true;
-                }
-                Tri::False => return false,
-                Tri::Retry => {
-                    self.stats.write_retries.fetch_add(1, Ordering::Relaxed);
-                    self.increase_depth();
-                    self.maybe_decrease_depth();
-                    b.wait();
+        let mut cost = PathCost::default();
+        let erased = 'result: {
+            if self.fingers_on.load(Ordering::Relaxed) {
+                cost.finger_attempts += 1;
+                if let Some(ok) = self.finger_write(key, FingerOp::Erase, &mut cost) {
+                    cost.finger_hits += 1;
+                    break 'result ok;
                 }
             }
+            let mut b = Backoff::new();
+            loop {
+                match self.deletion(self.head, key, &mut cost) {
+                    Tri::True => break 'result true,
+                    Tri::False => break 'result false,
+                    Tri::Retry => {
+                        self.stats.write_retries.fetch_add(1, Ordering::Relaxed);
+                        self.increase_depth();
+                        self.maybe_decrease_depth();
+                        b.wait();
+                    }
+                }
+            }
+        };
+        if erased {
+            self.len.fetch_sub(1, Ordering::Relaxed);
+            // opportunistic height collapse (cheap check first) — on the
+            // finger fast path too, so heavy nearby-erase phases still shrink
+            self.maybe_decrease_depth();
         }
+        self.flush_cost(&cost);
+        erased
     }
 
     fn maybe_decrease_depth(&self) {
         let head = self.arena.node(self.head);
-        if head.level.load(Ordering::Relaxed) <= 1 {
+        if head.hot.level.load(Ordering::Relaxed) <= 1 {
             return;
         }
-        let b = head.bottom.load(Ordering::Acquire);
+        let b = head.hot.bottom.load(Ordering::Acquire);
         if b == SENTINEL {
             return;
         }
@@ -750,29 +1178,30 @@ impl DetSkiplist {
         }
     }
 
-    fn deletion(&self, nref: NodeRef, key: u64) -> Tri {
+    fn deletion(&self, nref: NodeRef, key: u64, cost: &mut PathCost) -> Tri {
         if nref == SENTINEL {
             return Tri::Retry;
         }
+        cost.derefs += 1;
         let Some(n) = self.arena.resolve(nref) else {
             return Tri::Retry;
         };
-        n.lock.lock();
+        n.cold.lock.lock();
         if n.is_marked() || self.arena.resolve(nref).is_none() {
-            n.lock.unlock();
+            n.cold.lock.unlock();
             return Tri::Retry;
         }
         let (nkey, nnext) = n.key_next();
         if self.is_head(nref) && nnext != SENTINEL {
-            n.lock.unlock();
+            n.cold.lock.unlock();
             return Tri::Retry;
         }
-        let nbottom = n.bottom.load(Ordering::Acquire);
-        let children = match self.acquire_children(nkey, nbottom) {
+        let nbottom = n.hot.bottom.load(Ordering::Acquire);
+        let children = match self.acquire_children(nkey, nbottom, cost) {
             Ok(c) => c,
             Err(partial) => {
                 self.release_children(&partial);
-                n.lock.unlock();
+                n.cold.lock.unlock();
                 return Tri::Retry; // over-wide segment: retry after help
             }
         };
@@ -781,15 +1210,21 @@ impl DetSkiplist {
 
         if nkey < key {
             self.release_children(&children);
-            n.lock.unlock();
-            return self.deletion(nnext, key);
+            n.cold.lock.unlock();
+            return self.deletion(nnext, key, cost);
         }
 
-        let level = n.level.load(Ordering::Relaxed);
+        let level = n.hot.level.load(Ordering::Relaxed);
+
+        // record the descent entry at this level for the finger cache
+        if !self.is_head(nref) && !children.is_empty() {
+            self.finger_record(level, nref, self.arena.node(children[0]).key(), nkey);
+        }
+
         if level == 1 {
             let r = self.drop_key(nref, &children, key);
             self.release_children_retiring(&children);
-            n.lock.unlock();
+            n.cold.lock.unlock();
             return r;
         }
 
@@ -803,15 +1238,15 @@ impl DetSkiplist {
         }
         let Some(i) = idx else {
             self.release_children(&children);
-            n.lock.unlock();
+            n.cold.lock.unlock();
             return Tri::False; // key beyond every child: not present
         };
 
         let target = children[i];
-        let Some(tchildren) = self.count_children(target) else {
+        let Some(tchildren) = self.count_children(target, cost) else {
             // arity overflow while counting: retry the whole operation
             self.release_children(&children);
-            n.lock.unlock();
+            n.cold.lock.unlock();
             return Tri::Retry;
         };
         let mut descend = target;
@@ -819,7 +1254,7 @@ impl DetSkiplist {
         if tchildren == 0 {
             // transient/corrupt view; retry
             self.release_children(&children);
-            n.lock.unlock();
+            n.cold.lock.unlock();
             return Tri::Retry;
         }
         if tchildren <= 2 && children.len() >= 2 {
@@ -828,33 +1263,33 @@ impl DetSkiplist {
             // RIGHT node so the parent's bottom link never dangles.
             let (li, ri) = if i > 0 { (i - 1, i) } else { (i, i + 1) };
             if ri < children.len() {
-                let merged = self.merge_borrow(children[li], children[ri], key);
+                let merged = self.merge_borrow(children[li], children[ri], key, cost);
                 descend = merged;
             }
         }
 
         self.release_children_retiring(&children);
-        n.lock.unlock();
-        self.deletion(descend, key)
+        n.cold.lock.unlock();
+        self.deletion(descend, key, cost)
     }
 
     /// Count the children of locked node `c` (no locks needed: mutating
     /// `c`'s child list requires `c`'s lock, which we hold). `None` on
     /// arity overflow (caller retries).
-    fn count_children(&self, c: NodeRef) -> Option<usize> {
-        self.collect_children(c).map(|v| v.len())
+    fn count_children(&self, c: NodeRef, cost: &mut PathCost) -> Option<usize> {
+        self.collect_children(c, cost).map(|v| v.len())
     }
 
     /// Algorithm 5: merge the pair `(n1, n2)` (both locked children of the
     /// current node; `n2 = n1.next`) and optionally re-split ("borrow") if
     /// the donor side had more than 2 children. Returns the node now
     /// covering `key`.
-    fn merge_borrow(&self, n1: NodeRef, n2: NodeRef, key: u64) -> NodeRef {
+    fn merge_borrow(&self, n1: NodeRef, n2: NodeRef, key: u64, cost: &mut PathCost) -> NodeRef {
         let n1n = self.arena.node(n1);
         let n2n = self.arena.node(n2);
         let (n1key, n1next) = n1n.key_next();
         debug_assert_eq!(n1next, n2, "pair must be adjacent");
-        let (c1, c2) = match (self.collect_children(n1), self.collect_children(n2)) {
+        let (c1, c2) = match (self.collect_children(n1, cost), self.collect_children(n2, cost)) {
             (Some(a), Some(b)) => (a, b),
             // Transiently over-wide sibling: skip the boost. The deletion
             // still descends into the covering child; the next writer pass
@@ -869,9 +1304,9 @@ impl DetSkiplist {
 
         // merge: n1 absorbs n2 (atomic (key,next) takeover), n2 retires.
         let (n2key, n2next) = n2n.key_next();
-        let level = n1n.level.load(Ordering::Relaxed);
+        let level = n1n.hot.level.load(Ordering::Relaxed);
         n1n.set_key_next(n2key, n2next);
-        n2n.mark.store(true, Ordering::Release);
+        n2n.cold.mark.store(true, Ordering::Release);
         self.stats.merges.fetch_add(1, Ordering::Relaxed);
 
         let merged_len = c1.len() + c2.len();
@@ -905,12 +1340,13 @@ impl DetSkiplist {
     /// child list requires `c`'s lock, which the caller holds). Foreign
     /// boundary nodes (key > c.key) are excluded — see `acquire_children`.
     /// `None` on arity overflow (caller retries or skips the rebalance).
-    fn collect_children(&self, c: NodeRef) -> Option<ChildVec> {
+    fn collect_children(&self, c: NodeRef, cost: &mut PathCost) -> Option<ChildVec> {
         let cn = self.arena.node(c);
         let ckey = cn.key();
         let mut out = ChildVec::new();
-        let mut d = cn.bottom.load(Ordering::Acquire);
+        let mut d = cn.hot.bottom.load(Ordering::Acquire);
         while d != SENTINEL {
+            cost.derefs += 1;
             let (dk, dn) = self.arena.node(d).key_next();
             if dk > ckey {
                 break;
@@ -957,7 +1393,7 @@ impl DetSkiplist {
             let prn = self.arena.node(pr);
             let (prk, _) = prn.key_next();
             prn.set_key_next(prk, tnext);
-            tn.mark.store(true, Ordering::Release);
+            tn.cold.mark.store(true, Ordering::Release);
             // keep p.key in sync if we removed the last child
             if ti == children.len() - 1 {
                 let (pk, pnx) = pn.key_next();
@@ -970,14 +1406,14 @@ impl DetSkiplist {
             let s = children[ti + 1];
             let sn = self.arena.node(s);
             let (sk, snext) = sn.key_next();
-            let sval = sn.value.load(Ordering::Relaxed);
-            tn.value.store(sval, Ordering::Relaxed);
+            let sval = sn.cold.value.load(Ordering::Relaxed);
+            tn.cold.value.store(sval, Ordering::Relaxed);
             tn.set_key_next(sk, snext);
-            sn.mark.store(true, Ordering::Release);
+            sn.cold.mark.store(true, Ordering::Release);
         } else {
             // only child (possible only at the head leaf)
-            pn.bottom.store(tnext, Ordering::Release);
-            tn.mark.store(true, Ordering::Release);
+            pn.hot.bottom.store(tnext, Ordering::Release);
+            tn.cold.mark.store(true, Ordering::Release);
         }
         Tri::True
     }
@@ -988,11 +1424,19 @@ impl DetSkiplist {
     // ------------------------------------------------------------------
 
     /// Collect all `(key, value)` with `lo <= key <= hi` (lock-free walk of
-    /// the terminal list; retries on interference).
+    /// the terminal list; retries on interference). The walk prefetches the
+    /// next terminal chunk while the current row is copied out.
     pub fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)> {
+        let mut cost = PathCost::default();
+        let out = self.range_inner(lo, hi, &mut cost);
+        self.flush_cost(&cost);
+        out
+    }
+
+    fn range_inner(&self, lo: u64, hi: u64, cost: &mut PathCost) -> Vec<(u64, u64)> {
         let mut b = Backoff::new();
         'retry: loop {
-            let Some(start) = self.seek_terminal(lo) else {
+            let Some(start) = self.seek_terminal(lo, cost) else {
                 self.stats.find_retries.fetch_add(1, Ordering::Relaxed);
                 b.wait();
                 continue 'retry;
@@ -1003,16 +1447,19 @@ impl DetSkiplist {
                 if cur == SENTINEL {
                     return out;
                 }
+                cost.derefs += 1;
                 let Some((k, nx)) = self.arena.read_key_next(cur) else {
                     self.stats.find_retries.fetch_add(1, Ordering::Relaxed);
                     b.wait();
                     continue 'retry;
                 };
+                // pull the next terminal line while this row is copied out
+                cost.prefetches += self.arena.prefetch(nx) as u64;
                 if k > hi {
                     return out;
                 }
                 if k >= lo {
-                    let v = self.arena.node(cur).value.load(Ordering::Relaxed);
+                    let v = self.arena.node(cur).cold.value.load(Ordering::Relaxed);
                     if self.arena.resolve(cur).is_none() {
                         b.wait();
                         continue 'retry;
@@ -1025,21 +1472,24 @@ impl DetSkiplist {
     }
 
     /// Find the first terminal node with key >= lo (None = retry).
-    fn seek_terminal(&self, lo: u64) -> Option<NodeRef> {
+    fn seek_terminal(&self, lo: u64, cost: &mut PathCost) -> Option<NodeRef> {
         let mut cur = self.head;
         loop {
             if cur == SENTINEL {
                 return Some(SENTINEL);
             }
+            cost.derefs += 1;
             let n = self.arena.resolve(cur)?;
             if n.is_marked() {
                 return None;
             }
             let (nkey, nnext) = n.key_next();
-            let bottom = n.bottom.load(Ordering::Acquire);
+            let bottom = n.hot.bottom.load(Ordering::Acquire);
             if self.arena.resolve(cur).is_none() {
                 return None;
             }
+            cost.prefetches +=
+                self.arena.prefetch(nnext) as u64 + self.arena.prefetch(bottom) as u64;
             if self.is_head(cur) && nnext != SENTINEL {
                 return None;
             }
@@ -1062,11 +1512,13 @@ impl DetSkiplist {
             let mut d = bottom;
             let mut target = None;
             while d != SENTINEL {
+                cost.derefs += 1;
                 let (dk, dn) = self.arena.read_key_next(d)?;
                 if lo <= dk {
                     target = Some(d);
                     break;
                 }
+                cost.prefetches += self.arena.prefetch(dn) as u64;
                 if dk >= nkey {
                     break;
                 }
@@ -1098,7 +1550,7 @@ impl DetSkiplist {
         let mut level_heads = vec![self.head];
         let mut cur = self.head;
         loop {
-            let b = self.arena.node(cur).bottom.load(Ordering::Acquire);
+            let b = self.arena.node(cur).hot.bottom.load(Ordering::Acquire);
             if b == SENTINEL {
                 break;
             }
@@ -1127,7 +1579,7 @@ impl DetSkiplist {
                 }
                 prev_key = Some(nkey);
                 // node's children = segment of the lower level from `child`
-                if nn.bottom.load(Ordering::Acquire) != child {
+                if nn.hot.bottom.load(Ordering::Acquire) != child {
                     return Err(format!("level {w}: segment partition broken at key {nkey}"));
                 }
                 let mut arity = 0;
@@ -1300,6 +1752,80 @@ mod tests {
                 _ => assert_eq!(s.contains(k), oracle.contains(&k), "op {i} find {k}"),
             }
         }
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys, oracle.into_iter().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_oracle_with_fingers_disabled_baseline() {
+        // the Table XII baseline path (pure top-down descents) must agree
+        // with the oracle exactly like the finger-accelerated default
+        let s = new_lf();
+        s.set_finger_cache(false);
+        assert!(!s.finger_cache_enabled());
+        let mut oracle = BTreeSet::new();
+        let mut rng = Rng::new(17);
+        for _ in 0..5_000 {
+            let k = rng.below(300);
+            match rng.below(10) {
+                0..=3 => assert_eq!(s.insert(k, k), oracle.insert(k)),
+                4..=5 => assert_eq!(s.erase(k), oracle.remove(&k)),
+                _ => assert_eq!(s.contains(k), oracle.contains(&k)),
+            }
+        }
+        let st = s.stats();
+        assert_eq!(st.finger_attempts, 0, "disabled fingers must never be consulted");
+        assert_eq!(st.finger_hits, 0);
+        assert!(st.node_derefs > 0, "deref accounting is always on");
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys, oracle.into_iter().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nearby_keys_hit_the_finger_cache() {
+        let s = new_lf();
+        // warm a 3-key-per-leaf structure, then hammer one neighbourhood
+        for k in 0..600u64 {
+            s.insert(k, k);
+        }
+        let warm = s.stats();
+        for _ in 0..50 {
+            for k in 300..330u64 {
+                assert_eq!(s.get(k), Some(k));
+            }
+        }
+        let st = s.stats();
+        let attempts = st.finger_attempts - warm.finger_attempts;
+        let hits = st.finger_hits - warm.finger_hits;
+        assert_eq!(attempts, 1_500, "every get consults the finger");
+        assert!(
+            hits as f64 / attempts as f64 > 0.5,
+            "repeated nearby gets must mostly hit ({hits}/{attempts})"
+        );
+        assert!(st.prefetches > 0, "descents must prefetch");
+    }
+
+    #[test]
+    fn finger_fast_path_writes_preserve_invariants() {
+        // repeated nearby insert/erase churn (the finger write fast path)
+        // followed by a full structural check
+        let s = new_lf();
+        for k in 0..400u64 {
+            s.insert(k * 2, k);
+        }
+        let mut rng = Rng::new(5);
+        let mut oracle: BTreeSet<u64> = (0..400u64).map(|k| k * 2).collect();
+        for _ in 0..20_000 {
+            let base = rng.below(40) * 20;
+            let k = base + rng.below(20);
+            if rng.chance(1, 2) {
+                assert_eq!(s.insert(k, k), oracle.insert(k));
+            } else {
+                assert_eq!(s.erase(k), oracle.remove(&k));
+            }
+        }
+        let st = s.stats();
+        assert!(st.finger_hits > 0, "nearby writes must use the fast path");
         let keys = s.check_invariants().unwrap();
         assert_eq!(keys, oracle.into_iter().collect::<Vec<_>>());
     }

@@ -8,17 +8,44 @@
 //! stale link observes a generation mismatch and retries; recycled memory
 //! can never masquerade as the node a link meant.
 //!
+//! **Hot/cold split.** The node is stored as two parallel plane slots in
+//! the unified [`crate::mem::BlockArena`]:
+//!
+//! - [`NodeHot`] — the descent line: the packed `(key, next)` word,
+//!   `bottom` and `level`, `#[repr(align(64))]` and statically asserted to
+//!   fit one 64-byte cache line. A lock-free `Find` touches *only* hot
+//!   lines until it reaches its terminal node.
+//! - [`NodeCold`] — control state: the per-node RW lock, the removal mark,
+//!   the recycle generation and the value. Writers and validation touch it;
+//!   the descent stream does not, so lock ping-pong between writers never
+//!   evicts the hot lines readers are traversing.
+//!
+//! [`NodeView`] pairs the two plane references back into one "node" for
+//! call sites.
+//!
 //! The allocator body lives in the unified [`crate::mem::BlockArena`]
 //! (block directory, per-thread magazines, capacity-sized free list);
 //! [`NodeArena`] only adds the skiplist-specific parts: the packed link
-//! format, the slot-0 sentinel, and `(key, next)` snapshot validation.
+//! format, the slot-0 sentinel, `(key, next)` snapshot validation and the
+//! descent prefetch helper.
 //!
 //! The `(key, next)` pair lives in one [`AtomicU128`] (key in bits 127:64,
 //! next link in bits 63:0, exactly the paper's wide-integer layout), so the
 //! lock-free `Find` reads a consistent view with a single atomic load and
 //! rebalancing publishes `(key, next)` changes atomically.
+//!
+//! **Publication ordering.** `NodeArena::alloc` initializes `bottom`,
+//! `value`, `mark` and `level` with relaxed stores and only then publishes
+//! the node by storing `(key, next)`. A release fence sits between the two
+//! phases: any thread that observes the published `(key, next)` word (the
+//! `AtomicU128` load synchronizes — x86 `lock cmpxchg16b` or the seqlock's
+//! acquire/release pair) therefore also observes every field initialized
+//! before the fence, even through relaxed loads. This is the happens-before
+//! edge the lock-free `Find` relies on when it reads `bottom`/`value` of a
+//! node it discovered through a freshly published link (see the
+//! `alloc_publication_is_release_ordered` stress test).
 
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{fence, AtomicBool, AtomicU32, AtomicU64, Ordering};
 
 use crate::mem::{ArenaNode, ArenaOptions, BlockArena, PoolStats};
 use crate::sync::{hi64, lo64, pack, AtomicU128, RwSpinLock};
@@ -45,14 +72,29 @@ pub fn make_ref(gen: u32, idx: u32) -> NodeRef {
     (gen as u64) << 32 | idx as u64
 }
 
-/// A skiplist node (terminal and non-terminal share the layout).
-pub struct Node {
+/// Hot plane of a skiplist node: exactly what a descent dereferences,
+/// packed into (at most) one 64-byte line. Terminal and non-terminal nodes
+/// share the layout.
+#[repr(align(64))]
+pub struct NodeHot {
     /// `(key << 64) | next` — read/written as one atomic word.
     pub kn: AtomicU128,
     /// Link to the first child (non-terminal) or `SENTINEL` (terminal).
     pub bottom: AtomicU64,
-    /// Payload (terminal nodes only).
-    pub value: AtomicU64,
+    /// Height: 0 = terminal, 1 = leaf, increasing upward.
+    pub level: AtomicU32,
+}
+
+// The whole point of the split: the descent line must be one cache line,
+// aligned so it never straddles two. Checked at compile time on every
+// target (the non-x86 AtomicU128 carries a seqlock word and still fits).
+const _: () = {
+    assert!(std::mem::size_of::<NodeHot>() == 64, "hot node plane must be exactly one cache line");
+    assert!(std::mem::align_of::<NodeHot>() == 64, "hot node plane must be line-aligned");
+};
+
+/// Cold plane of a skiplist node: writer/validation control words.
+pub struct NodeCold {
     /// Per-node reader-writer lock (writers: L/LL acquisition; readers:
     /// only in the RWL find baseline).
     pub lock: RwSpinLock,
@@ -60,59 +102,80 @@ pub struct Node {
     pub mark: AtomicBool,
     /// Recycle generation; bumped at retire. Links carry the expected value.
     pub gen: AtomicU32,
-    /// Height: 0 = terminal, 1 = leaf, increasing upward.
-    pub level: AtomicU32,
+    /// Payload (terminal nodes only).
+    pub value: AtomicU64,
 }
 
-impl Node {
+/// Tag type naming the skiplist node's hot/cold split (never instantiated).
+pub struct Node;
+
+impl ArenaNode for Node {
+    type Hot = NodeHot;
+    type Cold = NodeCold;
+
+    fn vacant_hot() -> NodeHot {
+        NodeHot {
+            kn: AtomicU128::new(0),
+            bottom: AtomicU64::new(SENTINEL),
+            level: AtomicU32::new(0),
+        }
+    }
+
+    fn vacant_cold() -> NodeCold {
+        NodeCold {
+            lock: RwSpinLock::new(),
+            mark: AtomicBool::new(false),
+            gen: AtomicU32::new(0),
+            value: AtomicU64::new(0),
+        }
+    }
+
+    fn generation(cold: &NodeCold) -> &AtomicU32 {
+        &cold.gen
+    }
+}
+
+/// Both planes of one node, paired back together for call sites. Copyable
+/// reference pair — methods cover the common composite reads/writes, and
+/// the `hot`/`cold` fields are public for direct plane access (which makes
+/// the hot/cold cost of every touch visible at the call site).
+#[derive(Clone, Copy)]
+pub struct NodeView<'a> {
+    pub hot: &'a NodeHot,
+    pub cold: &'a NodeCold,
+}
+
+impl<'a> NodeView<'a> {
     #[inline]
     pub fn key(&self) -> u64 {
-        hi64(self.kn.load())
+        hi64(self.hot.kn.load())
     }
 
     #[inline]
     pub fn next(&self) -> NodeRef {
-        lo64(self.kn.load())
+        lo64(self.hot.kn.load())
     }
 
     /// Atomic `(key, next)` snapshot.
     #[inline]
     pub fn key_next(&self) -> (u64, NodeRef) {
-        let kn = self.kn.load();
+        let kn = self.hot.kn.load();
         (hi64(kn), lo64(kn))
     }
 
     #[inline]
     pub fn set_key_next(&self, key: u64, next: NodeRef) {
-        self.kn.store(pack(key, next));
+        self.hot.kn.store(pack(key, next));
     }
 
     #[inline]
     pub fn is_marked(&self) -> bool {
-        self.mark.load(Ordering::Acquire)
+        self.cold.mark.load(Ordering::Acquire)
     }
 }
 
-impl ArenaNode for Node {
-    fn vacant() -> Node {
-        Node {
-            kn: AtomicU128::new(0),
-            bottom: AtomicU64::new(SENTINEL),
-            value: AtomicU64::new(0),
-            lock: RwSpinLock::new(),
-            mark: AtomicBool::new(false),
-            gen: AtomicU32::new(0),
-            level: AtomicU32::new(0),
-        }
-    }
-
-    fn generation(&self) -> &AtomicU32 {
-        &self.gen
-    }
-}
-
-/// Index-addressed arena of [`Node`]s with lock-free recycling — a typed
-/// façade over the unified [`BlockArena`].
+/// Index-addressed arena of skiplist nodes with lock-free recycling — a
+/// typed façade over the unified [`BlockArena`].
 pub struct NodeArena {
     arena: BlockArena<Node>,
 }
@@ -147,9 +210,9 @@ impl NodeArena {
     /// Resolve a link; `None` if the node has been retired/recycled since
     /// the link was created (generation mismatch).
     #[inline]
-    pub fn resolve(&self, r: NodeRef) -> Option<&Node> {
-        let n = self.arena.raw(ref_idx(r));
-        if n.gen.load(Ordering::Acquire) == ref_gen(r) {
+    pub fn resolve(&self, r: NodeRef) -> Option<NodeView<'_>> {
+        let n = self.node(r);
+        if n.cold.gen.load(Ordering::Acquire) == ref_gen(r) {
             Some(n)
         } else {
             None
@@ -158,8 +221,20 @@ impl NodeArena {
 
     /// Resolve without the generation check (sentinel / owned refs).
     #[inline]
-    pub fn node(&self, r: NodeRef) -> &Node {
-        self.arena.raw(ref_idx(r))
+    pub fn node(&self, r: NodeRef) -> NodeView<'_> {
+        let idx = ref_idx(r);
+        NodeView { hot: self.arena.hot(idx), cold: self.arena.cold(idx) }
+    }
+
+    /// Hint the cache hierarchy to pull `r`'s hot descent line. Safe for
+    /// any link value (bounds-guarded; a prefetch never faults) — issue it
+    /// for the *next* hop while the current node is still being examined so
+    /// the dependent misses overlap ("Skiplists with Foresight"). The
+    /// sentinel's line is never worth a prefetch slot; returns whether a
+    /// prefetch was issued so callers keep honest per-op counts.
+    #[inline]
+    pub fn prefetch(&self, r: NodeRef) -> bool {
+        r != SENTINEL && self.arena.prefetch_hot(ref_idx(r))
     }
 
     /// Read a validated `(key, next)` snapshot of `r`: the generation is
@@ -167,37 +242,45 @@ impl NodeArena {
     /// the node was live under this link.
     #[inline]
     pub fn read_key_next(&self, r: NodeRef) -> Option<(u64, NodeRef)> {
-        let n = self.arena.raw(ref_idx(r));
-        if n.gen.load(Ordering::Acquire) != ref_gen(r) {
+        let idx = ref_idx(r);
+        let cold = self.arena.cold(idx);
+        if cold.gen.load(Ordering::Acquire) != ref_gen(r) {
             return None;
         }
-        let (k, nx) = n.key_next();
-        if n.gen.load(Ordering::Acquire) != ref_gen(r) {
+        let kn = self.arena.hot(idx).kn.load();
+        if cold.gen.load(Ordering::Acquire) != ref_gen(r) {
             return None;
         }
-        Some((k, nx))
+        Some((hi64(kn), lo64(kn)))
     }
 
     /// Allocate a node (recycled or fresh) and initialize it. The lock word
     /// and generation are deliberately *not* reset (stragglers may still be
     /// spinning on them; they re-validate after acquiring).
+    ///
+    /// Field stores are relaxed; the release fence below orders them before
+    /// the `(key, next)` publish, giving readers that discover the node
+    /// through the published word a happens-before edge to every field (see
+    /// the module docs — this is load-bearing for the lock-free `Find`).
     pub fn alloc(&self, key: u64, next: NodeRef, bottom: NodeRef, value: u64, level: u32) -> NodeRef {
         let idx = self.arena.alloc_slot();
-        let n = self.arena.raw(idx);
-        n.bottom.store(bottom, Ordering::Relaxed);
-        n.value.store(value, Ordering::Relaxed);
-        n.mark.store(false, Ordering::Relaxed);
-        n.level.store(level, Ordering::Relaxed);
-        // publish (key,next) last
-        n.set_key_next(key, next);
-        make_ref(n.gen.load(Ordering::Acquire), idx)
+        let hot = self.arena.hot(idx);
+        let cold = self.arena.cold(idx);
+        hot.bottom.store(bottom, Ordering::Relaxed);
+        cold.value.store(value, Ordering::Relaxed);
+        cold.mark.store(false, Ordering::Relaxed);
+        hot.level.store(level, Ordering::Relaxed);
+        // publish (key,next) last, release-ordered after the field stores
+        fence(Ordering::Release);
+        hot.kn.store(pack(key, next));
+        make_ref(cold.gen.load(Ordering::Acquire), idx)
     }
 
     /// Retire a node: bump its generation (invalidating every existing link
     /// to it) and return it to the magazine/free pool.
     pub fn retire(&self, r: NodeRef) {
         debug_assert_ne!(r, SENTINEL, "cannot retire the sentinel");
-        debug_assert!(self.arena.raw(ref_idx(r)).is_marked(), "retiring an unmarked node");
+        debug_assert!(self.node(r).is_marked(), "retiring an unmarked node");
         self.arena.retire_slot(ref_idx(r));
     }
 
@@ -217,6 +300,7 @@ impl NodeArena {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn sentinel_is_self_referential() {
@@ -224,7 +308,22 @@ mod tests {
         let s = a.node(SENTINEL);
         assert_eq!(s.key(), u64::MAX);
         assert_eq!(s.next(), SENTINEL);
-        assert_eq!(s.bottom.load(Ordering::Relaxed), SENTINEL);
+        assert_eq!(s.hot.bottom.load(Ordering::Relaxed), SENTINEL);
+    }
+
+    #[test]
+    fn hot_plane_is_one_aligned_cache_line() {
+        // compile-time assert made observable, plus the runtime layout of
+        // actual slots: consecutive hot slots are exactly 64 bytes apart.
+        assert_eq!(std::mem::size_of::<NodeHot>(), 64);
+        assert_eq!(std::mem::align_of::<NodeHot>(), 64);
+        let a = NodeArena::new(16, 16);
+        let r1 = a.alloc(1, SENTINEL, SENTINEL, 0, 0);
+        let r2 = a.alloc(2, SENTINEL, SENTINEL, 0, 0);
+        let p1 = a.node(r1).hot as *const NodeHot as usize;
+        let p2 = a.node(r2).hot as *const NodeHot as usize;
+        assert_eq!(p1 % 64, 0, "hot slots are line-aligned");
+        assert_eq!(p2 - p1, 64, "hot slots are densely packed, one line each");
     }
 
     #[test]
@@ -233,14 +332,14 @@ mod tests {
         let r = a.alloc(42, SENTINEL, SENTINEL, 7, 0);
         let n = a.resolve(r).unwrap();
         assert_eq!(n.key(), 42);
-        assert_eq!(n.value.load(Ordering::Relaxed), 7);
+        assert_eq!(n.cold.value.load(Ordering::Relaxed), 7);
     }
 
     #[test]
     fn retire_invalidates_links() {
         let a = NodeArena::new(16, 16);
         let r = a.alloc(1, SENTINEL, SENTINEL, 0, 0);
-        a.node(r).mark.store(true, Ordering::Release);
+        a.node(r).cold.mark.store(true, Ordering::Release);
         a.retire(r);
         assert!(a.resolve(r).is_none());
         assert!(a.read_key_next(r).is_none());
@@ -250,7 +349,7 @@ mod tests {
     fn recycled_slot_gets_new_generation() {
         let a = NodeArena::new(16, 16);
         let r1 = a.alloc(1, SENTINEL, SENTINEL, 0, 0);
-        a.node(r1).mark.store(true, Ordering::Release);
+        a.node(r1).cold.mark.store(true, Ordering::Release);
         a.retire(r1);
         let r2 = a.alloc(2, SENTINEL, SENTINEL, 0, 0);
         assert_eq!(ref_idx(r1), ref_idx(r2), "slot reused");
@@ -263,7 +362,7 @@ mod tests {
     fn stats_flow_through_the_unified_arena() {
         let a = NodeArena::new(16, 16);
         let r = a.alloc(1, SENTINEL, SENTINEL, 0, 0);
-        a.node(r).mark.store(true, Ordering::Release);
+        a.node(r).cold.mark.store(true, Ordering::Release);
         a.retire(r);
         let _ = a.alloc(2, SENTINEL, SENTINEL, 0, 0);
         let st = a.stats();
@@ -279,5 +378,64 @@ mod tests {
         let r = make_ref(0xABCD, 0x1234);
         assert_eq!(ref_gen(r), 0xABCD);
         assert_eq!(ref_idx(r), 0x1234);
+    }
+
+    /// Satellite regression (publication ordering): a node's relaxed field
+    /// stores must be visible to any thread that observed the node through
+    /// its published `(key, next)` word. An allocator thread churns
+    /// alloc/publish/retire cycles with value/level derived from the key;
+    /// reader threads chase the freshly published refs through a mailbox
+    /// and assert they never observe a stale field behind a valid link+key.
+    #[test]
+    fn alloc_publication_is_release_ordered() {
+        // 30k allocs with ~1/4 recycled: stays well inside 8192*8 slots
+        let a = Arc::new(NodeArena::new(8192, 8));
+        let mailbox = Arc::new(AtomicU64::new(SENTINEL));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let a = a.clone();
+            let mailbox = mailbox.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut checked = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    let r = mailbox.load(Ordering::Acquire);
+                    if r == SENTINEL {
+                        std::hint::spin_loop();
+                        continue;
+                    }
+                    // read (key,next) through the validated snapshot, then
+                    // the relaxed-initialized fields; re-validate afterwards
+                    // so a recycled node can't fake a violation.
+                    let Some((k, _)) = a.read_key_next(r) else { continue };
+                    let n = a.node(r);
+                    let v = n.cold.value.load(Ordering::Relaxed);
+                    let lvl = n.hot.level.load(Ordering::Relaxed);
+                    let b = n.hot.bottom.load(Ordering::Relaxed);
+                    if a.resolve(r).is_none() {
+                        continue; // recycled under us: snapshot void
+                    }
+                    assert_eq!(v, k.wrapping_mul(7) ^ 1, "value published after (key,next)");
+                    assert_eq!(lvl, (k % 5) as u32, "level published after (key,next)");
+                    assert_eq!(b, SENTINEL);
+                    checked += 1;
+                }
+                checked
+            }));
+        }
+        for k in 1..30_000u64 {
+            let r = a.alloc(k, SENTINEL, SENTINEL, k.wrapping_mul(7) ^ 1, (k % 5) as u32);
+            mailbox.store(r, Ordering::Release);
+            // leave the node visible briefly, then recycle it
+            if k % 4 == 0 {
+                mailbox.store(SENTINEL, Ordering::Release);
+                a.node(r).cold.mark.store(true, Ordering::Release);
+                a.retire(r);
+            }
+        }
+        stop.store(true, Ordering::Release);
+        let checked: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(checked > 0, "readers must have validated at least one publication");
     }
 }

@@ -11,9 +11,17 @@
 //! runs off the arena's per-thread magazines, and recycle/retire accounting
 //! is uniform with the deterministic skiplist's arena (the old inline copy
 //! never counted recycled slots).
+//!
+//! The arena's two-plane layout puts the descent state — `key` and the
+//! whole `tower` — in the hot plane and `(value, gen)` in the cold plane,
+//! and `find` software-prefetches the successor's hot line while the
+//! current node is examined (same rationale as the deterministic list; see
+//! `util::prefetch`). Node dereferences and prefetches are counted and
+//! surfaced through `mem_stats`-style counters for Table XII.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
+use crate::mem::arena::ThreadTallies;
 use crate::mem::{ArenaNode, ArenaOptions, BlockArena, PoolStats};
 use crate::sync::Backoff;
 use crate::util::rng::mix64;
@@ -51,45 +59,66 @@ fn unmarked(l: u64) -> u64 {
 
 const NIL: u64 = NIL_IDX as u64; // unmarked, gen 0, idx NIL
 
-struct RNode {
+/// Hot plane: everything a tower descent dereferences.
+struct RHot {
     key: AtomicU64,
-    value: AtomicU64,
     /// next links per level; `tower[0]` is the full list.
     tower: [AtomicU64; MAX_LEVEL],
     /// highest valid tower level (inclusive).
     top: AtomicU32,
-    gen: AtomicU32,
 }
 
-impl RNode {
-    fn empty() -> RNode {
-        RNode {
+impl RHot {
+    fn empty() -> RHot {
+        RHot {
             key: AtomicU64::new(0),
-            value: AtomicU64::new(0),
             tower: std::array::from_fn(|_| AtomicU64::new(NIL)),
             top: AtomicU32::new(0),
-            gen: AtomicU32::new(0),
         }
     }
 }
 
+/// Cold plane: the payload and the recycle generation.
+struct RCold {
+    value: AtomicU64,
+    gen: AtomicU32,
+}
+
+/// Tag type naming the randomized node's hot/cold split.
+struct RNode;
+
 impl ArenaNode for RNode {
-    fn vacant() -> RNode {
-        RNode::empty()
+    type Hot = RHot;
+    type Cold = RCold;
+
+    fn vacant_hot() -> RHot {
+        RHot::empty()
     }
 
-    fn generation(&self) -> &AtomicU32 {
-        &self.gen
+    fn vacant_cold() -> RCold {
+        RCold { value: AtomicU64::new(0), gen: AtomicU32::new(0) }
+    }
+
+    fn generation(cold: &RCold) -> &AtomicU32 {
+        &cold.gen
     }
 }
+
+// Counter indices in the per-thread tally slots (see `mem::arena::ThreadTallies`).
+const TALLY_DEREFS: usize = 0;
+const TALLY_PREFETCHES: usize = 1;
 
 /// Lock-free randomized skiplist mapping `u64 -> u64`.
 pub struct RandomSkiplist {
     arena: BlockArena<RNode>,
-    head: Box<RNode>, // virtual -inf node; its tower anchors every level
+    head: Box<RHot>, // virtual -inf node; its tower anchors every level
     len: AtomicU64,
     seed: AtomicU64,
     retries: AtomicU64,
+    /// Hashed padded per-thread hot-path counters (Table XII
+    /// derefs/prefetches) — per-traversal counting must never bounce a
+    /// shared stats line.
+    tallies: ThreadTallies<2>,
 }
 
 struct FindResult {
@@ -115,24 +144,35 @@ impl RandomSkiplist {
     pub fn with_capacity_on(capacity: usize, opts: ArenaOptions) -> RandomSkiplist {
         RandomSkiplist {
             arena: BlockArena::for_capacity(capacity, opts),
-            head: Box::new(RNode::empty()),
+            head: Box::new(RHot::empty()),
             len: AtomicU64::new(0),
             seed: AtomicU64::new(0x5EED),
             retries: AtomicU64::new(0),
+            tallies: ThreadTallies::new(opts.threads_hint),
+        }
+    }
+
+    /// Flush one traversal's local counts into this thread's padded line.
+    #[inline]
+    fn flush_tally(&self, derefs: u64, prefetches: u64) {
+        let t = self.tallies.slot();
+        t.0[TALLY_DEREFS].fetch_add(derefs, Ordering::Relaxed);
+        if prefetches > 0 {
+            t.0[TALLY_PREFETCHES].fetch_add(prefetches, Ordering::Relaxed);
         }
     }
 
     #[inline]
-    fn raw(&self, idx: u32) -> &RNode {
-        self.arena.raw(idx)
+    fn raw(&self, idx: u32) -> &RHot {
+        self.arena.hot(idx)
     }
 
     /// Resolve an unmarked link; None on generation mismatch (recycled).
     #[inline]
-    fn resolve(&self, l: u64) -> Option<&RNode> {
-        let n = self.raw(link_idx(l));
-        if n.gen.load(Ordering::Acquire) & 0x7FFF_FFFF == link_gen(l) {
-            Some(n)
+    fn resolve(&self, l: u64) -> Option<&RHot> {
+        let idx = link_idx(l);
+        if self.arena.cold(idx).gen.load(Ordering::Acquire) & 0x7FFF_FFFF == link_gen(l) {
+            Some(self.raw(idx))
         } else {
             None
         }
@@ -150,11 +190,12 @@ impl RandomSkiplist {
 
     fn alloc(&self, key: u64, value: u64, top: u32) -> u64 {
         let idx = self.arena.alloc_slot();
-        let n = self.raw(idx);
-        n.key.store(key, Ordering::Relaxed);
-        n.value.store(value, Ordering::Relaxed);
-        n.top.store(top, Ordering::Relaxed);
-        link(n.gen.load(Ordering::Acquire), idx)
+        let hot = self.raw(idx);
+        let cold = self.arena.cold(idx);
+        hot.key.store(key, Ordering::Relaxed);
+        cold.value.store(value, Ordering::Relaxed);
+        hot.top.store(top, Ordering::Relaxed);
+        link(cold.gen.load(Ordering::Acquire), idx)
     }
 
     fn retire(&self, l: u64) {
@@ -167,6 +208,16 @@ impl RandomSkiplist {
         self.arena.stats()
     }
 
+    /// Hot-line dereferences across every traversal (Table XII proxy).
+    pub fn deref_count(&self) -> u64 {
+        self.tallies.sum(TALLY_DEREFS)
+    }
+
+    /// Software prefetches issued by `find`/`range` (Table XII).
+    pub fn prefetch_count(&self) -> u64 {
+        self.tallies.sum(TALLY_PREFETCHES)
+    }
+
     /// Geometric tower height (p = 1/2), capped at MAX_LEVEL.
     fn random_level(&self) -> u32 {
         let s = self.seed.fetch_add(0x9E37_79B9, Ordering::Relaxed);
@@ -175,61 +226,74 @@ impl RandomSkiplist {
     }
 
     /// Harris find with helping. Err(()) = restart (interference/recycle).
+    /// Prefetches the successor's hot line while `curr` is examined, so the
+    /// dependent per-hop misses overlap ("Skiplists with Foresight").
     fn find(&self, key: u64) -> Result<FindResult, ()> {
         let mut preds = [HEAD_LINK; MAX_LEVEL];
         let mut succs = [NIL; MAX_LEVEL];
         let mut pred = HEAD_LINK;
-        for lvl in (0..MAX_LEVEL).rev() {
-            let mut curr = unmarked(self.tower(pred, lvl).load(Ordering::Acquire));
-            loop {
-                if link_idx(curr) == NIL_IDX {
-                    break;
-                }
-                let Some(cn) = self.resolve(curr) else {
-                    return Err(());
-                };
-                let csucc = cn.tower[lvl].load(Ordering::Acquire);
-                // re-validate the node was live when we read its link
-                if self.resolve(curr).is_none() {
-                    return Err(());
-                }
-                if is_marked(csucc) {
-                    // help unlink curr at this level
-                    if self
-                        .tower(pred, lvl)
-                        .compare_exchange(curr, unmarked(csucc), Ordering::AcqRel, Ordering::Acquire)
-                        .is_err()
-                    {
-                        return Err(());
+        let mut derefs = 0u64;
+        let mut prefetches = 0u64;
+        let out = 'walk: {
+            for lvl in (0..MAX_LEVEL).rev() {
+                let mut curr = unmarked(self.tower(pred, lvl).load(Ordering::Acquire));
+                loop {
+                    if link_idx(curr) == NIL_IDX {
+                        break;
                     }
-                    curr = unmarked(csucc);
-                    continue;
+                    derefs += 1;
+                    let Some(cn) = self.resolve(curr) else {
+                        break 'walk Err(());
+                    };
+                    let csucc = cn.tower[lvl].load(Ordering::Acquire);
+                    // re-validate the node was live when we read its link
+                    if self.resolve(curr).is_none() {
+                        break 'walk Err(());
+                    }
+                    // overlap the next hop's miss with this node's checks
+                    prefetches += self.arena.prefetch_hot(link_idx(unmarked(csucc))) as u64;
+                    if is_marked(csucc) {
+                        // help unlink curr at this level
+                        if self
+                            .tower(pred, lvl)
+                            .compare_exchange(curr, unmarked(csucc), Ordering::AcqRel, Ordering::Acquire)
+                            .is_err()
+                        {
+                            break 'walk Err(());
+                        }
+                        curr = unmarked(csucc);
+                        continue;
+                    }
+                    let ckey = cn.key.load(Ordering::Relaxed);
+                    if self.resolve(curr).is_none() {
+                        break 'walk Err(());
+                    }
+                    if ckey < key {
+                        pred = curr;
+                        curr = unmarked(csucc);
+                    } else {
+                        break;
+                    }
                 }
-                let ckey = cn.key.load(Ordering::Relaxed);
-                if self.resolve(curr).is_none() {
-                    return Err(());
-                }
-                if ckey < key {
-                    pred = curr;
-                    curr = unmarked(csucc);
-                } else {
-                    break;
-                }
+                preds[lvl] = pred;
+                succs[lvl] = curr;
             }
-            preds[lvl] = pred;
-            succs[lvl] = curr;
-        }
-        let found = if link_idx(succs[0]) != NIL_IDX {
-            let n = self.resolve(succs[0]).ok_or(())?;
-            if n.key.load(Ordering::Relaxed) == key && self.resolve(succs[0]).is_some() {
-                Some(succs[0])
+            let found = if link_idx(succs[0]) != NIL_IDX {
+                let Some(n) = self.resolve(succs[0]) else {
+                    break 'walk Err(());
+                };
+                if n.key.load(Ordering::Relaxed) == key && self.resolve(succs[0]).is_some() {
+                    Some(succs[0])
+                } else {
+                    None
+                }
             } else {
                 None
-            }
-        } else {
-            None
+            };
+            Ok(FindResult { preds, succs, found })
         };
-        Ok(FindResult { preds, succs, found })
+        self.flush_tally(derefs, prefetches);
+        out
     }
 
     /// Insert; false if the key exists.
@@ -369,10 +433,10 @@ impl RandomSkiplist {
             match self.find(key) {
                 Ok(f) => {
                     let l = f.found?;
-                    let Some(n) = self.resolve(l) else {
+                    if self.resolve(l).is_none() {
                         continue;
-                    };
-                    let v = n.value.load(Ordering::Relaxed);
+                    }
+                    let v = self.arena.cold(link_idx(l)).value.load(Ordering::Relaxed);
                     if self.resolve(l).is_none() {
                         continue;
                     }
@@ -404,7 +468,8 @@ impl RandomSkiplist {
 
     /// Collect all `(key, value)` with `lo <= key <= hi`: tower descent to
     /// the first node >= `lo`, then a lock-free walk of the full-density
-    /// level-0 list (marked nodes are skipped; interference retries).
+    /// level-0 list (marked nodes are skipped; interference retries; the
+    /// next hop's hot line is prefetched while the current row is read).
     pub fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)> {
         if lo > hi {
             return Vec::new();
@@ -418,25 +483,34 @@ impl RandomSkiplist {
             };
             let mut out = Vec::new();
             let mut cur = f.succs[0];
+            let mut derefs = 0u64;
+            let mut prefetches = 0u64;
+            let flush = |derefs: u64, prefetches: u64| self.flush_tally(derefs, prefetches);
             loop {
                 if link_idx(cur) == NIL_IDX {
+                    flush(derefs, prefetches);
                     return out;
                 }
+                derefs += 1;
                 let Some(n) = self.resolve(cur) else {
+                    flush(derefs, prefetches);
                     self.retries.fetch_add(1, Ordering::Relaxed);
                     b.wait();
                     continue 'retry;
                 };
                 let succ = n.tower[0].load(Ordering::Acquire);
                 let k = n.key.load(Ordering::Relaxed);
-                let v = n.value.load(Ordering::Relaxed);
+                let v = self.arena.cold(link_idx(cur)).value.load(Ordering::Relaxed);
                 // re-validate: the snapshot above must predate any recycle
                 if self.resolve(cur).is_none() {
+                    flush(derefs, prefetches);
                     self.retries.fetch_add(1, Ordering::Relaxed);
                     b.wait();
                     continue 'retry;
                 }
+                prefetches += self.arena.prefetch_hot(link_idx(unmarked(succ))) as u64;
                 if k > hi {
+                    flush(derefs, prefetches);
                     return out;
                 }
                 if !is_marked(succ) && k >= lo {
@@ -520,6 +594,7 @@ mod tests {
         assert_eq!(s.get(5), None);
         assert_eq!(s.len(), 2);
         s.check_invariants().unwrap();
+        assert!(s.deref_count() > 0, "traversals must be counted");
     }
 
     #[test]

@@ -75,6 +75,46 @@ impl Table {
     pub fn print(&self) {
         println!("{}", self.to_markdown());
     }
+
+    /// Render as one JSON object (hand-rolled — serde is unavailable in the
+    /// offline build). Schema documented in EXPERIMENTS.md §Bench-artifacts:
+    /// `{"title", "row_key", "columns": [...], "rows": [{"key", "values"}]}`.
+    /// Non-finite cells (paper columns use NaN for "no datum") become
+    /// `null` so the artifact stays valid JSON.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let cols = self
+            .columns
+            .iter()
+            .map(|c| format!("\"{}\"", esc(c)))
+            .collect::<Vec<_>>()
+            .join(",");
+        let rows = self
+            .rows
+            .iter()
+            .map(|(k, vals)| {
+                let vs = vals.iter().map(|&v| num(v)).collect::<Vec<_>>().join(",");
+                format!("{{\"key\":{k},\"values\":[{vs}]}}")
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"title\":\"{}\",\"row_key\":\"{}\",\"columns\":[{}],\"rows\":[{}]}}",
+            esc(&self.title),
+            esc(&self.row_key),
+            cols,
+            rows
+        )
+    }
 }
 
 /// Standard thread sweep used by every paper table, scaled to the host:
@@ -110,5 +150,20 @@ mod tests {
     fn table_row_arity_checked() {
         let mut t = Table::new("T", "k", &["a", "b"]);
         t.push_row(1, vec![1.0]);
+    }
+
+    #[test]
+    fn table_json_shape_and_nan_handling() {
+        let mut t = Table::new("Title \"q\"", "#threads", &["a", "paper b"]);
+        t.push_row(4, vec![1.5, f64::NAN]);
+        t.push_row(8, vec![2.0, 0.25]);
+        let j = t.to_json();
+        assert!(j.contains("\"title\":\"Title \\\"q\\\"\""), "quotes escaped: {j}");
+        assert!(j.contains("\"columns\":[\"a\",\"paper b\"]"));
+        assert!(j.contains("{\"key\":4,\"values\":[1.5,null]}"), "NaN -> null: {j}");
+        assert!(j.contains("{\"key\":8,\"values\":[2,0.25]}"), "f64 Display: {j}");
+        // crude but effective structural sanity: balanced braces/brackets
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 }

@@ -5,5 +5,6 @@
 pub mod bench;
 pub mod cli;
 pub mod miniprop;
+pub mod prefetch;
 pub mod rng;
 pub mod stats;

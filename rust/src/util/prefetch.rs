@@ -1,0 +1,46 @@
+//! Software-prefetch shim for the cache-conscious search paths.
+//!
+//! "Skiplists with Foresight" (arXiv:1411.1205) shows the dependent-load
+//! chain of a skiplist descent is exactly the pattern hardware prefetchers
+//! cannot help with: the address of hop `k+1` is only known after hop `k`'s
+//! cache miss resolves. Issuing an explicit prefetch for the *next* hop (and
+//! the `bottom` child) while the current node is still being examined
+//! overlaps the two misses instead of serializing them.
+//!
+//! One shim, one call site style: `prefetch_read(ptr)` lowers to
+//! `prefetcht0` on x86_64 and to a no-op everywhere else (stable Rust has no
+//! portable prefetch intrinsic; the fallback keeps the crate buildable on
+//! any target). A prefetch is a *hint*: it never faults, even for a wild
+//! address, so the function is safe to call with any pointer — callers
+//! still bounds-check the slot index so the pointer arithmetic itself stays
+//! inside a live block (see `BlockArena::prefetch_hot`).
+
+/// Hint the cache hierarchy to pull the line holding `p` into L1 (T0 hint).
+/// Never faults; a no-op on targets without a stable prefetch intrinsic.
+#[inline(always)]
+pub fn prefetch_read<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<_MM_HINT_T0>(p as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = p;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefetch_is_harmless() {
+        // A prefetch must never fault — not for a live pointer, not for
+        // null, not for a dangling one (it is only a hint).
+        let v = 42u64;
+        prefetch_read(&v as *const u64);
+        prefetch_read(std::ptr::null::<u64>());
+        prefetch_read(usize::MAX as *const u64);
+    }
+}

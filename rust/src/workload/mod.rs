@@ -88,16 +88,39 @@ pub struct WorkloadSpec {
     /// Window width of one `Range` op: the worker scans
     /// `[key, key + range_window]`. Only meaningful when `mix.range_pm > 0`.
     pub range_window: u64,
+    /// Temporal-locality window (0 = uniform keys). When set, consecutive
+    /// operations draw their low key bits from a `hot_span`-wide window
+    /// whose base moves every `hot_phase` ops — the repeated-nearby-key
+    /// access pattern (zipf-ish working set) that the Table XII search
+    /// fingers exploit. Shard MSBs stay uniform so routing is unaffected.
+    pub hot_span: u64,
+    /// Ops per hot window before the base jumps (only with `hot_span > 0`).
+    pub hot_phase: u64,
 }
 
 impl WorkloadSpec {
     pub fn new(name: &'static str, total_ops: u64, mix: OpMix, key_space: u64) -> WorkloadSpec {
-        WorkloadSpec { name, total_ops, mix, key_space, range_window: 64 }
+        WorkloadSpec { name, total_ops, mix, key_space, range_window: 64, hot_span: 0, hot_phase: 4096 }
     }
 
     /// Override the range-scan window width (builder style).
     pub fn with_range_window(mut self, window: u64) -> WorkloadSpec {
         self.range_window = window;
+        self
+    }
+
+    /// Confine consecutive ops to a moving `span`-wide key window that
+    /// jumps every `phase` ops (builder style; see [`WorkloadSpec::hot_span`]).
+    pub fn with_hot_span(mut self, span: u64, phase: u64) -> WorkloadSpec {
+        assert!(span > 0 && phase > 0, "hot window needs a non-empty span and phase");
+        assert!(
+            self.key_space == 0 || span <= self.key_space,
+            "hot span {span} cannot exceed the key space {} — keys would \
+             silently escape the documented bound",
+            self.key_space
+        );
+        self.hot_span = span;
+        self.hot_phase = phase;
         self
     }
 
@@ -114,21 +137,48 @@ impl WorkloadSpec {
         }
     }
 
+    /// Map a raw key into the hot window active at fill position `seq`:
+    /// the window base is a deterministic function of `seq / hot_phase`, so
+    /// ~`hot_phase` consecutive ops share one `hot_span`-wide neighbourhood
+    /// (per shard — the 3 shard MSBs stay uniform). Workers drain their
+    /// queues in fill order, so the temporal locality survives transport.
+    #[inline]
+    fn fold_key_at(&self, raw: u64, seq: u64) -> u64 {
+        if self.hot_span == 0 {
+            return self.fold_key(raw);
+        }
+        let shard = raw & (0b111 << 61);
+        // span <= key_space is asserted in with_hot_span; key_space 0 means
+        // the full (sub-shard-bit) space
+        let space = if self.key_space == 0 {
+            1 << 59
+        } else {
+            self.key_space.min(1 << 59)
+        };
+        let base = if space > self.hot_span {
+            mix64(seq / self.hot_phase) % (space - self.hot_span + 1)
+        } else {
+            0
+        };
+        shard | (base + raw % self.hot_span)
+    }
+
     /// Encode one transport word for the queue fabric: the folded key plus
     /// the operation in bits 60:59. The op is drawn from the *raw* stream
     /// (so mix fractions are exact and find/erase keys hit the same
     /// population inserts populate), and travels with the key because the
     /// same folded key must be insertable by one queue element and findable
-    /// by another.
+    /// by another. `seq` is the op's position in the fill stream; it only
+    /// matters when a hot window is configured ([`WorkloadSpec::hot_span`]).
     #[inline]
-    pub fn encode(&self, raw: u64) -> u64 {
+    pub fn encode(&self, raw: u64, seq: u64) -> u64 {
         let op = match self.mix.op_of(raw) {
             OpKind::Insert => 0u64,
             OpKind::Find => 1,
             OpKind::Erase => 2,
             OpKind::Range => 3,
         };
-        self.fold_key(raw) | (op << OP_SHIFT)
+        self.fold_key_at(raw, seq) | (op << OP_SHIFT)
     }
 
     /// Decode a transport word back into (op, key).
@@ -196,6 +246,38 @@ mod tests {
     }
 
     #[test]
+    fn hot_span_confines_consecutive_keys_and_moves() {
+        let spec = WorkloadSpec::new("hot", 0, OpMix::W1, 4096).with_hot_span(64, 256);
+        // within one phase, all low keys live in one 64-wide window
+        let phase_keys: Vec<u64> = (0..256u64)
+            .map(|c| {
+                let (_, key) = WorkloadSpec::decode(spec.encode(mix64(c), c));
+                key & !(0b111 << 61)
+            })
+            .collect();
+        let lo = *phase_keys.iter().min().unwrap();
+        let hi = *phase_keys.iter().max().unwrap();
+        assert!(hi - lo < 64, "phase keys span {lo}..{hi}, want < 64 wide");
+        assert!(hi < 4096, "window stays inside the key space");
+        // a later phase draws from a different (still bounded) window
+        // (8960 = 35 * 256: the range stays inside one phase)
+        let later_keys: Vec<u64> = (8_960..9_216u64)
+            .map(|c| {
+                let (_, key) = WorkloadSpec::decode(spec.encode(mix64(c), c));
+                key & !(0b111 << 61)
+            })
+            .collect();
+        let llo = *later_keys.iter().min().unwrap();
+        let lhi = *later_keys.iter().max().unwrap();
+        assert!(lhi - llo < 64 && lhi < 4096);
+        assert_ne!(llo / 64, lo / 64, "the window must move between phases");
+        // shard MSBs still come from the raw stream
+        let raw = 0b101u64 << 61 | 12345;
+        let (_, key) = WorkloadSpec::decode(spec.encode(raw, 0));
+        assert_eq!(key >> 61, 0b101, "shard bits survive the hot fold");
+    }
+
+    #[test]
     fn range_mix_fraction_and_transport_roundtrip() {
         let spec = WorkloadSpec::new("r", 0, OpMix::RANGE, 1 << 20).with_range_window(32);
         assert_eq!(spec.range_window, 32);
@@ -203,7 +285,7 @@ mod tests {
         let mut r = 0u64;
         for c in 0..n {
             let raw = mix64(c);
-            let word = spec.encode(raw);
+            let word = spec.encode(raw, c);
             let (op, key) = WorkloadSpec::decode(word);
             assert_eq!(key, spec.fold_key(raw), "key survives transport");
             if op == OpKind::Range {

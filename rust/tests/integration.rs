@@ -39,7 +39,7 @@ fn op_transport_roundtrip_is_lossless() {
     let batch = cdskl::runtime::native_route(7, 8192, 10_000);
     let (mut i, mut f, mut e) = (0, 0, 0);
     for &raw in &batch.keys {
-        let word = spec.encode(raw);
+        let word = spec.encode(raw, 0);
         let (op, key) = WorkloadSpec::decode(word);
         assert_eq!(key, spec.fold_key(raw), "key survives transport");
         assert_eq!(key >> 61, raw >> 61, "shard bits survive");

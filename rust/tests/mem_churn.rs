@@ -100,7 +100,7 @@ fn mem_churn_mass_erase_exceeding_old_free_queue_capacity() {
     let a = NodeArena::new(8192, 40); // capacity 327,680 nodes
     let refs: Vec<u64> = (0..N).map(|k| a.alloc(k, SENTINEL, SENTINEL, 0, 0)).collect();
     for r in &refs {
-        a.node(*r).mark.store(true, Ordering::Release);
+        a.node(*r).cold.mark.store(true, Ordering::Release);
         a.retire(*r);
     }
     let st = a.stats();
