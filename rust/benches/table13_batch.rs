@@ -1,0 +1,16 @@
+//! Bench for Table XIII (new, beyond the paper): fused sorted-batch
+//! descents + owner-side operation combining — per-key vs fused derefs/op
+//! over batch size × clustering, Direct and Delegated. Self-asserts a
+//! strict deref cut at batch ≥ 16 in both modes and ≥ 2 caller batches
+//! merged per combining drain.
+//!
+//! `cargo bench --bench table13_batch -- --smoke` runs the CI-sized smoke.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(100);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table13_batch (fused sorted-batch descents, Table XIII)\n");
+    let tables = vec![cdskl::experiments::t13_batch(&cfg, &router)];
+    common::emit("table13_batch", &cfg, &tables);
+}

@@ -113,6 +113,35 @@ pub fn run_workload(
     run_with_mode(store, spec, threads, key_router, seed, ExecMode::Direct)
 }
 
+/// Engine knobs beyond the workload spec (defaults reproduce
+/// [`run_with_mode`]'s historical behaviour).
+#[derive(Clone, Copy, Debug)]
+pub struct RunOptions {
+    pub mode: ExecMode,
+    /// Seed flush threshold for caller-side envelope batching (delegated
+    /// mode; the per-owner threshold adapts in `[batch_n, batch_n*4]`).
+    /// Flush-on-64 amortizes the per-op handoff without letting completion
+    /// counters lag far behind the op stream.
+    pub batch_n: usize,
+    /// Owner-side operation combining (drains merge caller batches into
+    /// per-shard fused sorted runs). On by default; Table XIII's
+    /// per-envelope baseline turns it off.
+    pub combining: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> RunOptions {
+        RunOptions { mode: ExecMode::Direct, batch_n: 64, combining: true }
+    }
+}
+
+impl RunOptions {
+    /// Defaults with the given [`ExecMode`].
+    pub fn with_mode(mode: ExecMode) -> RunOptions {
+        RunOptions { mode, ..RunOptions::default() }
+    }
+}
+
 /// Per-worker op-kind tallies, merged into the shared metrics at exit.
 #[derive(Default)]
 struct OpTally {
@@ -135,6 +164,19 @@ pub fn run_with_mode(
     seed: u64,
     mode: ExecMode,
 ) -> RunMetrics {
+    run_with_opts(store, spec, threads, key_router, seed, RunOptions::with_mode(mode))
+}
+
+/// [`run_with_mode`] with explicit engine knobs ([`RunOptions`]).
+pub fn run_with_opts(
+    store: &Arc<ShardedStore>,
+    spec: &WorkloadSpec,
+    threads: usize,
+    key_router: &KeyRouter,
+    seed: u64,
+    opts: RunOptions,
+) -> RunMetrics {
+    let mode = opts.mode;
     let words = Arc::new(RouterFabric::new(
         threads,
         store.num_shards(),
@@ -142,9 +184,7 @@ pub fn run_with_mode(
         // enough blocks for the whole fill phase
         (spec.total_ops as usize / 8192 + 2).next_power_of_two().max(64),
     ));
-    // Envelope batching: flush-on-64 amortizes the per-op handoff without
-    // letting completion counters lag far behind the op stream.
-    let batch_n = 64usize;
+    let batch_n = opts.batch_n.max(1);
     let fabric = match mode {
         ExecMode::Direct => None,
         ExecMode::Delegated => Some(Arc::new(OpFabric::new(
@@ -158,6 +198,9 @@ pub fn run_with_mode(
             batch_n,
         ))),
     };
+    if let Some(f) = &fabric {
+        f.set_combining(opts.combining);
+    }
 
     // ---- fill phase (leader thread; AOT pipeline) ----
     let t_fill = Instant::now();
@@ -592,6 +635,69 @@ mod tests {
         assert_eq!(d.inserts, g.inserts);
         assert_eq!(d.finds, g.finds);
         assert_eq!(d.final_len, g.final_len, "resident sets agree");
+    }
+
+    #[test]
+    fn delegated_bulk_mix_combines_under_clustered_runs() {
+        let store = Arc::new(ShardedStore::new(
+            StoreKind::DetSkiplistLf,
+            4,
+            1 << 16,
+            Topology::virtual_grid(2, 2),
+            4,
+        ));
+        let spec = WorkloadSpec::new("bulk", 20_000, OpMix::BULK, 1 << 14)
+            .with_clustered_runs(64, 1);
+        let m = run_with_opts(
+            &store,
+            &spec,
+            4,
+            &KeyRouter::Native,
+            3,
+            RunOptions { mode: ExecMode::Delegated, batch_n: 32, combining: true },
+        );
+        assert_eq!(m.ops(), 20_000);
+        assert_eq!(m.fabric.executed, m.fabric.submitted);
+        assert_eq!(m.remote_accesses, 0, "combining preserves NUMA locality");
+        assert!(m.fabric.combined_drains > 0, "clustered bulk traffic must combine");
+        assert!(
+            m.fabric.combined_batches >= 2 * m.fabric.combined_drains,
+            "a combining drain merges >= 2 caller batches"
+        );
+        assert!(m.fabric.combined_runs > 0);
+    }
+
+    #[test]
+    fn combining_on_and_off_agree_on_final_state() {
+        // HASH mix (no erases): membership is order-independent, so the
+        // combined and per-envelope paths must build the same resident set
+        let run = |combining| {
+            let store = Arc::new(ShardedStore::new(
+                StoreKind::DetSkiplistLf,
+                4,
+                1 << 16,
+                Topology::virtual_grid(2, 2),
+                4,
+            ));
+            let spec = WorkloadSpec::new("cmp", 10_000, OpMix::HASH, 1 << 14)
+                .with_clustered_runs(32, 1);
+            let m = run_with_opts(
+                &store,
+                &spec,
+                4,
+                &KeyRouter::Native,
+                11,
+                RunOptions { mode: ExecMode::Delegated, batch_n: 16, combining },
+            );
+            (m, store)
+        };
+        let (a, sa) = run(true);
+        let (b, sb) = run(false);
+        assert_eq!(a.inserts, b.inserts);
+        assert_eq!(a.finds, b.finds);
+        assert_eq!(a.final_len, b.final_len, "resident sets agree");
+        assert_eq!(sa.range(0, u64::MAX - 2), sb.range(0, u64::MAX - 2));
+        assert_eq!(b.fabric.combined_drains, 0, "baseline must not combine");
     }
 
     #[test]

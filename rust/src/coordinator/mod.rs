@@ -24,11 +24,11 @@ pub mod engine;
 pub mod router;
 pub mod store;
 
-pub use engine::{bulk_load, run_with_mode, run_workload, ExecMode, RunMetrics};
+pub use engine::{bulk_load, run_with_mode, run_with_opts, run_workload, ExecMode, RunMetrics, RunOptions};
 pub use router::{
     Caller, DelegatedOp, FabricStats, OpFabric, OpResult, RouterFabric, SlotTotals,
 };
-pub use store::{KvStore, OrderedKv, ShardedStore, StoreKind};
+pub use store::{keys_sorted, pairs_sorted, KvStore, OrderedKv, ShardedStore, StoreKind};
 
 /// Shard of a key: the top 3 MSBs (the paper's 8 key-space segments) folded
 /// onto the shard count. The single source of truth for key→shard routing —

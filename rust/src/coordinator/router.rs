@@ -36,6 +36,7 @@ use std::time::Instant;
 
 use crate::numa::Topology;
 use crate::queue::{ConcurrentQueue, LfQueue, WordQueue};
+use crate::skiplist::{BatchOp, BatchReply};
 use crate::sync::Backoff;
 use crate::util::rng::Rng;
 
@@ -255,6 +256,12 @@ struct FabricAtomics {
     handoff_ns: AtomicU64,
     peak_depth: AtomicU64,
     remote_exec: AtomicU64,
+    combined_drains: AtomicU64,
+    combined_batches: AtomicU64,
+    combined_runs: AtomicU64,
+    coalesced_finds: AtomicU64,
+    flush_grow: AtomicU64,
+    flush_shrink: AtomicU64,
     callers_started: AtomicUsize,
     callers_done: AtomicUsize,
 }
@@ -283,6 +290,18 @@ pub struct FabricStats {
     /// Ops an owner executed against a shard homed on a *different* node —
     /// zero by construction; any other value is a routing bug.
     pub remote_exec: u64,
+    /// Drains that merged ≥ 2 caller batches into combined fused runs.
+    pub combined_drains: u64,
+    /// Caller batches folded into combined runs.
+    pub combined_batches: u64,
+    /// Per-shard fused runs executed by combining drains.
+    pub combined_runs: u64,
+    /// Duplicate finds answered by a single fused execution.
+    pub coalesced_finds: u64,
+    /// Adaptive flush-threshold doublings (owner-queue backpressure).
+    pub flush_grow: u64,
+    /// Adaptive flush-threshold halvings (idle owner queue).
+    pub flush_shrink: u64,
 }
 
 impl FabricStats {
@@ -303,6 +322,16 @@ impl FabricStats {
             self.handoff_ns as f64 / self.queued_batches as f64 / 1000.0
         }
     }
+
+    /// Average caller batches merged per combining drain (Table XIII's
+    /// coalescing metric; ≥ 2 whenever combining fires at all).
+    pub fn combined_batches_per_drain(&self) -> f64 {
+        if self.combined_drains == 0 {
+            0.0
+        } else {
+            self.combined_batches as f64 / self.combined_drains as f64
+        }
+    }
 }
 
 /// The typed-op delegation fabric: one envelope queue per owner thread,
@@ -317,12 +346,26 @@ pub struct OpFabric {
     owner_of: Vec<usize>,
     batch_n: usize,
     at: FabricAtomics,
+    /// Owner-side operation combining (see [`OpFabric::drain`]): on by
+    /// default; the Table XIII baseline turns it off to measure the
+    /// per-envelope execution path.
+    combining: AtomicBool,
     /// Set when an owner dies mid-drain (panic unwound through
     /// [`OpFabric::drain`]): parked callers and termination loops bail out
     /// with a panic instead of waiting forever on completions that will
     /// never come.
     poisoned: AtomicBool,
 }
+
+/// One caller's point op waiting in a combining drain's pool.
+struct PointEntry {
+    op: BatchOp,
+    caller: u32,
+}
+
+/// How many batches one combining round pops before executing (bounds the
+/// pool's memory and the latency of the first completion in the round).
+const COMBINE_WINDOW: usize = 32;
 
 impl OpFabric {
     /// `threads` owner/worker threads (each gets an envelope queue and a
@@ -367,8 +410,18 @@ impl OpFabric {
             owner_of,
             batch_n,
             at: FabricAtomics::default(),
+            combining: AtomicBool::new(true),
             poisoned: AtomicBool::new(false),
         }
+    }
+
+    /// Toggle owner-side operation combining (on by default).
+    pub fn set_combining(&self, on: bool) {
+        self.combining.store(on, Ordering::Relaxed);
+    }
+
+    pub fn combining_enabled(&self) -> bool {
+        self.combining.load(Ordering::Relaxed)
     }
 
     /// Mark the fabric dead (an owner unwound mid-execution); see the
@@ -438,6 +491,7 @@ impl OpFabric {
             id,
             as_owner,
             staged: (0..self.threads).map(|_| Vec::new()).collect(),
+            flush_n: (0..self.threads).map(|_| self.batch_n).collect(),
             delegated: 0,
             finished: false,
         }
@@ -447,6 +501,20 @@ impl OpFabric {
     /// `who`'s queue against the local shard(s). Returns ops executed.
     /// Poisons the fabric if execution unwinds, so parked callers fail
     /// fast instead of hanging on a completion that will never come.
+    ///
+    /// With combining enabled (the default), the drain is a **combiner**:
+    /// it pops a window of pending batches, merges their point envelopes
+    /// across callers into one key-sorted run per shard, coalesces
+    /// duplicate finds, and applies each run through the shard's fused
+    /// [`crate::coordinator::OrderedKv::apply_sorted_run`] — one descent
+    /// per group of nearby keys instead of one per envelope. Completion
+    /// counters still settle per caller (every original op acks its own
+    /// caller's slot). Ordering: per-caller per-key order among point ops
+    /// survives (batches pop FIFO and the run sort is stable); ordering
+    /// *across* keys, and between point ops and `Batch`/`Range` envelopes
+    /// within one window, is not preserved — indistinguishable from the
+    /// concurrent interleavings async callers already accept. Sync batches
+    /// never enter the pool (a parked caller is spinning on the result).
     pub fn drain(&self, who: usize, store: &ShardedStore, max_batches: usize) -> u64 {
         let guard = PoisonOnUnwind(self);
         let q = &self.queues[who];
@@ -456,14 +524,154 @@ impl OpFabric {
         if depth > 0 && depth > self.at.peak_depth.load(Ordering::Relaxed) {
             self.at.peak_depth.fetch_max(depth, Ordering::Relaxed);
         }
+        let combine = self.combining.load(Ordering::Relaxed);
         let mut ops = 0;
-        for _ in 0..max_batches {
-            let Some(batch) = q.pop() else { break };
-            ops += batch.ops.len() as u64;
-            self.execute_batch(who, batch, store, true);
+        let mut left = max_batches;
+        loop {
+            let window = left.min(COMBINE_WINDOW);
+            if window == 0 {
+                break;
+            }
+            let mut popped: Vec<OpBatch> = Vec::new();
+            let mut got = 0usize;
+            while got < window {
+                let Some(batch) = q.pop() else { break };
+                got += 1;
+                ops += batch.ops.len() as u64;
+                if batch.sync || !combine {
+                    // A sync op must observe everything its caller staged
+                    // before it (Caller::call's FIFO promise): run the
+                    // pooled prefix first, then the sync batch.
+                    self.flush_popped(who, &mut popped, store);
+                    self.execute_batch(who, batch, store, true);
+                } else {
+                    popped.push(batch);
+                }
+            }
+            self.flush_popped(who, &mut popped, store);
+            left -= got;
+            if got < window {
+                break; // queue drained
+            }
         }
         std::mem::forget(guard);
         ops
+    }
+
+    /// Execute a pooled window: per-envelope for a single batch (no merge
+    /// win), combined for ≥ 2. Leaves `popped` empty.
+    fn flush_popped(&self, who: usize, popped: &mut Vec<OpBatch>, store: &ShardedStore) {
+        match popped.len() {
+            0 => {}
+            1 => self.execute_batch(who, popped.pop().unwrap(), store, true),
+            _ => self.execute_combined(who, std::mem::take(popped), store),
+        }
+    }
+
+    /// Combine ≥ 2 popped batches: pool every point envelope, stable-sort
+    /// the pool once by key, and apply each contiguous prefix-segment
+    /// slice as one fused sorted run on its shard (the key space is
+    /// partitioned by 3-MSB prefix, so sorted order *is* shard order — the
+    /// same zero-scatter slicing `ShardedStore::insert_batch` uses; no
+    /// per-shard `Vec`s). `Batch` and `Range` envelopes execute
+    /// per-envelope in pop order (a `Batch` already *is* a fused
+    /// single-shard run downstream).
+    fn execute_combined(&self, who: usize, popped: Vec<OpBatch>, store: &ShardedStore) {
+        self.at.combined_drains.fetch_add(1, Ordering::Relaxed);
+        self.at.combined_batches.fetch_add(popped.len() as u64, Ordering::Relaxed);
+        let mut pool: Vec<PointEntry> = Vec::new();
+        let mut direct = 0u64; // envelopes executed outside the pool
+        for batch in popped {
+            let OpBatch { caller, sync: _, staged_at, ops } = batch;
+            self.at
+                .handoff_ns
+                .fetch_add(staged_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.at.queued_batches.fetch_add(1, Ordering::Relaxed);
+            self.at.batches.fetch_add(1, Ordering::Relaxed);
+            let slot = &self.slots[caller as usize];
+            for op in ops {
+                match op {
+                    DelegatedOp::Insert { key, value } => {
+                        pool.push(PointEntry { op: BatchOp::Insert(key, value), caller })
+                    }
+                    DelegatedOp::Find { key } => {
+                        pool.push(PointEntry { op: BatchOp::Get(key), caller })
+                    }
+                    DelegatedOp::Erase { key } => {
+                        pool.push(PointEntry { op: BatchOp::Erase(key), caller })
+                    }
+                    other => {
+                        let shard = other.shard(self.nshards);
+                        self.execute_op(who, shard, other, store, slot);
+                        slot.acked.fetch_add(1, Ordering::Relaxed);
+                        direct += 1;
+                    }
+                }
+            }
+        }
+        // stable sort by key: batches pop FIFO per owner, so each caller's
+        // per-key op order survives the merge
+        pool.sort_by_key(|e| e.op.key());
+        let mut lo = 0usize;
+        while lo < pool.len() {
+            // one contiguous prefix segment = one shard's slice (folded
+            // prefixes land on the same shard but still apply per segment,
+            // mirroring the store's routing)
+            let prefix = pool[lo].op.key() >> 61;
+            let shard = shard_of_key(pool[lo].op.key(), self.nshards);
+            let mut hi = lo + 1;
+            while hi < pool.len() && pool[hi].op.key() >> 61 == prefix {
+                hi += 1;
+            }
+            let slice = &pool[lo..hi];
+            self.at.combined_runs.fetch_add(1, Ordering::Relaxed);
+            if !self.local_to(who, shard) {
+                // never for fabric-routed batches; see FabricStats
+                self.at.remote_exec.fetch_add(slice.len() as u64, Ordering::Relaxed);
+            }
+            // build the run, coalescing ADJACENT identical finds (a find
+            // separated from its twin by a same-key write must see the
+            // write, so only gap-free duplicates share one execution)
+            let mut run: Vec<BatchOp> = Vec::with_capacity(slice.len());
+            let mut spans: Vec<(u32, u32)> = Vec::with_capacity(slice.len());
+            let mut j = 0usize;
+            while j < slice.len() {
+                let op = slice[j].op;
+                let mut len = 1usize;
+                if let BatchOp::Get(k) = op {
+                    while j + len < slice.len() && slice[j + len].op == BatchOp::Get(k) {
+                        len += 1;
+                    }
+                }
+                if len > 1 {
+                    self.at.coalesced_finds.fetch_add((len - 1) as u64, Ordering::Relaxed);
+                }
+                run.push(op);
+                spans.push((j as u32, len as u32));
+                j += len;
+            }
+            // one fused application on the owner's NUMA-local shard; every
+            // original op settles its own caller's completion slot
+            let spans_ref = &spans;
+            store.shard_at(shard).apply_sorted_run(&run, &mut |ri, reply| {
+                let (start, len) = spans_ref[ri];
+                for e in &slice[start as usize..(start as usize + len as usize)] {
+                    let slot = &self.slots[e.caller as usize];
+                    store.account_shard(who, shard);
+                    match reply {
+                        BatchReply::Applied(ok) => {
+                            slot.applied.fetch_add(ok as u64, Ordering::Relaxed);
+                        }
+                        BatchReply::Value(v) => {
+                            slot.hits.fetch_add(v.is_some() as u64, Ordering::Relaxed);
+                        }
+                    }
+                    slot.acked.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            lo = hi;
+        }
+        self.at.executed.fetch_add(direct + pool.len() as u64, Ordering::SeqCst);
     }
 
     /// Batches currently enqueued across all owner queues (single-snapshot
@@ -510,28 +718,44 @@ impl OpFabric {
             handoff_ns: self.at.handoff_ns.load(Ordering::Relaxed),
             peak_depth: self.at.peak_depth.load(Ordering::Relaxed),
             remote_exec: self.at.remote_exec.load(Ordering::Relaxed),
+            combined_drains: self.at.combined_drains.load(Ordering::Relaxed),
+            combined_batches: self.at.combined_batches.load(Ordering::Relaxed),
+            combined_runs: self.at.combined_runs.load(Ordering::Relaxed),
+            coalesced_finds: self.at.coalesced_finds.load(Ordering::Relaxed),
+            flush_grow: self.at.flush_grow.load(Ordering::Relaxed),
+            flush_shrink: self.at.flush_shrink.load(Ordering::Relaxed),
         }
     }
 
     /// Hand one sealed batch to `owner`: inline if the dispatching thread
     /// *is* the owner (no queue round-trip, no self-deadlock on a full
     /// queue), otherwise queued with a backpressure loop that keeps the
-    /// helper's own queue draining while it waits.
-    fn dispatch(&self, owner: usize, batch: OpBatch, helper: Option<usize>, store: &ShardedStore) {
+    /// helper's own queue draining while it waits. Returns whether the
+    /// push hit backpressure (the caller's adaptive flush threshold grows
+    /// on it).
+    fn dispatch(
+        &self,
+        owner: usize,
+        batch: OpBatch,
+        helper: Option<usize>,
+        store: &ShardedStore,
+    ) -> bool {
         self.at.submitted.fetch_add(batch.ops.len() as u64, Ordering::SeqCst);
         if helper == Some(owner) {
             self.at.inline_ops.fetch_add(batch.ops.len() as u64, Ordering::Relaxed);
             self.execute_batch(owner, batch, store, false);
-            return;
+            return false;
         }
         let mut b = Backoff::new();
         let mut batch = batch;
+        let mut pushed_back = false;
         loop {
             match self.queues[owner].try_push(batch) {
-                Ok(()) => return,
+                Ok(()) => return pushed_back,
                 Err(back) => {
                     assert!(!self.is_poisoned(), "delegation fabric poisoned: an owner died");
                     batch = back;
+                    pushed_back = true;
                     self.at.backpressure.fetch_add(1, Ordering::Relaxed);
                     if let Some(h) = helper {
                         // Make progress on our own queue instead of spinning:
@@ -560,55 +784,7 @@ impl OpFabric {
         debug_assert!(!sync || n == 1, "sync batches carry exactly one op");
         for op in ops {
             let shard = op.shard(self.nshards);
-            if !self.local_to(who, shard) {
-                // Never happens for fabric-routed batches; the counter
-                // surfaces any future routing regression in `stats()`.
-                self.at.remote_exec.fetch_add(1, Ordering::Relaxed);
-            }
-            store.account_shard(who, shard);
-            let result = match op {
-                DelegatedOp::Insert { key, value } => {
-                    let ok = store.shard_at(shard).insert(key, value);
-                    slot.applied.fetch_add(ok as u64, Ordering::Relaxed);
-                    OpResult::Applied(ok)
-                }
-                DelegatedOp::Find { key } => {
-                    let v = store.shard_at(shard).get(key);
-                    slot.hits.fetch_add(v.is_some() as u64, Ordering::Relaxed);
-                    OpResult::Value(v)
-                }
-                DelegatedOp::Erase { key } => {
-                    let ok = store.shard_at(shard).erase(key);
-                    slot.applied.fetch_add(ok as u64, Ordering::Relaxed);
-                    OpResult::Applied(ok)
-                }
-                DelegatedOp::Batch { items } => {
-                    // Release-checked: a mis-split batch would insert keys
-                    // into a shard that routed lookups never visit — a
-                    // silent wrong-answer, so fail loudly instead.
-                    assert!(
-                        items.iter().all(|&(k, _)| shard_of_key(k, self.nshards) == shard),
-                        "Batch envelope must be pre-split to one shard \
-                         (use Caller::delegate_insert_batch)"
-                    );
-                    let c = store.shard_at(shard).insert_batch(&items);
-                    slot.applied.fetch_add(c, Ordering::Relaxed);
-                    OpResult::Count(c)
-                }
-                DelegatedOp::Range { lo, hi } => {
-                    // Release-checked like Batch: an unclamped window would
-                    // silently drop every row outside the first segment.
-                    assert_eq!(
-                        lo >> 61,
-                        hi >> 61,
-                        "Range envelope must be pre-clamped to one prefix segment \
-                         (use Caller::delegate_range)"
-                    );
-                    let rows = store.shard_at(shard).range(lo, hi);
-                    slot.rows.fetch_add(rows.len() as u64, Ordering::Relaxed);
-                    OpResult::Rows(rows)
-                }
-            };
+            let result = self.execute_op(who, shard, op, store, slot);
             slot.acked.fetch_add(1, Ordering::Relaxed);
             if sync {
                 debug_assert_eq!(slot.state.load(Ordering::Acquire), SLOT_WAITING);
@@ -619,6 +795,68 @@ impl OpFabric {
             }
         }
         self.at.executed.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Execute one envelope against `shard` (accounting + slot counters;
+    /// `acked` and `executed` are the caller's responsibility). Shared by
+    /// the per-envelope path and the combiner's `Batch`/`Range` lane.
+    fn execute_op(
+        &self,
+        who: usize,
+        shard: usize,
+        op: DelegatedOp,
+        store: &ShardedStore,
+        slot: &CompletionSlot,
+    ) -> OpResult {
+        if !self.local_to(who, shard) {
+            // Never happens for fabric-routed batches; the counter
+            // surfaces any future routing regression in `stats()`.
+            self.at.remote_exec.fetch_add(1, Ordering::Relaxed);
+        }
+        store.account_shard(who, shard);
+        match op {
+            DelegatedOp::Insert { key, value } => {
+                let ok = store.shard_at(shard).insert(key, value);
+                slot.applied.fetch_add(ok as u64, Ordering::Relaxed);
+                OpResult::Applied(ok)
+            }
+            DelegatedOp::Find { key } => {
+                let v = store.shard_at(shard).get(key);
+                slot.hits.fetch_add(v.is_some() as u64, Ordering::Relaxed);
+                OpResult::Value(v)
+            }
+            DelegatedOp::Erase { key } => {
+                let ok = store.shard_at(shard).erase(key);
+                slot.applied.fetch_add(ok as u64, Ordering::Relaxed);
+                OpResult::Applied(ok)
+            }
+            DelegatedOp::Batch { items } => {
+                // Release-checked: a mis-split batch would insert keys
+                // into a shard that routed lookups never visit — a
+                // silent wrong-answer, so fail loudly instead.
+                assert!(
+                    items.iter().all(|&(k, _)| shard_of_key(k, self.nshards) == shard),
+                    "Batch envelope must be pre-split to one shard \
+                     (use Caller::delegate_insert_batch)"
+                );
+                let c = store.shard_at(shard).insert_batch(&items);
+                slot.applied.fetch_add(c, Ordering::Relaxed);
+                OpResult::Count(c)
+            }
+            DelegatedOp::Range { lo, hi } => {
+                // Release-checked like Batch: an unclamped window would
+                // silently drop every row outside the first segment.
+                assert_eq!(
+                    lo >> 61,
+                    hi >> 61,
+                    "Range envelope must be pre-clamped to one prefix segment \
+                     (use Caller::delegate_range)"
+                );
+                let rows = store.shard_at(shard).range(lo, hi);
+                slot.rows.fetch_add(rows.len() as u64, Ordering::Relaxed);
+                OpResult::Rows(rows)
+            }
+        }
     }
 
     fn note_caller_done(&self) {
@@ -633,6 +871,14 @@ pub struct Caller<'f> {
     id: usize,
     as_owner: Option<usize>,
     staged: Vec<Vec<DelegatedOp>>,
+    /// Per-owner adaptive flush threshold: doubled when the owner's queue
+    /// pushes back (a congested handoff wants fewer, deeper batches — and
+    /// hands the combiner more to merge per drain), halved back toward the
+    /// fabric's `batch_n` when a flush finds the owner's queue empty
+    /// (caught-up owner: no reason to hold completions back). Clamped to
+    /// `[batch_n, batch_n*4]` — `batch_n` is the floor, so occupancy never
+    /// degrades below the configured amortization.
+    flush_n: Vec<usize>,
     delegated: u64,
     finished: bool,
 }
@@ -649,12 +895,13 @@ impl Caller<'_> {
     }
 
     /// Stage one envelope toward its shard's owner; flushes that owner's
-    /// buffer when it reaches the fabric's `batch_n`.
+    /// buffer when it reaches the adaptive threshold (seeded at the
+    /// fabric's `batch_n`; see [`Caller::flush_n`]).
     pub fn delegate(&mut self, op: DelegatedOp, store: &ShardedStore) {
         let owner = self.fabric.owner_of[op.shard(self.fabric.nshards)];
         self.staged[owner].push(op);
         self.delegated += 1;
-        if self.staged[owner].len() >= self.fabric.batch_n {
+        if self.staged[owner].len() >= self.flush_n[owner] {
             self.flush_owner(owner, store);
         }
     }
@@ -701,15 +948,32 @@ impl Caller<'_> {
         if self.staged[owner].is_empty() {
             return;
         }
-        // Keep a batch_n-capacity buffer behind: flush-on-N would otherwise
-        // pay the 1→2→…→batch_n growth reallocations on every single batch.
+        let lo = self.fabric.batch_n;
+        let hi = self.fabric.batch_n.saturating_mul(4);
+        // Adapt down toward the configured floor: an empty owner queue
+        // means the owner caught up — no reason to hold completions back.
+        // (Skipped for the inline self-delegation lane, which never queues.)
+        if Some(owner) != self.as_owner
+            && self.flush_n[owner] > lo
+            && self.fabric.queues[owner].stats().depth() == 0
+        {
+            self.flush_n[owner] = (self.flush_n[owner] / 2).max(lo);
+            self.fabric.at.flush_shrink.fetch_add(1, Ordering::Relaxed);
+        }
+        // Keep a threshold-capacity buffer behind: flush-on-N would
+        // otherwise pay the 1→2→…→N growth reallocations on every batch.
         let ops = std::mem::replace(
             &mut self.staged[owner],
-            Vec::with_capacity(self.fabric.batch_n),
+            Vec::with_capacity(self.flush_n[owner]),
         );
         let batch =
             OpBatch { caller: self.id as u32, sync: false, staged_at: Instant::now(), ops };
-        self.fabric.dispatch(owner, batch, self.as_owner, store);
+        // Adapt up on backpressure: a full owner queue wants fewer, deeper
+        // batches (which also hands the combiner more to merge per drain).
+        if self.fabric.dispatch(owner, batch, self.as_owner, store) && self.flush_n[owner] < hi {
+            self.flush_n[owner] = (self.flush_n[owner] * 2).min(hi);
+            self.fabric.at.flush_grow.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Synchronous delegation: flush (preserving per-owner FIFO order with
@@ -933,6 +1197,82 @@ mod tests {
         assert_eq!(st.executed, 33);
         assert_eq!(st.inline_ops, 33);
         assert_eq!(st.queued_batches, 0, "nothing travels a queue with one thread");
+    }
+
+    #[test]
+    fn combining_drain_merges_batches_and_coalesces_finds() {
+        let topo = Topology::virtual_grid(2, 2);
+        let threads = 4;
+        let store =
+            Arc::new(ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 12, topo.clone(), threads));
+        let fabric = OpFabric::new(threads, 2, 8, topo, 16, 4);
+        assert!(fabric.combining_enabled(), "combining is the default");
+        // two callers stage overlapping shard-0 work: duplicate inserts
+        // (second caller must lose) and duplicate finds (must coalesce)
+        let mut c1 = fabric.caller(threads, None);
+        let mut c2 = fabric.caller(threads + 1, None);
+        for i in 0..32u64 {
+            c1.delegate(DelegatedOp::Insert { key: i, value: i }, &store);
+            c2.delegate(DelegatedOp::Insert { key: i, value: 100 + i }, &store);
+        }
+        for i in 0..32u64 {
+            c1.delegate(DelegatedOp::Find { key: i }, &store);
+            c2.delegate(DelegatedOp::Find { key: i }, &store);
+        }
+        c1.finish(&store);
+        c2.finish(&store);
+        for t in 0..threads {
+            while fabric.drain(t, &store, usize::MAX) > 0 {}
+        }
+        assert!(fabric.all_quiet());
+        let st = fabric.stats();
+        assert_eq!(st.executed, st.submitted);
+        assert_eq!(store.len(), 32, "duplicate inserts must not double-insert");
+        assert!(st.combined_drains > 0, "two callers' batches must combine");
+        assert!(
+            st.combined_batches >= 2 * st.combined_drains,
+            "a combining drain merges >= 2 batches ({} over {})",
+            st.combined_batches,
+            st.combined_drains
+        );
+        assert!(st.combined_runs > 0);
+        assert!(st.coalesced_finds > 0, "cross-caller duplicate finds must coalesce");
+        // per-caller settlement survives the merge
+        let t1 = fabric.slot_totals(threads);
+        let t2 = fabric.slot_totals(threads + 1);
+        assert_eq!(t1.acked, 64);
+        assert_eq!(t2.acked, 64);
+        assert_eq!(t1.applied, 32, "caller 1 wins every duplicate insert (FIFO pop order)");
+        assert_eq!(t2.applied, 0);
+        assert_eq!(t1.hits, 32, "finds run after the same-key inserts of this drain");
+        assert_eq!(t2.hits, 32);
+        // values must be caller 1's (first in per-key order)
+        for i in 0..32u64 {
+            assert_eq!(store.get(i), Some(i));
+        }
+    }
+
+    #[test]
+    fn combining_off_restores_per_envelope_execution() {
+        let topo = Topology::virtual_grid(2, 2);
+        let store =
+            Arc::new(ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 12, topo.clone(), 4));
+        let fabric = OpFabric::new(4, 1, 8, topo, 16, 4);
+        fabric.set_combining(false);
+        let mut c = fabric.caller(4, None);
+        for i in 0..64u64 {
+            c.delegate(DelegatedOp::Insert { key: (i % 8) << 61 | i, value: i }, &store);
+        }
+        c.finish(&store);
+        for t in 0..4 {
+            while fabric.drain(t, &store, usize::MAX) > 0 {}
+        }
+        assert!(fabric.all_quiet());
+        let st = fabric.stats();
+        assert_eq!(st.executed, 64);
+        assert_eq!(st.combined_drains, 0, "no combining when disabled");
+        assert_eq!(st.combined_batches, 0);
+        assert_eq!(store.len(), 64);
     }
 
     #[test]

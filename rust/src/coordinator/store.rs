@@ -16,9 +16,24 @@ use crate::hashtable::{
 };
 use crate::mem::{ArenaOptions, PoolStats};
 use crate::numa::{LocalityStats, Topology, LATENCY};
-use crate::skiplist::{DetSkiplist, FindMode, RandomSkiplist, SkiplistStats};
+use crate::skiplist::{
+    is_sorted_run, BatchOp, BatchReply, DetSkiplist, FindMode, RandomSkiplist, SkiplistStats,
+};
 
 use super::{for_each_prefix_segment, shard_of_key};
+
+/// `true` when `items` is already ascending by key — the fast path that
+/// lets batch callers with pre-sorted runs skip the clone + re-sort.
+#[inline]
+pub fn pairs_sorted(items: &[(u64, u64)]) -> bool {
+    items.windows(2).all(|w| w[0].0 <= w[1].0)
+}
+
+/// `true` when `keys` is already ascending.
+#[inline]
+pub fn keys_sorted(keys: &[u64]) -> bool {
+    keys.windows(2).all(|w| w[0] <= w[1])
+}
 
 /// Unified key-value interface over every structure in the repo.
 pub trait KvStore: Send + Sync {
@@ -49,19 +64,45 @@ pub trait KvStore: Send + Sync {
 }
 
 /// Ordered-map capability layered on [`KvStore`]: range scans and batch
-/// mutations. Implemented natively by both skiplists (terminal-list walk)
-/// and via sorted snapshot for the hash tables.
+/// mutations. Implemented natively by both skiplists (terminal-list walk
+/// and fused sorted-run descents) and via sorted snapshot / per-key loops
+/// for the hash tables.
 pub trait OrderedKv: KvStore {
     /// All `(key, value)` with `lo <= key <= hi`, sorted by key.
     /// `lo > hi` yields an empty result.
     fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)>;
+
+    /// Apply a key-sorted run of mixed operations, calling `sink(idx,
+    /// reply)` exactly once per op in run order. Semantically identical to
+    /// the per-key loop over the run (which is the default implementation —
+    /// the hash tables have no key order to exploit); both skiplists
+    /// override it with a fused descent that amortizes one walk across a
+    /// whole group of nearby keys. The sink may be invoked while the
+    /// structure holds internal locks: it must not call back into the
+    /// structure (counters/aggregation only).
+    fn apply_sorted_run(&self, ops: &[BatchOp], sink: &mut dyn FnMut(usize, BatchReply)) {
+        debug_assert!(is_sorted_run(ops), "run must be key-sorted");
+        for (i, op) in ops.iter().enumerate() {
+            let r = match *op {
+                BatchOp::Insert(k, v) => BatchReply::Applied(self.insert(k, v)),
+                BatchOp::Erase(k) => BatchReply::Applied(self.erase(k)),
+                BatchOp::Get(k) => BatchReply::Value(self.get(k)),
+            };
+            sink(i, r);
+        }
+    }
 
     /// Insert every pair; returns how many were newly inserted (pairs whose
     /// key already existed are skipped, matching `insert`'s set semantics).
     /// The batch is applied in sorted key order: consecutive skiplist
     /// inserts then land in the same or adjacent terminal segments (the
     /// §IX bulk-load locality argument); for hash tables order is neutral.
+    /// Pre-sorted input takes a zero-copy fast path; unsorted input pays
+    /// one clone + sort.
     fn insert_batch(&self, items: &[(u64, u64)]) -> u64 {
+        if pairs_sorted(items) {
+            return items.iter().filter(|&&(k, v)| self.insert(k, v)).count() as u64;
+        }
         let mut sorted = items.to_vec();
         sorted.sort_unstable_by_key(|e| e.0);
         sorted.iter().filter(|&&(k, v)| self.insert(k, v)).count() as u64
@@ -70,10 +111,85 @@ pub trait OrderedKv: KvStore {
     /// Erase every key (sorted, like [`OrderedKv::insert_batch`]); returns
     /// how many were present.
     fn erase_batch(&self, keys: &[u64]) -> u64 {
+        if keys_sorted(keys) {
+            return keys.iter().filter(|&&k| self.erase(k)).count() as u64;
+        }
         let mut sorted = keys.to_vec();
         sorted.sort_unstable();
         sorted.iter().filter(|&&k| self.erase(k)).count() as u64
     }
+
+    /// Look every key up; returns the values in **input order**.
+    fn get_batch(&self, keys: &[u64]) -> Vec<Option<u64>> {
+        keys.iter().map(|&k| self.get(k)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused-batch plumbing shared by the skiplist OrderedKv impls: build the
+// sorted run (skipping the sort when the input is pre-sorted), apply it
+// through the structure's fused descent, fold the replies.
+// ---------------------------------------------------------------------------
+
+fn run_insert_batch(
+    items: &[(u64, u64)],
+    apply: &mut dyn FnMut(&[BatchOp], &mut dyn FnMut(usize, BatchReply)),
+) -> u64 {
+    let mut run: Vec<BatchOp> = items.iter().map(|&(k, v)| BatchOp::Insert(k, v)).collect();
+    if !is_sorted_run(&run) {
+        // stable: duplicate input keys keep their order (first wins)
+        run.sort_by_key(|o| o.key());
+    }
+    let mut n = 0u64;
+    apply(&run, &mut |_, r| {
+        if r == BatchReply::Applied(true) {
+            n += 1;
+        }
+    });
+    n
+}
+
+fn run_erase_batch(
+    keys: &[u64],
+    apply: &mut dyn FnMut(&[BatchOp], &mut dyn FnMut(usize, BatchReply)),
+) -> u64 {
+    let mut run: Vec<BatchOp> = keys.iter().map(|&k| BatchOp::Erase(k)).collect();
+    if !is_sorted_run(&run) {
+        run.sort_by_key(|o| o.key());
+    }
+    let mut n = 0u64;
+    apply(&run, &mut |_, r| {
+        if r == BatchReply::Applied(true) {
+            n += 1;
+        }
+    });
+    n
+}
+
+fn run_get_batch(
+    keys: &[u64],
+    apply: &mut dyn FnMut(&[BatchOp], &mut dyn FnMut(usize, BatchReply)),
+) -> Vec<Option<u64>> {
+    let mut out = vec![None; keys.len()];
+    if keys_sorted(keys) {
+        let run: Vec<BatchOp> = keys.iter().map(|&k| BatchOp::Get(k)).collect();
+        apply(&run, &mut |i, r| {
+            if let BatchReply::Value(v) = r {
+                out[i] = v;
+            }
+        });
+    } else {
+        // order-restoring permutation over the sorted view
+        let mut order: Vec<u32> = (0..keys.len() as u32).collect();
+        order.sort_by_key(|&i| keys[i as usize]);
+        let run: Vec<BatchOp> = order.iter().map(|&i| BatchOp::Get(keys[i as usize])).collect();
+        apply(&run, &mut |i, r| {
+            if let BatchReply::Value(v) = r {
+                out[order[i] as usize] = v;
+            }
+        });
+    }
+    out
 }
 
 impl KvStore for DetSkiplist {
@@ -109,6 +225,22 @@ impl OrderedKv for DetSkiplist {
             return Vec::new();
         }
         DetSkiplist::range(self, lo, hi)
+    }
+
+    fn apply_sorted_run(&self, ops: &[BatchOp], sink: &mut dyn FnMut(usize, BatchReply)) {
+        DetSkiplist::apply_sorted_run(self, ops, sink)
+    }
+
+    fn insert_batch(&self, items: &[(u64, u64)]) -> u64 {
+        run_insert_batch(items, &mut |ops, sink| DetSkiplist::apply_sorted_run(self, ops, sink))
+    }
+
+    fn erase_batch(&self, keys: &[u64]) -> u64 {
+        run_erase_batch(keys, &mut |ops, sink| DetSkiplist::apply_sorted_run(self, ops, sink))
+    }
+
+    fn get_batch(&self, keys: &[u64]) -> Vec<Option<u64>> {
+        run_get_batch(keys, &mut |ops, sink| DetSkiplist::apply_sorted_run(self, ops, sink))
     }
 }
 
@@ -147,6 +279,22 @@ impl KvStore for RandomSkiplist {
 impl OrderedKv for RandomSkiplist {
     fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)> {
         RandomSkiplist::range(self, lo, hi)
+    }
+
+    fn apply_sorted_run(&self, ops: &[BatchOp], sink: &mut dyn FnMut(usize, BatchReply)) {
+        RandomSkiplist::apply_sorted_run(self, ops, sink)
+    }
+
+    fn insert_batch(&self, items: &[(u64, u64)]) -> u64 {
+        run_insert_batch(items, &mut |ops, sink| RandomSkiplist::apply_sorted_run(self, ops, sink))
+    }
+
+    fn erase_batch(&self, keys: &[u64]) -> u64 {
+        run_erase_batch(keys, &mut |ops, sink| RandomSkiplist::apply_sorted_run(self, ops, sink))
+    }
+
+    fn get_batch(&self, keys: &[u64]) -> Vec<Option<u64>> {
+        run_get_batch(keys, &mut |ops, sink| RandomSkiplist::apply_sorted_run(self, ops, sink))
     }
 }
 
@@ -388,39 +536,106 @@ impl ShardedStore {
         out
     }
 
-    /// Batch insert: partition the batch into per-shard groups (the "fill
-    /// the queues first" step of the paper's methodology), then drain each
-    /// group through its shard's native batch path. Returns the number of
+    /// Batch insert: the input is sorted once (skipped when pre-sorted) and
+    /// every shard receives its **contiguous slice** of the sorted batch —
+    /// the key space partition is by 3-MSB prefix, so the per-prefix
+    /// segments of a sorted run are exactly the per-shard groups, found by
+    /// binary search instead of a per-key `Vec` push (the old path
+    /// allocated one `Vec` per shard on every call). Returns the number of
     /// pairs newly inserted.
     pub fn insert_batch(&self, items: &[(u64, u64)]) -> u64 {
-        let mut per: Vec<Vec<(u64, u64)>> =
-            (0..self.shards.len()).map(|_| Vec::new()).collect();
-        for &(k, v) in items {
-            per[self.shard_of(k)].push((k, v));
+        if items.is_empty() {
+            return 0;
         }
+        let sorted_buf: Vec<(u64, u64)>;
+        let sorted: &[(u64, u64)] = if pairs_sorted(items) {
+            items
+        } else {
+            let mut v = items.to_vec();
+            v.sort_unstable_by_key(|e| e.0);
+            sorted_buf = v;
+            &sorted_buf
+        };
         let mut n = 0;
-        for (s, batch) in per.into_iter().enumerate() {
-            if !batch.is_empty() {
-                n += self.shards[s].insert_batch(&batch);
+        let mut cur = 0usize;
+        for_each_prefix_segment(sorted[0].0, sorted[sorted.len() - 1].0, |slo, shi| {
+            let start = cur + sorted[cur..].partition_point(|e| e.0 < slo);
+            let end = start + sorted[start..].partition_point(|e| e.0 <= shi);
+            cur = end;
+            if start < end {
+                n += self.shards[shard_of_key(slo, self.shards.len())]
+                    .insert_batch(&sorted[start..end]);
             }
-        }
+        });
         n
     }
 
-    /// Batch erase, routed per shard like [`ShardedStore::insert_batch`].
+    /// Batch erase, segment-routed like [`ShardedStore::insert_batch`].
     /// Returns how many keys were present.
     pub fn erase_batch(&self, keys: &[u64]) -> u64 {
-        let mut per: Vec<Vec<u64>> = (0..self.shards.len()).map(|_| Vec::new()).collect();
-        for &k in keys {
-            per[self.shard_of(k)].push(k);
+        if keys.is_empty() {
+            return 0;
         }
+        let sorted_buf: Vec<u64>;
+        let sorted: &[u64] = if keys_sorted(keys) {
+            keys
+        } else {
+            let mut v = keys.to_vec();
+            v.sort_unstable();
+            sorted_buf = v;
+            &sorted_buf
+        };
         let mut n = 0;
-        for (s, batch) in per.into_iter().enumerate() {
-            if !batch.is_empty() {
-                n += self.shards[s].erase_batch(&batch);
+        let mut cur = 0usize;
+        for_each_prefix_segment(sorted[0], sorted[sorted.len() - 1], |slo, shi| {
+            let start = cur + sorted[cur..].partition_point(|&k| k < slo);
+            let end = start + sorted[start..].partition_point(|&k| k <= shi);
+            cur = end;
+            if start < end {
+                n += self.shards[shard_of_key(slo, self.shards.len())]
+                    .erase_batch(&sorted[start..end]);
             }
-        }
+        });
         n
+    }
+
+    /// Batch lookup, segment-routed like [`ShardedStore::insert_batch`];
+    /// values come back in **input order** (an order-restoring permutation
+    /// is built only when the input is unsorted).
+    pub fn get_batch(&self, keys: &[u64]) -> Vec<Option<u64>> {
+        let mut out = vec![None; keys.len()];
+        if keys.is_empty() {
+            return out;
+        }
+        let skeys_buf: Vec<u64>;
+        let order: Vec<u32>;
+        let (skeys, perm): (&[u64], Option<&[u32]>) = if keys_sorted(keys) {
+            (keys, None)
+        } else {
+            let mut o: Vec<u32> = (0..keys.len() as u32).collect();
+            o.sort_by_key(|&i| keys[i as usize]);
+            skeys_buf = o.iter().map(|&i| keys[i as usize]).collect();
+            order = o;
+            (&skeys_buf, Some(&order))
+        };
+        let mut cur = 0usize;
+        for_each_prefix_segment(skeys[0], skeys[skeys.len() - 1], |slo, shi| {
+            let start = cur + skeys[cur..].partition_point(|&k| k < slo);
+            let end = start + skeys[start..].partition_point(|&k| k <= shi);
+            cur = end;
+            if start < end {
+                let vals = self.shards[shard_of_key(slo, self.shards.len())]
+                    .get_batch(&skeys[start..end]);
+                for (j, v) in vals.into_iter().enumerate() {
+                    let oi = match perm {
+                        Some(p) => p[start + j] as usize,
+                        None => start + j,
+                    };
+                    out[oi] = v;
+                }
+            }
+        });
+        out
     }
 
     /// Toggle every shard's search-finger cache (Table XII runs the same
@@ -626,6 +841,71 @@ mod tests {
             assert_eq!(s.erase_batch(&odd_keys), odd_keys.len() as u64, "{kind:?}");
             assert_eq!(s.erase_batch(&odd_keys), 0, "{kind:?}");
             assert_eq!(s.len(), 200 - odd_keys.len() as u64, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn get_batch_routes_and_restores_input_order() {
+        for kind in ALL_KINDS {
+            let s = ShardedStore::new(kind, 4, 1 << 12, Topology::milan_virtual(), 8);
+            let items: Vec<(u64, u64)> =
+                (0..100u64).map(|i| ((i % 8) << 61 | i, i + 7)).collect();
+            assert_eq!(s.insert_batch(&items), 100, "{kind:?}");
+            // unsorted query order, some misses, duplicates
+            let mut keys: Vec<u64> = items.iter().map(|&(k, _)| k).collect();
+            keys.reverse();
+            keys.push(12345); // miss
+            keys.push(keys[3]); // duplicate
+            let got = s.get_batch(&keys);
+            assert_eq!(got.len(), keys.len(), "{kind:?}");
+            for (i, &k) in keys.iter().enumerate() {
+                let want = items.iter().find(|&&(ik, _)| ik == k).map(|&(_, v)| v);
+                assert_eq!(got[i], want, "{kind:?}: key {k} at position {i}");
+            }
+            // pre-sorted input takes the no-permutation fast path
+            let mut sk: Vec<u64> = keys.clone();
+            sk.sort_unstable();
+            let got = s.get_batch(&sk);
+            for (i, &k) in sk.iter().enumerate() {
+                let want = items.iter().find(|&&(ik, _)| ik == k).map(|&(_, v)| v);
+                assert_eq!(got[i], want, "{kind:?}: sorted key {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_and_unsorted_batches_agree() {
+        // the pre-sorted fast path and the clone+sort path must produce the
+        // same end state, including at shard-boundary keys and folds
+        for nshards in [2usize, 8] {
+            let a = ShardedStore::new(StoreKind::DetSkiplistLf, nshards, 1 << 12, Topology::milan_virtual(), 8);
+            let b = ShardedStore::new(StoreKind::DetSkiplistLf, nshards, 1 << 12, Topology::milan_virtual(), 8);
+            // boundary keys: first/near-last of every prefix segment (the
+            // last key of prefix 7 would be u64::MAX, which MAX_KEY reserves
+            // for the skiplist sentinel spine — stay one below)
+            let mut items = Vec::new();
+            for p in 0..8u64 {
+                items.push((p << 61, p));
+                items.push((p << 61 | ((1 << 61) - 2), p));
+                for i in 0..20u64 {
+                    items.push((p << 61 | i * 31, i));
+                }
+            }
+            let mut sorted = items.clone();
+            sorted.sort_unstable_by_key(|e| e.0);
+            sorted.dedup_by_key(|e| e.0);
+            assert_eq!(a.insert_batch(&sorted), sorted.len() as u64, "pre-sorted path");
+            let mut rev = sorted.clone();
+            rev.reverse();
+            assert_eq!(b.insert_batch(&rev), sorted.len() as u64, "unsorted path");
+            assert_eq!(a.range(0, u64::MAX - 2), b.range(0, u64::MAX - 2));
+            let keys: Vec<u64> = sorted.iter().map(|&(k, _)| k).collect();
+            assert_eq!(a.erase_batch(&keys), keys.len() as u64);
+            let mut rkeys = keys.clone();
+            rkeys.reverse();
+            assert_eq!(b.erase_batch(&rkeys), keys.len() as u64);
+            assert_eq!(a.len(), 0);
+            assert_eq!(b.len(), 0);
         }
     }
 

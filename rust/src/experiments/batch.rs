@@ -1,0 +1,272 @@
+//! Table XIII (beyond the paper): fused sorted-batch descents + owner-side
+//! operation combining, measured end to end.
+//!
+//! Methodology (EXPERIMENTS.md §Table XIII): the `OpMix::BULK` stream
+//! (40/40/20 insert/find/erase) is applied in arrival batches of `B` ops,
+//! swept over batch size × clustering:
+//!
+//! - **Direct** — batches are applied straight to the sharded store, once
+//!   through the per-key loop (`insert`/`get`/`erase` per element, the old
+//!   path) and once through the fused batch ops
+//!   (`insert_batch`/`get_batch`/`erase_batch`, which ride
+//!   `apply_sorted_run`). Clustered arrivals (`with_clustered_runs`: each
+//!   batch is an ascending same-shard key run) are the shape the §VII
+//!   batching proposal assumes; the uniform column keeps the fused path
+//!   honest on unclustered input.
+//! - **Delegated** — the same stream runs through the engine's delegation
+//!   fabric with envelope batch `B`, once with owner-side combining off
+//!   (per-envelope execution, the per-key baseline) and once on (drains
+//!   merge caller batches into per-shard sorted runs).
+//!
+//! Cost proxy: skiplist hot-line node dereferences per op (the same
+//! counter Table XII uses). The run **self-asserts the acceptance bar**:
+//! at batch ≥ 16, fused execution does strictly fewer derefs/op than the
+//! per-key baseline in both modes, and the combiner merges ≥ 2 caller
+//! batches per combining drain under the BULK mix.
+
+use std::sync::Arc;
+
+use crate::coordinator::{run_with_opts, ExecMode, RunOptions, ShardedStore, StoreKind};
+use crate::runtime::KeyRouter;
+use crate::util::bench::Table;
+use crate::util::rng::mix64;
+use crate::workload::{OpKind, OpMix, WorkloadSpec};
+
+use super::ExpConfig;
+
+/// Bounded key space: small enough that finds/erases hit resident keys,
+/// large enough for real descent height.
+pub const T13_KEY_SPACE: u64 = 1 << 14;
+
+/// The arrival-batch sizes swept (rows of the table).
+pub const T13_BATCHES: [u64; 4] = [4, 16, 64, 256];
+
+fn spec_for(ops: u64, batch: u64, clustered: bool, salt: u64) -> WorkloadSpec {
+    let s = WorkloadSpec::new("batch", ops, OpMix::BULK, T13_KEY_SPACE);
+    if clustered {
+        // one arrival batch == one ascending same-shard key run; the salt
+        // decorrelates the (position-derived) run bases across seeds/reps
+        s.with_clustered_runs(batch, 1).with_run_salt(salt)
+    } else {
+        s
+    }
+}
+
+/// Decode the deterministic op stream the spec produces (the leader-side
+/// fill, without the queue fabric — the Direct half measures pure
+/// application cost).
+fn gen_stream(spec: &WorkloadSpec, seed: u64) -> Vec<(OpKind, u64)> {
+    (0..spec.total_ops)
+        .map(|c| WorkloadSpec::decode(spec.encode(mix64(seed.wrapping_add(c)), c)))
+        .collect()
+}
+
+/// Apply the stream in arrival batches of `batch` ops directly to a fresh
+/// store; returns node derefs per op. `fused` selects the batch ops vs the
+/// per-key loop — both see identical sub-batches (split by op kind), so
+/// the only difference is the application path.
+fn run_direct(cfg: &ExpConfig, ops: u64, batch: u64, clustered: bool, fused: bool) -> f64 {
+    let store = ShardedStore::new(
+        StoreKind::DetSkiplistLf,
+        8,
+        (ops as usize / 4).max(1 << 14),
+        cfg.topology.clone(),
+        1,
+    );
+    let spec = spec_for(ops, batch, clustered, cfg.seed);
+    let stream = gen_stream(&spec, cfg.seed);
+    let mut ins: Vec<(u64, u64)> = Vec::with_capacity(batch as usize);
+    let mut gets: Vec<u64> = Vec::with_capacity(batch as usize);
+    let mut ers: Vec<u64> = Vec::with_capacity(batch as usize);
+    let before = store.stats().node_derefs;
+    for chunk in stream.chunks(batch as usize) {
+        ins.clear();
+        gets.clear();
+        ers.clear();
+        for &(op, k) in chunk {
+            match op {
+                OpKind::Insert => ins.push((k, k ^ 0xDA7A)),
+                OpKind::Find => gets.push(k),
+                OpKind::Erase => ers.push(k),
+                OpKind::Range => unreachable!("BULK has no range ops"),
+            }
+        }
+        if fused {
+            store.insert_batch(&ins);
+            let _ = store.get_batch(&gets);
+            store.erase_batch(&ers);
+        } else {
+            for &(k, v) in &ins {
+                store.insert(k, v);
+            }
+            for &k in &gets {
+                let _ = store.get(k);
+            }
+            for &k in &ers {
+                store.erase(k);
+            }
+        }
+    }
+    (store.stats().node_derefs - before) as f64 / stream.len().max(1) as f64
+}
+
+struct DelRun {
+    derefs_per_op: f64,
+    mops: f64,
+    batches_per_drain: f64,
+    combined_drains: u64,
+    coalesced_finds: u64,
+}
+
+/// One engine run through the delegation fabric with envelope batch
+/// `batch` and owner-side combining on/off; averaged over `cfg.reps`.
+fn run_delegated(
+    cfg: &ExpConfig,
+    ops: u64,
+    batch: u64,
+    threads: usize,
+    router: &KeyRouter,
+    combining: bool,
+) -> DelRun {
+    let reps = cfg.reps.max(1);
+    let mut acc = DelRun {
+        derefs_per_op: 0.0,
+        mops: 0.0,
+        batches_per_drain: 0.0,
+        combined_drains: 0,
+        coalesced_finds: 0,
+    };
+    for rep in 0..reps {
+        let store = Arc::new(ShardedStore::new(
+            StoreKind::DetSkiplistLf,
+            8,
+            (ops as usize / 4).max(1 << 14),
+            cfg.topology.clone(),
+            threads,
+        ));
+        let spec = spec_for(ops, batch, true, cfg.seed + rep as u64);
+        let m = run_with_opts(
+            &store,
+            &spec,
+            threads,
+            router,
+            cfg.seed + rep as u64,
+            RunOptions { mode: ExecMode::Delegated, batch_n: batch as usize, combining },
+        );
+        assert_eq!(m.remote_accesses, 0, "delegated execution must stay NUMA-local");
+        assert_eq!(m.fabric.executed, m.fabric.submitted, "the fabric must quiesce");
+        let st = store.stats();
+        acc.derefs_per_op += st.node_derefs as f64 / m.ops().max(1) as f64;
+        acc.mops += m.throughput_mops();
+        acc.batches_per_drain += m.fabric.combined_batches_per_drain();
+        acc.combined_drains += m.fabric.combined_drains;
+        acc.coalesced_finds += m.fabric.coalesced_finds;
+    }
+    let n = reps as f64;
+    DelRun {
+        derefs_per_op: acc.derefs_per_op / n,
+        mops: acc.mops / n,
+        batches_per_drain: acc.batches_per_drain / n,
+        combined_drains: acc.combined_drains,
+        coalesced_finds: acc.coalesced_finds,
+    }
+}
+
+/// Table XIII: per-key vs fused application cost over batch size ×
+/// clustering, Direct and Delegated. Panics if the acceptance bar is
+/// missed (no strict deref cut at batch ≥ 16 in either mode, or the
+/// combiner fails to merge ≥ 2 caller batches per drain).
+pub fn t13_batch(cfg: &ExpConfig, router: &KeyRouter) -> Table {
+    let ops = cfg.ops(10_000_000);
+    let th = *cfg.threads.last().unwrap_or(&8) as usize;
+    let mut t = Table::new(
+        &format!(
+            "Table XIII (new) — fused sorted-batch descents + combining ({ops} ops, mix BULK, \
+             key space {T13_KEY_SPACE}, {th} threads delegated, scale 1/{})",
+            cfg.scale
+        ),
+        "#batch",
+        &[
+            "dir perkey d/op",
+            "dir fused d/op",
+            "dir fused-uni d/op",
+            "del perkey d/op",
+            "del fused d/op",
+            "batches/drain",
+            "coalesced",
+            "del Mops/s",
+        ],
+    );
+    for &batch in T13_BATCHES.iter() {
+        let dir_pk = run_direct(cfg, ops, batch, true, false);
+        let dir_fused = run_direct(cfg, ops, batch, true, true);
+        let dir_fused_uni = run_direct(cfg, ops, batch, false, true);
+        let del_pk = run_delegated(cfg, ops, batch, th, router, false);
+        let del_fused = run_delegated(cfg, ops, batch, th, router, true);
+        if batch >= 16 {
+            assert!(
+                dir_fused < dir_pk,
+                "direct: fused batch {batch} must strictly cut derefs/op \
+                 (fused {dir_fused:.2} vs per-key {dir_pk:.2})"
+            );
+            assert!(
+                del_fused.derefs_per_op < del_pk.derefs_per_op,
+                "delegated: combining at batch {batch} must strictly cut derefs/op \
+                 (fused {:.2} vs per-key {:.2})",
+                del_fused.derefs_per_op,
+                del_pk.derefs_per_op
+            );
+            assert!(
+                del_fused.combined_drains > 0 && del_fused.batches_per_drain >= 2.0,
+                "the combiner must merge >= 2 caller batches per drain under BULK \
+                 (got {:.2} over {} drains)",
+                del_fused.batches_per_drain,
+                del_fused.combined_drains
+            );
+        }
+        t.push_row(
+            batch,
+            vec![
+                dir_pk,
+                dir_fused,
+                dir_fused_uni,
+                del_pk.derefs_per_op,
+                del_fused.derefs_per_op,
+                del_fused.batches_per_drain,
+                del_fused.coalesced_finds as f64,
+                del_fused.mops,
+            ],
+        );
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numa::Topology;
+
+    #[test]
+    fn t13_batch_asserts_deref_cut_and_combining() {
+        let cfg = ExpConfig {
+            threads: vec![4],
+            reps: 1,
+            scale: 10_000,
+            topology: Topology::virtual_grid(2, 2),
+            seed: 13,
+        };
+        // t13 self-asserts (strict deref cut at batch >= 16 in both modes,
+        // >= 2 caller batches per combining drain); reaching the shape
+        // checks below means the bar held
+        let t = t13_batch(&cfg, &KeyRouter::Native);
+        assert_eq!(t.rows.len(), T13_BATCHES.len());
+        for (batch, row) in &t.rows {
+            assert!(row[0] > 0.0 && row[3] > 0.0, "batch {batch}: baselines count derefs");
+            if *batch >= 16 {
+                assert!(row[1] < row[0], "batch {batch}: direct fused strictly below per-key");
+                assert!(row[4] < row[3], "batch {batch}: delegated fused strictly below per-key");
+                assert!(row[5] >= 2.0, "batch {batch}: >= 2 batches per combining drain");
+            }
+        }
+    }
+}

@@ -16,7 +16,7 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{run_with_mode, ExecMode, ShardedStore, StoreKind};
+use crate::coordinator::{run_with_opts, ExecMode, RunOptions, ShardedStore, StoreKind};
 use crate::runtime::KeyRouter;
 use crate::util::bench::Table;
 use crate::workload::{OpMix, WorkloadSpec};
@@ -61,7 +61,18 @@ fn run_cache(
         store.set_finger_cache(fingers);
         let spec = WorkloadSpec::new("cache", ops, OpMix::W2, T12_KEY_SPACE)
             .with_hot_span(T12_HOT_SPAN, T12_HOT_PHASE);
-        let m = run_with_mode(&store, &spec, threads, router, cfg.seed + rep as u64, mode);
+        // Owner-side combining executes pooled ops through the fused
+        // sorted-run path, which never consults the finger cache — Table
+        // XIII measures that strategy; this table isolates the point-op
+        // descent, so delegated runs pin per-envelope execution.
+        let m = run_with_opts(
+            &store,
+            &spec,
+            threads,
+            router,
+            cfg.seed + rep as u64,
+            RunOptions { mode, combining: false, ..RunOptions::default() },
+        );
         let st = store.stats();
         let done = m.ops().max(1);
         acc.derefs_per_op += st.node_derefs as f64 / done as f64;

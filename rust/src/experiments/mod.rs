@@ -5,12 +5,14 @@
 //! divides the paper's op counts); pass `--full` / `scale = 1` on real
 //! hardware to run the original sizes.
 
+pub mod batch;
 pub mod cache;
 pub mod hier;
 pub mod mem;
 pub mod paper;
 pub mod queues;
 
+pub use self::batch::t13_batch;
 pub use self::cache::t12_cache;
 pub use self::hier::t11_hier;
 pub use self::mem::t10_mem;

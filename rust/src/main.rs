@@ -2,11 +2,12 @@
 //!
 //! ```text
 //! cdskl info                           topology, artifacts, self-check
-//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|all> [--threads 4,8] [--reps N]
-//!           [--scale N] [--out FILE]   regenerate paper tables
+//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|t13|all> [--threads 4,8]
+//!           [--reps N] [--scale N] [--out FILE]   regenerate paper tables
 //! cdskl run [--store det|rwl|random|fixed|twolevel|spo|spo2|tbb]
-//!           [--ops N] [--threads N] [--mix w1|w2|hash|range|hier]
-//!           [--exec direct|delegated] [--range-window W]
+//!           [--ops N] [--threads N] [--mix w1|w2|hash|range|hier|bulk]
+//!           [--exec direct|delegated] [--range-window W] [--batch-n N]
+//!           [--combine true|false] [--run-len N]
 //!           [--inject-latency NS] [--fingers true|false]
 //!                                      one workload run with metrics
 //! cdskl selfcheck                      AOT artifacts vs native mixer
@@ -14,7 +15,7 @@
 
 use std::sync::Arc;
 
-use cdskl::coordinator::{run_with_mode, ExecMode, ShardedStore, StoreKind};
+use cdskl::coordinator::{run_with_opts, ExecMode, RunOptions, ShardedStore, StoreKind};
 use cdskl::experiments::{self, ExpConfig};
 use cdskl::numa::{Topology, LATENCY};
 use cdskl::runtime::{KeyRouter, RouteEngine};
@@ -130,8 +131,11 @@ fn exp(args: &Args) {
     if all || which == "t12" || which == "cache" {
         tables.push(experiments::t12_cache(&cfg, &router));
     }
+    if all || which == "t13" || which == "batch" {
+        tables.push(experiments::t13_batch(&cfg, &router));
+    }
     if tables.is_empty() {
-        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 all)");
+        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 t13 all)");
         std::process::exit(2);
     }
     let mut out = String::new();
@@ -159,8 +163,9 @@ fn run(args: &Args) {
         "hash" => OpMix::HASH,
         "range" => OpMix::RANGE,
         "hier" => OpMix::HIER,
+        "bulk" => OpMix::BULK,
         other => {
-            eprintln!("unknown --mix '{other}' (w1 w2 hash range hier)");
+            eprintln!("unknown --mix '{other}' (w1 w2 hash range hier bulk)");
             std::process::exit(2);
         }
     };
@@ -178,9 +183,21 @@ fn run(args: &Args) {
     let router = KeyRouter::auto(&artifacts_dir());
     let store = Arc::new(ShardedStore::new(kind, 8, (ops as usize / 4).max(1 << 16), topo, threads));
     store.set_finger_cache(args.bool_or("fingers", true));
-    let spec = WorkloadSpec::new("run", ops, mix, args.u64_or("key-space", (ops / 2).max(1 << 16)))
+    let mut spec = WorkloadSpec::new("run", ops, mix, args.u64_or("key-space", (ops / 2).max(1 << 16)))
         .with_range_window(args.u64_or("range-window", 64));
-    let m = run_with_mode(&store, &spec, threads, &router, args.u64_or("seed", 7), mode);
+    let seed = args.u64_or("seed", 7);
+    let run_len = args.u64_or("run-len", 0);
+    if run_len > 0 {
+        spec = spec
+            .with_clustered_runs(run_len, args.u64_or("run-stride", 1))
+            .with_run_salt(seed);
+    }
+    let opts = RunOptions {
+        mode,
+        batch_n: args.usize_or("batch-n", 64),
+        combining: args.bool_or("combine", true),
+    };
+    let m = run_with_opts(&store, &spec, threads, &router, seed, opts);
     println!(
         "store: {} x{} shards | threads {threads} | ops {ops} | exec {}",
         store.kind_name(),
@@ -220,6 +237,19 @@ fn run(args: &Args) {
             m.fabric.backpressure,
             m.fabric.remote_exec,
         );
+        if m.fabric.combined_drains > 0 {
+            println!(
+                "combine: {} drains merged {} batches ({:.1}/drain) into {} runs, \
+                 {} finds coalesced, flush adapt {}^ {}v",
+                m.fabric.combined_drains,
+                m.fabric.combined_batches,
+                m.fabric.combined_batches_per_drain(),
+                m.fabric.combined_runs,
+                m.fabric.coalesced_finds,
+                m.fabric.flush_grow,
+                m.fabric.flush_shrink,
+            );
+        }
     }
     let sl = store.stats();
     if sl.node_derefs > 0 {

@@ -62,7 +62,8 @@ use crate::mem::arena::{magazine_count, thread_slot, ThreadTallies};
 use crate::mem::{ArenaOptions, PoolStats};
 use crate::sync::Backoff;
 
-use super::node::{NodeArena, NodeRef, SENTINEL};
+use super::node::{NodeArena, NodeRef, NodeView, SENTINEL};
+use super::{BatchOp, BatchReply};
 
 /// How `find` traverses: the paper's lock-free algorithm 4, or the RWL
 /// baseline (hand-over-hand shared locks, "RWL" in tables II/III).
@@ -239,6 +240,123 @@ impl std::ops::Deref for ChildVec {
 enum FingerOp {
     Insert(u64),
     Erase,
+}
+
+/// Outcome of one fused-run descent ([`DetSkiplist::apply_sorted_run`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RunStep {
+    /// The descent reached a leaf and ended the group (≥ 0 ops applied).
+    Done,
+    /// The carried start failed live validation — retry from a shallower
+    /// carried level (or the head). Only produced for carried starts.
+    Stale,
+    /// Structural interference: restart the group from the head.
+    Retry,
+}
+
+/// The carried descent path of a fused run: the last descent's entry node
+/// per level (leaf = index 0) with its coverage key at record time. A
+/// run-local, single-owner analogue of the finger cache — entries are
+/// hints only, validated live before reuse (lock + generation + the
+/// children lower-bound proof), so a stale entry costs a retry from a
+/// shallower level, never a wrong placement.
+struct RunCarry {
+    refs: [NodeRef; FINGER_LEVELS],
+    hi: [u64; FINGER_LEVELS],
+}
+
+impl RunCarry {
+    fn new() -> RunCarry {
+        RunCarry { refs: [SENTINEL; FINGER_LEVELS], hi: [0; FINGER_LEVELS] }
+    }
+
+    fn clear(&mut self) {
+        self.refs = [SENTINEL; FINGER_LEVELS];
+    }
+
+    /// Remember node `r` (level >= 1) as the run's entry at its level,
+    /// covering keys up to `hi` when recorded.
+    fn record(&mut self, level: u32, r: NodeRef, hi: u64) {
+        if level >= 1 && level <= FINGER_LEVELS as u32 {
+            self.refs[(level - 1) as usize] = r;
+            self.hi[(level - 1) as usize] = hi;
+        }
+    }
+
+    /// Deepest entry predicted to cover `key` (level index, ref). Keys only
+    /// ascend within a run, so an entry whose recorded coverage fell behind
+    /// is skipped without touching the node.
+    fn start_for(&self, key: u64) -> Option<(usize, NodeRef)> {
+        (0..FINGER_LEVELS)
+            .find(|&l| self.refs[l] != SENTINEL && key <= self.hi[l])
+            .map(|l| (l, self.refs[l]))
+    }
+
+    /// Drop every entry at or below level index `l` (they failed or are
+    /// shadowed by a failed validation).
+    fn invalidate_up_to(&mut self, l: usize) {
+        for k in 0..=l.min(FINGER_LEVELS - 1) {
+            self.refs[k] = SENTINEL;
+        }
+    }
+}
+
+/// Capacity of the leaf-group segment mirror: the acquired child list is at
+/// most `ChildVec`-wide (12) and only the group's licensed first insert can
+/// land on a transiently over-wide segment, so 16 never overflows.
+const SEG_CAP: usize = 16;
+
+/// Live mirror of one leaf's terminal segment during a fused group: every
+/// ref in it is locked by this thread. Kept key-sorted by construction.
+struct Seg {
+    buf: [NodeRef; SEG_CAP],
+    len: usize,
+}
+
+impl Seg {
+    fn new() -> Seg {
+        Seg { buf: [SENTINEL; SEG_CAP], len: 0 }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> NodeRef {
+        debug_assert!(i < self.len);
+        self.buf[i]
+    }
+
+    #[inline]
+    fn push(&mut self, r: NodeRef) {
+        debug_assert!(self.len < SEG_CAP);
+        self.buf[self.len] = r;
+        self.len += 1;
+    }
+
+    /// Insert `r` at position `i`, shifting the tail right (caller keeps
+    /// within capacity — guarded at the call site).
+    fn insert_at(&mut self, i: usize, r: NodeRef) {
+        debug_assert!(self.len < SEG_CAP && i <= self.len);
+        let mut j = self.len;
+        while j > i {
+            self.buf[j] = self.buf[j - 1];
+            j -= 1;
+        }
+        self.buf[i] = r;
+        self.len += 1;
+    }
+
+    /// Remove the ref at position `i`, shifting the tail left.
+    fn remove_at(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        for j in i..self.len - 1 {
+            self.buf[j] = self.buf[j + 1];
+        }
+        self.len -= 1;
+    }
 }
 
 /// The concurrent deterministic 1-2-3-4 skiplist.
@@ -1535,6 +1653,475 @@ impl DetSkiplist {
     }
 
     // ------------------------------------------------------------------
+    // Fused sorted-batch application (one descent per group of keys)
+    // ------------------------------------------------------------------
+
+    /// Apply a key-sorted run of mixed operations with fused descents: one
+    /// left-to-right traversal carries the per-level predecessor path
+    /// ([`RunCarry`]) forward between consecutive keys, and a whole group of
+    /// consecutive keys that land in the same leaf segment is applied under
+    /// a single lock acquisition — the per-key O(log n) dependent-miss chain
+    /// is paid once per *group* instead of once per op.
+    ///
+    /// `sink(idx, reply)` is called exactly once per op, in run order —
+    /// possibly while leaf locks are held, so it must not call back into
+    /// the skiplist (counters/aggregation only).
+    ///
+    /// Semantics are identical to the equivalent per-key loop (ops apply
+    /// strictly left to right against the live structure; duplicate keys in
+    /// the run see each other's effects).
+    ///
+    /// # Why the 1-2-3-4 discipline survives
+    ///
+    /// Each group starts with a descent that is literally the per-op
+    /// writer's walk — `addition`'s split-on-the-way-down for inserts,
+    /// `deletion`'s merge/borrow boost for erases — so the *first* op of a
+    /// group is licensed exactly like a point op. Subsequent ops of the
+    /// group run under the same windows as the finger write fast path:
+    /// an insert requires the leaf to hold ≤ 4 children (the post-insert
+    /// width ≤ 5 is the same transient a full descent leaves behind, and
+    /// the next group's descent splits it on the way down) and an erase of
+    /// a resident key requires ≥ 3 (post-erase ≥ 2: no boost ever needed).
+    /// When a window closes, the group ends and the next key re-descends —
+    /// rebalancing therefore happens **only on descents**, never inside a
+    /// leaf group, preserving the rebalance-on-the-way-down invariant.
+    ///
+    /// # Why the carry is safe
+    ///
+    /// A carried entry is a hint, exactly like a search finger: before use
+    /// it is locked and validated live (generation, unmarked, and the
+    /// children lower-bound proof `first_child.key <= key <= node.key`, the
+    /// same coverage argument as `finger_start`). A stale entry fails
+    /// validation and the run falls back to a shallower level or the head —
+    /// it can cost a wasted lock round-trip, never a wrong placement.
+    pub fn apply_sorted_run(&self, ops: &[BatchOp], sink: &mut dyn FnMut(usize, BatchReply)) {
+        debug_assert!(super::is_sorted_run(ops), "run must be key-sorted");
+        if let Some(last) = ops.last() {
+            assert!(last.key() <= MAX_KEY, "key {} reserved for sentinels", last.key());
+        }
+        let mut cost = PathCost::default();
+        let mut carry = RunCarry::new();
+        let mut i = 0usize;
+        let mut erased = false;
+        let mut stall = 0u32;
+        while i < ops.len() {
+            let key = ops[i].key();
+            let before = i;
+            let mut b = Backoff::new();
+            loop {
+                let (nref, carried, lvl) = match carry.start_for(key) {
+                    Some((l, r)) => (r, true, l),
+                    None => (self.head, false, 0),
+                };
+                match self.run_descent(nref, carried, ops, &mut i, &mut carry, sink, &mut cost, &mut erased)
+                {
+                    RunStep::Done => break,
+                    // stale carried start: retry from a shallower level
+                    RunStep::Stale => carry.invalidate_up_to(lvl),
+                    RunStep::Retry => {
+                        carry.clear();
+                        self.stats.write_retries.fetch_add(1, Ordering::Relaxed);
+                        self.increase_depth();
+                        if erased {
+                            self.maybe_decrease_depth();
+                        }
+                        b.wait();
+                    }
+                }
+            }
+            if i == before {
+                // A descent that applied nothing (the key moved past a
+                // just-split leaf, or a concurrent restructure shrank the
+                // target's coverage). The refreshed carry resolves it on
+                // the next descent; the stall bound is a defensive back-off
+                // against adversarial concurrent churn.
+                stall += 1;
+                if stall > 16 {
+                    carry.clear();
+                    b.wait();
+                }
+            } else {
+                stall = 0;
+            }
+        }
+        if erased {
+            self.maybe_decrease_depth();
+        }
+        self.flush_cost(&cost);
+    }
+
+    /// One fused-run descent from `nref`: walks down (and right) to the
+    /// leaf covering `ops[*i]`, applying the per-op-kind rebalance
+    /// discipline on the way, then applies as many consecutive run ops as
+    /// the leaf's coverage and arity windows allow. Advances `*i` past every
+    /// applied op and records the path into `carry`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_descent(
+        &self,
+        nref: NodeRef,
+        carried: bool,
+        ops: &[BatchOp],
+        i: &mut usize,
+        carry: &mut RunCarry,
+        sink: &mut dyn FnMut(usize, BatchReply),
+        cost: &mut PathCost,
+        erased: &mut bool,
+    ) -> RunStep {
+        if nref == SENTINEL {
+            return RunStep::Retry;
+        }
+        let key = ops[*i].key();
+        cost.derefs += 1;
+        let Some(n) = self.arena.resolve(nref) else {
+            return if carried { RunStep::Stale } else { RunStep::Retry };
+        };
+        n.cold.lock.lock();
+        if n.is_marked() || self.arena.resolve(nref).is_none() {
+            n.cold.lock.unlock();
+            return if carried { RunStep::Stale } else { RunStep::Retry };
+        }
+        let (nkey, nnext) = n.key_next();
+        if self.is_head(nref) && nnext != SENTINEL {
+            n.cold.lock.unlock();
+            return RunStep::Retry; // height increase pending (alg 3)
+        }
+        let nbottom = n.hot.bottom.load(Ordering::Acquire);
+        let children = match self.acquire_children(nkey, nbottom, cost) {
+            Ok(c) => c,
+            Err(partial) => {
+                self.release_children(&partial);
+                n.cold.lock.unlock();
+                return RunStep::Retry; // over-wide segment: retry after help
+            }
+        };
+        self.check_node_key(nref, &children);
+        let (nkey, nnext) = n.key_next(); // may have been lowered
+
+        if carried {
+            // The carry must prove coverage from below (finger_start's
+            // argument): the first child's key bounds the segment's lower
+            // edge, so `first_child.key <= key` proves the key cannot
+            // belong to an earlier subtree.
+            if children.is_empty() || self.arena.node(children[0]).key() > key {
+                self.release_children(&children);
+                n.cold.lock.unlock();
+                return RunStep::Stale;
+            }
+        }
+
+        if nkey < key {
+            // Merge-join step: the run moved past this node's coverage —
+            // carry the level rightward instead of re-descending.
+            self.release_children(&children);
+            n.cold.lock.unlock();
+            return self.run_descent(nnext, false, ops, i, carry, sink, cost, erased);
+        }
+
+        let level = n.hot.level.load(Ordering::Relaxed);
+
+        if level == 1 {
+            let ok = self.run_leaf_group(nref, carried, n, &children, ops, i, carry, sink, erased);
+            n.cold.lock.unlock();
+            // A carried leaf start that could not legally apply its first
+            // op (an erase needing the parent's merge/borrow boost) falls
+            // back to a shallower start, which runs the full discipline.
+            return if ok { RunStep::Done } else { RunStep::Stale };
+        }
+
+        // Inner node: apply the first op's writer discipline on the way
+        // down (split for inserts, boost for erases), then descend into the
+        // covering child.
+        let first_op = ops[*i];
+        if matches!(first_op, BatchOp::Insert(..)) {
+            self.addition_rebalance(nref, &children);
+        }
+        if !self.is_head(nref) && !children.is_empty() {
+            carry.record(level, nref, nkey);
+            self.finger_record(level, nref, self.arena.node(children[0]).key(), nkey);
+        }
+
+        let mut idx = None;
+        for (ci, &c) in children.iter().enumerate() {
+            if key <= self.arena.node(c).key() {
+                idx = Some(ci);
+                break;
+            }
+        }
+        let Some(ci) = idx else {
+            // No covering child under a key that this node covers: for an
+            // erase this is `deletion`'s authoritative "not present"; for a
+            // get the same argument answers None; an insert must retry (it
+            // needs a segment to land in — transient restructure).
+            let out = match first_op {
+                BatchOp::Erase(_) => {
+                    sink(*i, BatchReply::Applied(false));
+                    *i += 1;
+                    RunStep::Done
+                }
+                BatchOp::Get(_) => {
+                    sink(*i, BatchReply::Value(None));
+                    *i += 1;
+                    RunStep::Done
+                }
+                BatchOp::Insert(..) => RunStep::Retry,
+            };
+            self.release_children(&children);
+            n.cold.lock.unlock();
+            return out;
+        };
+
+        let target = children[ci];
+        let mut descend = target;
+        if matches!(first_op, BatchOp::Erase(_)) {
+            // Deletion's boost (alg 5): a 1-2-wide covering child merges or
+            // borrows from its sibling before we descend into it.
+            let Some(tchildren) = self.count_children(target, cost) else {
+                self.release_children(&children);
+                n.cold.lock.unlock();
+                return RunStep::Retry;
+            };
+            if tchildren == 0 {
+                self.release_children(&children);
+                n.cold.lock.unlock();
+                return RunStep::Retry;
+            }
+            if tchildren <= 2 && children.len() >= 2 {
+                if carried && children.len() <= 2 {
+                    // Merging two of our children would drop this node to
+                    // width 1; per-op descents cannot get here because the
+                    // level above boosts a ≤ 2-wide node before descending
+                    // into it — a boost the carried start skipped. Fall
+                    // back to a shallower start, which runs the cascade.
+                    self.release_children(&children);
+                    n.cold.lock.unlock();
+                    return RunStep::Stale;
+                }
+                let (li, ri) = if ci > 0 { (ci - 1, ci) } else { (ci, ci + 1) };
+                if ri < children.len() {
+                    descend = self.merge_borrow(children[li], children[ri], key, cost);
+                }
+            }
+            self.release_children_retiring(&children);
+        } else {
+            self.release_children(&children);
+        }
+        n.cold.lock.unlock();
+        self.run_descent(descend, false, ops, i, carry, sink, cost, erased)
+    }
+
+    /// Apply consecutive run ops into locked leaf `nref` (children locked):
+    /// every op whose key the leaf covers *and* whose arity window is open
+    /// executes under this one lock acquisition. The local [`Seg`] mirrors
+    /// the terminal segment as it mutates; terminal nodes created here are
+    /// locked before publication (uniform release), terminal nodes removed
+    /// here are unlocked and retired on the spot (they left the segment).
+    ///
+    /// Returns `false` only when a *carried* start could not legally apply
+    /// its first op (an erase of a resident key in a ≤ 2-wide segment —
+    /// the merge/borrow boost lives on the parent's descent, which a leaf
+    /// carry skipped); the caller then retries from a shallower level.
+    #[allow(clippy::too_many_arguments)]
+    fn run_leaf_group(
+        &self,
+        nref: NodeRef,
+        carried: bool,
+        n: NodeView<'_>,
+        children: &[NodeRef],
+        ops: &[BatchOp],
+        i: &mut usize,
+        carry: &mut RunCarry,
+        sink: &mut dyn FnMut(usize, BatchReply),
+        erased: &mut bool,
+    ) -> bool {
+        let start_i = *i;
+        if matches!(ops[*i], BatchOp::Insert(..)) {
+            self.addition_rebalance(nref, children);
+        }
+        // Split the acquired list into this leaf's live segment and the
+        // suffix a just-made sibling owns. The suffix stays locked until
+        // the end so competing writers keep blocking at the segment heads.
+        let (pkey, _) = n.key_next();
+        let mut seg = Seg::new();
+        let mut seg_end = 0usize;
+        for &c in children.iter() {
+            if self.arena.node(c).key() <= pkey {
+                seg.push(c);
+                seg_end += 1;
+            } else {
+                break;
+            }
+        }
+
+        let mut first = true;
+        while *i < ops.len() {
+            let (pk, _) = n.key_next(); // live: erases can lower it
+            let key = ops[*i].key();
+            if key > pk {
+                break; // the run escaped this leaf's coverage
+            }
+            match ops[*i] {
+                BatchOp::Get(k) => {
+                    let mut v = None;
+                    for j in 0..seg.len() {
+                        let c = self.arena.node(seg.get(j));
+                        let ck = c.key();
+                        if ck == k {
+                            v = Some(c.cold.value.load(Ordering::Relaxed));
+                            break;
+                        }
+                        if ck > k {
+                            break;
+                        }
+                    }
+                    sink(*i, BatchReply::Value(v));
+                }
+                BatchOp::Insert(k, val) => {
+                    // position: first segment child with key >= k
+                    let mut pos = seg.len();
+                    let mut dup = false;
+                    for j in 0..seg.len() {
+                        let ck = self.arena.node(seg.get(j)).key();
+                        if ck >= k {
+                            dup = ck == k;
+                            pos = j;
+                            break;
+                        }
+                    }
+                    if dup {
+                        sink(*i, BatchReply::Applied(false));
+                    } else {
+                        // window: only descents split, so a non-first insert
+                        // must leave width <= 5 (the post-split transient a
+                        // point insert also leaves)
+                        if (!first && seg.len() >= 5) || seg.len() + 1 > SEG_CAP {
+                            break;
+                        }
+                        if pos < seg.len() {
+                            // insert-before: duplicate the successor and
+                            // atomically retake its (key, next) — no
+                            // predecessor pointer needed (as add_terminal)
+                            let c = seg.get(pos);
+                            let cn = self.arena.node(c);
+                            let (ck, cnext) = cn.key_next();
+                            let cval = cn.cold.value.load(Ordering::Relaxed);
+                            let nn = self.arena.alloc(ck, cnext, SENTINEL, cval, 0);
+                            self.arena.node(nn).cold.lock.lock(); // pre-publication: uncontended
+                            cn.cold.value.store(val, Ordering::Relaxed);
+                            cn.set_key_next(k, nn);
+                            seg.insert_at(pos + 1, nn);
+                        } else if seg.len() > 0 {
+                            // append after the last (< k) child
+                            let pr = seg.get(seg.len() - 1);
+                            let prn = self.arena.node(pr);
+                            let (prk, prnext) = prn.key_next();
+                            let t = self.arena.alloc(k, prnext, SENTINEL, val, 0);
+                            self.arena.node(t).cold.lock.lock();
+                            prn.set_key_next(prk, t);
+                            seg.insert_at(seg.len(), t);
+                        } else {
+                            // empty (head) leaf: become the first terminal
+                            let t = self.arena.alloc(k, SENTINEL, SENTINEL, val, 0);
+                            self.arena.node(t).cold.lock.lock();
+                            n.hot.bottom.store(t, Ordering::Release);
+                            seg.insert_at(0, t);
+                        }
+                        self.len.fetch_add(1, Ordering::Relaxed);
+                        sink(*i, BatchReply::Applied(true));
+                    }
+                }
+                BatchOp::Erase(k) => {
+                    let mut ti = None;
+                    for j in 0..seg.len() {
+                        let ck = self.arena.node(seg.get(j)).key();
+                        if ck >= k {
+                            if ck == k {
+                                ti = Some(j);
+                            }
+                            break;
+                        }
+                    }
+                    let Some(ti) = ti else {
+                        sink(*i, BatchReply::Applied(false));
+                        first = false;
+                        *i += 1;
+                        continue;
+                    };
+                    // window: only descents boost, so a non-first erase must
+                    // leave width >= 2 (no merge/borrow ever needed here).
+                    // A carried start skipped the parent's boost entirely,
+                    // so even its first erase is window-gated.
+                    if (!first || carried) && seg.len() <= 2 {
+                        break;
+                    }
+                    let t = seg.get(ti);
+                    let tn = self.arena.node(t);
+                    let (_, tnext) = tn.key_next();
+                    if ti > 0 {
+                        // unlink via in-segment predecessor
+                        let pr = seg.get(ti - 1);
+                        let prn = self.arena.node(pr);
+                        let (prk, _) = prn.key_next();
+                        prn.set_key_next(prk, tnext);
+                        tn.cold.mark.store(true, Ordering::Release);
+                        seg.remove_at(ti);
+                        tn.cold.lock.unlock();
+                        self.arena.retire(t);
+                        if ti == seg.len() {
+                            // removed the boundary child: keep p.key in sync
+                            let (pk2, pnx) = n.key_next();
+                            if pk2 == k && !self.is_head(nref) {
+                                n.set_key_next(prk, pnx);
+                            }
+                        }
+                    } else if seg.len() > 1 {
+                        // first child: delete-by-copy from the successor so
+                        // the segment's head node is never unlinked
+                        let s = seg.get(1);
+                        let sn = self.arena.node(s);
+                        let (sk, snext) = sn.key_next();
+                        let sval = sn.cold.value.load(Ordering::Relaxed);
+                        tn.cold.value.store(sval, Ordering::Relaxed);
+                        tn.set_key_next(sk, snext);
+                        sn.cold.mark.store(true, Ordering::Release);
+                        seg.remove_at(1);
+                        sn.cold.lock.unlock();
+                        self.arena.retire(s);
+                    } else {
+                        // only child (head leaf)
+                        n.hot.bottom.store(tnext, Ordering::Release);
+                        tn.cold.mark.store(true, Ordering::Release);
+                        seg.remove_at(0);
+                        tn.cold.lock.unlock();
+                        self.arena.retire(t);
+                    }
+                    self.len.fetch_sub(1, Ordering::Relaxed);
+                    *erased = true;
+                    sink(*i, BatchReply::Applied(true));
+                }
+            }
+            first = false;
+            *i += 1;
+        }
+
+        // release: every current segment member (originals still present
+        // plus nodes created here), then the split-off suffix
+        for j in 0..seg.len() {
+            self.arena.node(seg.get(j)).cold.lock.unlock();
+        }
+        self.release_children(&children[seg_end..]);
+
+        let (pk_end, _) = n.key_next();
+        if !self.is_head(nref) && seg.len() > 0 {
+            let lo = self.arena.node(seg.get(0)).key();
+            carry.record(1, nref, pk_end);
+            self.finger_record(1, nref, lo, pk_end);
+        }
+        // progress, or a non-carried start (whose zero-progress exits are
+        // the benign coverage cases a fresh descent resolves)
+        *i > start_i || !carried
+    }
+
+    // ------------------------------------------------------------------
     // Invariant checking (tests; quiescent only)
     // ------------------------------------------------------------------
 
@@ -2044,6 +2631,194 @@ mod tests {
         for k in keys {
             assert_eq!(s.get(k), Some(k * 3));
         }
+    }
+
+    #[test]
+    fn sorted_run_matches_per_key_replay() {
+        use crate::skiplist::{BatchOp, BatchReply};
+        let mut rng = Rng::new(77);
+        for round in 0..10 {
+            let fused = new_lf();
+            let twin = new_lf();
+            for k in 0..200u64 {
+                fused.insert(k * 3, k);
+                twin.insert(k * 3, k);
+            }
+            let mut ops = Vec::new();
+            for _ in 0..300 {
+                let k = rng.below(700);
+                ops.push(match rng.below(3) {
+                    0 => BatchOp::Insert(k, k ^ 7),
+                    1 => BatchOp::Erase(k),
+                    _ => BatchOp::Get(k),
+                });
+            }
+            // stable sort: duplicate keys keep their op order
+            ops.sort_by_key(|o| o.key());
+            let mut got = vec![None; ops.len()];
+            fused.apply_sorted_run(&ops, &mut |i, r| got[i] = Some(r));
+            for (i, op) in ops.iter().enumerate() {
+                let want = match *op {
+                    BatchOp::Insert(k, v) => BatchReply::Applied(twin.insert(k, v)),
+                    BatchOp::Erase(k) => BatchReply::Applied(twin.erase(k)),
+                    BatchOp::Get(k) => BatchReply::Value(twin.get(k)),
+                };
+                assert_eq!(got[i], Some(want), "round {round} op {i} {op:?}");
+            }
+            assert_eq!(
+                fused.check_invariants().unwrap(),
+                twin.check_invariants().unwrap(),
+                "round {round}: fused and per-key structures diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn sorted_run_handles_empty_singleton_and_duplicates() {
+        use crate::skiplist::{BatchOp, BatchReply};
+        let s = new_lf();
+        s.apply_sorted_run(&[], &mut |_, _| panic!("empty run must not call the sink"));
+        let mut got = Vec::new();
+        s.apply_sorted_run(&[BatchOp::Insert(9, 90)], &mut |i, r| got.push((i, r)));
+        assert_eq!(got, vec![(0, BatchReply::Applied(true))]);
+        // duplicate keys in one run see each other's effects, left to right
+        let run = [
+            BatchOp::Get(5),
+            BatchOp::Insert(5, 50),
+            BatchOp::Insert(5, 51),
+            BatchOp::Get(5),
+            BatchOp::Erase(5),
+            BatchOp::Get(5),
+        ];
+        let mut got = vec![None; run.len()];
+        s.apply_sorted_run(&run, &mut |i, r| got[i] = Some(r));
+        assert_eq!(
+            got,
+            vec![
+                Some(BatchReply::Value(None)),
+                Some(BatchReply::Applied(true)),
+                Some(BatchReply::Applied(false)),
+                Some(BatchReply::Value(Some(50))),
+                Some(BatchReply::Applied(true)),
+                Some(BatchReply::Value(None)),
+            ]
+        );
+        assert_eq!(s.check_invariants().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn sorted_run_bulk_build_and_teardown() {
+        use crate::skiplist::BatchOp;
+        let s = new_lf();
+        let inserts: Vec<BatchOp> = (0..2_000u64).map(|k| BatchOp::Insert(k, k * 2)).collect();
+        let mut applied = 0u64;
+        s.apply_sorted_run(&inserts, &mut |_, r| {
+            if r == crate::skiplist::BatchReply::Applied(true) {
+                applied += 1;
+            }
+        });
+        assert_eq!(applied, 2_000);
+        assert_eq!(s.len(), 2_000);
+        assert_eq!(s.check_invariants().unwrap(), (0..2_000).collect::<Vec<_>>());
+        let erases: Vec<BatchOp> = (0..2_000u64).map(BatchOp::Erase).collect();
+        let mut erased = 0u64;
+        s.apply_sorted_run(&erases, &mut |_, r| {
+            if r == crate::skiplist::BatchReply::Applied(true) {
+                erased += 1;
+            }
+        });
+        assert_eq!(erased, 2_000);
+        assert!(s.is_empty());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sorted_run_cuts_derefs_vs_per_key() {
+        use crate::skiplist::BatchOp;
+        // same clustered insert+get stream, fused vs per-key, fresh stores
+        let keys: Vec<u64> = (0..1_024u64).map(|k| 10_000 + k).collect();
+        let fused = new_lf();
+        let run: Vec<BatchOp> = keys.iter().map(|&k| BatchOp::Insert(k, k)).collect();
+        fused.apply_sorted_run(&run, &mut |_, _| {});
+        let run: Vec<BatchOp> = keys.iter().map(|&k| BatchOp::Get(k)).collect();
+        fused.apply_sorted_run(&run, &mut |_, _| {});
+        let fused_derefs = fused.stats().node_derefs;
+
+        let per_key = new_lf();
+        for &k in &keys {
+            per_key.insert(k, k);
+        }
+        for &k in &keys {
+            per_key.get(k);
+        }
+        let per_key_derefs = per_key.stats().node_derefs;
+        assert!(
+            fused_derefs < per_key_derefs,
+            "fused sorted runs must strictly cut derefs ({fused_derefs} vs {per_key_derefs})"
+        );
+        assert_eq!(
+            fused.check_invariants().unwrap(),
+            per_key.check_invariants().unwrap()
+        );
+    }
+
+    #[test]
+    fn sorted_run_on_rwl_mode() {
+        use crate::skiplist::{BatchOp, BatchReply};
+        let s = DetSkiplist::with_capacity(FindMode::ReadLocked, 1 << 14);
+        let run: Vec<BatchOp> = (0..500u64).map(|k| BatchOp::Insert(k * 2, k)).collect();
+        s.apply_sorted_run(&run, &mut |_, _| {});
+        let mut hits = 0;
+        let gets: Vec<BatchOp> = (0..1_000u64).map(BatchOp::Get).collect();
+        s.apply_sorted_run(&gets, &mut |_, r| {
+            if matches!(r, BatchReply::Value(Some(_))) {
+                hits += 1;
+            }
+        });
+        assert_eq!(hits, 500);
+        assert_eq!(s.len(), 500);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn concurrent_sorted_runs_and_point_ops() {
+        use crate::skiplist::BatchOp;
+        // fused batches on disjoint stripes racing point readers on stable
+        // keys: the group locks must serialize exactly like point writers
+        let s = Arc::new(DetSkiplist::with_capacity(FindMode::LockFree, 1 << 16));
+        for k in 0..1_000u64 {
+            s.insert(k * 10 + 9, k); // stable keys: never touched below
+        }
+        let mut handles = Vec::new();
+        for t in 0..2u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for round in 0..30u64 {
+                    let base = (t * 500 + round * 13 % 400) * 10;
+                    let run: Vec<BatchOp> =
+                        (0..64u64).map(|j| BatchOp::Insert(base + j * 10 + 1 + t, j)).collect();
+                    s.apply_sorted_run(&run, &mut |_, _| {});
+                    let run: Vec<BatchOp> =
+                        (0..64u64).map(|j| BatchOp::Erase(base + j * 10 + 1 + t)).collect();
+                    s.apply_sorted_run(&run, &mut |_, _| {});
+                }
+            }));
+        }
+        for _ in 0..2 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(9);
+                for _ in 0..5_000 {
+                    let k = rng.below(1_000) * 10 + 9;
+                    assert!(s.contains(k), "stable key {k} lost under fused churn");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys.iter().filter(|&&k| k % 10 == 9).count(), 1_000);
     }
 
     #[test]

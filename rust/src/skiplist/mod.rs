@@ -5,6 +5,13 @@
 //!   "lkfreefind") or the RWL baseline ([`FindMode::ReadLocked`], "RWL").
 //! - [`RandomSkiplist`] — the lock-free randomized skiplist baseline of
 //!   Table IV ("lkfreeRandomSL").
+//!
+//! Both answer the fused sorted-batch protocol ([`BatchOp`]/[`BatchReply`]):
+//! a key-sorted run of mixed operations applied with one left-to-right
+//! traversal that carries the search position between consecutive keys —
+//! the deterministic list carries its per-level predecessor path
+//! (`DetSkiplist::apply_sorted_run`), the randomized list reuses the
+//! previous key's tower predecessors (`RandomSkiplist::apply_sorted_run`).
 
 pub mod det;
 pub mod node;
@@ -12,3 +19,45 @@ pub mod random;
 
 pub use det::{DetSkiplist, FindMode, SkiplistStats, MAX_KEY};
 pub use random::RandomSkiplist;
+
+/// One element of a key-sorted mixed-operation run — the unit the fused
+/// batch descents consume. Runs may contain duplicate keys; ops are applied
+/// strictly left to right, so a run behaves exactly like the equivalent
+/// per-key loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchOp {
+    /// Insert `key -> value` (set semantics: a resident key is not
+    /// overwritten and replies `Applied(false)`).
+    Insert(u64, u64),
+    /// Remove `key`; replies `Applied(present)`.
+    Erase(u64),
+    /// Look `key` up; replies `Value(..)`.
+    Get(u64),
+}
+
+impl BatchOp {
+    /// The key this op targets (runs are sorted by it).
+    #[inline]
+    pub fn key(&self) -> u64 {
+        match *self {
+            BatchOp::Insert(k, _) | BatchOp::Erase(k) | BatchOp::Get(k) => k,
+        }
+    }
+}
+
+/// Per-op outcome of a fused run, delivered through the sink callback with
+/// the op's index in the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchReply {
+    /// `Insert` / `Erase`: whether the mutation applied.
+    Applied(bool),
+    /// `Get`: the value, if present.
+    Value(Option<u64>),
+}
+
+/// `true` when `ops` is a valid key-sorted run (ascending, duplicates
+/// allowed) — the precondition of every `apply_sorted_run` implementation.
+#[inline]
+pub fn is_sorted_run(ops: &[BatchOp]) -> bool {
+    ops.windows(2).all(|w| w[0].key() <= w[1].key())
+}

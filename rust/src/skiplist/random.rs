@@ -26,6 +26,8 @@ use crate::mem::{ArenaNode, ArenaOptions, BlockArena, PoolStats};
 use crate::sync::Backoff;
 use crate::util::rng::mix64;
 
+use super::{BatchOp, BatchReply};
+
 pub const MAX_LEVEL: usize = 16;
 
 const NIL_IDX: u32 = u32::MAX;
@@ -121,6 +123,7 @@ pub struct RandomSkiplist {
     tallies: ThreadTallies<2>,
 }
 
+#[derive(Clone, Copy)]
 struct FindResult {
     preds: [u64; MAX_LEVEL], // link to pred per level; HEAD_LINK for head
     succs: [u64; MAX_LEVEL],
@@ -229,13 +232,65 @@ impl RandomSkiplist {
     /// Prefetches the successor's hot line while `curr` is examined, so the
     /// dependent per-hop misses overlap ("Skiplists with Foresight").
     fn find(&self, key: u64) -> Result<FindResult, ()> {
+        self.find_hinted(key, None)
+    }
+
+    /// [`RandomSkiplist::find`] with tower reuse: each level's walk may
+    /// start at the predecessor a previous nearby find recorded instead of
+    /// wherever the level above left off (the sorted-run bulk path — for
+    /// ascending keys most levels start one or two hops from the target).
+    ///
+    /// A hint entry is only a *shortcut*, adopted when it still resolves
+    /// (generation match — a recycled node can never be adopted, and a live
+    /// one's key and tower height are immutable, so `tower[lvl]` is valid:
+    /// a node only ever appears in `preds[lvl]` with `top >= lvl`), is
+    /// **unmarked at this level**, and its key lies strictly below the
+    /// target. Everything after adoption is the ordinary walk with its own
+    /// mark/generation checks.
+    ///
+    /// Safety: for *writes*, a stale predecessor is harmless because
+    /// unlinking a node at a level first marks its link word, so any CAS
+    /// through it fails on the mark bit and the caller refreshes — a hint
+    /// can cost a retry, never a wrong link. For *reads* (the level-0
+    /// `found` answer), the mark check is load-bearing: a node is unlinked
+    /// only after it is marked, so an unmarked-at-adoption predecessor was
+    /// linked at an instant inside this operation, and its successor chain
+    /// reflects every insert that completed before the operation began.
+    /// (An unlinked node's *frozen* successor pointer can bypass keys
+    /// inserted after its unlink — without the mark check, a hint carried
+    /// from a previous op could make this op miss a key whose insert
+    /// finished before it started: a non-linearizable miss. With the
+    /// check, any bypassed insert is concurrent with this op.)
+    fn find_hinted(&self, key: u64, hint: Option<&FindResult>) -> Result<FindResult, ()> {
         let mut preds = [HEAD_LINK; MAX_LEVEL];
         let mut succs = [NIL; MAX_LEVEL];
         let mut pred = HEAD_LINK;
+        let mut pred_key: Option<u64> = None; // None = head (-inf)
         let mut derefs = 0u64;
         let mut prefetches = 0u64;
         let out = 'walk: {
             for lvl in (0..MAX_LEVEL).rev() {
+                if let Some(h) = hint {
+                    let cand = h.preds[lvl];
+                    if cand != HEAD_LINK && cand != pred {
+                        derefs += 1;
+                        if let Some(cn) = self.resolve(cand) {
+                            let ck = cn.key.load(Ordering::Relaxed);
+                            // unmarked at this level = linked at an instant
+                            // inside this op (see the safety note above)
+                            let live = !is_marked(cn.tower[lvl].load(Ordering::Acquire));
+                            // re-validate: key and mark were read while live
+                            if self.resolve(cand).is_some()
+                                && live
+                                && ck < key
+                                && pred_key.map_or(true, |pk| ck > pk)
+                            {
+                                pred = cand;
+                                pred_key = Some(ck);
+                            }
+                        }
+                    }
+                }
                 let mut curr = unmarked(self.tower(pred, lvl).load(Ordering::Acquire));
                 loop {
                     if link_idx(curr) == NIL_IDX {
@@ -270,6 +325,7 @@ impl RandomSkiplist {
                     }
                     if ckey < key {
                         pred = curr;
+                        pred_key = Some(ckey);
                         curr = unmarked(csucc);
                     } else {
                         break;
@@ -298,16 +354,30 @@ impl RandomSkiplist {
 
     /// Insert; false if the key exists.
     pub fn insert(&self, key: u64, value: u64) -> bool {
+        self.insert_hinted(key, value, None).0
+    }
+
+    /// [`RandomSkiplist::insert`] with a tower hint from a previous nearby
+    /// find; returns the result plus the predecessor set for carrying into
+    /// the next sorted-run op. The hint is used for the first search only —
+    /// any interference retries with a fresh full find.
+    fn insert_hinted(
+        &self,
+        key: u64,
+        value: u64,
+        hint: Option<&FindResult>,
+    ) -> (bool, Option<FindResult>) {
         let top = self.random_level();
         let mut b = Backoff::new();
+        let mut hint = hint;
         loop {
-            let Ok(f) = self.find(key) else {
+            let Ok(f) = self.find_hinted(key, hint.take()) else {
                 self.retries.fetch_add(1, Ordering::Relaxed);
                 b.wait();
                 continue;
             };
             if f.found.is_some() {
-                return false;
+                return (false, Some(f));
             }
             let nl = self.alloc(key, value, top);
             let nn = self.raw(link_idx(nl));
@@ -331,7 +401,7 @@ impl RandomSkiplist {
                 loop {
                     let own = nn.tower[lvl].load(Ordering::Acquire);
                     if is_marked(own) {
-                        return true; // concurrently removed; stop linking
+                        return (true, Some(f)); // concurrently removed; stop linking
                     }
                     if self.tower(f.preds[lvl], lvl)
                         .compare_exchange(f.succs[lvl], nl, Ordering::AcqRel, Ordering::Acquire)
@@ -341,20 +411,20 @@ impl RandomSkiplist {
                     }
                     // refresh preds/succs
                     let Ok(f2) = self.find(key) else {
-                        return true; // node is in (bottom linked); give up on upper levels
+                        return (true, Some(f)); // node is in (bottom linked); give up on upper levels
                     };
                     if f2.found != Some(nl) {
-                        return true; // removed meanwhile
+                        return (true, Some(f2)); // removed meanwhile
                     }
                     let expected = nn.tower[lvl].load(Ordering::Acquire);
                     if is_marked(expected) {
-                        return true;
+                        return (true, Some(f2));
                     }
                     if nn.tower[lvl]
                         .compare_exchange(expected, f2.succs[lvl], Ordering::AcqRel, Ordering::Acquire)
                         .is_err()
                     {
-                        return true;
+                        return (true, Some(f2));
                     }
                     // retry CAS with refreshed pred
                     if self.tower(f2.preds[lvl], lvl)
@@ -365,21 +435,29 @@ impl RandomSkiplist {
                     }
                 }
             }
-            return true;
+            return (true, Some(f));
         }
     }
 
     /// Remove; false if not present.
     pub fn erase(&self, key: u64) -> bool {
+        self.erase_hinted(key, None).0
+    }
+
+    /// [`RandomSkiplist::erase`] with a tower hint (see
+    /// [`RandomSkiplist::insert_hinted`]); the hint feeds the first search
+    /// only.
+    fn erase_hinted(&self, key: u64, hint: Option<&FindResult>) -> (bool, Option<FindResult>) {
         let mut b = Backoff::new();
+        let mut hint = hint;
         loop {
-            let Ok(f) = self.find(key) else {
+            let Ok(f) = self.find_hinted(key, hint.take()) else {
                 self.retries.fetch_add(1, Ordering::Relaxed);
                 b.wait();
                 continue;
             };
             let Some(nl) = f.found else {
-                return false;
+                return (false, Some(f));
             };
             let Some(n) = self.resolve(nl) else {
                 continue;
@@ -400,17 +478,17 @@ impl RandomSkiplist {
                     }
                 }
                 if self.resolve(nl).is_none() {
-                    return false; // recycled under us: someone else removed it
+                    return (false, Some(f)); // recycled under us: someone else removed it
                 }
             }
             // mark bottom level — the linearization point
             loop {
                 let s = n.tower[0].load(Ordering::Acquire);
                 if is_marked(s) {
-                    return false; // another eraser won
+                    return (false, Some(f)); // another eraser won
                 }
                 if self.resolve(nl).is_none() {
-                    return false;
+                    return (false, Some(f));
                 }
                 if n.tower[0]
                     .compare_exchange(s, s | MARK, Ordering::AcqRel, Ordering::Acquire)
@@ -420,7 +498,7 @@ impl RandomSkiplist {
                     // physical cleanup, then recycle
                     let _ = self.find(key);
                     self.retire(nl);
-                    return true;
+                    return (true, Some(f));
                 }
             }
         }
@@ -428,11 +506,20 @@ impl RandomSkiplist {
 
     /// Lookup.
     pub fn get(&self, key: u64) -> Option<u64> {
+        self.get_hinted(key, None).0
+    }
+
+    /// [`RandomSkiplist::get`] with a tower hint (see
+    /// [`RandomSkiplist::insert_hinted`]).
+    fn get_hinted(&self, key: u64, hint: Option<&FindResult>) -> (Option<u64>, Option<FindResult>) {
         let mut b = Backoff::new();
+        let mut hint = hint;
         loop {
-            match self.find(key) {
+            match self.find_hinted(key, hint.take()) {
                 Ok(f) => {
-                    let l = f.found?;
+                    let Some(l) = f.found else {
+                        return (None, Some(f));
+                    };
                     if self.resolve(l).is_none() {
                         continue;
                     }
@@ -440,11 +527,40 @@ impl RandomSkiplist {
                     if self.resolve(l).is_none() {
                         continue;
                     }
-                    return Some(v);
+                    return (Some(v), Some(f));
                 }
                 Err(()) => {
                     self.retries.fetch_add(1, Ordering::Relaxed);
                     b.wait();
+                }
+            }
+        }
+    }
+
+    /// Apply a key-sorted run of mixed operations, reusing each op's tower
+    /// predecessors as the next op's search hint — the randomized list's
+    /// analogue of the deterministic list's fused path carry. `sink(idx,
+    /// reply)` fires once per op in run order; semantics are identical to
+    /// the per-key loop (ops apply strictly left to right).
+    pub fn apply_sorted_run(&self, ops: &[BatchOp], sink: &mut dyn FnMut(usize, BatchReply)) {
+        debug_assert!(super::is_sorted_run(ops), "run must be key-sorted");
+        let mut hint: Option<FindResult> = None;
+        for (i, op) in ops.iter().enumerate() {
+            match *op {
+                BatchOp::Insert(k, v) => {
+                    let (ok, f) = self.insert_hinted(k, v, hint.as_ref());
+                    hint = f;
+                    sink(i, BatchReply::Applied(ok));
+                }
+                BatchOp::Erase(k) => {
+                    let (ok, f) = self.erase_hinted(k, hint.as_ref());
+                    hint = f;
+                    sink(i, BatchReply::Applied(ok));
+                }
+                BatchOp::Get(k) => {
+                    let (v, f) = self.get_hinted(k, hint.as_ref());
+                    hint = f;
+                    sink(i, BatchReply::Value(v));
                 }
             }
         }
@@ -689,6 +805,72 @@ mod tests {
             assert!(k < 128);
             assert_eq!(s.get(k), Some(k * 2));
         }
+    }
+
+    #[test]
+    fn sorted_run_matches_per_key_replay() {
+        use crate::skiplist::{BatchOp, BatchReply};
+        let mut rng = Rng::new(31);
+        for round in 0..8 {
+            let fused = RandomSkiplist::with_capacity(1 << 14);
+            let twin = RandomSkiplist::with_capacity(1 << 14);
+            for k in 0..150u64 {
+                fused.insert(k * 4, k);
+                twin.insert(k * 4, k);
+            }
+            let mut ops = Vec::new();
+            for _ in 0..250 {
+                let k = rng.below(700);
+                ops.push(match rng.below(3) {
+                    0 => BatchOp::Insert(k, k ^ 9),
+                    1 => BatchOp::Erase(k),
+                    _ => BatchOp::Get(k),
+                });
+            }
+            ops.sort_by_key(|o| o.key()); // stable: duplicates keep op order
+            let mut got = vec![None; ops.len()];
+            fused.apply_sorted_run(&ops, &mut |i, r| got[i] = Some(r));
+            for (i, op) in ops.iter().enumerate() {
+                let want = match *op {
+                    BatchOp::Insert(k, v) => BatchReply::Applied(twin.insert(k, v)),
+                    BatchOp::Erase(k) => BatchReply::Applied(twin.erase(k)),
+                    BatchOp::Get(k) => BatchReply::Value(twin.get(k)),
+                };
+                assert_eq!(got[i], Some(want), "round {round} op {i} {op:?}");
+            }
+            assert_eq!(
+                fused.check_invariants().unwrap(),
+                twin.check_invariants().unwrap(),
+                "round {round}"
+            );
+        }
+    }
+
+    #[test]
+    fn tower_reuse_cuts_derefs_on_sorted_runs() {
+        use crate::skiplist::BatchOp;
+        let keys: Vec<u64> = (0..2_048u64).map(|k| 50_000 + k).collect();
+        let fused = RandomSkiplist::with_capacity(1 << 14);
+        let run: Vec<BatchOp> = keys.iter().map(|&k| BatchOp::Insert(k, k)).collect();
+        fused.apply_sorted_run(&run, &mut |_, _| {});
+        let run: Vec<BatchOp> = keys.iter().map(|&k| BatchOp::Get(k)).collect();
+        fused.apply_sorted_run(&run, &mut |_, _| {});
+        let fused_derefs = fused.deref_count();
+
+        let per_key = RandomSkiplist::with_capacity(1 << 14);
+        for &k in &keys {
+            per_key.insert(k, k);
+        }
+        for &k in &keys {
+            per_key.get(k);
+        }
+        let per_key_derefs = per_key.deref_count();
+        assert!(
+            fused_derefs < per_key_derefs,
+            "tower reuse must strictly cut derefs ({fused_derefs} vs {per_key_derefs})"
+        );
+        assert_eq!(fused.len(), per_key.len());
+        fused.check_invariants().unwrap();
     }
 
     #[test]

@@ -57,6 +57,12 @@ impl OpMix {
     /// cross-shard scans that make Direct reach into remote shards (pair
     /// with a prefix-spanning `range_window`).
     pub const HIER: OpMix = OpMix::with_range(200, 640, 60, 100);
+    /// Bulk-batch workload (Table XIII): 40% insert, 40% find, 20% erase —
+    /// point ops only, mutation-heavy so the fused sorted-run descents have
+    /// writes to amortize. Pair with
+    /// [`WorkloadSpec::with_clustered_runs`] for the sorted-arrival shape
+    /// the §VII batching proposal assumes.
+    pub const BULK: OpMix = OpMix::new(400, 400, 200);
 
     /// Deterministic op for a key: both the router (producer) and the
     /// worker (consumer) compute the same answer from the key alone.
@@ -96,11 +102,37 @@ pub struct WorkloadSpec {
     pub hot_span: u64,
     /// Ops per hot window before the base jumps (only with `hot_span > 0`).
     pub hot_phase: u64,
+    /// Clustered-run length (0 = off). When set, consecutive operations
+    /// form ascending key runs: `run_len` ops per run, consecutive keys
+    /// `run_stride` apart, and the 3 shard MSBs drawn once *per run* so a
+    /// whole run lands on one shard — the sorted, shard-local arrival
+    /// shape the paper's §VII batching proposal assumes (Table XIII's
+    /// clustering axis). Mutually exclusive with `hot_span`.
+    pub run_len: u64,
+    /// Key distance between consecutive ops of a run (with `run_len > 0`).
+    pub run_stride: u64,
+    /// Salt mixed into every run's base/shard draw. The clustered keys are
+    /// a function of fill position alone (the whole run must share one
+    /// base), so without a salt every seed would replay the same key
+    /// stream — reps would not be independent samples. Set it from the
+    /// run's seed ([`WorkloadSpec::with_run_salt`]).
+    pub run_salt: u64,
 }
 
 impl WorkloadSpec {
     pub fn new(name: &'static str, total_ops: u64, mix: OpMix, key_space: u64) -> WorkloadSpec {
-        WorkloadSpec { name, total_ops, mix, key_space, range_window: 64, hot_span: 0, hot_phase: 4096 }
+        WorkloadSpec {
+            name,
+            total_ops,
+            mix,
+            key_space,
+            range_window: 64,
+            hot_span: 0,
+            hot_phase: 4096,
+            run_len: 0,
+            run_stride: 1,
+            run_salt: 0,
+        }
     }
 
     /// Override the range-scan window width (builder style).
@@ -119,8 +151,33 @@ impl WorkloadSpec {
              silently escape the documented bound",
             self.key_space
         );
+        assert!(self.run_len == 0, "hot windows and clustered runs are mutually exclusive");
         self.hot_span = span;
         self.hot_phase = phase;
+        self
+    }
+
+    /// Make consecutive ops arrive as ascending same-shard key runs
+    /// (builder style; see [`WorkloadSpec::run_len`]): `run_len` ops per
+    /// run, consecutive keys `stride` apart.
+    pub fn with_clustered_runs(mut self, run_len: u64, stride: u64) -> WorkloadSpec {
+        assert!(run_len > 0 && stride > 0, "clustered runs need a length and a stride");
+        assert!(self.hot_span == 0, "hot windows and clustered runs are mutually exclusive");
+        let width = run_len * stride;
+        assert!(
+            (self.key_space == 0 || width <= self.key_space) && width <= (1 << 59),
+            "run width {width} cannot exceed the key space {}",
+            self.key_space
+        );
+        self.run_len = run_len;
+        self.run_stride = stride;
+        self
+    }
+
+    /// Decorrelate clustered runs across seeds/reps (builder style; see
+    /// [`WorkloadSpec::run_salt`]).
+    pub fn with_run_salt(mut self, salt: u64) -> WorkloadSpec {
+        self.run_salt = salt;
         self
     }
 
@@ -144,6 +201,19 @@ impl WorkloadSpec {
     /// queues in fill order, so the temporal locality survives transport.
     #[inline]
     fn fold_key_at(&self, raw: u64, seq: u64) -> u64 {
+        if self.run_len > 0 {
+            // clustered run: base, shard and stride walk are all functions
+            // of the run id / position, so every op of a run targets one
+            // shard with strictly ascending keys
+            let rid = seq / self.run_len;
+            let h = mix64(rid ^ mix64(self.run_salt ^ 0xB1_7C5E_D0_1234));
+            let shard = h & (0b111 << 61);
+            let space = if self.key_space == 0 { 1 << 59 } else { self.key_space.min(1 << 59) };
+            // width <= space is asserted in with_clustered_runs
+            let width = self.run_len * self.run_stride;
+            let base = if space > width { (h >> 3) % (space - width + 1) } else { 0 };
+            return shard | (base + (seq % self.run_len) * self.run_stride);
+        }
         if self.hot_span == 0 {
             return self.fold_key(raw);
         }
@@ -275,6 +345,48 @@ mod tests {
         let raw = 0b101u64 << 61 | 12345;
         let (_, key) = WorkloadSpec::decode(spec.encode(raw, 0));
         assert_eq!(key >> 61, 0b101, "shard bits survive the hot fold");
+    }
+
+    #[test]
+    fn clustered_runs_are_ascending_and_shard_local() {
+        let spec = WorkloadSpec::new("bulk", 0, OpMix::BULK, 1 << 14).with_clustered_runs(64, 3);
+        for rid in [0u64, 7, 99] {
+            let keys: Vec<u64> = (rid * 64..(rid + 1) * 64)
+                .map(|c| {
+                    let (_, key) = WorkloadSpec::decode(spec.encode(mix64(c), c));
+                    key
+                })
+                .collect();
+            // one shard per run
+            let shard = keys[0] >> 61;
+            assert!(keys.iter().all(|&k| k >> 61 == shard), "run {rid} crosses shards");
+            // strictly ascending with the configured stride
+            for w in keys.windows(2) {
+                assert_eq!(w[1] - w[0], 3, "run {rid} must step by the stride");
+            }
+            // inside the key space
+            assert!(keys.iter().all(|&k| k & !(0b111 << 61) < (1 << 14)), "run {rid}");
+        }
+        // different runs draw different bases (clustering moves around)
+        let k0 = WorkloadSpec::decode(spec.encode(mix64(0), 0)).1 & !(0b111 << 61);
+        let k9 = WorkloadSpec::decode(spec.encode(mix64(9 * 64), 9 * 64)).1 & !(0b111 << 61);
+        assert_ne!(k0, k9, "bases must vary across runs");
+        // and different salts (seeds) draw different streams entirely
+        let salted = spec.clone().with_run_salt(42);
+        let ks = WorkloadSpec::decode(salted.encode(mix64(0), 0)).1;
+        assert_ne!(
+            ks,
+            WorkloadSpec::decode(spec.encode(mix64(0), 0)).1,
+            "the run salt must decorrelate reps"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn clustered_runs_exclude_hot_windows() {
+        let _ = WorkloadSpec::new("x", 0, OpMix::BULK, 1 << 14)
+            .with_hot_span(64, 256)
+            .with_clustered_runs(64, 1);
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Fused sorted-batch correctness tests (run in CI as the release batch
+//! stress step: `CDSKL_SCALE=... cargo test --release -q batch_`).
+//!
+//! The fused paths — `apply_sorted_run` on both skiplists, the per-key
+//! defaults on the hash tables, and the sharded store's segment-routed
+//! batch ops — must agree exactly with a sequential `BTreeMap` oracle on
+//! every `StoreKind`, for unsorted input, duplicate keys, shard-boundary
+//! keys and empty/singleton runs; survive fused-batch vs point-op
+//! interleaving on both `DetSkiplist` find modes; and strictly cut node
+//! dereferences per op against the per-key loop.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use cdskl::coordinator::{OrderedKv, ShardedStore, StoreKind};
+// The canonical 8-kind list, shared with Table XI so the two can't drift.
+use cdskl::experiments::hier::T11_KINDS as ALL_KINDS;
+use cdskl::numa::Topology;
+use cdskl::skiplist::{BatchOp, BatchReply, DetSkiplist, FindMode};
+use cdskl::util::rng::Rng;
+
+/// CDSKL_SCALE divides the op counts, mirroring the experiment harness.
+fn scaled(n: u64) -> u64 {
+    let scale = std::env::var("CDSKL_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(40u64);
+    (n / scale.max(1)).clamp(200, 100_000)
+}
+
+/// Acceptance: `insert_batch`/`get_batch`/`erase_batch` agree with a
+/// sequential oracle on every structure — unsorted input, duplicate keys,
+/// misses, round after round.
+#[test]
+fn batch_ops_match_btreemap_oracle_all_kinds() {
+    let per_round = scaled(8_000).min(2_000);
+    for (ki, kind) in ALL_KINDS.into_iter().enumerate() {
+        let s = kind.build(1 << 14);
+        let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut rng = Rng::new(0xBA7C + ki as u64);
+        for round in 0..6 {
+            // unsorted insert batch with duplicate keys (value = f(key), so
+            // dup-order inside the sort is observationally irrelevant)
+            let items: Vec<(u64, u64)> = (0..per_round)
+                .map(|_| {
+                    let k = rng.below(600);
+                    (k, k ^ 3)
+                })
+                .collect();
+            let fresh: BTreeSet<u64> = items
+                .iter()
+                .map(|&(k, _)| k)
+                .filter(|k| !oracle.contains_key(k))
+                .collect();
+            assert_eq!(
+                s.insert_batch(&items),
+                fresh.len() as u64,
+                "{kind:?} round {round}: insert_batch count"
+            );
+            for &(k, v) in &items {
+                oracle.entry(k).or_insert(v);
+            }
+            // unsorted lookup batch incl. misses and duplicates
+            let keys: Vec<u64> = (0..150).map(|_| rng.below(800)).collect();
+            let got = s.get_batch(&keys);
+            assert_eq!(got.len(), keys.len(), "{kind:?}");
+            for (i, &k) in keys.iter().enumerate() {
+                assert_eq!(got[i], oracle.get(&k).copied(), "{kind:?} round {round} get {k}");
+            }
+            // unsorted erase batch with duplicates (each key erases once)
+            let eks: Vec<u64> = (0..per_round / 2).map(|_| rng.below(700)).collect();
+            let present: BTreeSet<u64> =
+                eks.iter().copied().filter(|k| oracle.contains_key(k)).collect();
+            assert_eq!(
+                s.erase_batch(&eks),
+                present.len() as u64,
+                "{kind:?} round {round}: erase_batch count"
+            );
+            for k in &eks {
+                oracle.remove(k);
+            }
+        }
+        let want: Vec<(u64, u64)> = oracle.iter().map(|(k, v)| (*k, *v)).collect();
+        assert_eq!(s.range(0, u64::MAX - 2), want, "{kind:?}: end state");
+    }
+}
+
+/// Acceptance: `apply_sorted_run` replies exactly like the sequential
+/// per-key replay on every structure (mixed ops, duplicate keys).
+#[test]
+fn batch_sorted_run_replies_match_sequential_replay() {
+    let n_ops = scaled(4_000).min(1_500) as usize;
+    for (ki, kind) in ALL_KINDS.into_iter().enumerate() {
+        let s = kind.build(1 << 14);
+        let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut rng = Rng::new(0x50B7ED + ki as u64);
+        for k in 0..100u64 {
+            assert!(s.insert(k * 5, k));
+            oracle.insert(k * 5, k);
+        }
+        for round in 0..4 {
+            let mut ops: Vec<BatchOp> = (0..n_ops)
+                .map(|_| {
+                    let k = rng.below(600);
+                    match rng.below(3) {
+                        0 => BatchOp::Insert(k, k ^ 11),
+                        1 => BatchOp::Erase(k),
+                        _ => BatchOp::Get(k),
+                    }
+                })
+                .collect();
+            ops.sort_by_key(|o| o.key()); // stable: dup keys keep op order
+            let mut got: Vec<Option<BatchReply>> = vec![None; ops.len()];
+            s.apply_sorted_run(&ops, &mut |i, r| {
+                assert!(got[i].is_none(), "{kind:?}: sink fired twice for op {i}");
+                got[i] = Some(r);
+            });
+            for (i, op) in ops.iter().enumerate() {
+                let want = match *op {
+                    BatchOp::Insert(k, v) => {
+                        let fresh = !oracle.contains_key(&k);
+                        if fresh {
+                            oracle.insert(k, v);
+                        }
+                        BatchReply::Applied(fresh)
+                    }
+                    BatchOp::Erase(k) => BatchReply::Applied(oracle.remove(&k).is_some()),
+                    BatchOp::Get(k) => BatchReply::Value(oracle.get(&k).copied()),
+                };
+                assert_eq!(got[i], Some(want), "{kind:?} round {round} op {i} {op:?}");
+            }
+        }
+        let want: Vec<(u64, u64)> = oracle.iter().map(|(k, v)| (*k, *v)).collect();
+        assert_eq!(s.range(0, u64::MAX - 2), want, "{kind:?}: end state");
+    }
+}
+
+/// Shard-boundary keys, folded shards, empty and singleton runs through
+/// the sharded store's segment routing.
+#[test]
+fn batch_shard_boundaries_folds_and_degenerate_runs() {
+    for kind in [StoreKind::DetSkiplistLf, StoreKind::RandomSkiplist, StoreKind::HashFixed] {
+        for nshards in [1usize, 2, 4, 8] {
+            let s = ShardedStore::new(kind, nshards, 1 << 12, Topology::milan_virtual(), 8);
+            // degenerate runs first
+            assert_eq!(s.insert_batch(&[]), 0, "{kind:?}/{nshards}");
+            assert_eq!(s.erase_batch(&[]), 0);
+            assert_eq!(s.get_batch(&[]), Vec::<Option<u64>>::new());
+            assert_eq!(s.insert_batch(&[(42, 1)]), 1);
+            assert_eq!(s.get_batch(&[42]), vec![Some(1)]);
+            assert_eq!(s.erase_batch(&[42]), 1);
+            // boundary keys: first/last key of every 3-MSB prefix segment
+            let mut items = Vec::new();
+            for p in 0..8u64 {
+                items.push((p << 61, p + 1));
+                items.push((p << 61 | ((1u64 << 61) - 1) - 1, p + 100)); // MAX_KEY-safe
+                items.push((p << 61 | 12345, p + 200));
+            }
+            items.sort_unstable_by_key(|e| e.0);
+            assert_eq!(s.insert_batch(&items), items.len() as u64, "{kind:?}/{nshards}");
+            let keys: Vec<u64> = items.iter().map(|&(k, _)| k).collect();
+            let got = s.get_batch(&keys);
+            for (i, &(k, v)) in items.iter().enumerate() {
+                assert_eq!(got[i], Some(v), "{kind:?}/{nshards} boundary key {k:#x}");
+            }
+            assert_eq!(s.range(0, u64::MAX - 2).len(), items.len());
+            assert_eq!(s.erase_batch(&keys), keys.len() as u64);
+            assert_eq!(s.len(), 0, "{kind:?}/{nshards}");
+        }
+    }
+}
+
+/// Fused batches racing point ops on both find modes: stable keys must
+/// never be lost and the structure must stay invariant-clean.
+#[test]
+fn batch_fused_vs_point_interleaving_lf_and_rwl() {
+    let rounds = scaled(2_400).min(40);
+    for mode in [FindMode::LockFree, FindMode::ReadLocked] {
+        let s = Arc::new(DetSkiplist::with_capacity(mode, 1 << 16));
+        for k in 0..1_000u64 {
+            s.insert(k * 10 + 9, k); // stable keys, never touched below
+        }
+        let mut handles = Vec::new();
+        for t in 0..2u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for round in 0..rounds {
+                    let base = ((t * 500 + round * 13 % 400) * 10) as u64;
+                    // unsorted input: exercises the sort-then-fuse path too
+                    let mut items: Vec<(u64, u64)> =
+                        (0..64u64).map(|j| (base + j * 10 + 1 + t, j)).collect();
+                    if round % 2 == 1 {
+                        items.reverse();
+                    }
+                    OrderedKv::insert_batch(&*s, &items);
+                    let keys: Vec<u64> = items.iter().map(|&(k, _)| k).collect();
+                    OrderedKv::erase_batch(&*s, &keys);
+                }
+            }));
+        }
+        for _ in 0..2 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(77);
+                for _ in 0..4_000 {
+                    let k = rng.below(1_000) * 10 + 9;
+                    assert!(s.contains(k), "stable key {k} lost under fused churn");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(
+            keys.iter().filter(|&&k| k % 10 == 9).count(),
+            1_000,
+            "{mode:?}: stable keys survive"
+        );
+    }
+}
+
+/// Acceptance: the fused batch path does strictly fewer node derefs/op
+/// than the per-key loop on clustered sorted batches (the Table XIII bar
+/// at store level).
+#[test]
+fn batch_fused_strictly_cuts_derefs() {
+    let mk = || ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 14, Topology::milan_virtual(), 8);
+    let fused = mk();
+    let per_key = mk();
+    let batches: Vec<Vec<(u64, u64)>> = (0..64u64)
+        .map(|b| {
+            let base = (b % 8) << 61 | (b * 131);
+            (0..64u64).map(|j| (base + j, j ^ 5)).collect()
+        })
+        .collect();
+    for batch in &batches {
+        fused.insert_batch(batch);
+        for &(k, v) in batch {
+            per_key.insert(k, v);
+        }
+    }
+    for batch in &batches {
+        let keys: Vec<u64> = batch.iter().map(|&(k, _)| k).collect();
+        let _ = fused.get_batch(&keys);
+        for &k in &keys {
+            let _ = per_key.get(k);
+        }
+    }
+    assert_eq!(fused.len(), per_key.len(), "same resident sets");
+    let f = fused.stats().node_derefs;
+    let p = per_key.stats().node_derefs;
+    assert!(f < p, "fused batches must strictly cut derefs ({f} vs {p})");
+}

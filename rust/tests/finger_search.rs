@@ -11,7 +11,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use cdskl::coordinator::{run_with_mode, ExecMode, OrderedKv, ShardedStore, StoreKind};
+use cdskl::coordinator::{run_with_opts, ExecMode, OrderedKv, RunOptions, ShardedStore, StoreKind};
 use cdskl::numa::Topology;
 use cdskl::runtime::KeyRouter;
 use cdskl::skiplist::{DetSkiplist, FindMode};
@@ -157,7 +157,17 @@ fn finger_engine_modes_agree_with_baseline() {
         // the baseline-vs-fingers equality below is deterministic even when
         // same-key ops land on different worker threads
         let spec = WorkloadSpec::new("fingers", ops, OpMix::W1, 2048).with_hot_span(64, 1024);
-        let m = run_with_mode(&store, &spec, 4, &KeyRouter::Native, 77, mode);
+        // per-envelope delegated execution: owner-side combining routes
+        // pooled ops through the fused run path, which (by design) never
+        // consults the fingers this test measures
+        let m = run_with_opts(
+            &store,
+            &spec,
+            4,
+            &KeyRouter::Native,
+            77,
+            RunOptions { mode, combining: false, ..RunOptions::default() },
+        );
         let st = store.stats();
         (m, st, store)
     };
