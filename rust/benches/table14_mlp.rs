@@ -1,0 +1,18 @@
+//! Bench for Table XIV (new, beyond the paper): memory-level-parallel
+//! interleaved descents for scattered point batches — throughput and
+//! stalled derefs/op over interleave width, Direct (`get_many`) and
+//! Delegated (combiner-dispatched `apply_interleaved`). Self-asserts a
+//! strict stalled-deref cut at width ≥ 8 in both modes, strictly higher
+//! throughput in optimized full-size runs, and that the mixed
+//! clustered+scattered window exercises both combiner dispatch arms.
+//!
+//! `cargo bench --bench table14_mlp -- --smoke` runs the CI-sized smoke.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(100);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table14_mlp (MLP interleaved descents, Table XIV)\n");
+    let tables = vec![cdskl::experiments::t14_mlp(&cfg, &router)];
+    common::emit("table14_mlp", &cfg, &tables);
+}

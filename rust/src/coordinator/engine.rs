@@ -127,11 +127,15 @@ pub struct RunOptions {
     /// per-shard fused sorted runs). On by default; Table XIII's
     /// per-envelope baseline turns it off.
     pub combining: bool,
+    /// Pin the combiner's interleave width for scattered runs (`run
+    /// --interleave k`, Table XIV sweep). `0` (the default) leaves the
+    /// per-owner width adaptive.
+    pub interleave: usize,
 }
 
 impl Default for RunOptions {
     fn default() -> RunOptions {
-        RunOptions { mode: ExecMode::Direct, batch_n: 64, combining: true }
+        RunOptions { mode: ExecMode::Direct, batch_n: 64, combining: true, interleave: 0 }
     }
 }
 
@@ -200,6 +204,7 @@ pub fn run_with_opts(
     };
     if let Some(f) = &fabric {
         f.set_combining(opts.combining);
+        f.set_interleave_width(opts.interleave);
     }
 
     // ---- fill phase (leader thread; AOT pipeline) ----
@@ -654,7 +659,7 @@ mod tests {
             4,
             &KeyRouter::Native,
             3,
-            RunOptions { mode: ExecMode::Delegated, batch_n: 32, combining: true },
+            RunOptions { mode: ExecMode::Delegated, batch_n: 32, ..RunOptions::default() },
         );
         assert_eq!(m.ops(), 20_000);
         assert_eq!(m.fabric.executed, m.fabric.submitted);
@@ -687,7 +692,7 @@ mod tests {
                 4,
                 &KeyRouter::Native,
                 11,
-                RunOptions { mode: ExecMode::Delegated, batch_n: 16, combining },
+                RunOptions { mode: ExecMode::Delegated, batch_n: 16, combining, ..RunOptions::default() },
             );
             (m, store)
         };

@@ -28,7 +28,9 @@ pub use engine::{bulk_load, run_with_mode, run_with_opts, run_workload, ExecMode
 pub use router::{
     Caller, DelegatedOp, FabricStats, OpFabric, OpResult, RouterFabric, SlotTotals,
 };
-pub use store::{keys_sorted, pairs_sorted, KvStore, OrderedKv, ShardedStore, StoreKind};
+pub use store::{
+    keys_sorted, pairs_sorted, KvStore, OrderedKv, ShardedStore, StoreKind, DEFAULT_INTERLEAVE,
+};
 
 /// Shard of a key: the top 3 MSBs (the paper's 8 key-space segments) folded
 /// onto the shard count. The single source of truth for key→shard routing —

@@ -40,7 +40,7 @@ use crate::skiplist::{BatchOp, BatchReply};
 use crate::sync::Backoff;
 use crate::util::rng::Rng;
 
-use super::store::ShardedStore;
+use super::store::{ShardedStore, DEFAULT_INTERLEAVE};
 use super::{for_each_prefix_segment, shard_of_key};
 
 // ---------------------------------------------------------------------------
@@ -190,8 +190,8 @@ pub struct OpBatch {
     caller: u32,
     /// Sync batches carry exactly one op and publish a full [`OpResult`].
     sync: bool,
-    /// Flush timestamp — the owner measures handoff (completion) latency
-    /// against it.
+    /// Flush timestamp — the owner measures handoff latency against it
+    /// when it pops the batch from its queue.
     staged_at: Instant,
     ops: Vec<DelegatedOp>,
 }
@@ -259,6 +259,8 @@ struct FabricAtomics {
     combined_drains: AtomicU64,
     combined_batches: AtomicU64,
     combined_runs: AtomicU64,
+    fused_runs: AtomicU64,
+    interleaved_runs: AtomicU64,
     coalesced_finds: AtomicU64,
     flush_grow: AtomicU64,
     flush_shrink: AtomicU64,
@@ -283,7 +285,10 @@ pub struct FabricStats {
     pub sync_calls: u64,
     /// try_push rejections ridden out by the backpressure loop.
     pub backpressure: u64,
-    /// Total flush→execute latency over all queued batches.
+    /// Total flush→pop latency over all queued batches, recorded once per
+    /// batch at the moment the owner pops it — uniformly across the
+    /// combined, single-batch and sync drain branches (the inline
+    /// self-delegation shortcut never queues and is deliberately excluded).
     pub handoff_ns: u64,
     /// Deepest owner-queue depth observed (in batches).
     pub peak_depth: u64,
@@ -294,8 +299,14 @@ pub struct FabricStats {
     pub combined_drains: u64,
     /// Caller batches folded into combined runs.
     pub combined_batches: u64,
-    /// Per-shard fused runs executed by combining drains.
+    /// Per-shard runs executed by combining drains (fused + interleaved).
     pub combined_runs: u64,
+    /// Combined runs whose keys were clustered: executed through the fused
+    /// shared-walk descent (the sorted-run path).
+    pub fused_runs: u64,
+    /// Combined runs whose keys were scattered: executed through the
+    /// interleaved multi-descent engine (the MLP path).
+    pub interleaved_runs: u64,
     /// Duplicate finds answered by a single fused execution.
     pub coalesced_finds: u64,
     /// Adaptive flush-threshold doublings (owner-queue backpressure).
@@ -314,7 +325,7 @@ impl FabricStats {
         }
     }
 
-    /// Mean flush→execute handoff latency per queued batch, microseconds.
+    /// Mean flush→pop handoff latency per queued batch, microseconds.
     pub fn avg_handoff_us(&self) -> f64 {
         if self.queued_batches == 0 {
             0.0
@@ -355,6 +366,13 @@ pub struct OpFabric {
     /// with a panic instead of waiting forever on completions that will
     /// never come.
     poisoned: AtomicBool,
+    /// Per-owner adaptive interleave width for scattered combined runs,
+    /// adapted like the callers' flush threshold (see
+    /// [`OpFabric::pick_interleave`]).
+    interleave_w: Vec<AtomicUsize>,
+    /// Non-zero pins every owner's interleave width (`run --interleave k`
+    /// and the Table XIV width sweep); zero restores adaptation.
+    interleave_pin: AtomicUsize,
 }
 
 /// One caller's point op waiting in a combining drain's pool.
@@ -366,6 +384,33 @@ struct PointEntry {
 /// How many batches one combining round pops before executing (bounds the
 /// pool's memory and the latency of the first completion in the round).
 const COMBINE_WINDOW: usize = 32;
+
+/// Sorted neighbours at most this far apart count as *clustered*: they
+/// share a terminal-segment neighbourhood, so the fused descent's shared
+/// walk amortizes their misses and interleaving has nothing to overlap.
+const CLUSTER_GAP: u64 = 64;
+
+/// Runs shorter than this always take the fused path — too few independent
+/// descents to fill a pipeline.
+const INTERLEAVE_MIN_RUN: usize = 8;
+
+/// Bounds for the per-owner adaptive interleave width. The ceiling matches
+/// the skiplists' lane cap; the floor keeps at least two chains in flight
+/// once a run qualifies as scattered at all.
+const INTERLEAVE_MIN_W: usize = 2;
+const INTERLEAVE_MAX_W: usize = 32;
+
+/// `true` when a key-sorted run is dominated by clustered keys: at least
+/// half of the adjacent gaps are within [`CLUSTER_GAP`]. The combiner's
+/// per-drain dispatch test — clustered windows keep the PR-5 fused path,
+/// scattered ones go to the interleaved engine.
+fn run_is_clustered(run: &[BatchOp]) -> bool {
+    if run.len() < INTERLEAVE_MIN_RUN {
+        return true;
+    }
+    let close = run.windows(2).filter(|w| w[1].key() - w[0].key() <= CLUSTER_GAP).count();
+    close * 2 >= run.len() - 1
+}
 
 impl OpFabric {
     /// `threads` owner/worker threads (each gets an envelope queue and a
@@ -412,7 +457,17 @@ impl OpFabric {
             at: FabricAtomics::default(),
             combining: AtomicBool::new(true),
             poisoned: AtomicBool::new(false),
+            interleave_w: (0..threads).map(|_| AtomicUsize::new(DEFAULT_INTERLEAVE)).collect(),
+            interleave_pin: AtomicUsize::new(0),
         }
+    }
+
+    /// Pin every owner's interleave width to `k` (`run --interleave k` and
+    /// the Table XIV sweep); `0` restores per-owner adaptation. Width 1
+    /// still routes scattered runs through the interleaved engine — as a
+    /// single serialized lane, the Table XIV baseline.
+    pub fn set_interleave_width(&self, k: usize) {
+        self.interleave_pin.store(k, Ordering::Relaxed);
     }
 
     /// Toggle owner-side operation combining (on by default).
@@ -505,9 +560,14 @@ impl OpFabric {
     /// With combining enabled (the default), the drain is a **combiner**:
     /// it pops a window of pending batches, merges their point envelopes
     /// across callers into one key-sorted run per shard, coalesces
-    /// duplicate finds, and applies each run through the shard's fused
-    /// [`crate::coordinator::OrderedKv::apply_sorted_run`] — one descent
-    /// per group of nearby keys instead of one per envelope. Completion
+    /// duplicate finds, and applies each run through the shard — clustered
+    /// runs via the fused
+    /// [`crate::coordinator::OrderedKv::apply_sorted_run`] (one descent
+    /// per group of nearby keys instead of one per envelope), scattered
+    /// runs via the interleaved
+    /// [`crate::coordinator::OrderedKv::apply_interleaved`] (k independent
+    /// descents overlapped at the owner's adaptive width; see
+    /// [`run_is_clustered`] for the dispatch test). Completion
     /// counters still settle per caller (every original op acks its own
     /// caller's slot). Ordering: per-caller per-key order among point ops
     /// survives (batches pop FIFO and the run sort is stable); ordering
@@ -538,12 +598,21 @@ impl OpFabric {
                 let Some(batch) = q.pop() else { break };
                 got += 1;
                 ops += batch.ops.len() as u64;
+                // Handoff latency is recorded here, at pop time, so every
+                // queued batch is measured exactly once no matter which
+                // execution branch it takes (combined, single-batch or
+                // sync) — recording inside the execute paths skewed
+                // `fabric:` metrics whenever combining was low.
+                self.at
+                    .handoff_ns
+                    .fetch_add(batch.staged_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                self.at.queued_batches.fetch_add(1, Ordering::Relaxed);
                 if batch.sync || !combine {
                     // A sync op must observe everything its caller staged
                     // before it (Caller::call's FIFO promise): run the
                     // pooled prefix first, then the sync batch.
                     self.flush_popped(who, &mut popped, store);
-                    self.execute_batch(who, batch, store, true);
+                    self.execute_batch(who, batch, store);
                 } else {
                     popped.push(batch);
                 }
@@ -563,7 +632,7 @@ impl OpFabric {
     fn flush_popped(&self, who: usize, popped: &mut Vec<OpBatch>, store: &ShardedStore) {
         match popped.len() {
             0 => {}
-            1 => self.execute_batch(who, popped.pop().unwrap(), store, true),
+            1 => self.execute_batch(who, popped.pop().unwrap(), store),
             _ => self.execute_combined(who, std::mem::take(popped), store),
         }
     }
@@ -582,11 +651,10 @@ impl OpFabric {
         let mut pool: Vec<PointEntry> = Vec::new();
         let mut direct = 0u64; // envelopes executed outside the pool
         for batch in popped {
-            let OpBatch { caller, sync: _, staged_at, ops } = batch;
-            self.at
-                .handoff_ns
-                .fetch_add(staged_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            self.at.queued_batches.fetch_add(1, Ordering::Relaxed);
+            let OpBatch { caller, sync: _, staged_at: _, ops } = batch;
+            // (handoff_ns / queued_batches were already recorded at pop
+            // time in `drain` — uniformly with the sync and single-batch
+            // branches)
             self.at.batches.fetch_add(1, Ordering::Relaxed);
             let slot = &self.slots[caller as usize];
             for op in ops {
@@ -650,14 +718,18 @@ impl OpFabric {
                 spans.push((j as u32, len as u32));
                 j += len;
             }
-            // one fused application on the owner's NUMA-local shard; every
+            // one application on the owner's NUMA-local shard; every
             // original op settles its own caller's completion slot
             let spans_ref = &spans;
-            store.shard_at(shard).apply_sorted_run(&run, &mut |ri, reply| {
+            let mut settle = |ri: usize, reply: BatchReply| {
+                // one shard dereference per *executed* run op: an N-way
+                // coalesced find reads the shard once, so locality (and
+                // the remote-latency model) is charged once — charging
+                // inside the per-entry loop below over-counted it N times
                 let (start, len) = spans_ref[ri];
+                store.account_shard(who, shard);
                 for e in &slice[start as usize..(start as usize + len as usize)] {
                     let slot = &self.slots[e.caller as usize];
-                    store.account_shard(who, shard);
                     match reply {
                         BatchReply::Applied(ok) => {
                             slot.applied.fetch_add(ok as u64, Ordering::Relaxed);
@@ -668,10 +740,44 @@ impl OpFabric {
                     }
                     slot.acked.fetch_add(1, Ordering::Relaxed);
                 }
-            });
+            };
+            // per-drain dispatch: clustered windows keep the PR-5 fused
+            // shared-walk descent; scattered ones overlap their independent
+            // miss chains through the interleaved engine at the owner's
+            // adaptive width
+            if run_is_clustered(&run) {
+                self.at.fused_runs.fetch_add(1, Ordering::Relaxed);
+                store.shard_at(shard).apply_sorted_run(&run, &mut settle);
+            } else {
+                let width = self.pick_interleave(who, run.len());
+                self.at.interleaved_runs.fetch_add(1, Ordering::Relaxed);
+                store.shard_at(shard).apply_interleaved(&run, width, &mut settle);
+            }
             lo = hi;
         }
         self.at.executed.fetch_add(direct + pool.len() as u64, Ordering::SeqCst);
+    }
+
+    /// Interleave width for a scattered run on `who`'s shard, adapted like
+    /// the callers' flush threshold: a run at least twice the current width
+    /// doubles it for the next drain (more independent chains available to
+    /// overlap than lanes to hold them), a run below the current width
+    /// halves it (lanes would sit empty). The *current* width is used for
+    /// this run; adaptation only steers future drains. A non-zero
+    /// [`OpFabric::set_interleave_width`] pin short-circuits all of it.
+    fn pick_interleave(&self, who: usize, run_len: usize) -> usize {
+        let pin = self.interleave_pin.load(Ordering::Relaxed);
+        if pin > 0 {
+            return pin;
+        }
+        let w = &self.interleave_w[who];
+        let cur = w.load(Ordering::Relaxed);
+        if run_len >= cur * 2 && cur < INTERLEAVE_MAX_W {
+            w.store((cur * 2).min(INTERLEAVE_MAX_W), Ordering::Relaxed);
+        } else if run_len < cur && cur > INTERLEAVE_MIN_W {
+            w.store((cur / 2).max(INTERLEAVE_MIN_W), Ordering::Relaxed);
+        }
+        cur
     }
 
     /// Batches currently enqueued across all owner queues (single-snapshot
@@ -721,6 +827,8 @@ impl OpFabric {
             combined_drains: self.at.combined_drains.load(Ordering::Relaxed),
             combined_batches: self.at.combined_batches.load(Ordering::Relaxed),
             combined_runs: self.at.combined_runs.load(Ordering::Relaxed),
+            fused_runs: self.at.fused_runs.load(Ordering::Relaxed),
+            interleaved_runs: self.at.interleaved_runs.load(Ordering::Relaxed),
             coalesced_finds: self.at.coalesced_finds.load(Ordering::Relaxed),
             flush_grow: self.at.flush_grow.load(Ordering::Relaxed),
             flush_shrink: self.at.flush_shrink.load(Ordering::Relaxed),
@@ -743,7 +851,7 @@ impl OpFabric {
         self.at.submitted.fetch_add(batch.ops.len() as u64, Ordering::SeqCst);
         if helper == Some(owner) {
             self.at.inline_ops.fetch_add(batch.ops.len() as u64, Ordering::Relaxed);
-            self.execute_batch(owner, batch, store, false);
+            self.execute_batch(owner, batch, store);
             return false;
         }
         let mut b = Backoff::new();
@@ -770,14 +878,10 @@ impl OpFabric {
 
     /// Execute one batch on thread `who` (the owner, or a caller running
     /// the inline shortcut — in which case `who == owner` by construction).
-    fn execute_batch(&self, who: usize, batch: OpBatch, store: &ShardedStore, queued: bool) {
-        let OpBatch { caller, sync, staged_at, ops } = batch;
-        if queued {
-            self.at
-                .handoff_ns
-                .fetch_add(staged_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            self.at.queued_batches.fetch_add(1, Ordering::Relaxed);
-        }
+    /// Handoff accounting is not done here: queued batches are measured at
+    /// pop time in [`OpFabric::drain`], inline batches never queue.
+    fn execute_batch(&self, who: usize, batch: OpBatch, store: &ShardedStore) {
+        let OpBatch { caller, sync, staged_at: _, ops } = batch;
         self.at.batches.fetch_add(1, Ordering::Relaxed);
         let slot = &self.slots[caller as usize];
         let n = ops.len() as u64;
@@ -1250,6 +1354,121 @@ mod tests {
         for i in 0..32u64 {
             assert_eq!(store.get(i), Some(i));
         }
+    }
+
+    #[test]
+    fn stats_balance_to_quiescence_with_coalescing_and_sync() {
+        // The FabricStats ledger must balance at quiescence no matter how
+        // coalesced windows and sync batches interleave: every submitted
+        // op executes exactly once (`executed == submitted`) and settles
+        // exactly one ack on its own caller's slot — an N-way coalesced
+        // find executes once but still acks N slots, and a sync batch
+        // popped mid-window must not double-run the pooled prefix.
+        let topo = Topology::virtual_grid(2, 2);
+        let threads = 4;
+        let store = Arc::new(ShardedStore::new(
+            StoreKind::DetSkiplistLf,
+            8,
+            1 << 12,
+            topo.clone(),
+            threads,
+        ));
+        let fabric = OpFabric::new(threads, 3, 8, topo, 16, 4);
+        let mut a = fabric.caller(threads, None);
+        let mut b = fabric.caller(threads + 1, None);
+        let mut c = fabric.caller(threads + 2, None);
+        // stage everything *before* owners start draining so the combiner
+        // sees deep queues: a's inserts+finds first, then b's duplicate
+        // finds — per-key pop order [Insert_a, Find_a, Find_b, Find_b]
+        // guarantees an adjacent duplicate-find pair to coalesce
+        for i in 0..48u64 {
+            let key = (i % 8) << 61 | i;
+            a.delegate(DelegatedOp::Insert { key, value: i }, &store);
+            a.delegate(DelegatedOp::Find { key }, &store);
+        }
+        for i in 0..48u64 {
+            let key = (i % 8) << 61 | i;
+            b.delegate(DelegatedOp::Find { key }, &store);
+            b.delegate(DelegatedOp::Find { key }, &store);
+        }
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let fabric = &fabric;
+                let store = &store;
+                s.spawn(move || {
+                    while !fabric.all_quiet() {
+                        fabric.drain(t, store, 64);
+                        std::hint::spin_loop();
+                    }
+                });
+            }
+            // sync calls land between the owners' combining windows
+            for i in 0..6u64 {
+                let key = (i % 8) << 61 | i;
+                let r = c.call(DelegatedOp::Find { key }, &store);
+                assert!(matches!(r, OpResult::Value(_)));
+            }
+            a.finish(&store);
+            b.finish(&store);
+            c.finish(&store);
+        });
+        let st = fabric.stats();
+        assert_eq!(st.executed, st.submitted, "quiescence balance");
+        assert_eq!(st.submitted, 96 + 96 + 6);
+        assert!(st.coalesced_finds > 0, "duplicate finds must have coalesced");
+        assert_eq!(st.sync_calls, 6);
+        assert_eq!(
+            st.fused_runs + st.interleaved_runs,
+            st.combined_runs,
+            "every combined run is dispatched exactly one way"
+        );
+        assert!(st.queued_batches > 0);
+        assert!(st.handoff_ns > 0, "pop-time handoff must cover sync + combined batches");
+        // slot acks == ops per caller: coalescing settles every twin
+        assert_eq!(fabric.slot_totals(threads).acked, 96);
+        assert_eq!(fabric.slot_totals(threads + 1).acked, 96);
+        assert_eq!(fabric.slot_totals(threads + 2).acked, 6);
+        assert_eq!((a.delegated(), b.delegated(), c.delegated()), (96, 96, 6));
+    }
+
+    #[test]
+    fn scattered_combined_runs_take_the_interleaved_path() {
+        // One owner, deep queue of far-apart keys: the combiner's dispatch
+        // test must classify the merged runs as scattered and route them
+        // through apply_interleaved (counter proof), with results intact.
+        let topo = Topology::milan_virtual();
+        let store =
+            Arc::new(ShardedStore::new(StoreKind::DetSkiplistLf, 1, 1 << 14, topo.clone(), 1));
+        let fabric = OpFabric::new(1, 2, 1, topo, 16, 4);
+        // seed values through the store directly
+        let mut keys = Vec::new();
+        for i in 0..256u64 {
+            // stride far beyond CLUSTER_GAP, everything in prefix 0
+            let key = i * 8192 + 17;
+            store.insert(key, i);
+            keys.push(key);
+        }
+        let mut c1 = fabric.caller(1, None);
+        let mut c2 = fabric.caller(2, None);
+        // scatter the delegation order so per-batch keys are unsorted too
+        for (j, &key) in keys.iter().enumerate() {
+            if j % 2 == 0 {
+                c1.delegate(DelegatedOp::Find { key }, &store);
+            } else {
+                c2.delegate(DelegatedOp::Find { key }, &store);
+            }
+        }
+        c1.finish(&store);
+        c2.finish(&store);
+        while fabric.drain(0, &store, usize::MAX) > 0 {}
+        assert!(fabric.all_quiet());
+        let st = fabric.stats();
+        assert_eq!(st.executed, st.submitted);
+        assert!(st.interleaved_runs > 0, "scattered windows must interleave");
+        let t1 = fabric.slot_totals(1);
+        let t2 = fabric.slot_totals(2);
+        assert_eq!(t1.acked + t2.acked, 256);
+        assert_eq!(t1.hits + t2.hits, 256, "every find hits its seeded key");
     }
 
     #[test]

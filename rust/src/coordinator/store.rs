@@ -35,6 +35,13 @@ pub fn keys_sorted(keys: &[u64]) -> bool {
     keys.windows(2).all(|w| w[0] <= w[1])
 }
 
+/// Default interleave width for scattered batches: wide enough to keep
+/// several dependent-miss chains in flight, narrow enough that the lane
+/// state (one carry + cursor each) stays cache-resident. Callers that know
+/// their batch shape (the delegation fabric's adaptive combiner) pick their
+/// own width; everything else uses this.
+pub const DEFAULT_INTERLEAVE: usize = 8;
+
 /// Unified key-value interface over every structure in the repo.
 pub trait KvStore: Send + Sync {
     fn insert(&self, key: u64, value: u64) -> bool;
@@ -90,6 +97,23 @@ pub trait OrderedKv: KvStore {
             };
             sink(i, r);
         }
+    }
+
+    /// Apply a key-sorted run with up to `width` independent descents
+    /// advanced round-robin so their dependent-miss chains overlap (the
+    /// MLP path for *scattered* runs — fused descents already cover
+    /// clustered ones). Same contract as [`OrderedKv::apply_sorted_run`]:
+    /// `sink(idx, reply)` fires exactly once per op, in run order per
+    /// lane. Hash tables have no pointer chase to pipeline, so the
+    /// default simply delegates to the fused/per-key path; both
+    /// skiplists override it with their interleaved engines.
+    fn apply_interleaved(
+        &self,
+        ops: &[BatchOp],
+        _width: usize,
+        sink: &mut dyn FnMut(usize, BatchReply),
+    ) {
+        self.apply_sorted_run(ops, sink);
     }
 
     /// Insert every pair; returns how many were newly inserted (pairs whose
@@ -166,14 +190,22 @@ fn run_erase_batch(
     n
 }
 
+/// Sorted input means the caller's keys are genuinely clustered in key
+/// space — the fused descent's shared-walk amortization wins. Unsorted
+/// input is the scattered case: sorting it groups shard/segment locality
+/// but leaves the per-group descents independent, which is exactly what
+/// the interleaved engine pipelines (satellite fix: the old path fed both
+/// shapes to the fused walk, paying a full dependent-miss chain per
+/// scattered group).
 fn run_get_batch(
     keys: &[u64],
-    apply: &mut dyn FnMut(&[BatchOp], &mut dyn FnMut(usize, BatchReply)),
+    fused: &mut dyn FnMut(&[BatchOp], &mut dyn FnMut(usize, BatchReply)),
+    interleaved: &mut dyn FnMut(&[BatchOp], &mut dyn FnMut(usize, BatchReply)),
 ) -> Vec<Option<u64>> {
     let mut out = vec![None; keys.len()];
     if keys_sorted(keys) {
         let run: Vec<BatchOp> = keys.iter().map(|&k| BatchOp::Get(k)).collect();
-        apply(&run, &mut |i, r| {
+        fused(&run, &mut |i, r| {
             if let BatchReply::Value(v) = r {
                 out[i] = v;
             }
@@ -183,7 +215,7 @@ fn run_get_batch(
         let mut order: Vec<u32> = (0..keys.len() as u32).collect();
         order.sort_by_key(|&i| keys[i as usize]);
         let run: Vec<BatchOp> = order.iter().map(|&i| BatchOp::Get(keys[i as usize])).collect();
-        apply(&run, &mut |i, r| {
+        interleaved(&run, &mut |i, r| {
             if let BatchReply::Value(v) = r {
                 out[order[i] as usize] = v;
             }
@@ -231,6 +263,15 @@ impl OrderedKv for DetSkiplist {
         DetSkiplist::apply_sorted_run(self, ops, sink)
     }
 
+    fn apply_interleaved(
+        &self,
+        ops: &[BatchOp],
+        width: usize,
+        sink: &mut dyn FnMut(usize, BatchReply),
+    ) {
+        DetSkiplist::apply_interleaved(self, ops, width, sink)
+    }
+
     fn insert_batch(&self, items: &[(u64, u64)]) -> u64 {
         run_insert_batch(items, &mut |ops, sink| DetSkiplist::apply_sorted_run(self, ops, sink))
     }
@@ -240,7 +281,13 @@ impl OrderedKv for DetSkiplist {
     }
 
     fn get_batch(&self, keys: &[u64]) -> Vec<Option<u64>> {
-        run_get_batch(keys, &mut |ops, sink| DetSkiplist::apply_sorted_run(self, ops, sink))
+        run_get_batch(
+            keys,
+            &mut |ops, sink| DetSkiplist::apply_sorted_run(self, ops, sink),
+            &mut |ops, sink| {
+                DetSkiplist::apply_interleaved(self, ops, DEFAULT_INTERLEAVE, sink)
+            },
+        )
     }
 }
 
@@ -285,6 +332,15 @@ impl OrderedKv for RandomSkiplist {
         RandomSkiplist::apply_sorted_run(self, ops, sink)
     }
 
+    fn apply_interleaved(
+        &self,
+        ops: &[BatchOp],
+        width: usize,
+        sink: &mut dyn FnMut(usize, BatchReply),
+    ) {
+        RandomSkiplist::apply_interleaved(self, ops, width, sink)
+    }
+
     fn insert_batch(&self, items: &[(u64, u64)]) -> u64 {
         run_insert_batch(items, &mut |ops, sink| RandomSkiplist::apply_sorted_run(self, ops, sink))
     }
@@ -294,7 +350,13 @@ impl OrderedKv for RandomSkiplist {
     }
 
     fn get_batch(&self, keys: &[u64]) -> Vec<Option<u64>> {
-        run_get_batch(keys, &mut |ops, sink| RandomSkiplist::apply_sorted_run(self, ops, sink))
+        run_get_batch(
+            keys,
+            &mut |ops, sink| RandomSkiplist::apply_sorted_run(self, ops, sink),
+            &mut |ops, sink| {
+                RandomSkiplist::apply_interleaved(self, ops, DEFAULT_INTERLEAVE, sink)
+            },
+        )
     }
 }
 
@@ -601,7 +663,12 @@ impl ShardedStore {
 
     /// Batch lookup, segment-routed like [`ShardedStore::insert_batch`];
     /// values come back in **input order** (an order-restoring permutation
-    /// is built only when the input is unsorted).
+    /// is built only when the input is unsorted). Pre-sorted input is the
+    /// clustered-arrival shape and rides each shard's fused `get_batch`;
+    /// unsorted input is scattered arrival, so its (key-sorted) segment
+    /// slices go through [`OrderedKv::apply_interleaved`] instead — the
+    /// sort cannot turn far-apart probes into a dense run, and pipelining
+    /// the independent descents is what hides their miss chains.
     pub fn get_batch(&self, keys: &[u64]) -> Vec<Option<u64>> {
         let mut out = vec![None; keys.len()];
         if keys.is_empty() {
@@ -624,14 +691,24 @@ impl ShardedStore {
             let end = start + skeys[start..].partition_point(|&k| k <= shi);
             cur = end;
             if start < end {
-                let vals = self.shards[shard_of_key(slo, self.shards.len())]
-                    .get_batch(&skeys[start..end]);
-                for (j, v) in vals.into_iter().enumerate() {
-                    let oi = match perm {
-                        Some(p) => p[start + j] as usize,
-                        None => start + j,
-                    };
-                    out[oi] = v;
+                let shard = &self.shards[shard_of_key(slo, self.shards.len())];
+                match perm {
+                    None => {
+                        for (j, v) in
+                            shard.get_batch(&skeys[start..end]).into_iter().enumerate()
+                        {
+                            out[start + j] = v;
+                        }
+                    }
+                    Some(p) => {
+                        let run: Vec<BatchOp> =
+                            skeys[start..end].iter().map(|&k| BatchOp::Get(k)).collect();
+                        shard.apply_interleaved(&run, DEFAULT_INTERLEAVE, &mut |j, r| {
+                            if let BatchReply::Value(v) = r {
+                                out[p[start + j] as usize] = v;
+                            }
+                        });
+                    }
                 }
             }
         });

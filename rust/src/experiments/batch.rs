@@ -151,7 +151,7 @@ fn run_delegated(
             threads,
             router,
             cfg.seed + rep as u64,
-            RunOptions { mode: ExecMode::Delegated, batch_n: batch as usize, combining },
+            RunOptions { mode: ExecMode::Delegated, batch_n: batch as usize, combining, ..RunOptions::default() },
         );
         assert_eq!(m.remote_accesses, 0, "delegated execution must stay NUMA-local");
         assert_eq!(m.fabric.executed, m.fabric.submitted, "the fabric must quiesce");

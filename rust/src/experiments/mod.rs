@@ -9,6 +9,7 @@ pub mod batch;
 pub mod cache;
 pub mod hier;
 pub mod mem;
+pub mod mlp;
 pub mod paper;
 pub mod queues;
 
@@ -16,6 +17,7 @@ pub use self::batch::t13_batch;
 pub use self::cache::t12_cache;
 pub use self::hier::t11_hier;
 pub use self::mem::t10_mem;
+pub use self::mlp::t14_mlp;
 
 use std::sync::Arc;
 

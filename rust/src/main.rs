@@ -2,12 +2,12 @@
 //!
 //! ```text
 //! cdskl info                           topology, artifacts, self-check
-//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|t13|all> [--threads 4,8]
+//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|t13|t14|all> [--threads 4,8]
 //!           [--reps N] [--scale N] [--out FILE]   regenerate paper tables
 //! cdskl run [--store det|rwl|random|fixed|twolevel|spo|spo2|tbb]
 //!           [--ops N] [--threads N] [--mix w1|w2|hash|range|hier|bulk]
 //!           [--exec direct|delegated] [--range-window W] [--batch-n N]
-//!           [--combine true|false] [--run-len N]
+//!           [--combine true|false] [--run-len N] [--interleave K]
 //!           [--inject-latency NS] [--fingers true|false]
 //!                                      one workload run with metrics
 //! cdskl selfcheck                      AOT artifacts vs native mixer
@@ -134,8 +134,11 @@ fn exp(args: &Args) {
     if all || which == "t13" || which == "batch" {
         tables.push(experiments::t13_batch(&cfg, &router));
     }
+    if all || which == "t14" || which == "mlp" {
+        tables.push(experiments::t14_mlp(&cfg, &router));
+    }
     if tables.is_empty() {
-        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 t13 all)");
+        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 t13 t14 all)");
         std::process::exit(2);
     }
     let mut out = String::new();
@@ -196,6 +199,7 @@ fn run(args: &Args) {
         mode,
         batch_n: args.usize_or("batch-n", 64),
         combining: args.bool_or("combine", true),
+        interleave: args.usize_or("interleave", 0),
     };
     let m = run_with_opts(&store, &spec, threads, &router, seed, opts);
     println!(
@@ -239,12 +243,14 @@ fn run(args: &Args) {
         );
         if m.fabric.combined_drains > 0 {
             println!(
-                "combine: {} drains merged {} batches ({:.1}/drain) into {} runs, \
-                 {} finds coalesced, flush adapt {}^ {}v",
+                "combine: {} drains merged {} batches ({:.1}/drain) into {} runs \
+                 ({} fused, {} interleaved), {} finds coalesced, flush adapt {}^ {}v",
                 m.fabric.combined_drains,
                 m.fabric.combined_batches,
                 m.fabric.combined_batches_per_drain(),
                 m.fabric.combined_runs,
+                m.fabric.fused_runs,
+                m.fabric.interleaved_runs,
                 m.fabric.coalesced_finds,
                 m.fabric.flush_grow,
                 m.fabric.flush_shrink,

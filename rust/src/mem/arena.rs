@@ -527,6 +527,18 @@ impl<N: ArenaNode> BlockArena<N> {
         }
     }
 
+    /// Batched [`BlockArena::prefetch_hot`]: issue one prefetch per index
+    /// back to back, so the whole set's misses go in flight together before
+    /// any of the lines is dereferenced (the interleaved engines warm every
+    /// lane's first hop this way). Returns how many were actually issued.
+    pub fn prefetch_hot_many(&self, idxs: &[u32]) -> u64 {
+        let mut issued = 0u64;
+        for &idx in idxs {
+            issued += self.prefetch_hot(idx) as u64;
+        }
+        issued
+    }
+
     /// Allocate one slot: thread magazine, then shared free list, then bump.
     /// Concurrent calls always receive distinct indices.
     pub fn alloc_slot(&self) -> u32 {

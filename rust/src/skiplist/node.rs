@@ -237,6 +237,17 @@ impl NodeArena {
         r != SENTINEL && self.arena.prefetch_hot(ref_idx(r))
     }
 
+    /// Batched [`NodeArena::prefetch`]: one prefetch per ref, issued back to
+    /// back so the set's misses overlap before any line is needed (sentinel
+    /// refs skipped). Returns how many were issued.
+    pub fn prefetch_many(&self, refs: &[NodeRef]) -> u64 {
+        let mut issued = 0u64;
+        for &r in refs {
+            issued += self.prefetch(r) as u64;
+        }
+        issued
+    }
+
     /// Read a validated `(key, next)` snapshot of `r`: the generation is
     /// re-checked *after* the read, so the returned pair was published while
     /// the node was live under this link.

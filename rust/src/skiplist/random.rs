@@ -133,6 +133,29 @@ struct FindResult {
 /// Marker for "the head anchors this level" in `preds`.
 const HEAD_LINK: u64 = (NIL_IDX as u64) | (1 << 62);
 
+/// Upper bound on the interleaved engine's pipeline width (same rationale
+/// as the deterministic list's bound: lane state must stay L1-resident).
+const MAX_INTERLEAVE: usize = 32;
+
+/// Automaton restarts per op before the interleaved engine resolves the op
+/// with a blocking `get` (guaranteed progress under churn).
+const LANE_RETRY_LIMIT: u32 = 8;
+
+/// One in-flight tower descent of [`RandomSkiplist::get_many`]: the lane's
+/// slice of the run plus the `(level, pred, curr)` cursor of its unrolled
+/// Harris walk.
+struct GetLane {
+    /// Next op index (into the whole run) this lane resolves.
+    i: usize,
+    /// Exclusive end of the lane's chunk.
+    end: usize,
+    lvl: usize,
+    pred: u64,
+    curr: u64,
+    started: bool,
+    retries: u32,
+}
+
 impl RandomSkiplist {
     pub fn new() -> RandomSkiplist {
         Self::with_capacity(1 << 20)
@@ -566,6 +589,196 @@ impl RandomSkiplist {
         }
     }
 
+    /// Apply a key-sorted run with up to `width` overlapped tower descents
+    /// — the randomized list's memory-level-parallelism analogue of
+    /// [`crate::skiplist::DetSkiplist::apply_interleaved`]. Each scheduler
+    /// visit takes one hop of one lane's Harris walk and issues the
+    /// prefetch for that lane's next hot line, so the per-hop dependent
+    /// misses of `width` descents overlap.
+    ///
+    /// Only all-`Get` runs interleave: the write protocol (multi-level CAS
+    /// with helping) has no single-hop slice point that preserves its retry
+    /// discipline, so mixed runs degrade to the fused
+    /// [`RandomSkiplist::apply_sorted_run`]. Lane chunks are contiguous and
+    /// never split an equal-key group; replies fire once per op, in lane
+    /// (not run) order.
+    pub fn apply_interleaved(&self, ops: &[BatchOp], width: usize, sink: &mut dyn FnMut(usize, BatchReply)) {
+        debug_assert!(super::is_sorted_run(ops), "run must be key-sorted");
+        if ops.is_empty() {
+            return;
+        }
+        if ops.iter().any(|o| !matches!(o, BatchOp::Get(_))) {
+            return self.apply_sorted_run(ops, sink);
+        }
+        let lanes_n = width.clamp(1, MAX_INTERLEAVE).min(ops.len());
+        let mut lanes: Vec<GetLane> = Vec::with_capacity(lanes_n);
+        let mut start = 0usize;
+        for l in 0..lanes_n {
+            let mut end =
+                if l + 1 == lanes_n { ops.len() } else { ((l + 1) * ops.len()) / lanes_n };
+            end = end.max(start);
+            while end > start && end < ops.len() && ops[end].key() == ops[end - 1].key() {
+                end += 1;
+            }
+            lanes.push(GetLane {
+                i: start,
+                end,
+                lvl: 0,
+                pred: HEAD_LINK,
+                curr: NIL,
+                started: false,
+                retries: 0,
+            });
+            start = end;
+        }
+        let mut derefs = 0u64;
+        let mut prefetches = 0u64;
+        let mut active = lanes.iter().filter(|l| l.i < l.end).count();
+        while active > 0 {
+            for lane in lanes.iter_mut() {
+                if lane.i >= lane.end {
+                    continue;
+                }
+                self.interleave_get_step(ops, lane, sink, &mut derefs, &mut prefetches);
+                if lane.i >= lane.end {
+                    active -= 1;
+                }
+            }
+        }
+        self.flush_tally(derefs, prefetches);
+    }
+
+    /// Interleaved point lookups in *input* order (any order, duplicates
+    /// allowed); unsorted inputs route through a sorting permutation.
+    pub fn get_many(&self, keys: &[u64], width: usize) -> Vec<Option<u64>> {
+        let mut out = vec![None; keys.len()];
+        if keys.is_empty() {
+            return out;
+        }
+        if keys.windows(2).all(|w| w[0] <= w[1]) {
+            let ops: Vec<BatchOp> = keys.iter().map(|&k| BatchOp::Get(k)).collect();
+            self.apply_interleaved(&ops, width, &mut |i, r| {
+                if let BatchReply::Value(v) = r {
+                    out[i] = v;
+                }
+            });
+        } else {
+            let mut order: Vec<u32> = (0..keys.len() as u32).collect();
+            order.sort_by_key(|&i| keys[i as usize]);
+            let ops: Vec<BatchOp> =
+                order.iter().map(|&i| BatchOp::Get(keys[i as usize])).collect();
+            self.apply_interleaved(&ops, width, &mut |i, r| {
+                if let BatchReply::Value(v) = r {
+                    out[order[i] as usize] = v;
+                }
+            });
+        }
+        out
+    }
+
+    /// One scheduler visit to a lane: start the next op's descent from the
+    /// head tower, or take one hop of the in-flight Harris walk (with the
+    /// same help-unlink and generation re-validation as `find_hinted`).
+    fn interleave_get_step(
+        &self,
+        ops: &[BatchOp],
+        lane: &mut GetLane,
+        sink: &mut dyn FnMut(usize, BatchReply),
+        derefs: &mut u64,
+        prefetches: &mut u64,
+    ) {
+        let key = ops[lane.i].key();
+        if !lane.started {
+            if lane.retries > LANE_RETRY_LIMIT {
+                // interference keeps breaking this walk: resolve blocking
+                let v = self.get(key);
+                sink(lane.i, BatchReply::Value(v));
+                lane.i += 1;
+                lane.retries = 0;
+                return;
+            }
+            lane.lvl = MAX_LEVEL - 1;
+            lane.pred = HEAD_LINK;
+            lane.curr = unmarked(self.head.tower[lane.lvl].load(Ordering::Acquire));
+            *prefetches += self.arena.prefetch_hot(link_idx(lane.curr)) as u64;
+            lane.started = true;
+            return;
+        }
+        if link_idx(lane.curr) == NIL_IDX {
+            if lane.lvl == 0 {
+                // walked off the full list: not present
+                sink(lane.i, BatchReply::Value(None));
+                lane.i += 1;
+                lane.started = false;
+                lane.retries = 0;
+            } else {
+                lane.lvl -= 1;
+                lane.curr = unmarked(self.tower(lane.pred, lane.lvl).load(Ordering::Acquire));
+                *prefetches += self.arena.prefetch_hot(link_idx(lane.curr)) as u64;
+            }
+            return;
+        }
+        *derefs += 1;
+        let Some(cn) = self.resolve(lane.curr) else {
+            return self.get_lane_fail(lane);
+        };
+        let csucc = cn.tower[lane.lvl].load(Ordering::Acquire);
+        // re-validate the node was live when we read its link
+        if self.resolve(lane.curr).is_none() {
+            return self.get_lane_fail(lane);
+        }
+        // the next hop's miss goes in flight while other lanes step
+        *prefetches += self.arena.prefetch_hot(link_idx(unmarked(csucc))) as u64;
+        if is_marked(csucc) {
+            // help unlink curr at this level
+            if self
+                .tower(lane.pred, lane.lvl)
+                .compare_exchange(lane.curr, unmarked(csucc), Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                return self.get_lane_fail(lane);
+            }
+            lane.curr = unmarked(csucc);
+            return;
+        }
+        let ckey = cn.key.load(Ordering::Relaxed);
+        if self.resolve(lane.curr).is_none() {
+            return self.get_lane_fail(lane);
+        }
+        if ckey < key {
+            lane.pred = lane.curr;
+            lane.curr = unmarked(csucc);
+            return;
+        }
+        // first unmarked node with key >= target at this level
+        if lane.lvl > 0 {
+            lane.lvl -= 1;
+            lane.curr = unmarked(self.tower(lane.pred, lane.lvl).load(Ordering::Acquire));
+            *prefetches += self.arena.prefetch_hot(link_idx(lane.curr)) as u64;
+            return;
+        }
+        let v = if ckey == key {
+            let val = self.arena.cold(link_idx(lane.curr)).value.load(Ordering::Relaxed);
+            if self.resolve(lane.curr).is_none() {
+                return self.get_lane_fail(lane);
+            }
+            Some(val)
+        } else {
+            None
+        };
+        sink(lane.i, BatchReply::Value(v));
+        lane.i += 1;
+        lane.started = false;
+        lane.retries = 0;
+    }
+
+    /// A lane's walk raced an unlink/recycle: restart the op's descent.
+    fn get_lane_fail(&self, lane: &mut GetLane) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+        lane.started = false;
+        lane.retries += 1;
+    }
+
     pub fn contains(&self, key: u64) -> bool {
         self.get(key).is_some()
     }
@@ -887,6 +1100,67 @@ mod tests {
         assert!(st.recycled > 400, "reuse must be visible: recycled={}", st.recycled);
         assert_eq!(st.retired, st.recycled + st.free_residue + st.overflow, "no lost nodes");
         assert_eq!(st.blocks, 1, "alternating churn must stay in one block");
+    }
+
+    #[test]
+    fn get_many_matches_point_gets_any_width() {
+        let s = RandomSkiplist::with_capacity(1 << 14);
+        let mut rng = Rng::new(17);
+        for _ in 0..4_000 {
+            let k = rng.below(1 << 18);
+            s.insert(k, k.wrapping_mul(3));
+        }
+        let mut keys = Vec::new();
+        for _ in 0..1_024 {
+            keys.push(rng.below(1 << 18));
+        }
+        keys.push(keys[0]); // duplicate probe
+        let expect: Vec<Option<u64>> = keys.iter().map(|&k| s.get(k)).collect();
+        for width in [1usize, 4, 8, 64] {
+            assert_eq!(s.get_many(&keys, width), expect, "width {width} diverged");
+        }
+    }
+
+    #[test]
+    fn get_many_under_concurrent_churn() {
+        let s = Arc::new(RandomSkiplist::with_capacity(1 << 16));
+        // stable keys are never touched by the churners
+        for k in 0..2_000u64 {
+            s.insert(k * 10 + 5, k);
+        }
+        let mut handles = Vec::new();
+        for t in 0..2u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t + 100);
+                for _ in 0..20_000 {
+                    let k = rng.below(2_000) * 10 + t + 1; // never ...5
+                    if rng.chance(1, 2) {
+                        s.insert(k, k);
+                    } else {
+                        s.erase(k);
+                    }
+                }
+            }));
+        }
+        for t in 0..2u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                for _ in 0..200 {
+                    let keys: Vec<u64> =
+                        (0..128).map(|_| rng.below(2_000) * 10 + 5).collect();
+                    let got = s.get_many(&keys, 8);
+                    for (j, &k) in keys.iter().enumerate() {
+                        assert_eq!(got[j], Some(k / 10), "stable key {k} lost");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        s.check_invariants().unwrap();
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! Integration tests for the memory-level-parallel interleaved descent
+//! engine (PR 6): oracle agreement of the interleaved vs fused vs point
+//! paths across every store kind, the `get_batch` batching-bypass
+//! regression, finger-cache interplay (the engine bypasses fingers by
+//! design — per-lane run carries replace them), engine-level width
+//! pinning, and correctness under concurrent churn.
+//!
+//! All test names carry the `mlp_` prefix so the CI release-stress step
+//! (`cargo test --release mlp_`) picks up the whole file.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use cdskl::coordinator::{
+    run_with_opts, ExecMode, RunOptions, ShardedStore, StoreKind,
+};
+use cdskl::numa::Topology;
+use cdskl::runtime::KeyRouter;
+use cdskl::skiplist::{BatchOp, BatchReply};
+use cdskl::util::rng::mix64;
+use cdskl::workload::{OpMix, WorkloadSpec};
+
+const ALL_KINDS: [StoreKind; 8] = [
+    StoreKind::DetSkiplistLf,
+    StoreKind::DetSkiplistRwl,
+    StoreKind::RandomSkiplist,
+    StoreKind::HashFixed,
+    StoreKind::HashTwoLevel,
+    StoreKind::HashSpo,
+    StoreKind::HashTwoLevelSpo,
+    StoreKind::HashTbbLike,
+];
+
+/// A deterministic key-sorted mixed run (unique keys, so reply semantics
+/// are path-independent) plus the oracle outcome of applying it to `map`.
+fn mixed_run(seed: u64, n: usize, map: &BTreeMap<u64, u64>) -> (Vec<BatchOp>, Vec<BatchReply>) {
+    let mut keys: Vec<u64> = (0..n as u64).map(|i| mix64(seed + i) % (1 << 20)).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    let ops: Vec<BatchOp> = keys
+        .iter()
+        .map(|&k| match mix64(seed ^ k) % 3 {
+            0 => BatchOp::Insert(k, k ^ 0xBEEF),
+            1 => BatchOp::Get(k),
+            _ => BatchOp::Erase(k),
+        })
+        .collect();
+    let mut oracle = map.clone();
+    let want: Vec<BatchReply> = ops
+        .iter()
+        .map(|op| match *op {
+            BatchOp::Insert(k, v) => {
+                BatchReply::Applied(oracle.insert(k, v).map(|old| oracle.insert(k, old)).is_none())
+            }
+            BatchOp::Get(k) => BatchReply::Value(oracle.get(&k).copied()),
+            BatchOp::Erase(k) => BatchReply::Applied(oracle.remove(&k).is_some()),
+        })
+        .collect();
+    (ops, want)
+}
+
+fn seed_items(seed: u64, n: u64) -> Vec<(u64, u64)> {
+    let mut items: Vec<(u64, u64)> =
+        (0..n).map(|i| (mix64(seed ^ (i << 32)) % (1 << 20), i + 1)).collect();
+    items.sort_unstable_by_key(|e| e.0);
+    items.dedup_by_key(|e| e.0);
+    items
+}
+
+/// Tentpole + satellite 4: on every store kind, the interleaved path (at
+/// several widths, including the serialized width-1 lane) agrees reply-
+/// for-reply with the fused sorted-run path, the point loop, and a
+/// BTreeMap oracle — and leaves identical final state.
+#[test]
+fn mlp_oracle_agreement_interleaved_vs_fused_vs_point_all_kinds() {
+    for kind in ALL_KINDS {
+        for width in [1usize, 3, 8, 32] {
+            let items = seed_items(0xA11CE, 600);
+            let base: BTreeMap<u64, u64> = items.iter().copied().collect();
+            let (ops, want) = mixed_run(0xF00D, 400, &base);
+
+            let inter = kind.build(1 << 12);
+            let fused = kind.build(1 << 12);
+            let point = kind.build(1 << 12);
+            for s in [&inter, &fused, &point] {
+                for &(k, v) in &items {
+                    assert!(s.insert(k, v), "{kind:?} seed {k}");
+                }
+            }
+
+            let mut got = vec![None; ops.len()];
+            inter.apply_interleaved(&ops, width, &mut |i, r| got[i] = Some(r));
+            let mut got_fused = vec![None; ops.len()];
+            fused.apply_sorted_run(&ops, &mut |i, r| got_fused[i] = Some(r));
+            for (i, op) in ops.iter().enumerate() {
+                let pt = match *op {
+                    BatchOp::Insert(k, v) => BatchReply::Applied(point.insert(k, v)),
+                    BatchOp::Get(k) => BatchReply::Value(point.get(k)),
+                    BatchOp::Erase(k) => BatchReply::Applied(point.erase(k)),
+                };
+                assert_eq!(got[i], Some(want[i]), "{kind:?} w{width} op {i} interleaved");
+                assert_eq!(got_fused[i], Some(want[i]), "{kind:?} op {i} fused");
+                assert_eq!(pt, want[i], "{kind:?} op {i} point");
+            }
+            // identical final state under every path
+            let mut oracle = base.clone();
+            for op in &ops {
+                match *op {
+                    BatchOp::Insert(k, v) => {
+                        oracle.entry(k).or_insert(v);
+                    }
+                    BatchOp::Get(_) => {}
+                    BatchOp::Erase(k) => {
+                        oracle.remove(&k);
+                    }
+                }
+            }
+            assert_eq!(inter.len(), oracle.len() as u64, "{kind:?} w{width}");
+            for (&k, &v) in &oracle {
+                assert_eq!(inter.get(k), Some(v), "{kind:?} w{width} key {k}");
+                assert_eq!(fused.get(k), Some(v), "{kind:?} key {k}");
+            }
+        }
+    }
+}
+
+/// Satellite 1 regression: `ShardedStore::get_batch` must not silently
+/// bypass batching. A scattered (unsorted) probe set through `get_batch`
+/// does strictly fewer hot-line derefs per op than the per-key point
+/// loop on an identically seeded store — and returns the same answers in
+/// input order.
+#[test]
+fn mlp_get_batch_beats_point_loop_on_scattered_probes() {
+    let topo = Topology::virtual_grid(2, 2);
+    let build = || {
+        let s = ShardedStore::new(StoreKind::DetSkiplistLf, 4, 1 << 15, topo.clone(), 4);
+        let items: Vec<(u64, u64)> =
+            (0..20_000u64).map(|i| ((i % 8) << 61 | i * 31, i + 1)).collect();
+        assert_eq!(s.insert_batch(&items), items.len() as u64);
+        s
+    };
+    // scattered, unsorted, with misses and duplicates
+    let probes: Vec<u64> = (0..8_192u64)
+        .map(|j| {
+            let i = mix64(j) % 20_500;
+            (i % 8) << 61 | i * 31
+        })
+        .collect();
+
+    let point = build();
+    let before = point.stats().node_derefs;
+    let want: Vec<Option<u64>> = probes.iter().map(|&k| point.get(k)).collect();
+    let point_derefs = point.stats().node_derefs - before;
+
+    let batched = build();
+    let before = batched.stats().node_derefs;
+    let got = batched.get_batch(&probes);
+    let batch_derefs = batched.stats().node_derefs - before;
+
+    assert_eq!(got, want, "get_batch must restore input order exactly");
+    assert!(
+        batch_derefs < point_derefs,
+        "scattered get_batch must do strictly fewer derefs than the point loop \
+         ({batch_derefs} vs {point_derefs} over {} probes)",
+        probes.len()
+    );
+}
+
+/// The interleaved engine and the per-thread search fingers coexist: the
+/// engine deliberately bypasses fingers (per-lane run carries subsume
+/// them — documented in DESIGN.md §MLP), so results agree with fingers
+/// on or off, and interleaved batches never consult the finger cache.
+#[test]
+fn mlp_interleaved_agrees_with_fingers_on_and_off() {
+    let topo = Topology::virtual_grid(2, 2);
+    for fingers in [true, false] {
+        let s = ShardedStore::new(StoreKind::DetSkiplistLf, 2, 1 << 14, topo.clone(), 2);
+        s.set_finger_cache(fingers);
+        let items: Vec<(u64, u64)> = (0..4_000u64).map(|i| ((i % 8) << 61 | i * 7, i)).collect();
+        assert_eq!(s.insert_batch(&items), items.len() as u64);
+        // warm the fingers through point gets, then batch through the engine
+        for &(k, _) in items.iter().take(64) {
+            let _ = s.get(k);
+        }
+        let attempts_before = s.stats().finger_attempts;
+        let probes: Vec<u64> = (0..2_048u64)
+            .map(|j| {
+                let i = mix64(0xF1A6 + j) % 4_000;
+                (i % 8) << 61 | i * 7
+            })
+            .collect();
+        let got = s.get_batch(&probes);
+        for (j, &k) in probes.iter().enumerate() {
+            assert_eq!(got[j], Some((k & ((1 << 61) - 1)) / 7), "fingers={fingers} key {k}");
+        }
+        assert_eq!(
+            s.stats().finger_attempts,
+            attempts_before,
+            "interleaved batches bypass the finger cache (fingers={fingers})"
+        );
+    }
+}
+
+/// Engine-level wiring: a Delegated run with the interleave width pinned
+/// (`run --interleave 8`) quiesces, stays NUMA-local, and lands the same
+/// final state as the Direct run of the same workload.
+#[test]
+fn mlp_engine_run_with_pinned_width_matches_direct() {
+    let topo = Topology::virtual_grid(2, 2);
+    let spec = WorkloadSpec::new("mlp-pin", 30_000, OpMix::W1, 1 << 22);
+    let mk = || Arc::new(ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 15, topo.clone(), 4));
+
+    let direct = mk();
+    let md = run_with_opts(
+        &direct,
+        &spec,
+        4,
+        &KeyRouter::Native,
+        99,
+        RunOptions { mode: ExecMode::Direct, ..RunOptions::default() },
+    );
+    let delegated = mk();
+    let mw = run_with_opts(
+        &delegated,
+        &spec,
+        4,
+        &KeyRouter::Native,
+        99,
+        RunOptions { mode: ExecMode::Delegated, interleave: 8, ..RunOptions::default() },
+    );
+    assert_eq!(mw.fabric.executed, mw.fabric.submitted, "fabric must quiesce");
+    assert_eq!(mw.remote_accesses, 0, "delegated execution stays NUMA-local");
+    assert_eq!(md.final_len, mw.final_len);
+    assert_eq!(
+        direct.range(0, u64::MAX - 2),
+        delegated.range(0, u64::MAX - 2),
+        "pinned-width delegated run must land the Direct final state"
+    );
+}
+
+/// Satellite 4: scattered batched reads stay correct while writers churn
+/// disjoint keys — on both the lock-free find kind (true interleaved
+/// engine) and the read-locked kind (documented fused fallback).
+#[test]
+fn mlp_get_batch_under_concurrent_churn_lf_and_rwl() {
+    for kind in [StoreKind::DetSkiplistLf, StoreKind::DetSkiplistRwl] {
+        let store = ShardedStore::new(kind, 4, 1 << 14, Topology::virtual_grid(2, 2), 4);
+        // stable keys are even multiples; churn keys are odd — disjoint
+        let stable: Vec<(u64, u64)> =
+            (0..3_000u64).map(|i| ((i % 8) << 61 | i * 4, i + 1)).collect();
+        assert_eq!(store.insert_batch(&stable), stable.len() as u64);
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|sc| {
+            for t in 0..2u64 {
+                let (store, stop) = (&store, &stop);
+                sc.spawn(move || {
+                    let mut round = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        for i in 0..500u64 {
+                            let k = ((i % 8) << 61) | (i * 4 + 1 + 2 * t);
+                            if round & 1 == 0 {
+                                store.insert(k, k);
+                            } else {
+                                store.erase(k);
+                            }
+                        }
+                        round += 1;
+                    }
+                });
+            }
+            for r in 0..200u64 {
+                let probes: Vec<u64> = (0..512u64)
+                    .map(|j| {
+                        let i = mix64(r * 512 + j) % 3_000;
+                        (i % 8) << 61 | i * 4
+                    })
+                    .collect();
+                let got = store.get_batch(&probes);
+                for (j, &k) in probes.iter().enumerate() {
+                    let want = (k & ((1 << 61) - 1)) / 4 + 1;
+                    assert_eq!(got[j], Some(want), "{kind:?} round {r} key {k}");
+                }
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+    }
+}
