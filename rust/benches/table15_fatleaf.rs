@@ -1,0 +1,16 @@
+//! Bench for Table XV (new, beyond the paper): fat-leaf terminal chunks —
+//! throughput and node derefs/op over leaf capacity K ∈ {1, 8, 16, 32},
+//! Direct (point `get`) and Delegated (combiner-dispatched scattered
+//! probes). Self-asserts a strict deref cut at K ≥ 8 in both modes and
+//! BTreeMap-oracle agreement for all eight store kinds at every K.
+//!
+//! `cargo bench --bench table15_fatleaf -- --smoke` runs the CI-sized smoke.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(100);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table15_fatleaf (fat-leaf chunks, Table XV)\n");
+    let tables = vec![cdskl::experiments::t15_fatleaf(&cfg, &router)];
+    common::emit("table15_fatleaf", &cfg, &tables);
+}

@@ -385,11 +385,6 @@ struct PointEntry {
 /// pool's memory and the latency of the first completion in the round).
 const COMBINE_WINDOW: usize = 32;
 
-/// Sorted neighbours at most this far apart count as *clustered*: they
-/// share a terminal-segment neighbourhood, so the fused descent's shared
-/// walk amortizes their misses and interleaving has nothing to overlap.
-const CLUSTER_GAP: u64 = 64;
-
 /// Runs shorter than this always take the fused path — too few independent
 /// descents to fill a pipeline.
 const INTERLEAVE_MIN_RUN: usize = 8;
@@ -401,14 +396,15 @@ const INTERLEAVE_MIN_W: usize = 2;
 const INTERLEAVE_MAX_W: usize = 32;
 
 /// `true` when a key-sorted run is dominated by clustered keys: at least
-/// half of the adjacent gaps are within [`CLUSTER_GAP`]. The combiner's
-/// per-drain dispatch test — clustered windows keep the PR-5 fused path,
-/// scattered ones go to the interleaved engine.
-fn run_is_clustered(run: &[BatchOp]) -> bool {
+/// half of the adjacent gaps are within `gap` (the target shard's
+/// [`crate::coordinator::KvStore::cluster_gap`]). The combiner's per-drain
+/// dispatch test — clustered windows keep the PR-5 fused path, scattered
+/// ones go to the interleaved engine.
+fn run_is_clustered(run: &[BatchOp], gap: u64) -> bool {
     if run.len() < INTERLEAVE_MIN_RUN {
         return true;
     }
-    let close = run.windows(2).filter(|w| w[1].key() - w[0].key() <= CLUSTER_GAP).count();
+    let close = run.windows(2).filter(|w| w[1].key() - w[0].key() <= gap).count();
     close * 2 >= run.len() - 1
 }
 
@@ -745,7 +741,7 @@ impl OpFabric {
             // shared-walk descent; scattered ones overlap their independent
             // miss chains through the interleaved engine at the owner's
             // adaptive width
-            if run_is_clustered(&run) {
+            if run_is_clustered(&run, store.shard_at(shard).cluster_gap()) {
                 self.at.fused_runs.fetch_add(1, Ordering::Relaxed);
                 store.shard_at(shard).apply_sorted_run(&run, &mut settle);
             } else {
@@ -1443,7 +1439,7 @@ mod tests {
         // seed values through the store directly
         let mut keys = Vec::new();
         for i in 0..256u64 {
-            // stride far beyond CLUSTER_GAP, everything in prefix 0
+            // stride far beyond the shard's cluster_gap, everything in prefix 0
             let key = i * 8192 + 17;
             store.insert(key, i);
             keys.push(key);
@@ -1469,6 +1465,26 @@ mod tests {
         let t2 = fabric.slot_totals(2);
         assert_eq!(t1.acked + t2.acked, 256);
         assert_eq!(t1.hits + t2.hits, 256, "every find hits its seeded key");
+    }
+
+    #[test]
+    fn cluster_dispatch_is_gap_relative() {
+        // same run, different thresholds: a stride-100 run is scattered
+        // under the flat default but clustered once the gap widens past the
+        // stride (what a fat-leaf shard with a bigger leaf_cap reports)
+        use crate::coordinator::store::FLAT_CLUSTER_GAP;
+        let run: Vec<BatchOp> = (0..64u64).map(|i| BatchOp::Get(i * 100)).collect();
+        assert!(!run_is_clustered(&run, FLAT_CLUSTER_GAP));
+        assert!(run_is_clustered(&run, 128));
+        // short runs always fuse regardless of gap
+        let short: Vec<BatchOp> = (0..4u64).map(|i| BatchOp::Get(i << 20)).collect();
+        assert!(run_is_clustered(&short, 1));
+        // majority rule: half the gaps tight, half huge — clustered at the
+        // default, still clustered when the gap shrinks below the tight half
+        let mixed: Vec<BatchOp> =
+            (0..32u64).map(|i| BatchOp::Get(i / 2 * 100_000 + (i % 2) * 8)).collect();
+        assert!(run_is_clustered(&mixed, FLAT_CLUSTER_GAP));
+        assert!(!run_is_clustered(&mixed, 4));
     }
 
     #[test]

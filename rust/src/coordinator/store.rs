@@ -42,6 +42,11 @@ pub fn keys_sorted(keys: &[u64]) -> bool {
 /// own width; everything else uses this.
 pub const DEFAULT_INTERLEAVE: usize = 8;
 
+/// Flat default for [`KvStore::cluster_gap`]: the clustered-run threshold
+/// of a structure with single-key terminals (or no terminal locality at
+/// all). Fat-leaf skiplists override the method with a leaf-relative value.
+pub const FLAT_CLUSTER_GAP: u64 = 64;
+
 /// Unified key-value interface over every structure in the repo.
 pub trait KvStore: Send + Sync {
     fn insert(&self, key: u64, value: u64) -> bool;
@@ -68,6 +73,18 @@ pub trait KvStore: Send + Sync {
     /// no-op for structures without fingers; the deterministic skiplist
     /// overrides it.
     fn set_finger_cache(&self, _on: bool) {}
+
+    /// Key-distance threshold below which a sorted run counts as
+    /// *clustered* for the combiner's fuse-vs-interleave dispatch: a run
+    /// whose median inter-key gap is under this value shares terminal
+    /// locality, so the fused single-walk path wins; above it the
+    /// interleaved MLP engine wins. Leaf-structured stores scale it with
+    /// their terminal width (a fat-leaf chunk of K keys makes runs with
+    /// gaps up to ~K× larger still land in shared chunks); the flat
+    /// default matches the single-key-terminal behaviour.
+    fn cluster_gap(&self) -> u64 {
+        FLAT_CLUSTER_GAP
+    }
 }
 
 /// Ordered-map capability layered on [`KvStore`]: range scans and batch
@@ -248,6 +265,12 @@ impl KvStore for DetSkiplist {
     }
     fn set_finger_cache(&self, on: bool) {
         DetSkiplist::set_finger_cache(self, on)
+    }
+    fn cluster_gap(&self) -> u64 {
+        // A chunk holds up to `leaf_cap` keys contiguously: runs whose keys
+        // land within a few chunks of each other still amortize one descent,
+        // so the clustered threshold scales with the leaf width.
+        4 * DetSkiplist::leaf_cap(self) as u64
     }
 }
 
@@ -456,12 +479,26 @@ impl StoreKind {
     /// so the §V memory managers are placed — and locality-accounted —
     /// per shard. Structures without arenas ignore the options.
     pub fn build_placed(self, capacity: usize, opts: ArenaOptions) -> Box<dyn OrderedKv> {
+        self.build_placed_leaf(capacity, opts, None)
+    }
+
+    /// Like [`StoreKind::build_placed`] with an explicit fat-leaf chunk
+    /// capacity for the deterministic skiplists (Table XV sweeps K ∈
+    /// {1, 8, 16, 32}); `None` means [`crate::skiplist::DEFAULT_LEAF_CAP`].
+    /// Structures without a leaf plane ignore it.
+    pub fn build_placed_leaf(
+        self,
+        capacity: usize,
+        opts: ArenaOptions,
+        leaf_cap: Option<usize>,
+    ) -> Box<dyn OrderedKv> {
+        let k = leaf_cap.unwrap_or(crate::skiplist::DEFAULT_LEAF_CAP);
         match self {
             StoreKind::DetSkiplistLf => {
-                Box::new(DetSkiplist::with_capacity_on(FindMode::LockFree, capacity, opts))
+                Box::new(DetSkiplist::with_leaf_cap_on(FindMode::LockFree, capacity, opts, k))
             }
             StoreKind::DetSkiplistRwl => {
-                Box::new(DetSkiplist::with_capacity_on(FindMode::ReadLocked, capacity, opts))
+                Box::new(DetSkiplist::with_leaf_cap_on(FindMode::ReadLocked, capacity, opts, k))
             }
             StoreKind::RandomSkiplist => Box::new(RandomSkiplist::with_capacity_on(capacity, opts)),
             StoreKind::HashFixed => Box::new(FixedHashMap::new(1024)),
@@ -494,12 +531,29 @@ impl ShardedStore {
     /// `nshards` structures (paper: 8 = one per Milan NUMA node); each
     /// shard's arena is homed on its eq.-7 NUMA node.
     pub fn new(kind: StoreKind, nshards: usize, capacity_per_shard: usize, topology: Topology, threads: usize) -> ShardedStore {
+        Self::with_leaf_cap(kind, nshards, capacity_per_shard, topology, threads, None)
+    }
+
+    /// Like [`ShardedStore::new`] with an explicit fat-leaf chunk capacity
+    /// for skiplist shards (the Table XV K sweep); `None` keeps the default.
+    pub fn with_leaf_cap(
+        kind: StoreKind,
+        nshards: usize,
+        capacity_per_shard: usize,
+        topology: Topology,
+        threads: usize,
+        leaf_cap: Option<usize>,
+    ) -> ShardedStore {
         assert!(nshards.is_power_of_two() && nshards as u64 <= PREFIXES);
         ShardedStore {
             shards: (0..nshards)
                 .map(|i| {
                     let home = topology.shard_home(i, threads);
-                    kind.build_placed(capacity_per_shard, ArenaOptions::placed(home, &topology, threads))
+                    kind.build_placed_leaf(
+                        capacity_per_shard,
+                        ArenaOptions::placed(home, &topology, threads),
+                        leaf_cap,
+                    )
                 })
                 .collect(),
             topology,
@@ -1043,6 +1097,54 @@ mod tests {
         s.account(0, u64::MAX);
         let (l, r) = s.locality.snapshot();
         assert_eq!((l, r), (1, 1));
+    }
+
+    #[test]
+    fn cluster_gap_scales_with_leaf_cap() {
+        // skiplist shards report a leaf-relative clustered threshold …
+        for (k, want) in [(1usize, 4u64), (8, 32), (16, 64), (32, 128)] {
+            let s = ShardedStore::with_leaf_cap(
+                StoreKind::DetSkiplistLf,
+                2,
+                1 << 10,
+                Topology::milan_virtual(),
+                8,
+                Some(k),
+            );
+            assert_eq!(s.shard_at(0).cluster_gap(), want, "K = {k}");
+            assert_eq!(s.shard_at(1).cluster_gap(), want, "K = {k}");
+        }
+        // … flat structures keep the single-key-terminal default
+        let h = StoreKind::HashFixed.build(1 << 10);
+        assert_eq!(h.cluster_gap(), 64);
+        let d = StoreKind::DetSkiplistLf.build(1 << 10);
+        assert_eq!(d.cluster_gap(), 4 * crate::skiplist::DEFAULT_LEAF_CAP as u64);
+    }
+
+    #[test]
+    fn leaf_cap_plumbing_reaches_every_shard() {
+        // a K-swept store must behave identically to the default store on
+        // the full ordered API (same keys, same ranges, same batch replies)
+        let base = ShardedStore::new(StoreKind::DetSkiplistRwl, 4, 1 << 12, Topology::milan_virtual(), 8);
+        for k in [1usize, 8, 32] {
+            let s = ShardedStore::with_leaf_cap(
+                StoreKind::DetSkiplistRwl,
+                4,
+                1 << 12,
+                Topology::milan_virtual(),
+                8,
+                Some(k),
+            );
+            let items: Vec<(u64, u64)> = (0..600u64).map(|i| ((i % 4) << 61 | i * 7, i)).collect();
+            assert_eq!(s.insert_batch(&items), items.len() as u64, "K = {k}");
+            if k == 1 {
+                base.insert_batch(&items);
+            }
+            assert_eq!(s.range(0, u64::MAX - 2), base.range(0, u64::MAX - 2), "K = {k}");
+            let evens: Vec<u64> = items.iter().map(|&(ik, _)| ik).step_by(2).collect();
+            assert_eq!(s.erase_batch(&evens), evens.len() as u64, "K = {k}");
+            assert_eq!(s.len(), (items.len() - evens.len()) as u64, "K = {k}");
+        }
     }
 
     #[test]

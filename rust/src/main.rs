@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! cdskl info                           topology, artifacts, self-check
-//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|t13|t14|all> [--threads 4,8]
+//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|t13|t14|t15|all> [--threads 4,8]
 //!           [--reps N] [--scale N] [--out FILE]   regenerate paper tables
 //! cdskl run [--store det|rwl|random|fixed|twolevel|spo|spo2|tbb]
 //!           [--ops N] [--threads N] [--mix w1|w2|hash|range|hier|bulk]
@@ -137,8 +137,11 @@ fn exp(args: &Args) {
     if all || which == "t14" || which == "mlp" {
         tables.push(experiments::t14_mlp(&cfg, &router));
     }
+    if all || which == "t15" || which == "fatleaf" {
+        tables.push(experiments::t15_fatleaf(&cfg, &router));
+    }
     if tables.is_empty() {
-        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 t13 t14 all)");
+        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 t13 t14 t15 all)");
         std::process::exit(2);
     }
     let mut out = String::new();

@@ -222,11 +222,16 @@ pub struct ArenaOptions {
     /// Expected worker-thread count; sizes the magazine array (2x, power
     /// of two, min 32). 0 = derive from the host's parallelism.
     pub threads_hint: usize,
+    /// Width (in `u64` words) of the optional third **leaf plane**: a
+    /// variable-stride parallel array of `AtomicU64` words per slot, used
+    /// by the fat-leaf skiplist for contiguous multi-key terminal chunks.
+    /// 0 (the default) allocates no leaf plane.
+    pub leaf_words: usize,
 }
 
 impl Default for ArenaOptions {
     fn default() -> Self {
-        ArenaOptions { home: None, magazines: true, threads_hint: 0 }
+        ArenaOptions { home: None, magazines: true, threads_hint: 0, leaf_words: 0 }
     }
 }
 
@@ -238,13 +243,21 @@ impl ArenaOptions {
             home: Some(ArenaHome::on(node, topo)),
             magazines: true,
             threads_hint: threads,
+            leaf_words: 0,
         }
     }
 
     /// Magazine-less configuration (shared free list + shared counters
     /// only — the pre-unification behaviour, kept for the `t10` ablation).
     pub fn without_magazines() -> ArenaOptions {
-        ArenaOptions { home: None, magazines: false, threads_hint: 0 }
+        ArenaOptions { home: None, magazines: false, threads_hint: 0, leaf_words: 0 }
+    }
+
+    /// Same options with a `words`-wide leaf plane per slot (builder-style;
+    /// see [`ArenaOptions::leaf_words`]).
+    pub fn with_leaf_words(mut self, words: usize) -> ArenaOptions {
+        self.leaf_words = words;
+        self
     }
 }
 
@@ -401,11 +414,14 @@ struct SharedCounters {
     remote: AtomicU64,
 }
 
-/// One block's pair of plane pointers (hot array + cold array, allocated
-/// and freed together).
+/// One block's plane pointers (hot array + cold array + optional leaf
+/// word array, allocated and freed together).
 struct BlockPlanes<N: ArenaNode> {
     hot: AtomicPtr<N::Hot>,
     cold: AtomicPtr<N::Cold>,
+    /// Variable-stride leaf plane: `block_size * leaf_words` words, or
+    /// null when the arena was built with `leaf_words == 0`.
+    leaf: AtomicPtr<AtomicU64>,
 }
 
 /// The unified §V block arena: index-addressed two-plane slots of `N`,
@@ -421,6 +437,8 @@ pub struct BlockArena<N: ArenaNode> {
     /// Power-of-two magazine array (see [`magazine_count`]).
     mags: Box<[Magazine]>,
     magazines: bool,
+    /// Per-slot width of the leaf plane in `u64` words (0 = no leaf plane).
+    leaf_words: usize,
     /// Ablation-path counters (used only when `magazines` is false).
     shared: SharedCounters,
     home: Option<ArenaHome>,
@@ -460,6 +478,7 @@ impl<N: ArenaNode> BlockArena<N> {
                 .map(|_| BlockPlanes {
                     hot: AtomicPtr::new(std::ptr::null_mut()),
                     cold: AtomicPtr::new(std::ptr::null_mut()),
+                    leaf: AtomicPtr::new(std::ptr::null_mut()),
                 })
                 .collect(),
             count: AtomicUsize::new(0),
@@ -471,9 +490,29 @@ impl<N: ArenaNode> BlockArena<N> {
                 .map(|_| Magazine(Mutex::new(MagStack::new())))
                 .collect(),
             magazines: opts.magazines,
+            leaf_words: opts.leaf_words,
             shared: SharedCounters::default(),
             home: opts.home,
         }
+    }
+
+    /// Per-slot leaf plane width in words (0 = no leaf plane).
+    #[inline]
+    pub fn leaf_words(&self) -> usize {
+        self.leaf_words
+    }
+
+    /// The `leaf_words`-word leaf-plane slot for `idx`. Panics (via the
+    /// unreachable null deref guard below) if the arena has no leaf plane —
+    /// callers gate on [`BlockArena::leaf_words`].
+    #[inline]
+    pub fn leaf(&self, idx: u32) -> &[AtomicU64] {
+        debug_assert!(self.leaf_words > 0, "arena has no leaf plane");
+        let b = idx as usize / self.block_size;
+        let s = idx as usize % self.block_size;
+        debug_assert!(b < self.count.load(Ordering::Acquire));
+        let base = self.dir[b].leaf.load(Ordering::Acquire);
+        unsafe { std::slice::from_raw_parts(base.add(s * self.leaf_words), self.leaf_words) }
     }
 
     #[inline]
@@ -619,6 +658,14 @@ impl<N: ArenaNode> BlockArena<N> {
                     self.dir[nb]
                         .cold
                         .store(Box::into_raw(cold) as *mut N::Cold, Ordering::Release);
+                    if self.leaf_words > 0 {
+                        let leaf: Box<[AtomicU64]> = (0..self.block_size * self.leaf_words)
+                            .map(|_| AtomicU64::new(0))
+                            .collect();
+                        self.dir[nb]
+                            .leaf
+                            .store(Box::into_raw(leaf) as *mut AtomicU64, Ordering::Release);
+                    }
                 }
                 self.count.store(b + 1, Ordering::Release);
             }
@@ -732,6 +779,12 @@ impl<N: ArenaNode> Drop for BlockArena<N> {
             let c = self.dir[i].cold.load(Ordering::Acquire);
             if !c.is_null() {
                 let slice = std::ptr::slice_from_raw_parts_mut(c, self.block_size);
+                drop(unsafe { Box::from_raw(slice) });
+            }
+            let l = self.dir[i].leaf.load(Ordering::Acquire);
+            if !l.is_null() {
+                let slice =
+                    std::ptr::slice_from_raw_parts_mut(l, self.block_size * self.leaf_words);
                 drop(unsafe { Box::from_raw(slice) });
             }
         }
@@ -848,6 +901,37 @@ mod tests {
         let st = a.stats();
         assert_eq!(st.magazine_hits, 0);
         assert_eq!(st.recycled, 1);
+    }
+
+    #[test]
+    fn leaf_plane_is_parallel_contiguous_and_survives_reuse() {
+        let words = 6;
+        let a: BlockArena<Slot> =
+            BlockArena::with_options(8, 8, ArenaOptions::default().with_leaf_words(words));
+        assert_eq!(a.leaf_words(), words);
+        let i1 = a.alloc_slot();
+        let i2 = a.alloc_slot();
+        let l1 = a.leaf(i1);
+        let l2 = a.leaf(i2);
+        assert_eq!(l1.len(), words);
+        // zero-initialized on materialization
+        assert!(l1.iter().all(|w| w.load(Ordering::Relaxed) == 0));
+        // dense packing: consecutive slots are exactly `words` words apart
+        let p1 = l1.as_ptr() as usize;
+        let p2 = l2.as_ptr() as usize;
+        assert_eq!(p2 - p1, (i2 - i1) as usize * words * 8);
+        for (j, w) in l1.iter().enumerate() {
+            w.store(100 + j as u64, Ordering::Relaxed);
+        }
+        // slot reuse hands back the same leaf words (contents NOT reset —
+        // the structure layer reinitializes, exactly like hot/cold fields)
+        a.retire_slot(i1);
+        let i3 = a.alloc_slot();
+        assert_eq!(i3, i1);
+        assert_eq!(a.leaf(i3)[3].load(Ordering::Relaxed), 103);
+        // default arenas have no leaf plane
+        let b: BlockArena<Slot> = BlockArena::new(8, 8);
+        assert_eq!(b.leaf_words(), 0);
     }
 
     #[test]

@@ -61,9 +61,32 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::mem::arena::{magazine_count, thread_slot, ThreadTallies};
 use crate::mem::{ArenaOptions, PoolStats};
 use crate::sync::Backoff;
+use crate::util::simd;
 
-use super::node::{NodeArena, NodeRef, NodeView, SENTINEL};
+use super::node::{NodeArena, NodeRef, NodeView, DEFAULT_LEAF_CAP, MAX_LEAF_CAP, SENTINEL};
 use super::{BatchOp, BatchReply};
+
+/// The 1-2-3-4 discipline's arity windows, shared by the rebalancers, the
+/// fast-path gates and [`DetSkiplist::check_invariants`] so a drifted
+/// constant cannot silently open a window the validator no longer checks
+/// (see `arity_windows_are_mutually_consistent`).
+///
+/// A segment legally holds 1–4 children between descents; a split leaves a
+/// ≤ 5-wide transient that the next descent repairs, and lazy boundary
+/// repairs (`CheckNodeKey`) can briefly stack to ~7 — the validator's hard
+/// ceiling.
+pub(crate) const MAX_ARITY: usize = 7;
+/// A fast-path insert requires ≤ `INSERT_WINDOW` children: after the op the
+/// node holds at most `SPLIT_THRESHOLD`, the same transient a full descent
+/// leaves behind.
+pub(crate) const INSERT_WINDOW: usize = 4;
+/// A fast-path erase (or any leaf-arity shrink outside a full descent)
+/// requires ≥ `ERASE_WINDOW` children: after the op at least 2 remain, so
+/// no merge/borrow boost is ever needed off the descent path.
+pub(crate) const ERASE_WINDOW: usize = 3;
+/// Descents split any node at or above this width on the way down
+/// (algorithm 2): the over-full transient an in-window insert may create.
+pub(crate) const SPLIT_THRESHOLD: usize = INSERT_WINDOW + 1;
 
 /// How `find` traverses: the paper's lock-free algorithm 4, or the RWL
 /// baseline (hand-over-hand shared locks, "RWL" in tables II/III).
@@ -427,7 +450,19 @@ impl DetSkiplist {
     /// (per-shard skiplists home their arena on the shard's NUMA node).
     /// `opts.threads_hint` also sizes the per-thread finger array.
     pub fn with_capacity_on(mode: FindMode, capacity: usize, opts: ArenaOptions) -> DetSkiplist {
-        let arena = NodeArena::for_capacity(capacity, opts);
+        Self::with_leaf_cap_on(mode, capacity, opts, DEFAULT_LEAF_CAP)
+    }
+
+    /// Like [`DetSkiplist::with_capacity_on`] with an explicit terminal
+    /// chunk capacity `leaf_cap` ∈ 1..=[`MAX_LEAF_CAP`] (Table XV sweeps
+    /// this; `leaf_cap = 1` degenerates to the paper's one-key terminals).
+    pub fn with_leaf_cap_on(
+        mode: FindMode,
+        capacity: usize,
+        opts: ArenaOptions,
+        leaf_cap: usize,
+    ) -> DetSkiplist {
+        let arena = NodeArena::for_capacity_chunks(capacity, opts, leaf_cap);
         // head: level-1 leaf, key MAX, no children yet.
         let head = arena.alloc(u64::MAX, SENTINEL, SENTINEL, 0, 1);
         DetSkiplist {
@@ -445,6 +480,19 @@ impl DetSkiplist {
     #[inline]
     fn is_head(&self, r: NodeRef) -> bool {
         r == self.head
+    }
+
+    /// Keys per terminal chunk (the fat-leaf K).
+    #[inline]
+    pub fn leaf_cap(&self) -> usize {
+        self.arena.leaf_cap()
+    }
+
+    /// Minimum chunk occupancy the merge/borrow discipline maintains
+    /// (`max(1, K/4)`; a leaf's only chunk is exempt, like the spine).
+    #[inline]
+    fn min_chunk_occupancy(&self) -> usize {
+        (self.arena.leaf_cap() / 4).max(1)
     }
 
     /// Number of keys currently stored.
@@ -574,8 +622,17 @@ impl DetSkiplist {
                 if !n.is_marked() {
                     let (nkey, _) = n.key_next();
                     let bottom = n.hot.bottom.load(Ordering::Acquire);
-                    if key <= nkey {
-                        if let Some((blo, _)) = self.arena.read_key_next(bottom) {
+                    let level = n.hot.level.load(Ordering::Relaxed);
+                    if key <= nkey && bottom != SENTINEL {
+                        // the proven lower bound: the first child's key — at
+                        // a leaf, the first chunk's *min* key (`min_key <=
+                        // key <= max_key` over the chunked segment)
+                        let blo = if level == 1 {
+                            self.arena.chunk_probe(bottom, key).map(|p| p.lo)
+                        } else {
+                            self.arena.read_key_next(bottom).map(|(bk, _)| bk)
+                        };
+                        if let Some(blo) = blo {
                             if blo <= key && !n.is_marked() && self.arena.resolve(r).is_some() {
                                 return Some((r, blo));
                             }
@@ -736,7 +793,7 @@ impl DetSkiplist {
     /// `(key, next)` and the children from index 2 on; `p` keeps the first
     /// two and the second child's key.
     fn addition_rebalance(&self, p: NodeRef, children: &[NodeRef]) {
-        if children.len() < 5 {
+        if children.len() < SPLIT_THRESHOLD {
             return;
         }
         let pn = self.arena.node(p);
@@ -760,14 +817,18 @@ impl DetSkiplist {
     /// segment-local:
     /// - the recorded leaf resolves (generation), is unmarked and level 1,
     ///   locked like any writer would lock it;
-    /// - its (locked) children prove coverage:
-    ///   `first_child.key <= key <= leaf.key`;
-    /// - insert requires `<= 4` children (after the insert the leaf holds at
-    ///   most 5, the same transient bound the full descent leaves behind —
-    ///   and the *next* insert into a 5-wide leaf falls back to the full
-    ///   descent, whose `addition_rebalance` splits it on the way down);
-    /// - erase requires `>= 3` children (after the erase the leaf holds at
-    ///   least 2 — no merge/borrow boost is ever needed).
+    /// - its (locked) chunks prove coverage:
+    ///   `first_chunk.min_key <= key <= leaf.key`;
+    /// - an *in-chunk* insert or erase never changes the leaf's arity, so it
+    ///   needs no window at all — the common fat-leaf case;
+    /// - a chunk split requires `<= INSERT_WINDOW` chunks (after the split
+    ///   the leaf holds at most `SPLIT_THRESHOLD`, the same transient bound
+    ///   the full descent leaves behind — and the next split-needing insert
+    ///   into a leaf that wide falls back to the full descent, whose
+    ///   `addition_rebalance` splits it on the way down);
+    /// - emptying or underflowing a chunk (unlink / merge-borrow) requires
+    ///   `>= ERASE_WINDOW` chunks (after the shrink at least 2 remain — no
+    ///   leaf-level boost is ever needed).
     ///
     /// Under those guards the fast path can never split a leaf or underflow
     /// one, so ancestor arities only ever change on full descents and the
@@ -819,33 +880,38 @@ impl DetSkiplist {
         self.check_node_key(r, &children);
         let (nkey, _) = n.key_next(); // may have been lowered
         let covered = !children.is_empty() && {
-            let first_k = self.arena.node(children[0]).key();
-            first_k <= key && key <= nkey
+            // chunk-min coverage proof: the first chunk's smallest key is
+            // strictly above the previous leaf's max, so `min <= key <=
+            // leaf.key` pins the key inside this leaf's segment
+            let c0 = children[0];
+            self.arena.chunk_count(c0) > 0 && self.arena.chunk_key(c0, 0) <= key && key <= nkey
         };
-        let arity_ok = match op {
-            FingerOp::Insert(_) => children.len() <= 4,
-            FingerOp::Erase => children.len() >= 3,
-        };
-        if !covered || !arity_ok {
+        if !covered {
             self.release_children(&children);
             n.cold.lock.unlock();
             return None;
         }
         let out = match op {
             FingerOp::Insert(v) => {
-                let t = self.add_terminal(r, &children, key, v);
-                // refresh the leaf finger with post-op live bounds
-                let (nk2, _) = n.key_next();
-                self.finger_record(1, r, self.arena.node(children[0]).key(), nk2);
+                // in-chunk inserts leave the arity untouched; a chunk split
+                // adds one sibling, licensed only inside the insert window
+                let t = self.add_terminal(r, &children, key, v, children.len() <= INSERT_WINDOW);
+                if t != Tri::Retry {
+                    // refresh the leaf finger with post-op live bounds
+                    let (nk2, _) = n.key_next();
+                    self.finger_record(1, r, self.arena.chunk_key(children[0], 0), nk2);
+                }
                 self.release_children(&children);
                 t
             }
             FingerOp::Erase => {
-                let t = self.drop_key(r, &children, key);
-                // children[0] always survives drop_key under the >= 3 arity
-                // guard (first-child removal is delete-by-copy)
-                let (nk2, _) = n.key_next();
-                self.finger_record(1, r, self.arena.node(children[0]).key(), nk2);
+                // children[0] always survives drop_key (first-chunk removal
+                // is delete-by-copy; rebuilds mark the right-hand sibling)
+                let t = self.drop_key(r, &children, key, children.len() >= ERASE_WINDOW);
+                if t != Tri::Retry {
+                    let (nk2, _) = n.key_next();
+                    self.finger_record(1, r, self.arena.chunk_key(children[0], 0), nk2);
+                }
                 self.release_children_retiring(&children);
                 t
             }
@@ -854,8 +920,9 @@ impl DetSkiplist {
         match out {
             Tri::True => Some(true),
             Tri::False => Some(false),
-            // add_terminal/drop_key never RETRY under a locked, covered leaf
-            Tri::Retry => unreachable!("terminal ops cannot retry under lock"),
+            // the op needs a split/unlink/rebuild its window forbids here:
+            // decline, and the full writer descent rebalances on the way down
+            Tri::Retry => None,
         }
     }
 
@@ -937,12 +1004,13 @@ impl DetSkiplist {
 
         // record the descent entry at this level for the finger cache
         if !self.is_head(nref) && !children.is_empty() {
-            self.finger_record(level, nref, self.arena.node(children[0]).key(), nkey);
+            self.finger_record(level, nref, self.child_lo(level, children[0]), nkey);
         }
 
         if level == 1 {
-            // Leaf: insert into the terminal segment (paper's AddNode).
-            let r = self.add_terminal(nref, &children, key, value);
+            // Leaf: insert into the covering terminal chunk (paper's
+            // AddNode, per-chunk). Full descents always license the split.
+            let r = self.add_terminal(nref, &children, key, value, true);
             self.release_children(&children);
             n.cold.lock.unlock();
             return r;
@@ -965,54 +1033,112 @@ impl DetSkiplist {
         }
     }
 
-    /// Insert a terminal node for `key` into locked leaf `p` whose terminal
-    /// children (also locked) are `children`. Insert-before is done by
-    /// duplicating the successor and atomically overwriting its `(key,next)`
-    /// so no predecessor pointer is ever needed.
-    fn add_terminal(&self, p: NodeRef, children: &[NodeRef], key: u64, value: u64) -> Tri {
+    /// The finger/carry lower-bound predictor for a node's first child: at
+    /// a leaf the first *chunk's* min key (chunk-min coverage), above it the
+    /// first child's key. Caller holds the child's lock (or its parent's).
+    #[inline]
+    fn child_lo(&self, level: u32, first_child: NodeRef) -> u64 {
+        if level == 1 && self.arena.chunk_count(first_child) > 0 {
+            self.arena.chunk_key(first_child, 0)
+        } else {
+            self.arena.node(first_child).key()
+        }
+    }
+
+    /// Insert `key -> value` into the covering terminal chunk of locked
+    /// leaf `p` (whose chunks, also locked, are `children`).
+    ///
+    /// - Duplicate key: `False`.
+    /// - Room in the chunk: shift the arrays inside a seqlock window; an
+    ///   append past the last chunk's max raises the packed `(max, next)`
+    ///   header inside the same window.
+    /// - Chunk full: 1-2-3-4 split *with the new key included* — the high
+    ///   half moves to a freshly allocated sibling chunk published by the
+    ///   left chunk's in-window header store (both halves hold ≥ (K+1)/2 ≥
+    ///   max(1, K/4) keys, so splits never create underfull chunks). Needs
+    ///   `allow_split` (full descents pass `true`; the fast paths gate it
+    ///   on the leaf's insert window and treat `Retry` as a decline).
+    fn add_terminal(
+        &self,
+        p: NodeRef,
+        children: &[NodeRef],
+        key: u64,
+        value: u64,
+        allow_split: bool,
+    ) -> Tri {
         let pn = self.arena.node(p);
-        // children here are terminal nodes; find insert position.
-        let mut pred: Option<NodeRef> = None;
-        let mut cand: Option<NodeRef> = None;
-        for &c in children {
-            let ck = self.arena.node(c).key();
-            if ck < key {
-                pred = Some(c);
-            } else {
-                cand = Some(c);
+        let cap = self.arena.leaf_cap();
+        if children.is_empty() {
+            // empty (head) leaf: the structure's first chunk
+            let t = self.arena.alloc_chunk(&[key], &[value], SENTINEL);
+            pn.hot.bottom.store(t, Ordering::Release);
+            return Tri::True;
+        }
+        // target: first chunk whose max covers the key, else the last (an
+        // append raises that chunk's max rather than growing the arity)
+        let mut ti = children.len() - 1;
+        for (j, &c) in children.iter().enumerate() {
+            if key <= self.arena.node(c).key() {
+                ti = j;
                 break;
             }
         }
-        if let Some(c) = cand {
-            let cn = self.arena.node(c);
-            let (ck, cnext) = cn.key_next();
-            if ck == key {
-                return Tri::False; // duplicate
+        let t = children[ti];
+        let tn = self.arena.node(t);
+        let mut keys = [0u64; MAX_LEAF_CAP];
+        let cnt = self.arena.chunk_keys_into(t, &mut keys);
+        let pos = simd::rank(&keys[..cnt], key);
+        if pos < cnt && keys[pos] == key {
+            return Tri::False; // duplicate
+        }
+        let (_, tnext) = tn.key_next();
+        if cnt < cap {
+            // in-chunk insert: no arity change, no window needed
+            let w = self.arena.chunk_write(t);
+            for j in (pos..cnt).rev() {
+                w.set_key(j + 1, w.key(j));
+                w.set_val(j + 1, w.val(j));
             }
-            // insert-before-c: nn duplicates c; c becomes the new key.
-            let cval = cn.cold.value.load(Ordering::Relaxed);
-            let nn = self.arena.alloc(ck, cnext, SENTINEL, cval, 0);
-            cn.cold.value.store(value, Ordering::Relaxed);
-            cn.set_key_next(key, nn);
+            w.set_key(pos, key);
+            w.set_val(pos, value);
+            w.set_count(cnt + 1);
+            if pos == cnt {
+                // append beyond the old max (last chunk only): raise the
+                // routing header atomically with the array it describes
+                tn.set_key_next(key, tnext);
+            }
             return Tri::True;
         }
-        // key is larger than every child but <= p.key: append after pred,
-        // or become the first terminal node of an empty (head) leaf.
-        let t = match pred {
-            Some(pr) => {
-                let prn = self.arena.node(pr);
-                let (prk, prnext) = prn.key_next();
-                let t = self.arena.alloc(key, prnext, SENTINEL, value, 0);
-                prn.set_key_next(prk, t);
-                t
-            }
-            None => {
-                let t = self.arena.alloc(key, SENTINEL, SENTINEL, value, 0);
-                pn.hot.bottom.store(t, Ordering::Release);
-                t
-            }
-        };
-        let _ = t;
+        if !allow_split {
+            return Tri::Retry; // splits belong to full descents
+        }
+        // split with the new key included among the K+1
+        let mut ks = [0u64; MAX_LEAF_CAP + 1];
+        let mut vs = [0u64; MAX_LEAF_CAP + 1];
+        for j in 0..cnt {
+            ks[j] = keys[j];
+            vs[j] = self.arena.chunk_val(t, j);
+        }
+        let mut j = cnt;
+        while j > pos {
+            ks[j] = ks[j - 1];
+            vs[j] = vs[j - 1];
+            j -= 1;
+        }
+        ks[pos] = key;
+        vs[pos] = value;
+        let total = cnt + 1;
+        let lh = total / 2;
+        // the new right chunk is initialized before the left chunk's
+        // in-window header store publishes it (release-ordered)
+        let nr = self.arena.alloc_chunk(&ks[lh..total], &vs[lh..total], tnext);
+        let w = self.arena.chunk_write(t);
+        for j in 0..lh {
+            w.set_key(j, ks[j]);
+            w.set_val(j, vs[j]);
+        }
+        w.set_count(lh);
+        tn.set_key_next(ks[lh - 1], nr);
         Tri::True
     }
 
@@ -1111,18 +1237,22 @@ impl DetSkiplist {
                 return Err(()); // height change pending
             }
             if bottom == SENTINEL && !self.is_head(cur) {
-                // terminal node
-                if nkey == key {
-                    let v = n.cold.value.load(Ordering::Relaxed);
+                // terminal chunk: branchless in-chunk rank via the seqlock
+                // snapshot (simd::rank inside chunk_probe)
+                let Some(p) = self.arena.chunk_probe(cur, key) else {
+                    return Err(()); // torn snapshot / generation changed
+                };
+                if key <= p.max {
+                    // In-coverage answer (hit or proven miss). Chunk data is
+                    // mutable, so the probe window may postdate the mark
+                    // check above — unmarked *after* the window proves the
+                    // data was live.
                     if n.is_marked() || self.arena.resolve(cur).is_none() {
                         return Err(());
                     }
-                    return Ok(Some(v));
+                    return Ok(p.hit);
                 }
-                if nkey > key {
-                    return Ok(None);
-                }
-                cur = nnext;
+                cur = p.next;
                 continue;
             }
             if self.is_head(cur) && bottom == SENTINEL {
@@ -1218,14 +1348,16 @@ impl DetSkiplist {
             }
             let bottom = n.hot.bottom.load(Ordering::Acquire);
             if bottom == SENTINEL && !self.is_head(curref) {
-                // terminal
-                if nkey == key {
-                    return Ok(Some(n.cold.value.load(Ordering::Relaxed)));
+                // terminal chunk: the shared lock blocks chunk writers (they
+                // hold the exclusive lock), so no post-window mark re-check
+                // is needed here
+                let Some(p) = self.arena.chunk_probe(curref, key) else {
+                    return Err(());
+                };
+                if key <= p.max {
+                    return Ok(p.hit);
                 }
-                if nkey > key {
-                    return Ok(None);
-                }
-                if !self.step_read(held, nnext)? {
+                if !self.step_read(held, p.next)? {
                     return Ok(None);
                 }
                 continue;
@@ -1389,11 +1521,11 @@ impl DetSkiplist {
 
         // record the descent entry at this level for the finger cache
         if !self.is_head(nref) && !children.is_empty() {
-            self.finger_record(level, nref, self.arena.node(children[0]).key(), nkey);
+            self.finger_record(level, nref, self.child_lo(level, children[0]), nkey);
         }
 
         if level == 1 {
-            let r = self.drop_key(nref, &children, key);
+            let r = self.drop_key(nref, &children, key, true);
             self.release_children_retiring(&children);
             n.cold.lock.unlock();
             return r;
@@ -1482,7 +1614,7 @@ impl DetSkiplist {
 
         let merged_len = c1.len() + c2.len();
         let mut result = n1;
-        if merged_len > 4 {
+        if merged_len > INSERT_WINDOW {
             // borrow: re-split so the target side keeps >= 3 children.
             self.stats.borrows.fetch_add(1, Ordering::Relaxed);
             if target_left {
@@ -1533,60 +1665,179 @@ impl DetSkiplist {
         Some(out)
     }
 
-    /// Remove `key` from the terminal segment of locked leaf `p` (children
-    /// locked). In-segment unlink via predecessor, or delete-by-copy when
-    /// the target is the segment's first node.
-    fn drop_key(&self, p: NodeRef, children: &[NodeRef], key: u64) -> Tri {
+    /// Remove `key` from the covering terminal chunk of locked leaf `p`
+    /// (chunks locked).
+    ///
+    /// In-chunk removal shifts the arrays left inside a seqlock window;
+    /// removing the chunk's max lowers the packed `(max, next)` header in
+    /// the same window (and syncs the leaf key if it was the leaf max).
+    /// A removal that would empty the chunk unlinks it (predecessor bypass,
+    /// delete-by-copy of the successor chunk's full contents when it is the
+    /// segment's first chunk, or the head-leaf bottom store); one that would
+    /// drop it below `min_chunk_occupancy` triggers [`Self::chunk_rebuild`]
+    /// (1-2-3-4 merge/borrow at chunk granularity). Both structural moves
+    /// need `allow_shrink` — the shrink decision is taken BEFORE any
+    /// mutation, so a declined (`Retry`) op leaves the structure untouched
+    /// for the full-descent retry.
+    fn drop_key(&self, p: NodeRef, children: &[NodeRef], key: u64, allow_shrink: bool) -> Tri {
         let pn = self.arena.node(p);
-        let mut pred: Option<NodeRef> = None;
-        let mut target: Option<(usize, NodeRef)> = None;
-        for (i, &c) in children.iter().enumerate() {
-            let ck = self.arena.node(c).key();
-            if ck == key {
-                target = Some((i, c));
-                break;
-            }
-            if ck < key {
-                pred = Some(c);
-            } else {
+        let min_occ = self.min_chunk_occupancy();
+        // target: first chunk whose max covers the key
+        let mut ti = usize::MAX;
+        for (j, &c) in children.iter().enumerate() {
+            if key <= self.arena.node(c).key() {
+                ti = j;
                 break;
             }
         }
-        let Some((ti, t)) = target else {
-            return Tri::False;
-        };
+        if ti == usize::MAX {
+            return Tri::False; // key beyond every chunk
+        }
+        let t = children[ti];
         let tn = self.arena.node(t);
-        let (tkey, tnext) = tn.key_next();
-        debug_assert_eq!(tkey, key);
+        let mut keys = [0u64; MAX_LEAF_CAP];
+        let cnt = self.arena.chunk_keys_into(t, &mut keys);
+        let pos = simd::rank(&keys[..cnt], key);
+        if pos >= cnt || keys[pos] != key {
+            return Tri::False;
+        }
+        let (_, tnext) = tn.key_next();
+        let newcnt = cnt - 1;
+        let needs_shrink = newcnt == 0 || (newcnt < min_occ && children.len() >= 2);
+        if needs_shrink && !allow_shrink {
+            return Tri::Retry; // structural shrink belongs to full descents
+        }
 
-        if let Some(pr) = pred {
-            // unlink via in-segment predecessor
-            let prn = self.arena.node(pr);
-            let (prk, _) = prn.key_next();
-            prn.set_key_next(prk, tnext);
-            tn.cold.mark.store(true, Ordering::Release);
-            // keep p.key in sync if we removed the last child
-            if ti == children.len() - 1 {
-                let (pk, pnx) = pn.key_next();
-                if pk == key && !self.is_head(p) {
-                    pn.set_key_next(prk, pnx);
+        if newcnt == 0 {
+            // the chunk empties: unlink it from the terminal list
+            if ti > 0 {
+                // predecessor bypass
+                let prn = self.arena.node(children[ti - 1]);
+                let (prk, _) = prn.key_next();
+                prn.set_key_next(prk, tnext);
+                tn.cold.mark.store(true, Ordering::Release);
+                // keep p.key in sync if we removed the last chunk
+                if ti == children.len() - 1 {
+                    let (pk, pnx) = pn.key_next();
+                    if pk == key && !self.is_head(p) {
+                        pn.set_key_next(prk, pnx);
+                    }
                 }
+            } else if children.len() > 1 {
+                // first chunk: delete-by-copy — absorb the successor chunk's
+                // full contents so the leaf's bottom link never dangles
+                let s = children[1];
+                let sn = self.arena.node(s);
+                let (sk, snext) = sn.key_next();
+                let mut sk_buf = [0u64; MAX_LEAF_CAP];
+                let scnt = self.arena.chunk_keys_into(s, &mut sk_buf);
+                let w = self.arena.chunk_write(t);
+                for j in 0..scnt {
+                    w.set_key(j, sk_buf[j]);
+                    w.set_val(j, self.arena.chunk_val(s, j));
+                }
+                w.set_count(scnt);
+                tn.set_key_next(sk, snext);
+                drop(w);
+                sn.cold.mark.store(true, Ordering::Release);
+            } else {
+                // only chunk (possible only at the head leaf)
+                pn.hot.bottom.store(tnext, Ordering::Release);
+                tn.cold.mark.store(true, Ordering::Release);
             }
-        } else if ti + 1 < children.len() {
-            // first child: delete-by-copy from the in-segment successor
-            let s = children[ti + 1];
-            let sn = self.arena.node(s);
-            let (sk, snext) = sn.key_next();
-            let sval = sn.cold.value.load(Ordering::Relaxed);
-            tn.cold.value.store(sval, Ordering::Relaxed);
-            tn.set_key_next(sk, snext);
-            sn.cold.mark.store(true, Ordering::Release);
-        } else {
-            // only child (possible only at the head leaf)
-            pn.hot.bottom.store(tnext, Ordering::Release);
-            tn.cold.mark.store(true, Ordering::Release);
+            return Tri::True;
+        }
+
+        // in-chunk removal
+        {
+            let w = self.arena.chunk_write(t);
+            for j in pos..newcnt {
+                w.set_key(j, w.key(j + 1));
+                w.set_val(j, w.val(j + 1));
+            }
+            w.set_count(newcnt);
+            if pos == newcnt {
+                // removed the chunk max: lower the routing header
+                // atomically with the array it describes
+                tn.set_key_next(keys[newcnt - 1], tnext);
+            }
+        }
+        if pos == newcnt && ti == children.len() - 1 {
+            // removed the leaf max: sync the leaf key
+            let (pk, pnx) = pn.key_next();
+            if pk == key && !self.is_head(p) {
+                pn.set_key_next(keys[newcnt - 1], pnx);
+            }
+        }
+        if newcnt < min_occ && children.len() >= 2 {
+            let (li, ri) = if ti + 1 < children.len() { (ti, ti + 1) } else { (ti - 1, ti) };
+            // the marked right chunk is in `children`, so the caller's
+            // release_children_retiring retires it; a resplit's fresh chunk
+            // needs no lock here (the leaf lock excludes other writers)
+            let _ = self.chunk_rebuild_pair(children[li], children[ri], false);
         }
         Tri::True
+    }
+
+    /// 1-2-3-4 merge/borrow at chunk granularity: rebalance the adjacent
+    /// locked chunk pair `(l, r)` after one side went underfull. The RIGHT
+    /// chunk is always the one marked — a merge absorbs it into the left
+    /// chunk, a resplit ("borrow") replaces it with a freshly allocated
+    /// chunk — so keys never move leftward *between two live chunks* and
+    /// stale lock-free readers fail their generation/mark re-check instead
+    /// of missing a key. Returns the fresh chunk on a resplit (locked iff
+    /// `lock_fresh`); `r` stays locked and marked for the caller to retire.
+    fn chunk_rebuild_pair(&self, l: NodeRef, r: NodeRef, lock_fresh: bool) -> Option<NodeRef> {
+        let cap = self.arena.leaf_cap();
+        let ln = self.arena.node(l);
+        let rn = self.arena.node(r);
+        let mut lk = [0u64; MAX_LEAF_CAP];
+        let mut rk = [0u64; MAX_LEAF_CAP];
+        let lcnt = self.arena.chunk_keys_into(l, &mut lk);
+        let rcnt = self.arena.chunk_keys_into(r, &mut rk);
+        let total = lcnt + rcnt;
+        let (rkey, rnext) = rn.key_next();
+        if total <= cap {
+            // merge: left absorbs right; the header takeover inside left's
+            // window makes the widened coverage and the data atomic
+            let w = self.arena.chunk_write(l);
+            for j in 0..rcnt {
+                w.set_key(lcnt + j, rk[j]);
+                w.set_val(lcnt + j, self.arena.chunk_val(r, j));
+            }
+            w.set_count(total);
+            ln.set_key_next(rkey, rnext);
+            drop(w);
+            rn.cold.mark.store(true, Ordering::Release);
+            return None;
+        }
+        // borrow: re-split the pair evenly. The high half moves to a FRESH
+        // chunk (never leftward into a live one); the old right retires.
+        let lh = total / 2;
+        let mut ks = [0u64; 2 * MAX_LEAF_CAP];
+        let mut vs = [0u64; 2 * MAX_LEAF_CAP];
+        for j in 0..lcnt {
+            ks[j] = lk[j];
+            vs[j] = self.arena.chunk_val(l, j);
+        }
+        for j in 0..rcnt {
+            ks[lcnt + j] = rk[j];
+            vs[lcnt + j] = self.arena.chunk_val(r, j);
+        }
+        let nr = self.arena.alloc_chunk(&ks[lh..total], &vs[lh..total], rnext);
+        if lock_fresh {
+            self.arena.node(nr).cold.lock.lock(); // pre-publication: uncontended
+        }
+        let w = self.arena.chunk_write(l);
+        for j in 0..lh {
+            w.set_key(j, ks[j]);
+            w.set_val(j, vs[j]);
+        }
+        w.set_count(lh);
+        ln.set_key_next(ks[lh - 1], nr);
+        drop(w);
+        rn.cold.mark.store(true, Ordering::Release);
+        Some(nr)
     }
 
 
@@ -1614,28 +1865,34 @@ impl DetSkiplist {
             };
             let mut out = Vec::new();
             let mut cur = start;
+            let mut keys = [0u64; MAX_LEAF_CAP];
+            let mut vals = [0u64; MAX_LEAF_CAP];
             loop {
                 if cur == SENTINEL {
                     return out;
                 }
                 cost.derefs += 1;
-                let Some((k, nx)) = self.arena.read_key_next(cur) else {
+                // one seqlock snapshot copies the whole chunk out; a torn
+                // read or generation change retries the range
+                let Some((cnt, max, nx)) = self.arena.chunk_snapshot(cur, &mut keys, &mut vals)
+                else {
                     self.stats.find_retries.fetch_add(1, Ordering::Relaxed);
                     b.wait();
                     continue 'retry;
                 };
-                // pull the next terminal line while this row is copied out
+                // pull the next chunk's line while this one is copied out
                 cost.prefetches += self.arena.prefetch(nx) as u64;
-                if k > hi {
-                    return out;
-                }
-                if k >= lo {
-                    let v = self.arena.node(cur).cold.value.load(Ordering::Relaxed);
-                    if self.arena.resolve(cur).is_none() {
-                        b.wait();
-                        continue 'retry;
+                for j in 0..cnt {
+                    let k = keys[j];
+                    if k > hi {
+                        return out;
                     }
-                    out.push((k, v));
+                    if k >= lo {
+                        out.push((k, vals[j]));
+                    }
+                }
+                if max > hi {
+                    return out;
                 }
                 cur = nx;
             }
@@ -1850,12 +2107,22 @@ impl DetSkiplist {
         self.check_node_key(nref, &children);
         let (nkey, nnext) = n.key_next(); // may have been lowered
 
+        let level = n.hot.level.load(Ordering::Relaxed);
+
         if carried {
             // The carry must prove coverage from below (finger_start's
-            // argument): the first child's key bounds the segment's lower
-            // edge, so `first_child.key <= key` proves the key cannot
-            // belong to an earlier subtree.
-            if children.is_empty() || self.arena.node(children[0]).key() > key {
+            // argument): the first child's lower bound — at a leaf the
+            // first *chunk's* min key, above it the first child's key —
+            // proves the key cannot belong to an earlier subtree.
+            let ok = !children.is_empty() && {
+                let c0 = children[0];
+                if level == 1 {
+                    self.arena.chunk_count(c0) > 0 && self.arena.chunk_key(c0, 0) <= key
+                } else {
+                    self.arena.node(c0).key() <= key
+                }
+            };
+            if !ok {
                 self.release_children(&children);
                 n.cold.lock.unlock();
                 return RunStep::Stale;
@@ -1869,8 +2136,6 @@ impl DetSkiplist {
             n.cold.lock.unlock();
             return self.run_descent(nnext, false, ops, i, carry, sink, cost, erased);
         }
-
-        let level = n.hot.level.load(Ordering::Relaxed);
 
         if level == 1 {
             let ok = self.run_leaf_group(nref, carried, n, &children, ops, i, carry, sink, erased);
@@ -2005,147 +2270,225 @@ impl DetSkiplist {
             }
         }
 
+        let cap = self.arena.leaf_cap();
+        let min_occ = self.min_chunk_occupancy();
         let mut first = true;
+        let mut keys = [0u64; MAX_LEAF_CAP];
         while *i < ops.len() {
             let (pk, _) = n.key_next(); // live: erases can lower it
             let key = ops[*i].key();
             if key > pk {
                 break; // the run escaped this leaf's coverage
             }
+            // target: first segment chunk whose max covers the key
+            let mut ci = usize::MAX;
+            for j in 0..seg.len() {
+                if key <= self.arena.node(seg.get(j)).key() {
+                    ci = j;
+                    break;
+                }
+            }
             match ops[*i] {
                 BatchOp::Get(k) => {
+                    // writer-side read: the chunk lock is held, no snapshot
                     let mut v = None;
-                    for j in 0..seg.len() {
-                        let c = self.arena.node(seg.get(j));
-                        let ck = c.key();
-                        if ck == k {
-                            v = Some(c.cold.value.load(Ordering::Relaxed));
-                            break;
-                        }
-                        if ck > k {
-                            break;
+                    if ci != usize::MAX {
+                        let c = seg.get(ci);
+                        let cnt = self.arena.chunk_keys_into(c, &mut keys);
+                        let pos = simd::rank(&keys[..cnt], k);
+                        if pos < cnt && keys[pos] == k {
+                            v = Some(self.arena.chunk_val(c, pos));
                         }
                     }
                     sink(*i, BatchReply::Value(v));
                 }
                 BatchOp::Insert(k, val) => {
-                    // position: first segment child with key >= k
-                    let mut pos = seg.len();
-                    let mut dup = false;
-                    for j in 0..seg.len() {
-                        let ck = self.arena.node(seg.get(j)).key();
-                        if ck >= k {
-                            dup = ck == k;
-                            pos = j;
-                            break;
-                        }
+                    if seg.len() == 0 {
+                        // empty (head) leaf: become the first chunk
+                        let t = self.arena.alloc_chunk(&[k], &[val], SENTINEL);
+                        self.arena.node(t).cold.lock.lock(); // pre-publication: uncontended
+                        n.hot.bottom.store(t, Ordering::Release);
+                        seg.insert_at(0, t);
+                        self.len.fetch_add(1, Ordering::Relaxed);
+                        sink(*i, BatchReply::Applied(true));
+                        first = false;
+                        *i += 1;
+                        continue;
                     }
-                    if dup {
+                    // covering chunk, or the last one (append raises its max)
+                    let ti = if ci != usize::MAX { ci } else { seg.len() - 1 };
+                    let t = seg.get(ti);
+                    let tn = self.arena.node(t);
+                    let cnt = self.arena.chunk_keys_into(t, &mut keys);
+                    let pos = simd::rank(&keys[..cnt], k);
+                    if pos < cnt && keys[pos] == k {
                         sink(*i, BatchReply::Applied(false));
+                    } else if cnt < cap {
+                        // in-chunk insert: arity untouched, no window gate
+                        let (_, tnext) = tn.key_next();
+                        let w = self.arena.chunk_write(t);
+                        for j in (pos..cnt).rev() {
+                            w.set_key(j + 1, w.key(j));
+                            w.set_val(j + 1, w.val(j));
+                        }
+                        w.set_key(pos, k);
+                        w.set_val(pos, val);
+                        w.set_count(cnt + 1);
+                        if pos == cnt {
+                            tn.set_key_next(k, tnext); // raise max in-window
+                        }
+                        drop(w);
+                        self.len.fetch_add(1, Ordering::Relaxed);
+                        sink(*i, BatchReply::Applied(true));
                     } else {
-                        // window: only descents split, so a non-first insert
-                        // must leave width <= 5 (the post-split transient a
-                        // point insert also leaves)
-                        if (!first && seg.len() >= 5) || seg.len() + 1 > SEG_CAP {
+                        // chunk split grows the arity — window gate: only
+                        // descents split leaves, so a non-first split must
+                        // leave width <= SPLIT_THRESHOLD (the post-split
+                        // transient a point insert also leaves)
+                        if (!first && seg.len() >= SPLIT_THRESHOLD) || seg.len() + 1 > SEG_CAP {
                             break;
                         }
-                        if pos < seg.len() {
-                            // insert-before: duplicate the successor and
-                            // atomically retake its (key, next) — no
-                            // predecessor pointer needed (as add_terminal)
-                            let c = seg.get(pos);
-                            let cn = self.arena.node(c);
-                            let (ck, cnext) = cn.key_next();
-                            let cval = cn.cold.value.load(Ordering::Relaxed);
-                            let nn = self.arena.alloc(ck, cnext, SENTINEL, cval, 0);
-                            self.arena.node(nn).cold.lock.lock(); // pre-publication: uncontended
-                            cn.cold.value.store(val, Ordering::Relaxed);
-                            cn.set_key_next(k, nn);
-                            seg.insert_at(pos + 1, nn);
-                        } else if seg.len() > 0 {
-                            // append after the last (< k) child
-                            let pr = seg.get(seg.len() - 1);
-                            let prn = self.arena.node(pr);
-                            let (prk, prnext) = prn.key_next();
-                            let t = self.arena.alloc(k, prnext, SENTINEL, val, 0);
-                            self.arena.node(t).cold.lock.lock();
-                            prn.set_key_next(prk, t);
-                            seg.insert_at(seg.len(), t);
-                        } else {
-                            // empty (head) leaf: become the first terminal
-                            let t = self.arena.alloc(k, SENTINEL, SENTINEL, val, 0);
-                            self.arena.node(t).cold.lock.lock();
-                            n.hot.bottom.store(t, Ordering::Release);
-                            seg.insert_at(0, t);
+                        let (_, tnext) = tn.key_next();
+                        let mut ks = [0u64; MAX_LEAF_CAP + 1];
+                        let mut vs = [0u64; MAX_LEAF_CAP + 1];
+                        for j in 0..cnt {
+                            ks[j] = keys[j];
+                            vs[j] = self.arena.chunk_val(t, j);
                         }
+                        let mut j = cnt;
+                        while j > pos {
+                            ks[j] = ks[j - 1];
+                            vs[j] = vs[j - 1];
+                            j -= 1;
+                        }
+                        ks[pos] = k;
+                        vs[pos] = val;
+                        let total = cnt + 1;
+                        let lh = total / 2;
+                        let nr = self.arena.alloc_chunk(&ks[lh..total], &vs[lh..total], tnext);
+                        self.arena.node(nr).cold.lock.lock(); // pre-publication
+                        let w = self.arena.chunk_write(t);
+                        for j in 0..lh {
+                            w.set_key(j, ks[j]);
+                            w.set_val(j, vs[j]);
+                        }
+                        w.set_count(lh);
+                        tn.set_key_next(ks[lh - 1], nr);
+                        drop(w);
+                        seg.insert_at(ti + 1, nr);
                         self.len.fetch_add(1, Ordering::Relaxed);
                         sink(*i, BatchReply::Applied(true));
                     }
                 }
                 BatchOp::Erase(k) => {
-                    let mut ti = None;
-                    for j in 0..seg.len() {
-                        let ck = self.arena.node(seg.get(j)).key();
-                        if ck >= k {
-                            if ck == k {
-                                ti = Some(j);
-                            }
-                            break;
+                    let mut hit = None;
+                    if ci != usize::MAX {
+                        let c = seg.get(ci);
+                        let cnt = self.arena.chunk_keys_into(c, &mut keys);
+                        let pos = simd::rank(&keys[..cnt], k);
+                        if pos < cnt && keys[pos] == k {
+                            hit = Some((pos, cnt));
                         }
                     }
-                    let Some(ti) = ti else {
+                    let Some((pos, cnt)) = hit else {
                         sink(*i, BatchReply::Applied(false));
                         first = false;
                         *i += 1;
                         continue;
                     };
-                    // window: only descents boost, so a non-first erase must
-                    // leave width >= 2 (no merge/borrow ever needed here).
-                    // A carried start skipped the parent's boost entirely,
-                    // so even its first erase is window-gated.
-                    if (!first || carried) && seg.len() <= 2 {
-                        break;
-                    }
+                    let ti = ci;
                     let t = seg.get(ti);
                     let tn = self.arena.node(t);
                     let (_, tnext) = tn.key_next();
-                    if ti > 0 {
-                        // unlink via in-segment predecessor
-                        let pr = seg.get(ti - 1);
-                        let prn = self.arena.node(pr);
-                        let (prk, _) = prn.key_next();
-                        prn.set_key_next(prk, tnext);
-                        tn.cold.mark.store(true, Ordering::Release);
-                        seg.remove_at(ti);
-                        tn.cold.lock.unlock();
-                        self.arena.retire(t);
-                        if ti == seg.len() {
-                            // removed the boundary child: keep p.key in sync
-                            let (pk2, pnx) = n.key_next();
-                            if pk2 == k && !self.is_head(nref) {
-                                n.set_key_next(prk, pnx);
+                    let newcnt = cnt - 1;
+                    let needs_shrink = newcnt == 0 || (newcnt < min_occ && seg.len() >= 2);
+                    // window: only descents boost, so a non-first shrink must
+                    // leave width >= 2 (no merge/borrow ever needed here).
+                    // A carried start skipped the parent's boost entirely,
+                    // so even its first shrink is window-gated. In-chunk
+                    // removals never change the arity and are never gated.
+                    if needs_shrink && (!first || carried) && seg.len() < ERASE_WINDOW {
+                        break;
+                    }
+                    if newcnt == 0 {
+                        // the chunk empties: unlink it from the segment
+                        if ti > 0 {
+                            let pr = seg.get(ti - 1);
+                            let prn = self.arena.node(pr);
+                            let (prk, _) = prn.key_next();
+                            prn.set_key_next(prk, tnext);
+                            tn.cold.mark.store(true, Ordering::Release);
+                            seg.remove_at(ti);
+                            tn.cold.lock.unlock();
+                            self.arena.retire(t);
+                            if ti == seg.len() {
+                                // removed the boundary chunk: sync p.key
+                                let (pk2, pnx) = n.key_next();
+                                if pk2 == k && !self.is_head(nref) {
+                                    n.set_key_next(prk, pnx);
+                                }
+                            }
+                        } else if seg.len() > 1 {
+                            // first chunk: delete-by-copy — absorb the
+                            // successor chunk so the leaf's bottom link
+                            // never dangles
+                            let s = seg.get(1);
+                            let sn = self.arena.node(s);
+                            let (sk, snext) = sn.key_next();
+                            let mut sk_buf = [0u64; MAX_LEAF_CAP];
+                            let scnt = self.arena.chunk_keys_into(s, &mut sk_buf);
+                            let w = self.arena.chunk_write(t);
+                            for j in 0..scnt {
+                                w.set_key(j, sk_buf[j]);
+                                w.set_val(j, self.arena.chunk_val(s, j));
+                            }
+                            w.set_count(scnt);
+                            tn.set_key_next(sk, snext);
+                            drop(w);
+                            sn.cold.mark.store(true, Ordering::Release);
+                            seg.remove_at(1);
+                            sn.cold.lock.unlock();
+                            self.arena.retire(s);
+                        } else {
+                            // only chunk (head leaf)
+                            n.hot.bottom.store(tnext, Ordering::Release);
+                            tn.cold.mark.store(true, Ordering::Release);
+                            seg.remove_at(0);
+                            tn.cold.lock.unlock();
+                            self.arena.retire(t);
+                        }
+                    } else {
+                        // in-chunk removal
+                        {
+                            let w = self.arena.chunk_write(t);
+                            for j in pos..newcnt {
+                                w.set_key(j, w.key(j + 1));
+                                w.set_val(j, w.val(j + 1));
+                            }
+                            w.set_count(newcnt);
+                            if pos == newcnt {
+                                tn.set_key_next(keys[newcnt - 1], tnext);
                             }
                         }
-                    } else if seg.len() > 1 {
-                        // first child: delete-by-copy from the successor so
-                        // the segment's head node is never unlinked
-                        let s = seg.get(1);
-                        let sn = self.arena.node(s);
-                        let (sk, snext) = sn.key_next();
-                        let sval = sn.cold.value.load(Ordering::Relaxed);
-                        tn.cold.value.store(sval, Ordering::Relaxed);
-                        tn.set_key_next(sk, snext);
-                        sn.cold.mark.store(true, Ordering::Release);
-                        seg.remove_at(1);
-                        sn.cold.lock.unlock();
-                        self.arena.retire(s);
-                    } else {
-                        // only child (head leaf)
-                        n.hot.bottom.store(tnext, Ordering::Release);
-                        tn.cold.mark.store(true, Ordering::Release);
-                        seg.remove_at(0);
-                        tn.cold.lock.unlock();
-                        self.arena.retire(t);
+                        if pos == newcnt && ti == seg.len() - 1 {
+                            // removed the leaf max: sync p.key
+                            let (pk2, pnx) = n.key_next();
+                            if pk2 == k && !self.is_head(nref) {
+                                n.set_key_next(keys[newcnt - 1], pnx);
+                            }
+                        }
+                        if newcnt < min_occ && seg.len() >= 2 {
+                            let (li, ri) =
+                                if ti + 1 < seg.len() { (ti, ti + 1) } else { (ti - 1, ti) };
+                            let r = seg.get(ri);
+                            let fresh = self.chunk_rebuild_pair(seg.get(li), r, true);
+                            seg.remove_at(ri);
+                            self.arena.node(r).cold.lock.unlock();
+                            self.arena.retire(r);
+                            if let Some(nr) = fresh {
+                                seg.insert_at(ri, nr); // locked pre-publication
+                            }
+                        }
                     }
                     self.len.fetch_sub(1, Ordering::Relaxed);
                     *erased = true;
@@ -2164,8 +2507,8 @@ impl DetSkiplist {
         self.release_children(&children[seg_end..]);
 
         let (pk_end, _) = n.key_next();
-        if !self.is_head(nref) && seg.len() > 0 {
-            let lo = self.arena.node(seg.get(0)).key();
+        if !self.is_head(nref) && seg.len() > 0 && self.arena.chunk_count(seg.get(0)) > 0 {
+            let lo = self.arena.chunk_key(seg.get(0), 0);
             carry.record(1, nref, pk_end);
             self.finger_record(1, nref, lo, pk_end);
         }
@@ -2325,8 +2668,16 @@ impl DetSkiplist {
                 if !n.is_marked() {
                     let (nkey, _) = n.key_next();
                     let bottom = n.hot.bottom.load(Ordering::Acquire);
-                    if key <= nkey {
-                        if let Some((blo, _)) = self.arena.read_key_next(bottom) {
+                    let level = n.hot.level.load(Ordering::Relaxed);
+                    if key <= nkey && bottom != SENTINEL {
+                        // the proven lower bound: at a leaf the first
+                        // chunk's min key, above it the first child's key
+                        let blo = if level == 1 {
+                            self.arena.chunk_probe(bottom, key).map(|p| p.lo)
+                        } else {
+                            self.arena.read_key_next(bottom).map(|(bk, _)| bk)
+                        };
+                        if let Some(blo) = blo {
                             if blo <= key && !n.is_marked() && self.arena.resolve(r).is_some() {
                                 return Some(r);
                             }
@@ -2403,20 +2754,21 @@ impl DetSkiplist {
             return self.lane_fail(lane); // height change pending
         }
         if bottom == SENTINEL && !self.is_head(cur) {
-            // terminal node (only Get descents reach this level)
+            // terminal chunk (only Get descents reach this level)
             match op {
                 BatchOp::Get(_) => {
-                    if nkey == key {
-                        let v = n.cold.value.load(Ordering::Relaxed);
+                    let Some(p) = self.arena.chunk_probe(cur, key) else {
+                        return self.lane_fail(lane);
+                    };
+                    if key <= p.max {
+                        // in-coverage answer: the probe window may postdate
+                        // the mark check above — re-validate liveness
                         if n.is_marked() || self.arena.resolve(cur).is_none() {
                             return self.lane_fail(lane);
                         }
-                        return self.lane_done(lane, sink, BatchReply::Value(Some(v)));
+                        return self.lane_done(lane, sink, BatchReply::Value(p.hit));
                     }
-                    if nkey > key {
-                        return self.lane_done(lane, sink, BatchReply::Value(None));
-                    }
-                    lane.cur = nnext;
+                    lane.cur = p.next;
                 }
                 _ => self.lane_fail(lane),
             }
@@ -2599,7 +2951,11 @@ impl DetSkiplist {
             // empty structure
             return Ok(Vec::new());
         }
-        // check each non-terminal level
+        // check each non-terminal level; remember solo chunks (a leaf with
+        // arity 1 exempts its only chunk from the occupancy floor — the
+        // spine / near-empty structure case)
+        let leaf_level = level_heads.len() - 2;
+        let mut solo_chunks: Vec<NodeRef> = Vec::new();
         for w in 0..level_heads.len() - 1 {
             let mut node = level_heads[w];
             let mut child = level_heads[w + 1];
@@ -2620,6 +2976,7 @@ impl DetSkiplist {
                 if nn.hot.bottom.load(Ordering::Acquire) != child {
                     return Err(format!("level {w}: segment partition broken at key {nkey}"));
                 }
+                let first_child = child;
                 let mut arity = 0;
                 loop {
                     if child == SENTINEL {
@@ -2637,12 +2994,15 @@ impl DetSkiplist {
                         break;
                     }
                 }
-                if arity > 7 {
-                    return Err(format!("level {w}: node arity {arity} > 7"));
+                if arity > MAX_ARITY {
+                    return Err(format!("level {w}: node arity {arity} > {MAX_ARITY}"));
                 }
                 let is_root_or_spine = node == self.head || nkey == u64::MAX;
                 if arity < 2 && !is_root_or_spine && self.len() > 4 {
                     return Err(format!("level {w}: node key {nkey} arity {arity} < 2"));
+                }
+                if w == leaf_level && arity == 1 {
+                    solo_chunks.push(first_child);
                 }
                 node = nnext;
             }
@@ -2650,19 +3010,37 @@ impl DetSkiplist {
                 return Err(format!("level {w}: lower level has unreachable tail"));
             }
         }
-        // collect terminal keys
+        // collect terminal keys chunk by chunk
+        let cap = self.arena.leaf_cap();
+        let min_occ = self.min_chunk_occupancy();
         let mut keys = Vec::new();
+        let mut buf = [0u64; MAX_LEAF_CAP];
         let mut t = *level_heads.last().unwrap();
         let mut prev: Option<u64> = None;
         while t != SENTINEL {
             let (k, nx) = self.arena.node(t).key_next();
-            if let Some(p) = prev {
-                if k <= p {
-                    return Err(format!("terminal keys not increasing ({p} -> {k})"));
-                }
+            let cnt = self.arena.chunk_keys_into(t, &mut buf);
+            if cnt == 0 {
+                return Err(format!("empty terminal chunk (header key {k})"));
             }
-            prev = Some(k);
-            keys.push(k);
+            if cnt > cap {
+                return Err(format!("chunk count {cnt} > leaf cap {cap}"));
+            }
+            if cnt < min_occ && !solo_chunks.contains(&t) {
+                return Err(format!("chunk count {cnt} < min occupancy {min_occ} (key {k})"));
+            }
+            if buf[cnt - 1] != k {
+                return Err(format!("chunk header key {k} != last stored key {}", buf[cnt - 1]));
+            }
+            for &bk in &buf[..cnt] {
+                if let Some(p) = prev {
+                    if bk <= p {
+                        return Err(format!("terminal keys not increasing ({p} -> {bk})"));
+                    }
+                }
+                prev = Some(bk);
+                keys.push(bk);
+            }
             t = nx;
         }
         if keys.len() as u64 != self.len() {
@@ -3396,5 +3774,143 @@ mod tests {
         let (w1, w8) = (stalled(1), stalled(8));
         assert!(w1 > 0, "width-1 pipeline has nothing to overlap with");
         assert!(w8 * 4 < w1, "width-8 should hide most stalls: {w8} vs {w1}");
+    }
+
+    #[test]
+    fn arity_windows_are_mutually_consistent() {
+        // Pin the named constants to the 1-2-3-4 discipline's values: the
+        // validator, the fast-path gates and the rebalancers all read these,
+        // so a drift here silently changes the protocol. Update this test
+        // only together with a re-derivation of the windows' safety
+        // argument (see the constants' doc comments).
+        assert_eq!(MAX_ARITY, 7);
+        assert_eq!(INSERT_WINDOW, 4);
+        assert_eq!(ERASE_WINDOW, 3);
+        assert_eq!(SPLIT_THRESHOLD, INSERT_WINDOW + 1);
+        // a windowed insert leaves at most SPLIT_THRESHOLD children, which
+        // the validator's hard ceiling must tolerate (plus lazy-repair slack)
+        assert!(SPLIT_THRESHOLD <= MAX_ARITY);
+        // a windowed shrink leaves at least 2 children (no boost needed)
+        assert!(ERASE_WINDOW - 1 >= 2);
+    }
+
+    fn new_lf_k(leaf_cap: usize) -> DetSkiplist {
+        DetSkiplist::with_leaf_cap_on(
+            FindMode::LockFree,
+            1 << 14,
+            ArenaOptions::default(),
+            leaf_cap,
+        )
+    }
+
+    #[test]
+    fn k1_degenerates_to_single_key_terminals() {
+        let s = new_lf_k(1);
+        assert_eq!(s.leaf_cap(), 1);
+        let mut oracle = BTreeSet::new();
+        let mut rng = Rng::new(23);
+        for _ in 0..4_000 {
+            let k = rng.below(300);
+            match rng.below(8) {
+                0..=3 => assert_eq!(s.insert(k, k), oracle.insert(k)),
+                4..=5 => assert_eq!(s.erase(k), oracle.remove(&k)),
+                _ => assert_eq!(s.contains(k), oracle.contains(&k)),
+            }
+        }
+        let keys = s.check_invariants().unwrap();
+        assert_eq!(keys, oracle.into_iter().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunk_split_at_capacity_keeps_halves_above_floor() {
+        for cap in [8usize, 16, 32] {
+            let s = new_lf_k(cap);
+            // fill exactly one chunk, then overflow it: the split halves
+            // must both satisfy the K/4 floor the validator enforces
+            for k in 0..=(cap as u64) {
+                assert!(s.insert(k, k * 2), "cap {cap} insert {k}");
+                s.check_invariants().unwrap_or_else(|e| panic!("cap {cap} after {k}: {e}"));
+            }
+            for k in 0..=(cap as u64) {
+                assert_eq!(s.get(k), Some(k * 2));
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_merge_borrow_on_erase_churn() {
+        for cap in [8usize, 16] {
+            let s = new_lf_k(cap);
+            let n = (cap * 20) as u64;
+            for k in 0..n {
+                s.insert(k, k);
+            }
+            // erase a striped 3/4 of the keys: plenty of chunk underflows,
+            // so merges and borrows both fire; validate throughout
+            for k in 0..n {
+                if k % 4 != 3 {
+                    assert!(s.erase(k), "cap {cap} erase {k}");
+                }
+                if k % 16 == 0 {
+                    s.check_invariants()
+                        .unwrap_or_else(|e| panic!("cap {cap} after erase {k}: {e}"));
+                }
+            }
+            let keys = s.check_invariants().unwrap();
+            assert_eq!(keys, (0..n).filter(|k| k % 4 == 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn range_spans_chunk_boundaries() {
+        let s = new_lf_k(8);
+        for k in 0..200u64 {
+            s.insert(k * 2, k);
+        }
+        // a range fully inside one chunk, one spanning several, one
+        // spanning the whole structure
+        assert_eq!(s.range(4, 8), vec![(4, 2), (6, 3), (8, 4)]);
+        let wide = s.range(31, 333);
+        let want: Vec<(u64, u64)> =
+            (0..200u64).map(|k| (k * 2, k)).filter(|&(k, _)| (31..=333).contains(&k)).collect();
+        assert_eq!(wide, want);
+        assert_eq!(s.range(0, u64::MAX - 1).len(), 200);
+    }
+
+    #[test]
+    fn fused_runs_and_fingers_agree_across_leaf_caps() {
+        use crate::skiplist::BatchOp;
+        for cap in [1usize, 8, 16] {
+            let s = new_lf_k(cap);
+            let twin = new_lf_k(cap);
+            let mut rng = Rng::new(31 + cap as u64);
+            for round in 0..6 {
+                let mut ops = Vec::new();
+                for _ in 0..400 {
+                    let k = rng.below(900);
+                    ops.push(match rng.below(3) {
+                        0 => BatchOp::Insert(k, k ^ 3),
+                        1 => BatchOp::Erase(k),
+                        _ => BatchOp::Get(k),
+                    });
+                }
+                ops.sort_by_key(|o| o.key());
+                let mut got = vec![None; ops.len()];
+                s.apply_sorted_run(&ops, &mut |i, r| got[i] = Some(r));
+                for (i, op) in ops.iter().enumerate() {
+                    let want = match *op {
+                        BatchOp::Insert(k, v) => BatchReply::Applied(twin.insert(k, v)),
+                        BatchOp::Erase(k) => BatchReply::Applied(twin.erase(k)),
+                        BatchOp::Get(k) => BatchReply::Value(twin.get(k)),
+                    };
+                    assert_eq!(got[i], Some(want), "cap {cap} round {round} op {i} {op:?}");
+                }
+                assert_eq!(
+                    s.check_invariants().unwrap(),
+                    twin.check_invariants().unwrap(),
+                    "cap {cap} round {round} diverged"
+                );
+            }
+        }
     }
 }

@@ -49,10 +49,101 @@ use std::sync::atomic::{fence, AtomicBool, AtomicU32, AtomicU64, Ordering};
 
 use crate::mem::{ArenaNode, ArenaOptions, BlockArena, PoolStats};
 use crate::sync::{hi64, lo64, pack, AtomicU128, RwSpinLock};
+use crate::util::simd;
 
 /// Packed node link: `(gen << 32) | idx`. `SENTINEL` (0) is the shared
 /// self-referential tail/bottom sentinel of every list level.
 pub type NodeRef = u64;
+
+/// Hard upper bound on keys per terminal chunk (the fat-leaf plane's key
+/// and value arrays are sized/copied against this at compile time).
+pub const MAX_LEAF_CAP: usize = 32;
+
+/// Default terminal-chunk capacity: 16 keys = two 64-byte lines of keys
+/// (plus two of values), the sweet spot Table XV sweeps around.
+pub const DEFAULT_LEAF_CAP: usize = 16;
+
+/// Leaf-plane slot layout (all `AtomicU64` words): `[0]` seqlock version,
+/// `[1]` live key count, `[2 .. 2+K]` sorted keys, `[2+K .. 2+2K]` values
+/// (parallel array). The node's packed `(key, next)` word doubles as the
+/// chunk header's `(max_key, next)` — one atomic snapshot still routes the
+/// descent, and in-chunk state is versioned by the slot's seqlock word.
+const LEAF_VERSION: usize = 0;
+const LEAF_COUNT: usize = 1;
+const LEAF_KEYS: usize = 2;
+
+/// Words per leaf-plane slot for a `leaf_cap`-key chunk.
+#[inline]
+pub fn leaf_words_for(leaf_cap: usize) -> usize {
+    LEAF_KEYS + 2 * leaf_cap
+}
+
+/// A lock-free, seqlock-consistent probe of one terminal chunk: the fields
+/// a descent needs to either answer for `key` or keep walking right. All
+/// fields were read inside one version-stable window and generation-checked
+/// after it, so they describe a single moment of a live chunk.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkProbe {
+    /// Chunk coverage upper bound (== the node's packed key).
+    pub max: u64,
+    /// Next terminal chunk (the node's packed next).
+    pub next: NodeRef,
+    /// Smallest key in the chunk (`max` when the chunk is empty).
+    pub lo: u64,
+    /// Live keys in the chunk.
+    pub count: usize,
+    /// Value for `key` if the chunk holds it.
+    pub hit: Option<u64>,
+}
+
+/// Writer-side seqlock window over one chunk's leaf slot. Opened only
+/// while holding the chunk's (parent-leaf-serialized) write lock; data
+/// stores inside the window are relaxed, and dropping the guard publishes
+/// them with a release store of the even version. Lock-free readers that
+/// overlapped the window observe an odd or changed version and retry.
+pub struct ChunkWrite<'a> {
+    leaf: &'a [AtomicU64],
+    cap: usize,
+    v: u64,
+}
+
+impl ChunkWrite<'_> {
+    #[inline]
+    pub fn set_count(&self, count: usize) {
+        debug_assert!(count <= self.cap);
+        self.leaf[LEAF_COUNT].store(count as u64, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn set_key(&self, i: usize, key: u64) {
+        debug_assert!(i < self.cap);
+        self.leaf[LEAF_KEYS + i].store(key, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn set_val(&self, i: usize, val: u64) {
+        debug_assert!(i < self.cap);
+        self.leaf[LEAF_KEYS + self.cap + i].store(val, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn key(&self, i: usize) -> u64 {
+        self.leaf[LEAF_KEYS + i].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn val(&self, i: usize) -> u64 {
+        self.leaf[LEAF_KEYS + self.cap + i].load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ChunkWrite<'_> {
+    fn drop(&mut self) {
+        // Release: orders every relaxed data store in the window before the
+        // even version becomes visible.
+        self.leaf[LEAF_VERSION].store(self.v.wrapping_add(2), Ordering::Release);
+    }
+}
 
 /// The sentinel link: index 0, generation 0 (never retired).
 pub const SENTINEL: NodeRef = 0;
@@ -178,6 +269,9 @@ impl<'a> NodeView<'a> {
 /// typed façade over the unified [`BlockArena`].
 pub struct NodeArena {
     arena: BlockArena<Node>,
+    /// Keys per terminal chunk; 0 = no leaf plane (non-chunked users:
+    /// the split-order table shares this arena type).
+    leaf_cap: usize,
 }
 
 impl NodeArena {
@@ -190,21 +284,42 @@ impl NodeArena {
     /// Like [`NodeArena::new`] with explicit placement/magazine options
     /// (per-shard arenas are homed on their shard's NUMA node).
     pub fn with_options(block_size: usize, max_blocks: usize, opts: ArenaOptions) -> NodeArena {
-        Self::finish(BlockArena::with_options(block_size, max_blocks, opts))
+        let leaf_cap = if opts.leaf_words == 0 { 0 } else { (opts.leaf_words - LEAF_KEYS) / 2 };
+        Self::finish(BlockArena::with_options(block_size, max_blocks, opts), leaf_cap)
     }
 
     /// Arena sized by the shared §V capacity policy
     /// ([`BlockArena::for_capacity`]) for up to `capacity` live nodes.
     pub fn for_capacity(capacity: usize, opts: ArenaOptions) -> NodeArena {
-        Self::finish(BlockArena::for_capacity(capacity, opts))
+        Self::finish(BlockArena::for_capacity(capacity, opts), 0)
     }
 
-    fn finish(arena: BlockArena<Node>) -> NodeArena {
-        let a = NodeArena { arena };
+    /// Capacity-sized arena with a fat-leaf plane: every slot additionally
+    /// carries a `leaf_words_for(leaf_cap)`-word chunk (version, count,
+    /// keys, values) in the [`BlockArena`]'s third plane.
+    pub fn for_capacity_chunks(capacity: usize, opts: ArenaOptions, leaf_cap: usize) -> NodeArena {
+        assert!(
+            (1..=MAX_LEAF_CAP).contains(&leaf_cap),
+            "leaf_cap {leaf_cap} outside 1..={MAX_LEAF_CAP}"
+        );
+        let opts = opts.with_leaf_words(leaf_words_for(leaf_cap));
+        Self::finish(BlockArena::for_capacity(capacity, opts), leaf_cap)
+    }
+
+    fn finish(arena: BlockArena<Node>, leaf_cap: usize) -> NodeArena {
+        let a = NodeArena { arena, leaf_cap };
         // slot 0: the sentinel — key MAX, next/bottom self, never retired.
+        // A non-zero slot here would silently corrupt every SENTINEL link,
+        // so this is a hard assert even in release builds.
         let s = a.alloc(u64::MAX, SENTINEL, SENTINEL, 0, 0);
-        debug_assert_eq!(s, SENTINEL);
+        assert_eq!(s, SENTINEL, "sentinel must land in slot 0, generation 0");
         a
+    }
+
+    /// Keys per terminal chunk (0 when the arena has no leaf plane).
+    #[inline]
+    pub fn leaf_cap(&self) -> usize {
+        self.leaf_cap
     }
 
     /// Resolve a link; `None` if the node has been retired/recycled since
@@ -295,6 +410,200 @@ impl NodeArena {
         self.arena.retire_slot(ref_idx(r));
     }
 
+    // ------------------------------------------------------------------
+    // Fat-leaf terminal chunks (leaf plane; `leaf_cap > 0` arenas only)
+    // ------------------------------------------------------------------
+
+    #[inline]
+    fn leaf(&self, r: NodeRef) -> &[AtomicU64] {
+        debug_assert!(self.leaf_cap > 0, "arena has no leaf plane");
+        self.arena.leaf(ref_idx(r))
+    }
+
+    /// Initialize a *pre-publication* chunk slot (count + sorted keys +
+    /// values), ending with a release fence so the subsequent link store
+    /// that publishes the chunk carries a happens-before edge to every
+    /// word written here (same discipline as [`NodeArena::alloc`]).
+    ///
+    /// No seqlock window: the chunk is unreachable until linked, and a
+    /// stale reader still probing this recycled slot discards its result on
+    /// the post-window generation re-check.
+    pub fn chunk_init(&self, r: NodeRef, keys: &[u64], vals: &[u64]) {
+        debug_assert_eq!(keys.len(), vals.len());
+        debug_assert!(keys.len() <= self.leaf_cap);
+        let leaf = self.leaf(r);
+        leaf[LEAF_COUNT].store(keys.len() as u64, Ordering::Relaxed);
+        for (i, &k) in keys.iter().enumerate() {
+            leaf[LEAF_KEYS + i].store(k, Ordering::Relaxed);
+        }
+        for (i, &v) in vals.iter().enumerate() {
+            leaf[LEAF_KEYS + self.leaf_cap + i].store(v, Ordering::Relaxed);
+        }
+        fence(Ordering::Release);
+    }
+
+    /// Allocate and initialize a fresh terminal chunk holding `keys`/`vals`
+    /// (sorted, non-empty), with `(max_key, next)` as its packed header.
+    /// The caller publishes it by linking (predecessor `(key, next)` store
+    /// or parent `bottom` store).
+    pub fn alloc_chunk(&self, keys: &[u64], vals: &[u64], next: NodeRef) -> NodeRef {
+        debug_assert!(!keys.is_empty());
+        let max = *keys.last().unwrap();
+        let r = self.alloc(max, next, SENTINEL, 0, 0);
+        self.chunk_init(r, keys, vals);
+        r
+    }
+
+    /// Open a writer-side seqlock window on `r`'s chunk. Caller must hold
+    /// the chunk's write lock (all terminal locks are taken under the
+    /// parent leaf's lock, so windows never nest or race each other).
+    /// Mutations — including the node's own `(key, next)` header when the
+    /// chunk max changes — go inside the window; dropping the guard
+    /// publishes them.
+    pub fn chunk_write(&self, r: NodeRef) -> ChunkWrite<'_> {
+        let leaf = self.leaf(r);
+        let v = leaf[LEAF_VERSION].load(Ordering::Relaxed);
+        debug_assert_eq!(v & 1, 0, "chunk write window already open");
+        leaf[LEAF_VERSION].store(v.wrapping_add(1), Ordering::Relaxed);
+        // Readers that observe any data store below must also observe the
+        // odd version: the release fence pairs with the reader's acquire
+        // fence (crossbeam-style seqlock argument).
+        fence(Ordering::Release);
+        ChunkWrite { leaf, cap: self.leaf_cap, v }
+    }
+
+    /// Writer-side chunk key count (caller holds the chunk's lock).
+    #[inline]
+    pub fn chunk_count(&self, r: NodeRef) -> usize {
+        self.leaf(r)[LEAF_COUNT].load(Ordering::Relaxed) as usize
+    }
+
+    /// Writer-side key read (caller holds the chunk's lock).
+    #[inline]
+    pub fn chunk_key(&self, r: NodeRef, i: usize) -> u64 {
+        self.leaf(r)[LEAF_KEYS + i].load(Ordering::Relaxed)
+    }
+
+    /// Writer-side value read (caller holds the chunk's lock).
+    #[inline]
+    pub fn chunk_val(&self, r: NodeRef, i: usize) -> u64 {
+        self.leaf(r)[LEAF_KEYS + self.leaf_cap + i].load(Ordering::Relaxed)
+    }
+
+    /// Writer-side copy of the chunk's live keys into `buf`; returns the
+    /// count. The copy feeds the SIMD rank ([`crate::util::simd::rank`]).
+    pub fn chunk_keys_into(&self, r: NodeRef, buf: &mut [u64; MAX_LEAF_CAP]) -> usize {
+        let leaf = self.leaf(r);
+        let count = (leaf[LEAF_COUNT].load(Ordering::Relaxed) as usize).min(self.leaf_cap);
+        for (i, slot) in buf.iter_mut().enumerate().take(count) {
+            *slot = leaf[LEAF_KEYS + i].load(Ordering::Relaxed);
+        }
+        count
+    }
+
+    /// Lock-free consistent probe of chunk `r` for `key`: retries the
+    /// seqlock until a version-stable window is read, then re-checks the
+    /// generation so a retire/recycle that slipped under the read (the
+    /// version word alone cannot rule reuse out) voids the result.
+    ///
+    /// `None` means the chunk is gone (stale link) or a writer interfered
+    /// persistently — the caller restarts its descent, exactly like a
+    /// failed `resolve`.
+    pub fn chunk_probe(&self, r: NodeRef, key: u64) -> Option<ChunkProbe> {
+        let idx = ref_idx(r);
+        let cold = self.arena.cold(idx);
+        if cold.gen.load(Ordering::Acquire) != ref_gen(r) {
+            return None;
+        }
+        let leaf = self.leaf(r);
+        let hot = self.arena.hot(idx);
+        let mut keys = [0u64; MAX_LEAF_CAP];
+        for _ in 0..64 {
+            let v1 = leaf[LEAF_VERSION].load(Ordering::Acquire);
+            if v1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            // Everything the decision needs is read inside the window: the
+            // packed (max, next) header AND the array words, so the routing
+            // decision and the in-chunk answer come from one version.
+            let kn = hot.kn.load();
+            let count = leaf[LEAF_COUNT].load(Ordering::Relaxed) as usize;
+            if count > self.leaf_cap {
+                // torn count (window already invalid); never index with it
+                std::hint::spin_loop();
+                continue;
+            }
+            for (i, slot) in keys.iter_mut().enumerate().take(count) {
+                *slot = leaf[LEAF_KEYS + i].load(Ordering::Relaxed);
+            }
+            let rank = simd::rank(&keys[..count], key);
+            let hit = if rank < count && keys[rank] == key {
+                Some(leaf[LEAF_KEYS + self.leaf_cap + rank].load(Ordering::Relaxed))
+            } else {
+                None
+            };
+            fence(Ordering::Acquire);
+            if leaf[LEAF_VERSION].load(Ordering::Relaxed) != v1 {
+                continue;
+            }
+            // Version-stable, but the slot may have been retired and reused
+            // wholesale since `r` was minted: the generation is the ABA
+            // authority (retire bumps it before any reuse).
+            if cold.gen.load(Ordering::Acquire) != ref_gen(r) {
+                return None;
+            }
+            let max = hi64(kn);
+            let lo = if count > 0 { keys[0] } else { max };
+            return Some(ChunkProbe { max, next: lo64(kn), lo, count, hit });
+        }
+        None
+    }
+
+    /// Lock-free consistent snapshot of chunk `r`'s full contents (for
+    /// range scans): `(count, max, next)` plus `keys`/`vals` filled in.
+    /// Same validation protocol as [`NodeArena::chunk_probe`].
+    pub fn chunk_snapshot(
+        &self,
+        r: NodeRef,
+        keys: &mut [u64; MAX_LEAF_CAP],
+        vals: &mut [u64; MAX_LEAF_CAP],
+    ) -> Option<(usize, u64, NodeRef)> {
+        let idx = ref_idx(r);
+        let cold = self.arena.cold(idx);
+        if cold.gen.load(Ordering::Acquire) != ref_gen(r) {
+            return None;
+        }
+        let leaf = self.leaf(r);
+        let hot = self.arena.hot(idx);
+        for _ in 0..64 {
+            let v1 = leaf[LEAF_VERSION].load(Ordering::Acquire);
+            if v1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let kn = hot.kn.load();
+            let count = leaf[LEAF_COUNT].load(Ordering::Relaxed) as usize;
+            if count > self.leaf_cap {
+                std::hint::spin_loop();
+                continue;
+            }
+            for i in 0..count {
+                keys[i] = leaf[LEAF_KEYS + i].load(Ordering::Relaxed);
+                vals[i] = leaf[LEAF_KEYS + self.leaf_cap + i].load(Ordering::Relaxed);
+            }
+            fence(Ordering::Acquire);
+            if leaf[LEAF_VERSION].load(Ordering::Relaxed) != v1 {
+                continue;
+            }
+            if cold.gen.load(Ordering::Acquire) != ref_gen(r) {
+                return None;
+            }
+            return Some((count, hi64(kn), lo64(kn)));
+        }
+        None
+    }
+
     /// Nodes currently materialized (capacity in nodes).
     pub fn capacity(&self) -> u64 {
         self.arena.capacity()
@@ -325,16 +634,92 @@ mod tests {
     #[test]
     fn hot_plane_is_one_aligned_cache_line() {
         // compile-time assert made observable, plus the runtime layout of
-        // actual slots: consecutive hot slots are exactly 64 bytes apart.
+        // actual slots: each plane packs densely at its *own* width — the
+        // hot plane at exactly one aligned 64-byte line per slot, the leaf
+        // plane (when present) at its configured multi-line word stride.
         assert_eq!(std::mem::size_of::<NodeHot>(), 64);
         assert_eq!(std::mem::align_of::<NodeHot>(), 64);
-        let a = NodeArena::new(16, 16);
+        let hot_stride = std::mem::size_of::<NodeHot>();
+        let a = NodeArena::for_capacity_chunks(256, ArenaOptions::default(), DEFAULT_LEAF_CAP);
         let r1 = a.alloc(1, SENTINEL, SENTINEL, 0, 0);
         let r2 = a.alloc(2, SENTINEL, SENTINEL, 0, 0);
         let p1 = a.node(r1).hot as *const NodeHot as usize;
         let p2 = a.node(r2).hot as *const NodeHot as usize;
         assert_eq!(p1 % 64, 0, "hot slots are line-aligned");
-        assert_eq!(p2 - p1, 64, "hot slots are densely packed, one line each");
+        assert_eq!(p2 - p1, hot_stride, "hot slots are densely packed at the hot width");
+        // leaf plane: stride = leaf_words_for(K) words = (2 + 2K) * 8 bytes
+        // (multi-cache-line at the default K — the whole point of fat leaves)
+        let leaf_stride = leaf_words_for(a.leaf_cap()) * 8;
+        assert!(leaf_stride > 64, "default-K leaf slots span multiple lines");
+        let l1 = a.leaf(r1).as_ptr() as usize;
+        let l2 = a.leaf(r2).as_ptr() as usize;
+        assert_eq!(l2 - l1, leaf_stride, "leaf slots are densely packed at the leaf width");
+        assert_eq!(a.leaf(r1).len(), leaf_words_for(a.leaf_cap()));
+        // arenas without a leaf plane still pack the hot plane identically
+        let b = NodeArena::new(16, 16);
+        let q1 = b.alloc(1, SENTINEL, SENTINEL, 0, 0);
+        let q2 = b.alloc(2, SENTINEL, SENTINEL, 0, 0);
+        let h1 = b.node(q1).hot as *const NodeHot as usize;
+        assert_eq!((b.node(q2).hot as *const NodeHot as usize) - h1, hot_stride);
+    }
+
+    #[test]
+    fn chunk_init_probe_and_snapshot_roundtrip() {
+        let a = NodeArena::for_capacity_chunks(256, ArenaOptions::default(), 8);
+        assert_eq!(a.leaf_cap(), 8);
+        let keys = [10u64, 20, 30, 40, 50];
+        let vals = [1u64, 2, 3, 4, 5];
+        let r = a.alloc_chunk(&keys, &vals, SENTINEL);
+        let n = a.node(r);
+        assert_eq!(n.key(), 50, "chunk header key = max key");
+        assert_eq!(a.chunk_count(r), 5);
+        assert_eq!(a.chunk_key(r, 2), 30);
+        assert_eq!(a.chunk_val(r, 2), 3);
+        // probe: hit, miss-below, miss-between, miss-above
+        let p = a.chunk_probe(r, 30).unwrap();
+        assert_eq!((p.hit, p.lo, p.max, p.count), (Some(3), 10, 50, 5));
+        assert_eq!(a.chunk_probe(r, 5).unwrap().hit, None);
+        assert_eq!(a.chunk_probe(r, 35).unwrap().hit, None);
+        assert_eq!(a.chunk_probe(r, 60).unwrap().hit, None);
+        let mut ks = [0u64; MAX_LEAF_CAP];
+        let mut vs = [0u64; MAX_LEAF_CAP];
+        let (count, max, next) = a.chunk_snapshot(r, &mut ks, &mut vs).unwrap();
+        assert_eq!((count, max, next), (5, 50, SENTINEL));
+        assert_eq!(&ks[..5], &keys);
+        assert_eq!(&vs[..5], &vals);
+    }
+
+    #[test]
+    fn chunk_write_window_blocks_readers_until_closed() {
+        let a = NodeArena::for_capacity_chunks(256, ArenaOptions::default(), 4);
+        let r = a.alloc_chunk(&[1, 2], &[10, 20], SENTINEL);
+        {
+            let w = a.chunk_write(r);
+            // window open (odd version): a lock-free probe must refuse to
+            // return rather than expose the half-written state
+            w.set_key(2, 3);
+            w.set_val(2, 30);
+            w.set_count(3);
+            assert!(a.chunk_probe(r, 2).is_none(), "open window must not leak");
+        }
+        let p = a.chunk_probe(r, 3).unwrap();
+        assert_eq!(p.hit, Some(30));
+        assert_eq!(p.count, 3);
+    }
+
+    #[test]
+    fn chunk_probe_rejects_retired_generation() {
+        let a = NodeArena::for_capacity_chunks(256, ArenaOptions::default(), 4);
+        let r = a.alloc_chunk(&[7], &[70], SENTINEL);
+        a.node(r).cold.mark.store(true, Ordering::Release);
+        a.retire(r);
+        assert!(a.chunk_probe(r, 7).is_none());
+        assert!(a.chunk_snapshot(r, &mut [0; MAX_LEAF_CAP], &mut [0; MAX_LEAF_CAP]).is_none());
+        // the recycled slot serves a fresh chunk under a new generation
+        let r2 = a.alloc_chunk(&[9], &[90], SENTINEL);
+        assert_eq!(ref_idx(r), ref_idx(r2));
+        assert!(a.chunk_probe(r, 7).is_none(), "old link stays dead");
+        assert_eq!(a.chunk_probe(r2, 9).unwrap().hit, Some(90));
     }
 
     #[test]

@@ -7,4 +7,5 @@ pub mod cli;
 pub mod miniprop;
 pub mod prefetch;
 pub mod rng;
+pub mod simd;
 pub mod stats;

@@ -1,0 +1,379 @@
+//! Fat-leaf terminal-chunk correctness tests (run in CI as the release
+//! fat-leaf stress step: `CDSKL_SCALE=... cargo test --release -q fatleaf_`).
+//!
+//! Every swept leaf capacity K must be behaviourally invisible: a
+//! `DetSkiplist` at K ∈ {1, 8, 16} on both find modes must track a
+//! sequential `BTreeMap` oracle through point churn, fused sorted runs,
+//! the interleaved engine and cross-chunk range scans, keep its structural
+//! invariants (per-chunk occupancy ∈ [K/4, K], in-chunk sort, 1-2-3-4
+//! arity) through split/merge boundary hammering, and survive concurrent
+//! mixed churn with a quiescent full validation.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use cdskl::mem::ArenaOptions;
+use cdskl::skiplist::{BatchOp, BatchReply, DetSkiplist, FindMode};
+use cdskl::util::rng::Rng;
+
+/// CDSKL_SCALE divides the op counts, mirroring the experiment harness
+/// (CI runs release with CDSKL_SCALE=10 for a deeper soak).
+fn scaled(n: u64) -> u64 {
+    let scale = std::env::var("CDSKL_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(40u64);
+    (n / scale.max(1)).clamp(500, 200_000)
+}
+
+fn new_sl(mode: FindMode, cap: usize) -> DetSkiplist {
+    DetSkiplist::with_leaf_cap_on(mode, 1 << 15, ArenaOptions::default(), cap)
+}
+
+const CAPS: [usize; 3] = [1, 8, 16];
+
+/// Point insert/get/erase churn against the oracle, with periodic and
+/// final structural validation, at every swept K on both find modes.
+#[test]
+fn fatleaf_point_churn_matches_btreemap_oracle() {
+    let ops = scaled(40_000);
+    for mode in [FindMode::LockFree, FindMode::ReadLocked] {
+        for cap in CAPS {
+            let s = new_sl(mode, cap);
+            let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+            let mut rng = Rng::new(0xFA7 + cap as u64);
+            for i in 0..ops {
+                // tight key space: constant re-insert/erase collisions
+                let k = rng.below(ops / 8 + 16) + 1;
+                match rng.below(5) {
+                    0 | 1 | 2 => {
+                        let fresh = !oracle.contains_key(&k);
+                        if fresh {
+                            oracle.insert(k, k ^ 7);
+                        }
+                        assert_eq!(s.insert(k, k ^ 7), fresh, "{mode:?} K={cap} insert {k}");
+                    }
+                    3 => {
+                        assert_eq!(
+                            s.erase(k),
+                            oracle.remove(&k).is_some(),
+                            "{mode:?} K={cap} erase {k}"
+                        );
+                    }
+                    _ => {
+                        assert_eq!(
+                            s.get(k),
+                            oracle.get(&k).copied(),
+                            "{mode:?} K={cap} get {k}"
+                        );
+                    }
+                }
+                if i % 4096 == 0 {
+                    s.check_invariants().unwrap_or_else(|e| {
+                        panic!("{mode:?} K={cap} invariants broke at op {i}: {e}")
+                    });
+                }
+            }
+            assert_eq!(s.len(), oracle.len() as u64, "{mode:?} K={cap}");
+            let keys = s.check_invariants().expect("final validation");
+            let want: Vec<u64> = oracle.keys().copied().collect();
+            assert_eq!(keys, want, "{mode:?} K={cap}: terminal walk vs oracle");
+        }
+    }
+}
+
+/// The fused sorted-run path must produce the same replies and end state
+/// as the equivalent per-key loop (a twin list), at every K on both modes
+/// — runs mix all three op types with duplicate keys.
+#[test]
+fn fatleaf_fused_runs_match_point_twin() {
+    let rounds = 6;
+    let per_round = scaled(12_000).min(4_000) as usize;
+    for mode in [FindMode::LockFree, FindMode::ReadLocked] {
+        for cap in CAPS {
+            let fused = new_sl(mode, cap);
+            let twin = new_sl(mode, cap);
+            let mut rng = Rng::new(0xF5ED + cap as u64);
+            for round in 0..rounds {
+                let mut run: Vec<BatchOp> = (0..per_round)
+                    .map(|_| {
+                        let k = rng.below(per_round as u64 * 2 + 8) + 1;
+                        match rng.below(4) {
+                            0 | 1 => BatchOp::Insert(k, k ^ 9),
+                            2 => BatchOp::Erase(k),
+                            _ => BatchOp::Get(k),
+                        }
+                    })
+                    .collect();
+                run.sort_by_key(|op| op.key());
+                let mut fused_replies = vec![BatchReply::Applied(false); run.len()];
+                fused.apply_sorted_run(&run, &mut |i, r| fused_replies[i] = r);
+                for (i, op) in run.iter().enumerate() {
+                    let want = match *op {
+                        BatchOp::Insert(k, v) => BatchReply::Applied(twin.insert(k, v)),
+                        BatchOp::Erase(k) => BatchReply::Applied(twin.erase(k)),
+                        BatchOp::Get(k) => BatchReply::Value(twin.get(k)),
+                    };
+                    assert_eq!(
+                        fused_replies[i], want,
+                        "{mode:?} K={cap} round {round} op {i} ({op:?})"
+                    );
+                }
+                let fk = fused.check_invariants().expect("fused invariants");
+                let tk = twin.check_invariants().expect("twin invariants");
+                assert_eq!(fk, tk, "{mode:?} K={cap} round {round}: end states diverged");
+            }
+        }
+    }
+}
+
+/// The interleaved engine (scattered-batch MLP path) must agree with the
+/// oracle for lookups (`get_many`) and with the fused path for mixed runs
+/// (`apply_interleaved`), at every K.
+#[test]
+fn fatleaf_interleaved_matches_oracle() {
+    let n = scaled(20_000);
+    for cap in CAPS {
+        let s = new_sl(FindMode::LockFree, cap);
+        let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+        // scattered resident set (odd stride keeps neighbours far apart)
+        for i in 0..n {
+            let k = i * 173 + 5;
+            assert!(s.insert(k, i));
+            oracle.insert(k, i);
+        }
+        // unsorted scattered probes, half misses, through every width
+        let mut rng = Rng::new(0x111 + cap as u64);
+        let probes: Vec<u64> = (0..scaled(8_000)).map(|_| rng.below(n * 173 + 10)).collect();
+        for width in [1usize, 4, 8] {
+            let got = s.get_many(&probes, width);
+            for (i, &k) in probes.iter().enumerate() {
+                assert_eq!(got[i], oracle.get(&k).copied(), "K={cap} width {width} get {k}");
+            }
+        }
+        // mixed interleaved run vs its oracle effect
+        let mut run: Vec<BatchOp> = (0..scaled(4_000))
+            .map(|_| {
+                let k = rng.below(n * 173 + 10);
+                match rng.below(3) {
+                    0 => BatchOp::Insert(k, k ^ 1),
+                    1 => BatchOp::Erase(k),
+                    _ => BatchOp::Get(k),
+                }
+            })
+            .collect();
+        run.sort_by_key(|op| op.key());
+        s.apply_interleaved(&run, 8, &mut |i, r| {
+            let want = match run[i] {
+                BatchOp::Insert(k, v) => {
+                    let fresh = !oracle.contains_key(&k);
+                    if fresh {
+                        oracle.insert(k, v);
+                    }
+                    BatchReply::Applied(fresh)
+                }
+                BatchOp::Erase(k) => BatchReply::Applied(oracle.remove(&k).is_some()),
+                BatchOp::Get(k) => BatchReply::Value(oracle.get(&k).copied()),
+            };
+            assert_eq!(r, want, "K={cap} interleaved op {i} ({:?})", run[i]);
+        });
+        assert_eq!(s.len(), oracle.len() as u64, "K={cap}");
+        s.check_invariants().expect("post-interleave validation");
+    }
+}
+
+/// Range scans crossing many chunk boundaries — including ranges starting
+/// and ending mid-chunk, empty ranges and full sweeps — vs the oracle.
+#[test]
+fn fatleaf_ranges_span_chunk_boundaries() {
+    let n = scaled(10_000);
+    for cap in CAPS {
+        let s = new_sl(FindMode::LockFree, cap);
+        let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut rng = Rng::new(0x4A6E + cap as u64);
+        for _ in 0..n {
+            let k = rng.below(n * 3) + 1;
+            if s.insert(k, k * 2) {
+                oracle.insert(k, k * 2);
+            }
+        }
+        // punch holes so chunk fills vary across the list
+        for _ in 0..n / 3 {
+            let k = rng.below(n * 3) + 1;
+            if s.erase(k) {
+                oracle.remove(&k);
+            }
+        }
+        for _ in 0..200 {
+            let lo = rng.below(n * 3);
+            let hi = lo + rng.below(cap as u64 * 40 + 64);
+            let want: Vec<(u64, u64)> =
+                oracle.range(lo..=hi).map(|(&k, &v)| (k, v)).collect();
+            assert_eq!(s.range(lo, hi), want, "K={cap} range [{lo}, {hi}]");
+        }
+        assert!(s.range(5, 4).is_empty(), "inverted bounds are empty");
+        let all: Vec<(u64, u64)> = oracle.iter().map(|(&k, &v)| (k, v)).collect();
+        assert_eq!(s.range(0, u64::MAX - 2), all, "K={cap} full sweep");
+    }
+}
+
+/// Boundary hammer: ascending fill (every chunk split fires at exactly
+/// K full) then descending erase (merge/borrow fires at exactly K/4),
+/// validating the occupancy invariant at tight intervals throughout.
+#[test]
+fn fatleaf_split_merge_boundary_hammer() {
+    let n = scaled(6_000);
+    for cap in [8usize, 16, 32] {
+        let s = new_sl(FindMode::LockFree, cap);
+        for i in 0..n {
+            assert!(s.insert(i + 1, i));
+            if i % (cap as u64) == cap as u64 - 1 {
+                s.check_invariants()
+                    .unwrap_or_else(|e| panic!("K={cap} fill at {i}: {e}"));
+            }
+        }
+        // descending erase drains the rightmost chunks first: constant
+        // underflow at the moving boundary
+        for i in (0..n).rev() {
+            assert!(s.erase(i + 1), "K={cap} erase {}", i + 1);
+            if i % (cap as u64) == 0 {
+                s.check_invariants()
+                    .unwrap_or_else(|e| panic!("K={cap} drain at {i}: {e}"));
+            }
+        }
+        assert_eq!(s.len(), 0);
+        // striped erase from a fresh fill: merges between interior chunks
+        for i in 0..n {
+            s.insert(i + 1, i);
+        }
+        let mut left = n;
+        for i in 0..n {
+            if i % 4 != 3 {
+                assert!(s.erase(i + 1));
+                left -= 1;
+            }
+            if i % 512 == 0 {
+                s.check_invariants()
+                    .unwrap_or_else(|e| panic!("K={cap} stripe at {i}: {e}"));
+            }
+        }
+        assert_eq!(s.len(), left);
+        s.check_invariants().expect("post-stripe validation");
+    }
+}
+
+/// Concurrent mixed churn at fat-leaf capacities: disjoint per-thread key
+/// ranges (every reply assertable) plus a shared contended stripe, on both
+/// find modes, with a quiescent full validation at the end.
+#[test]
+fn fatleaf_concurrent_churn_validates_quiescently() {
+    let per_thread = scaled(8_000).min(6_000);
+    for mode in [FindMode::LockFree, FindMode::ReadLocked] {
+        for cap in [8usize, 16] {
+            let s = Arc::new(DetSkiplist::with_leaf_cap_on(
+                mode,
+                1 << 16,
+                ArenaOptions::default(),
+                cap,
+            ));
+            let threads = 6u64;
+            std::thread::scope(|scope| {
+                for t in 0..threads {
+                    let s = s.clone();
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(0xC0C0 + t);
+                        let base = (t + 1) << 40; // disjoint range per thread
+                        let mut mine: BTreeMap<u64, u64> = BTreeMap::new();
+                        for i in 0..per_thread {
+                            let k = base + rng.below(per_thread / 2 + 8);
+                            match rng.below(4) {
+                                0 | 1 => {
+                                    let fresh = !mine.contains_key(&k);
+                                    if fresh {
+                                        mine.insert(k, t);
+                                    }
+                                    assert_eq!(s.insert(k, t), fresh, "t{t} insert {k}");
+                                }
+                                2 => {
+                                    assert_eq!(
+                                        s.erase(k),
+                                        mine.remove(&k).is_some(),
+                                        "t{t} erase {k}"
+                                    );
+                                }
+                                _ => {
+                                    assert_eq!(
+                                        s.get(k),
+                                        mine.get(&k).copied(),
+                                        "t{t} get {k}"
+                                    );
+                                }
+                            }
+                            // shared stripe: pure contention, no asserts on
+                            // outcome, but values must carry the writer id
+                            let sk = rng.below(64);
+                            if i % 3 == 0 {
+                                s.insert(sk, sk);
+                            } else if let Some(v) = s.get(sk) {
+                                assert_eq!(v, sk, "shared key {sk} tore");
+                            }
+                        }
+                        mine.len() as u64
+                    });
+                }
+            });
+            s.check_invariants()
+                .unwrap_or_else(|e| panic!("{mode:?} K={cap} quiescent validation: {e}"));
+        }
+    }
+}
+
+/// Concurrent fused runs from several threads over disjoint key stripes
+/// (the owner-side combining shape), then full validation — exercises
+/// chunk split/merge under the run path's window gating concurrently.
+#[test]
+fn fatleaf_concurrent_fused_runs() {
+    let per_run = scaled(4_000).min(2_000) as usize;
+    for cap in [8usize, 16] {
+        let s = Arc::new(DetSkiplist::with_leaf_cap_on(
+            FindMode::LockFree,
+            1 << 16,
+            ArenaOptions::default(),
+            cap,
+        ));
+        let threads = 4u64;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let s = s.clone();
+                scope.spawn(move || {
+                    let base = (t + 1) << 40;
+                    let mut rng = Rng::new(0xF00D + t);
+                    for round in 0..6u64 {
+                        let mut run: Vec<BatchOp> = (0..per_run)
+                            .map(|_| {
+                                let k = base + rng.below(per_run as u64 * 2);
+                                if round % 2 == 0 || rng.below(3) > 0 {
+                                    BatchOp::Insert(k, t)
+                                } else {
+                                    BatchOp::Erase(k)
+                                }
+                            })
+                            .collect();
+                        run.sort_by_key(|op| op.key());
+                        let mut applied = 0u64;
+                        s.apply_sorted_run(&run, &mut |_, r| {
+                            if let BatchReply::Applied(true) = r {
+                                applied += 1;
+                            }
+                        });
+                        let _ = applied;
+                    }
+                });
+            }
+        });
+        let keys = s.check_invariants().expect("post-run validation");
+        assert_eq!(keys.len() as u64, s.len(), "walk vs len");
+        // every surviving key must carry its stripe owner's id
+        for &k in keys.iter() {
+            let owner = (k >> 40) - 1;
+            assert_eq!(s.get(k), Some(owner), "key {k} crossed stripes");
+        }
+    }
+}
