@@ -1,0 +1,17 @@
+//! Bench for Table XVI (new, beyond the paper): fat inner nodes —
+//! throughput and node derefs/op over routing-block capacity
+//! F ∈ {1, 2, 4, 8, 16}, Direct (point `get`) and Delegated
+//! (combiner-dispatched scattered probes). Self-asserts a strict deref
+//! cut at F ≥ 4 in both modes and BTreeMap-oracle agreement for all
+//! eight store kinds at every F.
+//!
+//! `cargo bench --bench table16_fatinner -- --smoke` runs the CI-sized smoke.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(100);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table16_fatinner (fat inner nodes, Table XVI)\n");
+    let tables = vec![cdskl::experiments::t16_fatinner(&cfg, &router)];
+    common::emit("table16_fatinner", &cfg, &tables);
+}

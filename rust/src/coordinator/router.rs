@@ -397,7 +397,9 @@ const INTERLEAVE_MAX_W: usize = 32;
 
 /// `true` when a key-sorted run is dominated by clustered keys: at least
 /// half of the adjacent gaps are within `gap` (the target shard's
-/// [`crate::coordinator::KvStore::cluster_gap`]). The combiner's per-drain
+/// [`crate::coordinator::KvStore::cluster_gap`] — leaf-width × routing-block
+/// arity for the fat-node skiplists, so wider terminals *and* wider inner
+/// blocks both widen what counts as clustered). The combiner's per-drain
 /// dispatch test — clustered windows keep the PR-5 fused path, scattered
 /// ones go to the interleaved engine.
 fn run_is_clustered(run: &[BatchOp], gap: u64) -> bool {
@@ -1471,11 +1473,18 @@ mod tests {
     fn cluster_dispatch_is_gap_relative() {
         // same run, different thresholds: a stride-100 run is scattered
         // under the flat default but clustered once the gap widens past the
-        // stride (what a fat-leaf shard with a bigger leaf_cap reports)
-        use crate::coordinator::store::FLAT_CLUSTER_GAP;
+        // stride (what a fat-node shard with a bigger leaf_cap or a wider
+        // routing block reports)
+        use crate::coordinator::store::{KvStore, FLAT_CLUSTER_GAP};
         let run: Vec<BatchOp> = (0..64u64).map(|i| BatchOp::Get(i * 100)).collect();
         assert!(!run_is_clustered(&run, FLAT_CLUSTER_GAP));
         assert!(run_is_clustered(&run, 128));
+        // the default det shard's gap (leaf 16 × inner 8 = 128) classifies
+        // the stride-100 run as clustered where the flat default did not —
+        // the recalibration that keeps block-spanning runs on the fused path
+        let det = StoreKind::DetSkiplistLf.build(1 << 10);
+        assert_eq!(det.cluster_gap(), 128);
+        assert!(run_is_clustered(&run, det.cluster_gap()));
         // short runs always fuse regardless of gap
         let short: Vec<BatchOp> = (0..4u64).map(|i| BatchOp::Get(i << 20)).collect();
         assert!(run_is_clustered(&short, 1));

@@ -267,10 +267,13 @@ impl KvStore for DetSkiplist {
         DetSkiplist::set_finger_cache(self, on)
     }
     fn cluster_gap(&self) -> u64 {
-        // A chunk holds up to `leaf_cap` keys contiguously: runs whose keys
-        // land within a few chunks of each other still amortize one descent,
-        // so the clustered threshold scales with the leaf width.
-        4 * DetSkiplist::leaf_cap(self) as u64
+        // A chunk holds up to `leaf_cap` keys contiguously, and a fat inner
+        // node covers up to `inner_cap` chunks per block probe: runs whose
+        // keys land within one routing block's terminal span still amortize
+        // one descent, so the clustered threshold scales with both widths
+        // (the legacy few-chunks factor of 4 is the floor when routing
+        // blocks are narrow or disabled).
+        DetSkiplist::leaf_cap(self) as u64 * DetSkiplist::inner_cap(self).max(4) as u64
     }
 }
 
@@ -492,13 +495,30 @@ impl StoreKind {
         opts: ArenaOptions,
         leaf_cap: Option<usize>,
     ) -> Box<dyn OrderedKv> {
+        self.build_placed_caps(capacity, opts, leaf_cap, None)
+    }
+
+    /// Like [`StoreKind::build_placed_leaf`] with an explicit fat-inner
+    /// routing-block capacity for the deterministic skiplists (Table XVI
+    /// sweeps F ∈ {1, 2, 4, 8, 16}); `None` means
+    /// [`crate::skiplist::DEFAULT_INNER_CAP`], `Some(f)` with `f < 2`
+    /// disables the blocks (the legacy linked child walk). Structures
+    /// without routing blocks ignore it.
+    pub fn build_placed_caps(
+        self,
+        capacity: usize,
+        opts: ArenaOptions,
+        leaf_cap: Option<usize>,
+        inner_cap: Option<usize>,
+    ) -> Box<dyn OrderedKv> {
         let k = leaf_cap.unwrap_or(crate::skiplist::DEFAULT_LEAF_CAP);
+        let f = inner_cap.unwrap_or(crate::skiplist::DEFAULT_INNER_CAP);
         match self {
             StoreKind::DetSkiplistLf => {
-                Box::new(DetSkiplist::with_leaf_cap_on(FindMode::LockFree, capacity, opts, k))
+                Box::new(DetSkiplist::with_caps_on(FindMode::LockFree, capacity, opts, k, f))
             }
             StoreKind::DetSkiplistRwl => {
-                Box::new(DetSkiplist::with_leaf_cap_on(FindMode::ReadLocked, capacity, opts, k))
+                Box::new(DetSkiplist::with_caps_on(FindMode::ReadLocked, capacity, opts, k, f))
             }
             StoreKind::RandomSkiplist => Box::new(RandomSkiplist::with_capacity_on(capacity, opts)),
             StoreKind::HashFixed => Box::new(FixedHashMap::new(1024)),
@@ -544,15 +564,31 @@ impl ShardedStore {
         threads: usize,
         leaf_cap: Option<usize>,
     ) -> ShardedStore {
+        Self::with_caps(kind, nshards, capacity_per_shard, topology, threads, leaf_cap, None)
+    }
+
+    /// Like [`ShardedStore::with_leaf_cap`] with an explicit fat-inner
+    /// routing-block capacity for skiplist shards (the Table XVI F sweep);
+    /// `None` keeps the default.
+    pub fn with_caps(
+        kind: StoreKind,
+        nshards: usize,
+        capacity_per_shard: usize,
+        topology: Topology,
+        threads: usize,
+        leaf_cap: Option<usize>,
+        inner_cap: Option<usize>,
+    ) -> ShardedStore {
         assert!(nshards.is_power_of_two() && nshards as u64 <= PREFIXES);
         ShardedStore {
             shards: (0..nshards)
                 .map(|i| {
                     let home = topology.shard_home(i, threads);
-                    kind.build_placed_leaf(
+                    kind.build_placed_caps(
                         capacity_per_shard,
                         ArenaOptions::placed(home, &topology, threads),
                         leaf_cap,
+                        inner_cap,
                     )
                 })
                 .collect(),
@@ -1100,9 +1136,10 @@ mod tests {
     }
 
     #[test]
-    fn cluster_gap_scales_with_leaf_cap() {
-        // skiplist shards report a leaf-relative clustered threshold …
-        for (k, want) in [(1usize, 4u64), (8, 32), (16, 64), (32, 128)] {
+    fn cluster_gap_scales_with_leaf_and_inner_caps() {
+        // skiplist shards report a clustered threshold scaled by both the
+        // terminal width and the routing-block arity (default F = 8) …
+        for (k, want) in [(1usize, 8u64), (8, 64), (16, 128), (32, 256)] {
             let s = ShardedStore::with_leaf_cap(
                 StoreKind::DetSkiplistLf,
                 2,
@@ -1114,11 +1151,67 @@ mod tests {
             assert_eq!(s.shard_at(0).cluster_gap(), want, "K = {k}");
             assert_eq!(s.shard_at(1).cluster_gap(), want, "K = {k}");
         }
+        // … narrow or disabled routing blocks fall back to the legacy
+        // few-chunks factor of 4
+        for f in [1usize, 2, 4] {
+            let s = ShardedStore::with_caps(
+                StoreKind::DetSkiplistLf,
+                2,
+                1 << 10,
+                Topology::milan_virtual(),
+                8,
+                Some(16),
+                Some(f),
+            );
+            assert_eq!(s.shard_at(0).cluster_gap(), 64, "F = {f}");
+        }
+        let s = ShardedStore::with_caps(
+            StoreKind::DetSkiplistLf,
+            2,
+            1 << 10,
+            Topology::milan_virtual(),
+            8,
+            Some(16),
+            Some(16),
+        );
+        assert_eq!(s.shard_at(0).cluster_gap(), 256, "F = 16");
         // … flat structures keep the single-key-terminal default
         let h = StoreKind::HashFixed.build(1 << 10);
         assert_eq!(h.cluster_gap(), 64);
         let d = StoreKind::DetSkiplistLf.build(1 << 10);
-        assert_eq!(d.cluster_gap(), 4 * crate::skiplist::DEFAULT_LEAF_CAP as u64);
+        assert_eq!(
+            d.cluster_gap(),
+            crate::skiplist::DEFAULT_LEAF_CAP as u64 * crate::skiplist::DEFAULT_INNER_CAP as u64
+        );
+    }
+
+    #[test]
+    fn inner_cap_plumbing_reaches_every_shard() {
+        // an F-swept store must behave identically to the default store on
+        // the full ordered API (same keys, same ranges, same batch replies)
+        let base =
+            ShardedStore::new(StoreKind::DetSkiplistLf, 4, 1 << 12, Topology::milan_virtual(), 8);
+        for f in [1usize, 2, 8, 16] {
+            let s = ShardedStore::with_caps(
+                StoreKind::DetSkiplistLf,
+                4,
+                1 << 12,
+                Topology::milan_virtual(),
+                8,
+                None,
+                Some(f),
+            );
+            let items: Vec<(u64, u64)> =
+                (0..600u64).map(|i| ((i % 4) << 61 | i * 7, i)).collect();
+            assert_eq!(s.insert_batch(&items), items.len() as u64, "F = {f}");
+            if f == 1 {
+                base.insert_batch(&items);
+            }
+            assert_eq!(s.range(0, u64::MAX - 2), base.range(0, u64::MAX - 2), "F = {f}");
+            let evens: Vec<u64> = items.iter().map(|&(ik, _)| ik).step_by(2).collect();
+            assert_eq!(s.erase_batch(&evens), evens.len() as u64, "F = {f}");
+            assert_eq!(s.len(), (items.len() - evens.len()) as u64, "F = {f}");
+        }
     }
 
     #[test]

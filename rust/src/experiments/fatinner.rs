@@ -1,0 +1,302 @@
+//! Table XVI (beyond the paper): fat inner nodes — cache-line routing
+//! blocks with SIMD in-node rank across the index levels.
+//!
+//! Methodology (EXPERIMENTS.md §Table XVI): a resident set far beyond LLC
+//! (≥ 2^20 keys) is bulk-built through the fused sorted-run path at every
+//! swept routing-block capacity F ∈ {1, 2, 4, 8, 16} (F = 1 disables the
+//! blocks — the legacy per-level linked child walk), then a scattered
+//! (uniform-random, unsorted) point-probe stream is executed two ways:
+//!
+//! - **Direct** — plain `DetSkiplist::get` point descents, one per probe.
+//! - **Delegated** — the same probes travel the delegation fabric as
+//!   `Find` envelopes into a deep owner queue and execute through the
+//!   combiner's per-drain dispatch (scattered windows → the interleaved
+//!   engine, with the gap threshold scaled by both the leaf width and the
+//!   routing-block arity via `KvStore::cluster_gap`).
+//!
+//! Cost proxies: throughput and **node derefs/op** (`SkiplistStats::
+//! node_derefs` — hot-line dereferences, the Table XII cache proxy). At
+//! each index level an F-wide block answers the whole child-level right
+//! walk with one seqlock-versioned probe (`util::simd::rank` over up to F
+//! separators in one plane row), so the 2–4 child hops per level collapse
+//! to a single deref — a ~log-arity cut across the whole tower. The run
+//! **self-asserts the acceptance bar**: at F ≥ 4 the fat-inner list
+//! delivers strictly fewer node derefs/op than the F = 1 legacy walk in
+//! both modes (counter-deterministic, asserted always), and at every F all
+//! eight [`StoreKind`] builds agree with a `BTreeMap` oracle over a mixed
+//! insert/get/erase/range churn (the block capacity must be behaviourally
+//! invisible).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::{DelegatedOp, KvStore, OpFabric, OrderedKv, ShardedStore, StoreKind};
+use crate::mem::ArenaOptions;
+use crate::runtime::KeyRouter;
+use crate::skiplist::{BatchOp, DetSkiplist, FindMode, DEFAULT_LEAF_CAP};
+use crate::util::bench::Table;
+use crate::util::rng::mix64;
+
+use super::ExpConfig;
+
+/// Resident keys in the full-size run: beyond any LLC, so the descent's
+/// dependent misses dominate and the deref cut is what the wall clock sees.
+pub const T16_RESIDENT: u64 = 1 << 20;
+
+/// Routing-block capacities swept (rows of the table); F = 1 disables the
+/// blocks entirely — byte-for-byte the legacy linked child walk — and the
+/// self-asserts compare every F ≥ 4 row against it.
+pub const T16_CAPS: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Spread resident keys across the key space: an odd stride keeps sorted
+/// build order while making random probe neighbours land far apart.
+#[inline]
+fn key_of(i: u64) -> u64 {
+    i * 1021 + 17
+}
+
+/// Scattered probe stream: uniform-random resident keys in arrival order.
+fn probes(n: u64, resident: u64, seed: u64) -> Vec<u64> {
+    (0..n).map(|j| key_of(mix64(seed.wrapping_add(j)) % resident)).collect()
+}
+
+/// Bulk-build `resident` keys at routing-block capacity `f` (default leaf
+/// width — the sweep isolates the index levels) through the fused
+/// sorted-run path.
+fn build_skiplist(resident: u64, f: usize) -> DetSkiplist {
+    let sl = DetSkiplist::with_caps_on(
+        FindMode::LockFree,
+        resident as usize + (1 << 12),
+        ArenaOptions::default(),
+        DEFAULT_LEAF_CAP,
+        f,
+    );
+    let mut i = 0u64;
+    while i < resident {
+        let end = (i + 8192).min(resident);
+        let run: Vec<BatchOp> = (i..end).map(|k| BatchOp::Insert(key_of(k), k)).collect();
+        sl.apply_sorted_run(&run, &mut |_, _| {});
+        i = end;
+    }
+    sl
+}
+
+struct ModeRun {
+    mops: f64,
+    derefs_per_op: f64,
+}
+
+/// Direct half: point `get` descents over the scattered stream,
+/// best-of-reps throughput; node derefs are counter-deterministic (single
+/// thread), taken from the last rep.
+fn run_direct(cfg: &ExpConfig, resident: u64, probe_n: u64, f: usize) -> ModeRun {
+    let sl = build_skiplist(resident, f);
+    let stream = probes(probe_n, resident, cfg.seed);
+    let mut best_mops = 0.0f64;
+    let mut derefs_per_op = 0.0;
+    for _rep in 0..cfg.reps.max(1) {
+        let before = sl.stats().node_derefs;
+        let t0 = Instant::now();
+        let mut hits = 0u64;
+        for &key in &stream {
+            hits += sl.get(key).is_some() as u64;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(hits, stream.len() as u64, "every probe targets a resident key");
+        best_mops = best_mops.max(stream.len() as f64 / secs / 1e6);
+        derefs_per_op = (sl.stats().node_derefs - before) as f64 / stream.len() as f64;
+    }
+    ModeRun { mops: best_mops, derefs_per_op }
+}
+
+/// Delegated half: stage the scattered probe stream as `Find` envelopes
+/// into one owner's queue, then time the combining drain (scattered
+/// windows route through the interleaved engine; the dispatch threshold is
+/// the shard's leaf-×-inner `cluster_gap`). Best-of-reps throughput; the
+/// deref counter is deterministic for a single draining owner.
+fn run_delegated(cfg: &ExpConfig, resident: u64, probe_n: u64, f: usize) -> ModeRun {
+    let mut best_mops = 0.0f64;
+    let mut derefs_per_op = 0.0;
+    for rep in 0..cfg.reps.max(1) {
+        let store = Arc::new(ShardedStore::with_caps(
+            StoreKind::DetSkiplistLf,
+            1,
+            resident as usize + (1 << 12),
+            cfg.topology.clone(),
+            1,
+            None,
+            Some(f),
+        ));
+        let items: Vec<(u64, u64)> = (0..resident).map(|k| (key_of(k), k)).collect();
+        assert_eq!(store.insert_batch(&items), resident);
+        let blocks = ((probe_n as usize / 64) / 256 + 4).next_power_of_two().max(16);
+        let fabric = OpFabric::new(1, 1, 1, cfg.topology.clone(), blocks, 64);
+        let mut caller = fabric.caller(1, None);
+        for &key in &probes(probe_n, resident, cfg.seed + rep as u64) {
+            caller.delegate(DelegatedOp::Find { key }, &store);
+        }
+        caller.finish(&store);
+        let before = store.stats().node_derefs;
+        let t0 = Instant::now();
+        while fabric.drain(0, &store, usize::MAX) > 0 {}
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(fabric.all_quiet(), "drain must quiesce the fabric");
+        let st = fabric.stats();
+        assert_eq!(st.executed, st.submitted, "combined execution must balance");
+        assert_eq!(fabric.slot_totals(1).hits, probe_n, "every probe hits");
+        best_mops = best_mops.max(probe_n as f64 / secs / 1e6);
+        derefs_per_op = (store.stats().node_derefs - before) as f64 / probe_n as f64;
+    }
+    ModeRun { mops: best_mops, derefs_per_op }
+}
+
+/// Oracle suite: every [`StoreKind`] built at routing-block capacity `f`
+/// must track a `BTreeMap` through a mixed insert/get/erase churn plus
+/// ordered range scans — F may change the index layout, never the answers.
+/// Returns how many kinds passed (asserts internally, so always all).
+fn oracle_all_kinds(cfg: &ExpConfig, f: usize, churn: u64) -> u64 {
+    let mut passed = 0u64;
+    for kind in super::hier::T11_KINDS {
+        let s = kind.build_placed_caps(1 << 14, ArenaOptions::default(), None, Some(f));
+        let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+        for i in 0..churn {
+            let r = mix64(cfg.seed ^ (f as u64) << 32 ^ i);
+            // keep the key space tight so inserts, erases and re-inserts
+            // collide often (block split/merge/borrow churn at every F)
+            let key = r % (churn / 2 + 1) + 1;
+            match r >> 61 {
+                0..=2 => {
+                    // set semantics: a resident key keeps its old value and
+                    // the insert reports false — mirror that in the oracle
+                    let v = r >> 8;
+                    let fresh = !oracle.contains_key(&key);
+                    if fresh {
+                        oracle.insert(key, v);
+                    }
+                    assert_eq!(
+                        s.insert(key, v),
+                        fresh,
+                        "{kind:?} F={f}: insert({key}) disagreed at op {i}"
+                    );
+                }
+                3..=4 => {
+                    assert_eq!(
+                        s.erase(key),
+                        oracle.remove(&key).is_some(),
+                        "{kind:?} F={f}: erase({key}) disagreed at op {i}"
+                    );
+                }
+                _ => {
+                    assert_eq!(
+                        s.get(key),
+                        oracle.get(&key).copied(),
+                        "{kind:?} F={f}: get({key}) disagreed at op {i}"
+                    );
+                }
+            }
+        }
+        // ordered sweep: the full final contents in key order
+        let want: Vec<(u64, u64)> = oracle.iter().map(|(&k, &v)| (k, v)).collect();
+        assert_eq!(
+            s.range(0, u64::MAX - 2),
+            want,
+            "{kind:?} F={f}: final range sweep disagreed"
+        );
+        assert_eq!(s.len(), want.len() as u64, "{kind:?} F={f}: len disagreed");
+        passed += 1;
+    }
+    passed
+}
+
+/// Table XVI with an explicit resident-set size (the public entry point
+/// pins it to [`T16_RESIDENT`]; tests shrink it). The deref asserts are
+/// counter-deterministic and hold at any size; timing is reported, not
+/// asserted (the deref cut is the structural claim).
+pub fn t16_fatinner_with(cfg: &ExpConfig, resident: u64) -> Table {
+    let probe_n = cfg.ops(100_000_000);
+    let churn = cfg.ops(10_000_000).min(20_000);
+    let mut t = Table::new(
+        &format!(
+            "Table XVI (new) — fat inner nodes ({resident} resident keys, {probe_n} \
+             scattered probes, churn {churn}/kind, scale 1/{})",
+            cfg.scale
+        ),
+        "#inner_cap",
+        &["dir Mops/s", "dir derefs/op", "del Mops/s", "del derefs/op", "oracle kinds"],
+    );
+    let mut dir_f1: Option<ModeRun> = None;
+    let mut del_f1: Option<ModeRun> = None;
+    for &f in T16_CAPS.iter() {
+        let kinds = oracle_all_kinds(cfg, f, churn);
+        assert_eq!(kinds, 8, "all store kinds must pass the oracle at F = {f}");
+        let dir = run_direct(cfg, resident, probe_n, f);
+        let del = run_delegated(cfg, resident, probe_n, f);
+        assert!(dir.derefs_per_op > 0.0 && del.derefs_per_op > 0.0);
+        if f >= 4 {
+            let d1 = dir_f1.as_ref().expect("cap sweep starts at 1");
+            let g1 = del_f1.as_ref().expect("cap sweep starts at 1");
+            assert!(
+                dir.derefs_per_op < d1.derefs_per_op,
+                "direct: F = {f} must strictly cut node derefs/op \
+                 ({:.3} vs {:.3} at F = 1)",
+                dir.derefs_per_op,
+                d1.derefs_per_op
+            );
+            assert!(
+                del.derefs_per_op < g1.derefs_per_op,
+                "delegated: F = {f} must strictly cut node derefs/op \
+                 ({:.3} vs {:.3} at F = 1)",
+                del.derefs_per_op,
+                g1.derefs_per_op
+            );
+        }
+        t.push_row(
+            f as u64,
+            vec![dir.mops, dir.derefs_per_op, del.mops, del.derefs_per_op, kinds as f64],
+        );
+        if f == 1 {
+            dir_f1 = Some(dir);
+            del_f1 = Some(del);
+        }
+    }
+    t
+}
+
+/// Table XVI entry point (`exp t16`): full beyond-LLC resident set.
+pub fn t16_fatinner(cfg: &ExpConfig, _router: &KeyRouter) -> Table {
+    t16_fatinner_with(cfg, T16_RESIDENT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numa::Topology;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig {
+            threads: vec![1],
+            reps: 1,
+            scale: 10_000,
+            topology: Topology::virtual_grid(2, 2),
+            seed: 16,
+        }
+    }
+
+    #[test]
+    fn t16_fatinner_small_resident_holds_counter_bar() {
+        // shrunk resident set: the counter asserts inside t16_fatinner_with
+        // (strict deref cut at F ≥ 4 in both modes, 8/8 oracle kinds at
+        // every F) must all hold; timing is reported only
+        let t = t16_fatinner_with(&tiny_cfg(), 1 << 15);
+        assert_eq!(t.rows.len(), T16_CAPS.len());
+        for (f, row) in &t.rows {
+            assert!(row[0] > 0.0 && row[2] > 0.0, "F {f}: throughput measured");
+            assert_eq!(row[4], 8.0, "F {f}: all kinds oracle-checked");
+        }
+        let f1 = &t.rows[0];
+        let f8 = t.rows.iter().find(|(f, _)| *f == 8).expect("F 8 row");
+        assert!(f8.1[1] < f1.1[1], "direct derefs/op strictly fall by F 8");
+        assert!(f8.1[3] < f1.1[3], "delegated derefs/op strictly fall by F 8");
+    }
+}

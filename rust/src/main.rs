@@ -2,13 +2,14 @@
 //!
 //! ```text
 //! cdskl info                           topology, artifacts, self-check
-//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|t13|t14|t15|all> [--threads 4,8]
+//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|t13|t14|t15|t16|all> [--threads 4,8]
 //!           [--reps N] [--scale N] [--out FILE]   regenerate paper tables
 //! cdskl run [--store det|rwl|random|fixed|twolevel|spo|spo2|tbb]
 //!           [--ops N] [--threads N] [--mix w1|w2|hash|range|hier|bulk]
 //!           [--exec direct|delegated] [--range-window W] [--batch-n N]
 //!           [--combine true|false] [--run-len N] [--interleave K]
 //!           [--inject-latency NS] [--fingers true|false]
+//!           [--leaf-cap K] [--inner-cap F]
 //!                                      one workload run with metrics
 //! cdskl selfcheck                      AOT artifacts vs native mixer
 //! ```
@@ -140,8 +141,11 @@ fn exp(args: &Args) {
     if all || which == "t15" || which == "fatleaf" {
         tables.push(experiments::t15_fatleaf(&cfg, &router));
     }
+    if all || which == "t16" || which == "fatinner" {
+        tables.push(experiments::t16_fatinner(&cfg, &router));
+    }
     if tables.is_empty() {
-        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 t13 t14 t15 all)");
+        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 t13 t14 t15 t16 all)");
         std::process::exit(2);
     }
     let mut out = String::new();
@@ -187,7 +191,19 @@ fn run(args: &Args) {
         args.usize_or("cpus-per-node", 16),
     );
     let router = KeyRouter::auto(&artifacts_dir());
-    let store = Arc::new(ShardedStore::new(kind, 8, (ops as usize / 4).max(1 << 16), topo, threads));
+    // --leaf-cap K / --inner-cap F override the terminal-chunk width and
+    // the routing-block arity (F < 2 disables the fat inner blocks)
+    let leaf_cap = args.get("leaf-cap").map(|s| s.parse().expect("--leaf-cap K"));
+    let inner_cap = args.get("inner-cap").map(|s| s.parse().expect("--inner-cap F"));
+    let store = Arc::new(ShardedStore::with_caps(
+        kind,
+        8,
+        (ops as usize / 4).max(1 << 16),
+        topo,
+        threads,
+        leaf_cap,
+        inner_cap,
+    ));
     store.set_finger_cache(args.bool_or("fingers", true));
     let mut spec = WorkloadSpec::new("run", ops, mix, args.u64_or("key-space", (ops / 2).max(1 << 16)))
         .with_range_window(args.u64_or("range-window", 64));

@@ -566,6 +566,31 @@ impl<N: ArenaNode> BlockArena<N> {
         }
     }
 
+    /// Issue a software prefetch for `idx`'s leaf/chunk-plane row (the
+    /// first line of its `leaf_words` slot — key arrays start there). Same
+    /// bounds discipline as [`BlockArena::prefetch_hot`]: returns `false`
+    /// without touching memory when the arena has no leaf plane or the
+    /// slot's block is not materialized, so a torn/stale index never turns
+    /// into out-of-bounds pointer arithmetic and callers can keep honest
+    /// prefetch counts.
+    #[inline]
+    pub fn prefetch_leaf(&self, idx: u32) -> bool {
+        if self.leaf_words == 0 {
+            return false;
+        }
+        let b = idx as usize / self.block_size;
+        if b < self.count.load(Ordering::Acquire) {
+            let p = self.dir[b].leaf.load(Ordering::Acquire);
+            if p.is_null() {
+                return false;
+            }
+            prefetch_read(unsafe { p.add(idx as usize % self.block_size * self.leaf_words) });
+            true
+        } else {
+            false
+        }
+    }
+
     /// Batched [`BlockArena::prefetch_hot`]: issue one prefetch per index
     /// back to back, so the whole set's misses go in flight together before
     /// any of the lines is dereferenced (the interleaved engines warm every
@@ -868,6 +893,13 @@ mod tests {
         for &i in &idxs {
             assert_eq!(a.hot(i).payload.load(Ordering::Relaxed), i as u64 * 3);
         }
+        // no leaf plane on a default arena: leaf prefetch is a guarded no-op
+        assert!(!a.prefetch_leaf(idxs[0]));
+        let b: BlockArena<Slot> =
+            BlockArena::with_options(8, 8, ArenaOptions::default().with_leaf_words(4));
+        let j = b.alloc_slot();
+        assert!(b.prefetch_leaf(j), "materialized leaf row prefetches");
+        assert!(!b.prefetch_leaf(u32::MAX), "out of range stays a no-op");
     }
 
     #[test]

@@ -63,7 +63,10 @@ use crate::mem::{ArenaOptions, PoolStats};
 use crate::sync::Backoff;
 use crate::util::simd;
 
-use super::node::{NodeArena, NodeRef, NodeView, DEFAULT_LEAF_CAP, MAX_LEAF_CAP, SENTINEL};
+use super::node::{
+    BlockRoute, NodeArena, NodeRef, NodeView, DEFAULT_INNER_CAP, DEFAULT_LEAF_CAP, MAX_INNER_CAP,
+    MAX_LEAF_CAP, SENTINEL,
+};
 use super::{BatchOp, BatchReply};
 
 /// The 1-2-3-4 discipline's arity windows, shared by the rebalancers, the
@@ -227,18 +230,19 @@ impl FingerSlot {
     }
 }
 
-/// Fixed-capacity child list (arity is bounded by ~7 plus the boundary
-/// node): avoids a heap allocation per visited node on the write path —
-/// see EXPERIMENTS.md §Perf.
+/// Fixed-capacity child list (arity is bounded by `max_arity()` ≤ F + 2 =
+/// 18 at the widest `inner_cap`, plus the boundary node): avoids a heap
+/// allocation per visited node on the write path — see EXPERIMENTS.md
+/// §Perf.
 pub(crate) struct ChildVec {
-    buf: [NodeRef; 12],
+    buf: [NodeRef; 24],
     len: usize,
 }
 
 impl ChildVec {
     #[inline]
     fn new() -> ChildVec {
-        ChildVec { buf: [SENTINEL; 12], len: 0 }
+        ChildVec { buf: [SENTINEL; 24], len: 0 }
     }
 
     /// Append a child; `false` when the fixed arity bound would be
@@ -360,9 +364,10 @@ struct Lane {
 }
 
 /// Capacity of the leaf-group segment mirror: the acquired child list is at
-/// most `ChildVec`-wide (12) and only the group's licensed first insert can
-/// land on a transiently over-wide segment, so 16 never overflows.
-const SEG_CAP: usize = 16;
+/// most the F-relative split window wide (`split_threshold() ≤ 16`) and
+/// only the group's licensed first insert can land on a transiently
+/// over-wide segment, so 24 never overflows.
+const SEG_CAP: usize = 24;
 
 /// Live mirror of one leaf's terminal segment during a fused group: every
 /// ref in it is locked by this thread. Kept key-sorted by construction.
@@ -462,9 +467,27 @@ impl DetSkiplist {
         opts: ArenaOptions,
         leaf_cap: usize,
     ) -> DetSkiplist {
-        let arena = NodeArena::for_capacity_chunks(capacity, opts, leaf_cap);
+        Self::with_caps_on(mode, capacity, opts, leaf_cap, DEFAULT_INNER_CAP)
+    }
+
+    /// Fully explicit construction: terminal chunk capacity `leaf_cap`
+    /// *and* fat-inner routing-block capacity `inner_cap` ∈
+    /// 1..=[`MAX_INNER_CAP`] (Table XVI sweeps this; `inner_cap = 1`
+    /// degenerates to the paper's linked per-level child walk with the
+    /// legacy 1-2-3-4 arity windows).
+    pub fn with_caps_on(
+        mode: FindMode,
+        capacity: usize,
+        opts: ArenaOptions,
+        leaf_cap: usize,
+        inner_cap: usize,
+    ) -> DetSkiplist {
+        let arena = NodeArena::for_capacity_caps(capacity, opts, leaf_cap, inner_cap);
         // head: level-1 leaf, key MAX, no children yet.
         let head = arena.alloc(u64::MAX, SENTINEL, SENTINEL, 0, 1);
+        if arena.inner_blocks() {
+            arena.block_init_unbuilt(head);
+        }
         DetSkiplist {
             arena,
             head,
@@ -493,6 +516,92 @@ impl DetSkiplist {
     #[inline]
     fn min_chunk_occupancy(&self) -> usize {
         (self.arena.leaf_cap() / 4).max(1)
+    }
+
+    /// Separators per fat inner routing block (the F of Table XVI;
+    /// `< 2` = blocks disabled, legacy linked child walk).
+    #[inline]
+    pub fn inner_cap(&self) -> usize {
+        self.arena.inner_cap()
+    }
+
+    #[inline]
+    fn inner_blocks(&self) -> bool {
+        self.arena.inner_blocks()
+    }
+
+    // ------------------------------------------------------------------
+    // Arity windows — F-relative generalization of the 1-2-3-4 discipline
+    // ------------------------------------------------------------------
+    //
+    // With inner blocks disabled (F = 1) these reproduce the legacy
+    // constants exactly: split at 5, insert window 4, erase window 3,
+    // boost at <= 2, validator ceiling 7. With blocks of capacity F >= 2
+    // the same relations are re-anchored on F: a descent splits any node
+    // at F (so resting arity fits the block), the merge/borrow floor is
+    // max(1, F/4) (the B-tree quarter-occupancy rule the terminal chunks
+    // already use), and the fast-path windows keep their "never force a
+    // rebalance off the descent path" meaning relative to those bounds.
+    // `check_invariants` + `arity_windows_are_mutually_consistent` pin the
+    // relations so a drifted window cannot silently escape validation.
+
+    /// Descents split any node at or above this width on the way down
+    /// (algorithm 2 generalized): legacy 5, else the block capacity F.
+    #[inline]
+    pub(crate) fn split_threshold(&self) -> usize {
+        if self.inner_blocks() {
+            self.inner_cap()
+        } else {
+            SPLIT_THRESHOLD
+        }
+    }
+
+    /// A fast-path insert requires `<= insert_window` children: after the
+    /// op the node holds at most `split_threshold`, the same transient a
+    /// full descent leaves behind.
+    #[inline]
+    pub(crate) fn insert_window(&self) -> usize {
+        if self.inner_blocks() {
+            self.split_threshold() - 1
+        } else {
+            INSERT_WINDOW
+        }
+    }
+
+    /// Minimum resting arity of a non-spine node between descents: legacy
+    /// 2, else `max(1, F/4)`. Deletion boosts any path node at or below
+    /// this so the terminal removal can never underflow a segment.
+    #[inline]
+    pub(crate) fn min_inner(&self) -> usize {
+        if self.inner_blocks() {
+            (self.inner_cap() / 4).max(1)
+        } else {
+            2
+        }
+    }
+
+    /// A fast-path erase (or any leaf-arity shrink outside a full descent)
+    /// requires `>= erase_window` children: after the op at least
+    /// `min_inner` remain, so no merge/borrow boost is ever needed off the
+    /// descent path. Legacy 3.
+    #[inline]
+    pub(crate) fn erase_window(&self) -> usize {
+        if self.inner_blocks() {
+            self.min_inner() + 1
+        } else {
+            ERASE_WINDOW
+        }
+    }
+
+    /// Validator hard ceiling: a split transient (`split_threshold`) plus
+    /// the ~2 nodes lazy boundary repairs can briefly stack. Legacy 7.
+    #[inline]
+    pub(crate) fn max_arity(&self) -> usize {
+        if self.inner_blocks() {
+            self.split_threshold() + 2
+        } else {
+            MAX_ARITY
+        }
     }
 
     /// Number of keys currently stored.
@@ -662,11 +771,26 @@ impl DetSkiplist {
         }
         let level = head.hot.level.load(Ordering::Relaxed);
         let hbot = head.hot.bottom.load(Ordering::Acquire);
-        // d inherits the head's current (key, next, bottom) at the old level.
+        // d inherits the head's current (key, next, bottom) at the old level
+        // — and therefore the head's routing block verbatim (both describe
+        // the same child list, stable under the head's lock).
         let d = self.arena.alloc(hkey, hnext, hbot, 0, level);
+        self.block_clone_into(d, self.head);
         head.hot.bottom.store(d, Ordering::Release);
         head.hot.level.store(level + 1, Ordering::Relaxed);
-        head.set_key_next(u64::MAX, SENTINEL);
+        if self.inner_blocks() {
+            // Restore the root header and publish its one-child block
+            // [(MAX, d)] in a single window: a reader pairing the restored
+            // MAX header with the old block would conclude `Right` to
+            // SENTINEL past every live key.
+            let w = self.arena.block_write(self.head);
+            head.set_key_next(u64::MAX, SENTINEL);
+            w.set_key(0, u64::MAX);
+            w.set_child(0, d);
+            w.set_count(1);
+        } else {
+            head.set_key_next(u64::MAX, SENTINEL);
+        }
         head.cold.lock.unlock();
         self.stats.depth_increases.fetch_add(1, Ordering::Relaxed);
     }
@@ -694,6 +818,24 @@ impl DetSkiplist {
         if bkey == hkey && bnext == SENTINEL && bb != SENTINEL {
             head.hot.bottom.store(bb, Ordering::Release);
             head.hot.level.store(level - 1, Ordering::Relaxed);
+            if self.inner_blocks() {
+                // The root adopts b's children, so it adopts b's block (b
+                // is locked, its block stable). The root header (MAX,
+                // SENTINEL) is unchanged; readers pairing the old
+                // [(MAX, b)] block with the new bottom still route through
+                // b, which answers from frozen state until retired below.
+                let w = self.arena.block_write(self.head);
+                match self.arena.block_len(b) {
+                    Some(cnt) => {
+                        for i in 0..cnt {
+                            w.set_key(i, self.arena.block_sep(b, i));
+                            w.set_child(i, self.arena.block_child(b, i));
+                        }
+                        w.set_count(cnt);
+                    }
+                    None => w.set_count(0),
+                }
+            }
             bn.cold.mark.store(true, Ordering::Release);
             bn.cold.lock.unlock();
             self.arena.retire(b);
@@ -770,6 +912,161 @@ impl DetSkiplist {
         }
     }
 
+    // ------------------------------------------------------------------
+    // Fat inner routing blocks — writer-side maintenance
+    // ------------------------------------------------------------------
+    //
+    // A level >= 1 node's block is a *cache* of its child list: up to F
+    // `(separator, child)` pairs behind the node's plane seqlock. The
+    // maintenance discipline that keeps cached routing linearizable:
+    //
+    // 1. Separators may go stale-HIGH (a child's key was lowered after
+    //    publication) but never stale-LOW: every child-key *raise* and
+    //    every range takeover happens under the parent's lock, and the
+    //    parent's block is retracted or republished around it. A reader
+    //    routed by a stale-high separator lands at-or-left-of the correct
+    //    child and recovers by the ordinary rightward walk; a stale-low
+    //    separator could route *past* live coverage, which rightward-only
+    //    walks cannot undo — that is the one forbidden state.
+    // 2. Any header *raise* of a blocked node shares the block's seqlock
+    //    window with the matching block rewrite: pairing a raised header
+    //    with an older block would turn "all separators < key" into a
+    //    false `Right` past live keys. (Lowering is one-sided-safe, but
+    //    all header stores go through the window for a uniform proof.)
+    // 3. Multi-step terminal mutations that cannot keep (1) true at every
+    //    intermediate state first *retract* the block (count = 0): fresh
+    //    readers then take the legacy linked child walk — exactly the
+    //    fat-leaf protocol, already correct at every intermediate state —
+    //    until the epilogue republishes. Readers holding a pre-retract
+    //    block copy overlap the writer and route into marked-but-unretired
+    //    victims, whose frozen state answers correctly until `retire`
+    //    bumps the generation and forces their restart.
+
+    /// Re-derive and publish locked `p`'s routing block from its live child
+    /// list, optionally retargeting the packed `(key, next)` header inside
+    /// the same seqlock window (discipline point 2 above). With blocks
+    /// disabled this degrades to the plain header store.
+    ///
+    /// `p`'s lock pins the walk: children cannot be unlinked, retired, or
+    /// key-raised concurrently (all require this lock); a concurrent
+    /// child-local key *lowering* (finger-path `CheckNodeKey`) only makes a
+    /// just-written separator stale-high, which routing tolerates.
+    fn block_refresh(&self, p: NodeRef, header: Option<(u64, NodeRef)>) {
+        let pn = self.arena.node(p);
+        if !self.inner_blocks() {
+            if let Some((k, nx)) = header {
+                pn.set_key_next(k, nx);
+            }
+            return;
+        }
+        let w = self.arena.block_write(p);
+        if let Some((k, nx)) = header {
+            pn.set_key_next(k, nx);
+        }
+        let (pkey, _) = pn.key_next();
+        let cap = self.inner_cap();
+        let mut d = pn.hot.bottom.load(Ordering::Acquire);
+        let mut n = 0usize;
+        let mut over = false;
+        while d != SENTINEL {
+            let (dk, dnext) = self.arena.node(d).key_next();
+            if dk > pkey {
+                break; // foreign boundary (stale-high header): not ours
+            }
+            if n == cap {
+                over = true;
+                break;
+            }
+            w.set_key(n, dk);
+            w.set_child(n, d);
+            n += 1;
+            if dk == pkey {
+                break;
+            }
+            d = dnext;
+        }
+        if over {
+            w.set_overflow();
+        } else {
+            w.set_count(n);
+        }
+    }
+
+    /// Demote locked `p`'s routing block to *unbuilt* so every fresh reader
+    /// takes the legacy linked child walk until [`Self::block_refresh`]
+    /// republishes (discipline point 3 above).
+    fn block_retract(&self, p: NodeRef) {
+        if self.inner_blocks() {
+            self.arena.block_write(p).set_count(0);
+        }
+    }
+
+    /// Store a level >= 1 node's packed header through its block seqlock
+    /// window (uniform header/block pairing — discipline point 2; plain
+    /// store when blocks are disabled). For key *lowering* and pure `next`
+    /// retargets only: raises must republish the block in the same window
+    /// via [`Self::block_refresh`].
+    fn set_header_windowed(&self, p: NodeRef, k: u64, nx: NodeRef) {
+        if self.inner_blocks() {
+            let _w = self.arena.block_write(p);
+            self.arena.node(p).set_key_next(k, nx);
+        } else {
+            self.arena.node(p).set_key_next(k, nx);
+        }
+    }
+
+    /// Build an *unpublished* level >= 1 node's routing block from its
+    /// designated (locked, key-stable) children, before any pointer to the
+    /// node is stored. Recycled plane slots hold stale bytes, so every
+    /// fresh inner node must pass through here (or
+    /// [`NodeArena::block_init_unbuilt`]) before publication.
+    fn block_init_children(&self, nn: NodeRef, children: &[NodeRef]) {
+        if !self.inner_blocks() {
+            return;
+        }
+        if children.is_empty() || children.len() > self.inner_cap() {
+            self.arena.block_init_unbuilt(nn);
+            return;
+        }
+        let mut seps = [0u64; MAX_INNER_CAP];
+        let mut childs = [SENTINEL; MAX_INNER_CAP];
+        for (i, &c) in children.iter().enumerate() {
+            seps[i] = self.arena.node(c).key();
+            childs[i] = c;
+        }
+        self.arena.block_init(nn, &seps[..children.len()], &childs[..children.len()]);
+    }
+
+    /// Copy locked `src`'s routing block (or its unbuilt/overflow marker)
+    /// into unpublished node `dst` — used when a node inherits another's
+    /// child list wholesale (root height changes).
+    fn block_clone_into(&self, dst: NodeRef, src: NodeRef) {
+        if !self.inner_blocks() {
+            return;
+        }
+        match self.arena.block_len(src) {
+            Some(cnt) => {
+                let mut seps = [0u64; MAX_INNER_CAP];
+                let mut childs = [SENTINEL; MAX_INNER_CAP];
+                for (i, (s, c)) in seps.iter_mut().zip(childs.iter_mut()).enumerate().take(cnt) {
+                    *s = self.arena.block_sep(src, i);
+                    *c = self.arena.block_child(src, i);
+                }
+                self.arena.block_init(dst, &seps[..cnt], &childs[..cnt]);
+            }
+            None => self.arena.block_init_unbuilt(dst),
+        }
+    }
+
+    /// Opportunistically build locked `p`'s block if it is currently
+    /// unbuilt or overflowed — writers call this on descent path nodes so
+    /// blocks reach steady state without waiting for a structural change.
+    fn block_build_if_missing(&self, p: NodeRef) {
+        if self.inner_blocks() && self.arena.block_len(p).is_none() {
+            self.block_refresh(p, None);
+        }
+    }
+
     /// Paper's `CheckNodeKey`: lower `p.key` to its last child's key if the
     /// child with the highest key was removed. `p` and children are locked.
     fn check_node_key(&self, p: NodeRef, children: &[NodeRef]) {
@@ -784,24 +1081,31 @@ impl DetSkiplist {
         let last = self.arena.node(*children.last().unwrap());
         let lk = last.key();
         if lk < pkey {
-            pn.set_key_next(lk, pnext);
+            // header lowering is a pure segment shrink (separators go
+            // stale-high at worst) — windowed store only
+            self.set_header_windowed(p, lk, pnext);
         }
     }
 
-    /// Algorithm 2 (`AdditionRebalance`): split `p` if it has >= 5 children.
+    /// Algorithm 2 (`AdditionRebalance`): split `p` if it has >=
+    /// `split_threshold` children (legacy 5, else the block capacity F).
     /// `p` and `children` are locked. The new sibling takes `p`'s old
-    /// `(key, next)` and the children from index 2 on; `p` keeps the first
-    /// two and the second child's key.
+    /// `(key, next)` and the upper half of the children; `p` keeps the
+    /// lower half and its last kept child's key. The sibling's routing
+    /// block is built before publication; `p`'s header retarget and block
+    /// shrink share one seqlock window (`block_refresh`).
     fn addition_rebalance(&self, p: NodeRef, children: &[NodeRef]) {
-        if children.len() < SPLIT_THRESHOLD {
+        if children.len() < self.split_threshold() {
             return;
         }
         let pn = self.arena.node(p);
         let (pkey, pnext) = pn.key_next();
         let level = pn.hot.level.load(Ordering::Relaxed);
-        let nn = self.arena.alloc(pkey, pnext, children[2], 0, level);
-        let c1key = self.arena.node(children[1]).key();
-        pn.set_key_next(c1key, nn);
+        let lh = children.len() / 2;
+        let nn = self.arena.alloc(pkey, pnext, children[lh], 0, level);
+        self.block_init_children(nn, &children[lh..]);
+        let c1key = self.arena.node(children[lh - 1]).key();
+        self.block_refresh(p, Some((c1key, nn)));
         self.stats.splits.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -895,7 +1199,7 @@ impl DetSkiplist {
             FingerOp::Insert(v) => {
                 // in-chunk inserts leave the arity untouched; a chunk split
                 // adds one sibling, licensed only inside the insert window
-                let t = self.add_terminal(r, &children, key, v, children.len() <= INSERT_WINDOW);
+                let t = self.add_terminal(r, &children, key, v, children.len() <= self.insert_window());
                 if t != Tri::Retry {
                     // refresh the leaf finger with post-op live bounds
                     let (nk2, _) = n.key_next();
@@ -907,7 +1211,7 @@ impl DetSkiplist {
             FingerOp::Erase => {
                 // children[0] always survives drop_key (first-chunk removal
                 // is delete-by-copy; rebuilds mark the right-hand sibling)
-                let t = self.drop_key(r, &children, key, children.len() >= ERASE_WINDOW);
+                let t = self.drop_key(r, &children, key, children.len() >= self.erase_window());
                 if t != Tri::Retry {
                     let (nk2, _) = n.key_next();
                     self.finger_record(1, r, self.arena.chunk_key(children[0], 0), nk2);
@@ -1000,6 +1304,7 @@ impl DetSkiplist {
         }
 
         self.addition_rebalance(nref, &children);
+        self.block_build_if_missing(nref);
         let level = n.hot.level.load(Ordering::Relaxed);
 
         // record the descent entry at this level for the finger cache
@@ -1072,6 +1377,7 @@ impl DetSkiplist {
             // empty (head) leaf: the structure's first chunk
             let t = self.arena.alloc_chunk(&[key], &[value], SENTINEL);
             pn.hot.bottom.store(t, Ordering::Release);
+            self.block_refresh(p, None);
             return Tri::True;
         }
         // target: first chunk whose max covers the key, else the last (an
@@ -1092,24 +1398,42 @@ impl DetSkiplist {
             return Tri::False; // duplicate
         }
         let (_, tnext) = tn.key_next();
+        // An append beyond the target chunk's max raises that chunk's key
+        // past every separator stored in the leaf's routing block, which a
+        // block-routed reader would answer with a false `Right`. Retract
+        // the block first (fresh readers take the linked walk), republish
+        // after the mutation completes.
+        let raising = pos == cnt;
+        if raising {
+            self.block_retract(p);
+        }
         if cnt < cap {
             // in-chunk insert: no arity change, no window needed
-            let w = self.arena.chunk_write(t);
-            for j in (pos..cnt).rev() {
-                w.set_key(j + 1, w.key(j));
-                w.set_val(j + 1, w.val(j));
+            {
+                let w = self.arena.chunk_write(t);
+                for j in (pos..cnt).rev() {
+                    w.set_key(j + 1, w.key(j));
+                    w.set_val(j + 1, w.val(j));
+                }
+                w.set_key(pos, key);
+                w.set_val(pos, value);
+                w.set_count(cnt + 1);
+                if pos == cnt {
+                    // append beyond the old max (last chunk only): raise the
+                    // routing header atomically with the array it describes
+                    tn.set_key_next(key, tnext);
+                }
             }
-            w.set_key(pos, key);
-            w.set_val(pos, value);
-            w.set_count(cnt + 1);
-            if pos == cnt {
-                // append beyond the old max (last chunk only): raise the
-                // routing header atomically with the array it describes
-                tn.set_key_next(key, tnext);
+            if raising {
+                self.block_refresh(p, None);
             }
             return Tri::True;
         }
         if !allow_split {
+            if raising {
+                // nothing was mutated; rebuild the block we retracted
+                self.block_refresh(p, None);
+            }
             return Tri::Retry; // splits belong to full descents
         }
         // split with the new key included among the K+1
@@ -1132,13 +1456,18 @@ impl DetSkiplist {
         // the new right chunk is initialized before the left chunk's
         // in-window header store publishes it (release-ordered)
         let nr = self.arena.alloc_chunk(&ks[lh..total], &vs[lh..total], tnext);
-        let w = self.arena.chunk_write(t);
-        for j in 0..lh {
-            w.set_key(j, ks[j]);
-            w.set_val(j, vs[j]);
+        {
+            let w = self.arena.chunk_write(t);
+            for j in 0..lh {
+                w.set_key(j, ks[j]);
+                w.set_val(j, vs[j]);
+            }
+            w.set_count(lh);
+            tn.set_key_next(ks[lh - 1], nr);
         }
-        w.set_count(lh);
-        tn.set_key_next(ks[lh - 1], nr);
+        // membership grew by one (and `raising` was retracted above):
+        // republish the leaf's routing block over the post-split chunks
+        self.block_refresh(p, None);
         Tri::True
     }
 
@@ -1230,9 +1559,12 @@ impl DetSkiplist {
             if self.arena.resolve(cur).is_none() {
                 return Err(());
             }
-            // overlap the next dependent misses with this node's processing
-            cost.prefetches +=
-                self.arena.prefetch(nnext) as u64 + self.arena.prefetch(bottom) as u64;
+            // overlap the next dependent misses with this node's processing;
+            // the paired plane prefetch pulls the first child's data row
+            // (terminal chunk on leaf approach, routing block above it)
+            cost.prefetches += self.arena.prefetch(nnext) as u64
+                + self.arena.prefetch(bottom) as u64
+                + self.arena.prefetch_plane(bottom) as u64;
             if self.is_head(cur) && nnext != SENTINEL {
                 return Err(()); // height change pending
             }
@@ -1252,6 +1584,7 @@ impl DetSkiplist {
                     }
                     return Ok(p.hit);
                 }
+                cost.prefetches += self.arena.prefetch_plane(p.next) as u64;
                 cur = p.next;
                 continue;
             }
@@ -1266,6 +1599,36 @@ impl DetSkiplist {
             // remember this level's entry for the next nearby search
             if !self.is_head(cur) {
                 self.finger_record(n.hot.level.load(Ordering::Relaxed), cur, seg_lo, nkey);
+            }
+            // Fat inner nodes: one seqlock-consistent block probe (header +
+            // separators + children read in a single window, SIMD rank)
+            // replaces the per-child linked walk. `Fallback` (unbuilt /
+            // overflowed / disabled) keeps the legacy walk below.
+            if self.inner_blocks() {
+                match self.arena.block_route(cur, key) {
+                    Some(BlockRoute::Descend { child, sep_lo, .. }) => {
+                        cost.derefs += 1;
+                        cost.prefetches += self.arena.prefetch(child) as u64
+                            + self.arena.prefetch_plane(child) as u64;
+                        if let Some(s) = sep_lo {
+                            // separators are never stale-low, so `s + 1`
+                            // only ever narrows the finger's predicted span
+                            seg_lo = s.wrapping_add(1);
+                        }
+                        cur = child;
+                        continue;
+                    }
+                    Some(BlockRoute::Right { nkey, next }) => {
+                        // every separator (hence every child) tops out
+                        // below `key`: the subtree cannot cover it
+                        cost.derefs += 1;
+                        seg_lo = nkey.wrapping_add(1);
+                        cur = next;
+                        continue;
+                    }
+                    Some(BlockRoute::Fallback { .. }) => {}
+                    None => return Err(()), // torn block / generation changed
+                }
             }
             // collect children lock-free; stop at first covering child
             let mut d = bottom;
@@ -1518,6 +1881,7 @@ impl DetSkiplist {
         }
 
         let level = n.hot.level.load(Ordering::Relaxed);
+        self.block_build_if_missing(nref);
 
         // record the descent entry at this level for the finger cache
         if !self.is_head(nref) && !children.is_empty() {
@@ -1560,13 +1924,17 @@ impl DetSkiplist {
             n.cold.lock.unlock();
             return Tri::Retry;
         }
-        if tchildren <= 2 && children.len() >= 2 {
+        if tchildren <= self.min_inner() && children.len() >= 2 {
             // Boost via merge/borrow with a sibling (alg 5). Pair is always
             // (left, right) = adjacent children of n; merge removes the
             // RIGHT node so the parent's bottom link never dangles.
             let (li, ri) = if i > 0 { (i - 1, i) } else { (i, i + 1) };
             if ri < children.len() {
                 let merged = self.merge_borrow(children[li], children[ri], key, cost);
+                // membership/keys below changed: republish n's block over
+                // the post-boost child list (the merge victim routes from
+                // frozen state until retired at release below)
+                self.block_refresh(nref, None);
                 descend = merged;
             }
         }
@@ -1585,8 +1953,16 @@ impl DetSkiplist {
 
     /// Algorithm 5: merge the pair `(n1, n2)` (both locked children of the
     /// current node; `n2 = n1.next`) and optionally re-split ("borrow") if
-    /// the donor side had more than 2 children. Returns the node now
-    /// covering `key`.
+    /// the pair's combined arity exceeds `2 * min_inner` (legacy: the
+    /// donor side had more than 2 children — identical gate, since legacy
+    /// `2 * min_inner == INSERT_WINDOW`). Returns the node now covering
+    /// `key`.
+    ///
+    /// Block discipline: the takeover raises `n1`'s key, so it rides
+    /// `block_refresh` (header + block in one window). A reader holding the
+    /// parent's pre-refresh block still routes `n1`'s absorbed range to
+    /// `n2`, whose frozen children answer correctly until the caller's
+    /// release loop retires it.
     fn merge_borrow(&self, n1: NodeRef, n2: NodeRef, key: u64, cost: &mut PathCost) -> NodeRef {
         let n1n = self.arena.node(n1);
         let n2n = self.arena.node(n2);
@@ -1599,8 +1975,9 @@ impl DetSkiplist {
             // through this segment rebalances it.
             _ => return if key <= n1key { n1 } else { n2 },
         };
+        let floor = self.min_inner();
         let target_left = key <= n1key;
-        let need = (target_left && c1.len() <= 2) || (!target_left && c2.len() <= 2);
+        let need = (target_left && c1.len() <= floor) || (!target_left && c2.len() <= floor);
         if !need {
             return if target_left { n1 } else { n2 };
         }
@@ -1608,25 +1985,41 @@ impl DetSkiplist {
         // merge: n1 absorbs n2 (atomic (key,next) takeover), n2 retires.
         let (n2key, n2next) = n2n.key_next();
         let level = n1n.hot.level.load(Ordering::Relaxed);
-        n1n.set_key_next(n2key, n2next);
+        self.block_refresh(n1, Some((n2key, n2next)));
         n2n.cold.mark.store(true, Ordering::Release);
         self.stats.merges.fetch_add(1, Ordering::Relaxed);
 
         let merged_len = c1.len() + c2.len();
         let mut result = n1;
-        if merged_len > INSERT_WINDOW {
-            // borrow: re-split so the target side keeps >= 3 children.
+        if merged_len > 2 * floor {
+            // borrow: re-split so the target side keeps >= min_inner + 1
+            // children (the upcoming removal cannot underflow it) and the
+            // donor keeps >= min_inner.
             self.stats.borrows.fetch_add(1, Ordering::Relaxed);
-            if target_left {
-                // target was n1 (2 children); give it c2[0], new node nn
-                // takes c2[1..].
+            if self.inner_blocks() {
+                // generalized F-aware re-split: bias the extra child (odd
+                // totals) toward the target side
+                let lh = if target_left { merged_len.div_ceil(2) } else { merged_len / 2 };
+                let mut all = ChildVec::new();
+                if c1.iter().chain(c2.iter()).all(|&c| all.push(c)) {
+                    let nn = self.arena.alloc(n2key, n2next, all[lh], 0, level);
+                    self.block_init_children(nn, &all[lh..]);
+                    let bk = self.arena.node(all[lh - 1]).key();
+                    self.block_refresh(n1, Some((bk, nn)));
+                    result = if key <= bk { n1 } else { nn };
+                }
+                // combined list over-wide (cannot happen with both sides
+                // within the validator ceiling): stay merged, no re-split
+            } else if target_left {
+                // legacy: target was n1 (2 children); give it c2[0], new
+                // node nn takes c2[1..].
                 let nn = self.arena.alloc(n2key, n2next, c2[1], 0, level);
                 let bk = self.arena.node(c2[0]).key();
                 n1n.set_key_next(bk, nn);
                 result = if key <= bk { n1 } else { nn };
             } else {
-                // target was n2 (2 children); nn takes n1's last child plus
-                // n2's children.
+                // legacy: target was n2 (2 children); nn takes n1's last
+                // child plus n2's children.
                 let p = c1.len();
                 let nn = self.arena.alloc(n2key, n2next, c1[p - 1], 0, level);
                 let bk = self.arena.node(c1[p - 2]).key();
@@ -1709,7 +2102,9 @@ impl DetSkiplist {
         }
 
         if newcnt == 0 {
-            // the chunk empties: unlink it from the terminal list
+            // the chunk empties: unlink it from the terminal list. Stale
+            // block copies still routing to the victim hit its mark and
+            // retry; the refresh below re-points fresh readers.
             if ti > 0 {
                 // predecessor bypass
                 let prn = self.arena.node(children[ti - 1]);
@@ -1720,7 +2115,7 @@ impl DetSkiplist {
                 if ti == children.len() - 1 {
                     let (pk, pnx) = pn.key_next();
                     if pk == key && !self.is_head(p) {
-                        pn.set_key_next(prk, pnx);
+                        self.set_header_windowed(p, prk, pnx);
                     }
                 }
             } else if children.len() > 1 {
@@ -1745,6 +2140,8 @@ impl DetSkiplist {
                 pn.hot.bottom.store(tnext, Ordering::Release);
                 tn.cold.mark.store(true, Ordering::Release);
             }
+            // membership shrank: republish the routing block
+            self.block_refresh(p, None);
             return Tri::True;
         }
 
@@ -1763,10 +2160,11 @@ impl DetSkiplist {
             }
         }
         if pos == newcnt && ti == children.len() - 1 {
-            // removed the leaf max: sync the leaf key
+            // removed the leaf max: sync the leaf key (a lowering — the
+            // block separator goes stale-high, which routing tolerates)
             let (pk, pnx) = pn.key_next();
             if pk == key && !self.is_head(p) {
-                pn.set_key_next(keys[newcnt - 1], pnx);
+                self.set_header_windowed(p, keys[newcnt - 1], pnx);
             }
         }
         if newcnt < min_occ && children.len() >= 2 {
@@ -1775,6 +2173,11 @@ impl DetSkiplist {
             // release_children_retiring retires it; a resplit's fresh chunk
             // needs no lock here (the leaf lock excludes other writers)
             let _ = self.chunk_rebuild_pair(children[li], children[ri], false);
+            // membership changed (merge or resplit): republish the block.
+            // The pair's key moves (left raised to a stored separator at
+            // worst) stay covered by the pre-refresh block via the marked
+            // right chunk's mark-check retry.
+            self.block_refresh(p, None);
         }
         Tri::True
     }
@@ -1916,8 +2319,9 @@ impl DetSkiplist {
             if self.arena.resolve(cur).is_none() {
                 return None;
             }
-            cost.prefetches +=
-                self.arena.prefetch(nnext) as u64 + self.arena.prefetch(bottom) as u64;
+            cost.prefetches += self.arena.prefetch(nnext) as u64
+                + self.arena.prefetch(bottom) as u64
+                + self.arena.prefetch_plane(bottom) as u64;
             if self.is_head(cur) && nnext != SENTINEL {
                 return None;
             }
@@ -1935,6 +2339,25 @@ impl DetSkiplist {
             if nkey < lo {
                 cur = nnext;
                 continue;
+            }
+            // fat inner nodes: one block probe replaces the child walk
+            if self.inner_blocks() {
+                match self.arena.block_route(cur, lo) {
+                    Some(BlockRoute::Descend { child, .. }) => {
+                        cost.derefs += 1;
+                        cost.prefetches += self.arena.prefetch(child) as u64
+                            + self.arena.prefetch_plane(child) as u64;
+                        cur = child;
+                        continue;
+                    }
+                    Some(BlockRoute::Right { next, .. }) => {
+                        cost.derefs += 1;
+                        cur = next;
+                        continue;
+                    }
+                    Some(BlockRoute::Fallback { .. }) => {}
+                    None => return None, // torn block / generation changed
+                }
             }
             // descend into covering child
             let mut d = bottom;
@@ -2153,6 +2576,7 @@ impl DetSkiplist {
         if matches!(first_op, BatchOp::Insert(..)) {
             self.addition_rebalance(nref, &children);
         }
+        self.block_build_if_missing(nref);
         if !self.is_head(nref) && !children.is_empty() {
             carry.record(level, nref, nkey);
             self.finger_record(level, nref, self.arena.node(children[0]).key(), nkey);
@@ -2203,13 +2627,14 @@ impl DetSkiplist {
                 n.cold.lock.unlock();
                 return RunStep::Retry;
             }
-            if tchildren <= 2 && children.len() >= 2 {
-                if carried && children.len() <= 2 {
-                    // Merging two of our children would drop this node to
-                    // width 1; per-op descents cannot get here because the
-                    // level above boosts a ≤ 2-wide node before descending
-                    // into it — a boost the carried start skipped. Fall
-                    // back to a shallower start, which runs the cascade.
+            if tchildren <= self.min_inner() && children.len() >= 2 {
+                if carried && children.len() <= self.min_inner() {
+                    // Merging two of our children would drop this node
+                    // below the resting floor; per-op descents cannot get
+                    // here because the level above boosts an at-floor node
+                    // before descending into it — a boost the carried
+                    // start skipped. Fall back to a shallower start, which
+                    // runs the cascade.
                     self.release_children(&children);
                     n.cold.lock.unlock();
                     return RunStep::Stale;
@@ -2217,6 +2642,7 @@ impl DetSkiplist {
                 let (li, ri) = if ci > 0 { (ci - 1, ci) } else { (ci, ci + 1) };
                 if ri < children.len() {
                     descend = self.merge_borrow(children[li], children[ri], key, cost);
+                    self.block_refresh(nref, None);
                 }
             }
             self.release_children_retiring(&children);
@@ -2273,6 +2699,11 @@ impl DetSkiplist {
         let cap = self.arena.leaf_cap();
         let min_occ = self.min_chunk_occupancy();
         let mut first = true;
+        // Lazy block retract: demoted to the linked-walk fallback before
+        // the group's first mutation (fresh readers then see every
+        // intermediate state through the fat-leaf protocol), republished
+        // once after the loop.
+        let mut retracted = !self.inner_blocks();
         let mut keys = [0u64; MAX_LEAF_CAP];
         while *i < ops.len() {
             let (pk, _) = n.key_next(); // live: erases can lower it
@@ -2303,6 +2734,10 @@ impl DetSkiplist {
                     sink(*i, BatchReply::Value(v));
                 }
                 BatchOp::Insert(k, val) => {
+                    if !retracted {
+                        self.block_retract(nref);
+                        retracted = true;
+                    }
                     if seg.len() == 0 {
                         // empty (head) leaf: become the first chunk
                         let t = self.arena.alloc_chunk(&[k], &[val], SENTINEL);
@@ -2343,9 +2778,10 @@ impl DetSkiplist {
                     } else {
                         // chunk split grows the arity — window gate: only
                         // descents split leaves, so a non-first split must
-                        // leave width <= SPLIT_THRESHOLD (the post-split
+                        // leave width <= split_threshold (the post-split
                         // transient a point insert also leaves)
-                        if (!first && seg.len() >= SPLIT_THRESHOLD) || seg.len() + 1 > SEG_CAP {
+                        if (!first && seg.len() >= self.split_threshold()) || seg.len() + 1 > SEG_CAP
+                        {
                             break;
                         }
                         let (_, tnext) = tn.key_next();
@@ -2396,6 +2832,10 @@ impl DetSkiplist {
                         *i += 1;
                         continue;
                     };
+                    if !retracted {
+                        self.block_retract(nref);
+                        retracted = true;
+                    }
                     let ti = ci;
                     let t = seg.get(ti);
                     let tn = self.arena.node(t);
@@ -2407,7 +2847,7 @@ impl DetSkiplist {
                     // A carried start skipped the parent's boost entirely,
                     // so even its first shrink is window-gated. In-chunk
                     // removals never change the arity and are never gated.
-                    if needs_shrink && (!first || carried) && seg.len() < ERASE_WINDOW {
+                    if needs_shrink && (!first || carried) && seg.len() < self.erase_window() {
                         break;
                     }
                     if newcnt == 0 {
@@ -2425,7 +2865,7 @@ impl DetSkiplist {
                                 // removed the boundary chunk: sync p.key
                                 let (pk2, pnx) = n.key_next();
                                 if pk2 == k && !self.is_head(nref) {
-                                    n.set_key_next(prk, pnx);
+                                    self.set_header_windowed(nref, prk, pnx);
                                 }
                             }
                         } else if seg.len() > 1 {
@@ -2474,7 +2914,7 @@ impl DetSkiplist {
                             // removed the leaf max: sync p.key
                             let (pk2, pnx) = n.key_next();
                             if pk2 == k && !self.is_head(nref) {
-                                n.set_key_next(keys[newcnt - 1], pnx);
+                                self.set_header_windowed(nref, keys[newcnt - 1], pnx);
                             }
                         }
                         if newcnt < min_occ && seg.len() >= 2 {
@@ -2499,6 +2939,12 @@ impl DetSkiplist {
             *i += 1;
         }
 
+        // republish the routing block over the settled segment before any
+        // chunk lock releases (the leaf lock alone pins the walk, but the
+        // segment is final here either way)
+        if retracted && self.inner_blocks() {
+            self.block_refresh(nref, None);
+        }
         // release: every current segment member (originals still present
         // plus nodes created here), then the split-off suffix
         for j in 0..seg.len() {
@@ -2748,8 +3194,9 @@ impl DetSkiplist {
         }
         // the next dependent misses go in flight while the scheduler visits
         // the other lanes — the pipeline's whole point
-        cost.prefetches +=
-            self.arena.prefetch(nnext) as u64 + self.arena.prefetch(bottom) as u64;
+        cost.prefetches += self.arena.prefetch(nnext) as u64
+            + self.arena.prefetch(bottom) as u64
+            + self.arena.prefetch_plane(bottom) as u64;
         if self.is_head(cur) && nnext != SENTINEL {
             return self.lane_fail(lane); // height change pending
         }
@@ -2768,6 +3215,7 @@ impl DetSkiplist {
                         }
                         return self.lane_done(lane, sink, BatchReply::Value(p.hit));
                     }
+                    cost.prefetches += self.arena.prefetch_plane(p.next) as u64;
                     lane.cur = p.next;
                 }
                 _ => self.lane_fail(lane),
@@ -2814,6 +3262,29 @@ impl DetSkiplist {
                 }
             }
             return;
+        }
+        // fat inner node: one block probe replaces the child-level right
+        // walk the unrolled descent would otherwise take step by step
+        if self.inner_blocks() {
+            match self.arena.block_route(cur, key) {
+                Some(BlockRoute::Descend { child, .. }) => {
+                    cost.derefs += 1;
+                    if !self.is_head(cur) {
+                        lane.carry.record(level, cur, nkey);
+                    }
+                    cost.prefetches += self.arena.prefetch(child) as u64
+                        + self.arena.prefetch_plane(child) as u64;
+                    lane.cur = child;
+                    return;
+                }
+                Some(BlockRoute::Right { next, .. }) => {
+                    cost.derefs += 1;
+                    lane.cur = next;
+                    return;
+                }
+                Some(BlockRoute::Fallback { .. }) => {}
+                None => return self.lane_fail(lane),
+            }
         }
         if !self.is_head(cur) {
             lane.carry.record(level, cur, nkey);
@@ -2978,6 +3449,7 @@ impl DetSkiplist {
                 }
                 let first_child = child;
                 let mut arity = 0;
+                let mut live: Vec<(NodeRef, u64)> = Vec::new();
                 loop {
                     if child == SENTINEL {
                         break;
@@ -2989,13 +3461,59 @@ impl DetSkiplist {
                         break;
                     }
                     arity += 1;
+                    live.push((child, ck));
                     child = cn;
                     if ck == nkey {
                         break;
                     }
                 }
-                if arity > MAX_ARITY {
-                    return Err(format!("level {w}: node arity {arity} > {MAX_ARITY}"));
+                let max_arity = self.max_arity();
+                if arity > max_arity {
+                    return Err(format!("level {w}: node arity {arity} > {max_arity}"));
+                }
+                // fat-inner routing block: when built it must mirror the
+                // live child segment exactly (quiescent writers always
+                // refresh in their epilogue) with separators that are never
+                // stale-LOW — a low separator routes readers past live
+                // coverage, which rightward recovery cannot repair.
+                if self.inner_blocks() {
+                    if let Some(cnt) = self.arena.block_len(node) {
+                        if cnt > self.inner_cap() {
+                            return Err(format!(
+                                "level {w}: block count {cnt} > inner cap {} (key {nkey})",
+                                self.inner_cap()
+                            ));
+                        }
+                        if cnt != live.len() {
+                            return Err(format!(
+                                "level {w}: block count {cnt} != live arity {} (key {nkey})",
+                                live.len()
+                            ));
+                        }
+                        let mut psep: Option<u64> = None;
+                        for (i, &(cref, ckey)) in live.iter().enumerate() {
+                            let sep = self.arena.block_sep(node, i);
+                            let bchild = self.arena.block_child(node, i);
+                            if let Some(ps) = psep {
+                                if sep <= ps {
+                                    return Err(format!(
+                                        "level {w}: block seps not increasing ({ps} -> {sep})"
+                                    ));
+                                }
+                            }
+                            psep = Some(sep);
+                            if bchild != cref {
+                                return Err(format!(
+                                    "level {w}: block child {i} != live child (key {nkey})"
+                                ));
+                            }
+                            if sep < ckey {
+                                return Err(format!(
+                                    "level {w}: block sep {sep} stale-LOW vs child key {ckey}"
+                                ));
+                            }
+                        }
+                    }
                 }
                 let is_root_or_spine = node == self.head || nkey == u64::MAX;
                 if arity < 2 && !is_root_or_spine && self.len() > 4 {
@@ -3792,6 +4310,47 @@ mod tests {
         assert!(SPLIT_THRESHOLD <= MAX_ARITY);
         // a windowed shrink leaves at least 2 children (no boost needed)
         assert!(ERASE_WINDOW - 1 >= 2);
+        // the F-relative windows collapse to the legacy constants when fat
+        // inner blocks are off, and keep the same mutual relations at every
+        // legal F (quarter-occupancy floor, split fits the block, windows
+        // never force a rebalance off the descent path)
+        let legacy = DetSkiplist::with_caps_on(
+            FindMode::LockFree,
+            1 << 10,
+            ArenaOptions::default(),
+            DEFAULT_LEAF_CAP,
+            1, // < 2 disables blocks
+        );
+        assert!(!legacy.inner_blocks());
+        assert_eq!(legacy.split_threshold(), SPLIT_THRESHOLD);
+        assert_eq!(legacy.insert_window(), INSERT_WINDOW);
+        assert_eq!(legacy.erase_window(), ERASE_WINDOW);
+        assert_eq!(legacy.min_inner(), 2);
+        assert_eq!(legacy.max_arity(), MAX_ARITY);
+        for f in [2usize, 4, 8, 16] {
+            let s = DetSkiplist::with_caps_on(
+                FindMode::LockFree,
+                1 << 10,
+                ArenaOptions::default(),
+                DEFAULT_LEAF_CAP,
+                f,
+            );
+            assert!(s.inner_blocks());
+            assert_eq!(s.split_threshold(), f);
+            assert_eq!(s.insert_window(), f - 1);
+            assert_eq!(s.min_inner(), (f / 4).max(1));
+            assert_eq!(s.erase_window(), s.min_inner() + 1);
+            assert_eq!(s.max_arity(), f + 2);
+            // a split of an F-wide node leaves two sides >= the floor
+            assert!(f / 2 >= s.min_inner());
+            assert!(f - f / 2 >= s.min_inner());
+            // the smallest borrowable pair (2*floor + 1 children) re-splits
+            // with both sides at or above the floor, whichever side is biased
+            assert!((2 * s.min_inner() + 1).div_ceil(2) >= s.min_inner());
+            assert!((2 * s.min_inner() + 1) / 2 >= s.min_inner());
+            // everything fits the acquisition buffers
+            assert!(s.max_arity() + 2 <= 24, "ChildVec capacity");
+        }
     }
 
     fn new_lf_k(leaf_cap: usize) -> DetSkiplist {
@@ -3912,5 +4471,164 @@ mod tests {
                 );
             }
         }
+    }
+
+    fn new_lf_f(leaf_cap: usize, inner_cap: usize) -> DetSkiplist {
+        DetSkiplist::with_caps_on(
+            FindMode::LockFree,
+            1 << 14,
+            ArenaOptions::default(),
+            leaf_cap,
+            inner_cap,
+        )
+    }
+
+    #[test]
+    fn fatinner_oracle_churn_across_caps() {
+        use std::collections::BTreeMap;
+        for f in [2usize, 4, 8, 16] {
+            let s = new_lf_f(DEFAULT_LEAF_CAP, f);
+            assert_eq!(s.inner_cap(), f);
+            let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+            let mut rng = Rng::new(0xFA7 + f as u64);
+            for i in 0..6_000u64 {
+                let k = rng.below(1_200);
+                match rng.below(8) {
+                    0..=3 => {
+                        let v = i;
+                        let want = !oracle.contains_key(&k);
+                        assert_eq!(s.insert(k, v), want, "F {f} insert {k}");
+                        oracle.entry(k).or_insert(v);
+                    }
+                    4..=5 => assert_eq!(s.erase(k), oracle.remove(&k).is_some(), "F {f} erase {k}"),
+                    _ => assert_eq!(s.get(k), oracle.get(&k).copied(), "F {f} get {k}"),
+                }
+                if i % 512 == 0 {
+                    s.check_invariants().unwrap_or_else(|e| panic!("F {f} after op {i}: {e}"));
+                }
+            }
+            let keys = s.check_invariants().unwrap();
+            assert_eq!(keys, oracle.keys().copied().collect::<Vec<_>>(), "F {f}");
+            for (&k, &v) in &oracle {
+                assert_eq!(s.get(k), Some(v), "F {f} final get {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn fatinner_agrees_with_legacy_routing() {
+        // F = 8 against the block-disabled legacy walk on an identical op
+        // stream: both the per-op replies and the final key sets must match.
+        let fat = new_lf_f(DEFAULT_LEAF_CAP, 8);
+        let legacy = new_lf_f(DEFAULT_LEAF_CAP, 1);
+        assert!(fat.inner_blocks() && !legacy.inner_blocks());
+        let mut rng = Rng::new(0xB10C);
+        for i in 0..8_000u64 {
+            let k = rng.below(2_000);
+            match rng.below(8) {
+                0..=3 => assert_eq!(fat.insert(k, k ^ i), legacy.insert(k, k ^ i), "insert {k}"),
+                4..=5 => assert_eq!(fat.erase(k), legacy.erase(k), "erase {k}"),
+                _ => assert_eq!(fat.get(k), legacy.get(k), "get {k}"),
+            }
+        }
+        assert_eq!(fat.check_invariants().unwrap(), legacy.check_invariants().unwrap());
+    }
+
+    #[test]
+    fn fatinner_fused_runs_and_interleaved_agree() {
+        use crate::skiplist::BatchOp;
+        for f in [2usize, 4, 8] {
+            let s = new_lf_f(8, f);
+            let twin = new_lf_f(8, f);
+            let mut rng = Rng::new(77 + f as u64);
+            for round in 0..6 {
+                let mut ops = Vec::new();
+                for _ in 0..400 {
+                    let k = rng.below(900);
+                    ops.push(match rng.below(3) {
+                        0 => BatchOp::Insert(k, k ^ 5),
+                        1 => BatchOp::Erase(k),
+                        _ => BatchOp::Get(k),
+                    });
+                }
+                ops.sort_by_key(|o| o.key());
+                let mut got = vec![None; ops.len()];
+                s.apply_sorted_run(&ops, &mut |i, r| got[i] = Some(r));
+                for (i, op) in ops.iter().enumerate() {
+                    let want = match *op {
+                        BatchOp::Insert(k, v) => BatchReply::Applied(twin.insert(k, v)),
+                        BatchOp::Erase(k) => BatchReply::Applied(twin.erase(k)),
+                        BatchOp::Get(k) => BatchReply::Value(twin.get(k)),
+                    };
+                    assert_eq!(got[i], Some(want), "F {f} round {round} op {i} {op:?}");
+                }
+                // scattered (unsorted) batch through the interleaved lanes
+                let mut scatter = Vec::new();
+                for _ in 0..128 {
+                    scatter.push(rng.below(900));
+                }
+                let got = s.get_many(&scatter, 8);
+                for (i, &k) in scatter.iter().enumerate() {
+                    assert_eq!(got[i], twin.get(k), "F {f} round {round} scatter {k}");
+                }
+                assert_eq!(
+                    s.check_invariants().unwrap(),
+                    twin.check_invariants().unwrap(),
+                    "F {f} round {round} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fatinner_depth_changes_keep_root_block_fresh() {
+        // grow far enough for several IncreaseDepth promotions, then erase
+        // back down through DecreaseDepth collapses — the root block is
+        // rewritten inside both windows, so routing must stay exact
+        let s = new_lf_f(2, 2);
+        let n = 2_000u64;
+        for k in 0..n {
+            assert!(s.insert(k, k + 1));
+        }
+        assert!(s.stats().depth_increases > 0);
+        s.check_invariants().unwrap();
+        for k in 0..n {
+            assert_eq!(s.get(k), Some(k + 1), "post-growth get {k}");
+            assert!(s.erase(k), "erase {k}");
+            if k % 256 == 0 {
+                s.check_invariants().unwrap_or_else(|e| panic!("after erase {k}: {e}"));
+            }
+        }
+        assert!(s.is_empty());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fatinner_block_probe_cuts_index_derefs() {
+        // the tentpole's measurable claim, pinned as a unit test: with the
+        // same leaf shape, F = 8 routing blocks strictly cut derefs/op for
+        // uniform random gets against the F-disabled linked child walk
+        let fat = new_lf_f(8, 8);
+        let legacy = new_lf_f(8, 1);
+        let n = 60_000u64;
+        for k in 0..n {
+            fat.insert(k, k);
+            legacy.insert(k, k);
+        }
+        let mut rng = Rng::new(0xDE7EF);
+        let (mut df, mut dl) = (0u64, 0u64);
+        for _ in 0..4_000 {
+            let k = rng.below(n);
+            let mut c = PathCost::default();
+            assert_eq!(fat.find_lockfree_from(fat.head, 0, k, &mut c), Ok(Some(k)));
+            df += c.derefs;
+            let mut c = PathCost::default();
+            assert_eq!(legacy.find_lockfree_from(legacy.head, 0, k, &mut c), Ok(Some(k)));
+            dl += c.derefs;
+        }
+        assert!(
+            df < dl,
+            "block routing must cut index derefs: fat {df} vs legacy {dl}"
+        );
     }
 }

@@ -18,7 +18,7 @@ pub mod node;
 pub mod random;
 
 pub use det::{DetSkiplist, FindMode, SkiplistStats, MAX_KEY};
-pub use node::{DEFAULT_LEAF_CAP, MAX_LEAF_CAP};
+pub use node::{DEFAULT_INNER_CAP, DEFAULT_LEAF_CAP, MAX_INNER_CAP, MAX_LEAF_CAP};
 pub use random::RandomSkiplist;
 
 /// One element of a key-sorted mixed-operation run — the unit the fused

@@ -63,19 +63,38 @@ pub const MAX_LEAF_CAP: usize = 32;
 /// (plus two of values), the sweet spot Table XV sweeps around.
 pub const DEFAULT_LEAF_CAP: usize = 16;
 
-/// Leaf-plane slot layout (all `AtomicU64` words): `[0]` seqlock version,
-/// `[1]` live key count, `[2 .. 2+K]` sorted keys, `[2+K .. 2+2K]` values
-/// (parallel array). The node's packed `(key, next)` word doubles as the
-/// chunk header's `(max_key, next)` — one atomic snapshot still routes the
-/// descent, and in-chunk state is versioned by the slot's seqlock word.
+/// Hard upper bound on separator keys per fat inner routing block (one
+/// 128-byte separator array + one 128-byte child array at the max).
+pub const MAX_INNER_CAP: usize = 16;
+
+/// Default inner-block capacity: 8 separators = one 64-byte line of keys
+/// plus one of child links, the sweet spot Table XVI sweeps around.
+pub const DEFAULT_INNER_CAP: usize = 8;
+
+/// Count-word sentinel marking an inner block *overflowed*: the node
+/// transiently has more children than `inner_cap` (rebalance windows allow
+/// brief excursions past `F`), so readers must fall back to the linked
+/// child walk. Any value `> inner_cap` routes to the fallback; `u64::MAX`
+/// makes the intent unmistakable in a debugger.
+const BLOCK_OVERFLOW: u64 = u64::MAX;
+
+/// Chunk/block-plane slot layout (all `AtomicU64` words): `[0]` seqlock
+/// version, `[1]` live key count, `[2 .. 2+P]` sorted keys, `[2+P .. 2+2P]`
+/// the parallel second array, where `P` is the plane capacity
+/// (`max(leaf_cap, inner_cap)` — terminal chunks and inner routing blocks
+/// share the plane, so both arrays sit at the same offsets for either
+/// role). For a terminal chunk the second array holds values; for a
+/// level ≥ 1 routing block it holds child `NodeRef`s. The node's packed
+/// `(key, next)` word doubles as the header — one atomic snapshot still
+/// routes the descent, and in-slot state is versioned by the seqlock word.
 const LEAF_VERSION: usize = 0;
 const LEAF_COUNT: usize = 1;
 const LEAF_KEYS: usize = 2;
 
-/// Words per leaf-plane slot for a `leaf_cap`-key chunk.
+/// Words per chunk/block-plane slot for a `plane_cap`-key slot.
 #[inline]
-pub fn leaf_words_for(leaf_cap: usize) -> usize {
-    LEAF_KEYS + 2 * leaf_cap
+pub fn leaf_words_for(plane_cap: usize) -> usize {
+    LEAF_KEYS + 2 * plane_cap
 }
 
 /// A lock-free, seqlock-consistent probe of one terminal chunk: the fields
@@ -96,11 +115,45 @@ pub struct ChunkProbe {
     pub hit: Option<u64>,
 }
 
-/// Writer-side seqlock window over one chunk's leaf slot. Opened only
-/// while holding the chunk's (parent-leaf-serialized) write lock; data
+/// One routing decision computed from a fat inner node's separator block,
+/// read under the same seqlock + generation protocol as [`ChunkProbe`].
+/// The packed `(key, next)` header is read *inside* the version-stable
+/// window, so the header and the block describe one consistent moment —
+/// without that pairing a reader could combine a pre-split high key with a
+/// post-split half-block and route right past the new sibling.
+#[derive(Clone, Copy, Debug)]
+pub enum BlockRoute {
+    /// No usable block (unbuilt, or overflowed past `inner_cap` during a
+    /// rebalance excursion): walk the linked child list from `bottom`.
+    Fallback {
+        /// Node key at the probe instant.
+        nkey: u64,
+        /// Node next at the probe instant.
+        next: NodeRef,
+    },
+    /// The node's whole range is below the target: continue right.
+    Right { nkey: u64, next: NodeRef },
+    /// Descend directly into `child` — the first child whose stored
+    /// separator is `>= target`.
+    Descend {
+        nkey: u64,
+        next: NodeRef,
+        child: NodeRef,
+        /// Stored separator of the *previous* child (`None` when `child`
+        /// is the first): `target > sep_lo` and separators are never
+        /// stale-low, so `child`'s segment starts at or below
+        /// `sep_lo + 1`. Fingers use this as a conservative lower bound.
+        sep_lo: Option<u64>,
+    },
+}
+
+/// Writer-side seqlock window over one chunk/block-plane slot. Opened only
+/// while holding the owning node's (parent-serialized) write lock; data
 /// stores inside the window are relaxed, and dropping the guard publishes
 /// them with a release store of the even version. Lock-free readers that
 /// overlapped the window observe an odd or changed version and retry.
+/// The same guard serves terminal chunks (second array = values) and inner
+/// routing blocks (second array = child links).
 pub struct ChunkWrite<'a> {
     leaf: &'a [AtomicU64],
     cap: usize,
@@ -134,6 +187,19 @@ impl ChunkWrite<'_> {
     #[inline]
     pub fn val(&self, i: usize) -> u64 {
         self.leaf[LEAF_KEYS + self.cap + i].load(Ordering::Relaxed)
+    }
+
+    /// Block-role alias: child link `i` (the second array).
+    #[inline]
+    pub fn set_child(&self, i: usize, child: NodeRef) {
+        self.set_val(i, child);
+    }
+
+    /// Mark the block overflowed: readers fall back to the linked child
+    /// walk until a later rebuild publishes a real count.
+    #[inline]
+    pub fn set_overflow(&self) {
+        self.leaf[LEAF_COUNT].store(BLOCK_OVERFLOW, Ordering::Relaxed);
     }
 }
 
@@ -269,9 +335,15 @@ impl<'a> NodeView<'a> {
 /// typed façade over the unified [`BlockArena`].
 pub struct NodeArena {
     arena: BlockArena<Node>,
-    /// Keys per terminal chunk; 0 = no leaf plane (non-chunked users:
-    /// the split-order table shares this arena type).
+    /// Keys per terminal chunk; 0 = no chunk/block plane (non-chunked
+    /// users: the split-order table shares this arena type).
     leaf_cap: usize,
+    /// Separators per fat inner routing block; `< 2` = inner blocks
+    /// disabled (level ≥ 1 descents use the legacy linked child walk).
+    inner_cap: usize,
+    /// Plane slot width driver: `max(leaf_cap, inner_cap when enabled)`.
+    /// Both plane roles index their second array at `LEAF_KEYS + plane_cap`.
+    plane_cap: usize,
 }
 
 impl NodeArena {
@@ -285,29 +357,50 @@ impl NodeArena {
     /// (per-shard arenas are homed on their shard's NUMA node).
     pub fn with_options(block_size: usize, max_blocks: usize, opts: ArenaOptions) -> NodeArena {
         let leaf_cap = if opts.leaf_words == 0 { 0 } else { (opts.leaf_words - LEAF_KEYS) / 2 };
-        Self::finish(BlockArena::with_options(block_size, max_blocks, opts), leaf_cap)
+        Self::finish(BlockArena::with_options(block_size, max_blocks, opts), leaf_cap, 1)
     }
 
     /// Arena sized by the shared §V capacity policy
     /// ([`BlockArena::for_capacity`]) for up to `capacity` live nodes.
     pub fn for_capacity(capacity: usize, opts: ArenaOptions) -> NodeArena {
-        Self::finish(BlockArena::for_capacity(capacity, opts), 0)
+        Self::finish(BlockArena::for_capacity(capacity, opts), 0, 1)
     }
 
     /// Capacity-sized arena with a fat-leaf plane: every slot additionally
     /// carries a `leaf_words_for(leaf_cap)`-word chunk (version, count,
-    /// keys, values) in the [`BlockArena`]'s third plane.
+    /// keys, values) in the [`BlockArena`]'s third plane. Inner routing
+    /// blocks stay disabled (the legacy linked-walk index).
     pub fn for_capacity_chunks(capacity: usize, opts: ArenaOptions, leaf_cap: usize) -> NodeArena {
+        Self::for_capacity_caps(capacity, opts, leaf_cap, 1)
+    }
+
+    /// Capacity-sized arena with both fat-plane roles: terminal chunks of
+    /// up to `leaf_cap` keys *and* (when `inner_cap >= 2`) level ≥ 1
+    /// routing blocks of up to `inner_cap` separators + child links. The
+    /// two roles live in one shared plane sized by the wider of the caps,
+    /// since any given node is exactly one of terminal/inner.
+    pub fn for_capacity_caps(
+        capacity: usize,
+        opts: ArenaOptions,
+        leaf_cap: usize,
+        inner_cap: usize,
+    ) -> NodeArena {
         assert!(
             (1..=MAX_LEAF_CAP).contains(&leaf_cap),
             "leaf_cap {leaf_cap} outside 1..={MAX_LEAF_CAP}"
         );
-        let opts = opts.with_leaf_words(leaf_words_for(leaf_cap));
-        Self::finish(BlockArena::for_capacity(capacity, opts), leaf_cap)
+        assert!(
+            (1..=MAX_INNER_CAP).contains(&inner_cap),
+            "inner_cap {inner_cap} outside 1..={MAX_INNER_CAP}"
+        );
+        let plane_cap = leaf_cap.max(if inner_cap >= 2 { inner_cap } else { 0 });
+        let opts = opts.with_leaf_words(leaf_words_for(plane_cap));
+        Self::finish(BlockArena::for_capacity(capacity, opts), leaf_cap, inner_cap)
     }
 
-    fn finish(arena: BlockArena<Node>, leaf_cap: usize) -> NodeArena {
-        let a = NodeArena { arena, leaf_cap };
+    fn finish(arena: BlockArena<Node>, leaf_cap: usize, inner_cap: usize) -> NodeArena {
+        let plane_cap = leaf_cap.max(if inner_cap >= 2 { inner_cap } else { 0 });
+        let a = NodeArena { arena, leaf_cap, inner_cap, plane_cap };
         // slot 0: the sentinel — key MAX, next/bottom self, never retired.
         // A non-zero slot here would silently corrupt every SENTINEL link,
         // so this is a hard assert even in release builds.
@@ -320,6 +413,18 @@ impl NodeArena {
     #[inline]
     pub fn leaf_cap(&self) -> usize {
         self.leaf_cap
+    }
+
+    /// Separators per fat inner routing block (`< 2` = blocks disabled).
+    #[inline]
+    pub fn inner_cap(&self) -> usize {
+        self.inner_cap
+    }
+
+    /// Whether level ≥ 1 nodes carry routing blocks at all.
+    #[inline]
+    pub fn inner_blocks(&self) -> bool {
+        self.inner_cap >= 2
     }
 
     /// Resolve a link; `None` if the node has been retired/recycled since
@@ -350,6 +455,16 @@ impl NodeArena {
     #[inline]
     pub fn prefetch(&self, r: NodeRef) -> bool {
         r != SENTINEL && self.arena.prefetch_hot(ref_idx(r))
+    }
+
+    /// Paired prefetch for `r`'s chunk/block-plane row — the keys the SIMD
+    /// rank is about to scan. Issue it alongside [`NodeArena::prefetch`] so
+    /// the plane line doesn't cold-miss right after the hot word told us to
+    /// read it (leaf chunk on terminal approach, inner block on level ≥ 1
+    /// hops). Bounds-guarded like the hot prefetch; returns whether issued.
+    #[inline]
+    pub fn prefetch_plane(&self, r: NodeRef) -> bool {
+        r != SENTINEL && self.arena.prefetch_leaf(ref_idx(r))
     }
 
     /// Batched [`NodeArena::prefetch`]: one prefetch per ref, issued back to
@@ -437,7 +552,7 @@ impl NodeArena {
             leaf[LEAF_KEYS + i].store(k, Ordering::Relaxed);
         }
         for (i, &v) in vals.iter().enumerate() {
-            leaf[LEAF_KEYS + self.leaf_cap + i].store(v, Ordering::Relaxed);
+            leaf[LEAF_KEYS + self.plane_cap + i].store(v, Ordering::Relaxed);
         }
         fence(Ordering::Release);
     }
@@ -469,7 +584,7 @@ impl NodeArena {
         // odd version: the release fence pairs with the reader's acquire
         // fence (crossbeam-style seqlock argument).
         fence(Ordering::Release);
-        ChunkWrite { leaf, cap: self.leaf_cap, v }
+        ChunkWrite { leaf, cap: self.plane_cap, v }
     }
 
     /// Writer-side chunk key count (caller holds the chunk's lock).
@@ -487,7 +602,7 @@ impl NodeArena {
     /// Writer-side value read (caller holds the chunk's lock).
     #[inline]
     pub fn chunk_val(&self, r: NodeRef, i: usize) -> u64 {
-        self.leaf(r)[LEAF_KEYS + self.leaf_cap + i].load(Ordering::Relaxed)
+        self.leaf(r)[LEAF_KEYS + self.plane_cap + i].load(Ordering::Relaxed)
     }
 
     /// Writer-side copy of the chunk's live keys into `buf`; returns the
@@ -539,7 +654,7 @@ impl NodeArena {
             }
             let rank = simd::rank(&keys[..count], key);
             let hit = if rank < count && keys[rank] == key {
-                Some(leaf[LEAF_KEYS + self.leaf_cap + rank].load(Ordering::Relaxed))
+                Some(leaf[LEAF_KEYS + self.plane_cap + rank].load(Ordering::Relaxed))
             } else {
                 None
             };
@@ -590,7 +705,7 @@ impl NodeArena {
             }
             for i in 0..count {
                 keys[i] = leaf[LEAF_KEYS + i].load(Ordering::Relaxed);
-                vals[i] = leaf[LEAF_KEYS + self.leaf_cap + i].load(Ordering::Relaxed);
+                vals[i] = leaf[LEAF_KEYS + self.plane_cap + i].load(Ordering::Relaxed);
             }
             fence(Ordering::Acquire);
             if leaf[LEAF_VERSION].load(Ordering::Relaxed) != v1 {
@@ -600,6 +715,145 @@ impl NodeArena {
                 return None;
             }
             return Some((count, hi64(kn), lo64(kn)));
+        }
+        None
+    }
+
+    // ------------------------------------------------------------------
+    // Fat inner routing blocks (level ≥ 1 nodes; `inner_cap >= 2` arenas)
+    // ------------------------------------------------------------------
+
+    /// Initialize a *pre-publication* routing block as unbuilt (count 0):
+    /// readers fall back to the linked child walk until the first rebuild
+    /// publishes real content. Mandatory for every level ≥ 1 alloc in a
+    /// blocks-enabled arena — the recycled plane slot may hold a stale
+    /// chunk/block image that would otherwise be misread as this node's.
+    pub fn block_init_unbuilt(&self, r: NodeRef) {
+        debug_assert!(self.inner_blocks());
+        self.leaf(r)[LEAF_COUNT].store(0, Ordering::Relaxed);
+        fence(Ordering::Release);
+    }
+
+    /// Initialize a *pre-publication* routing block with `seps`/`childs`
+    /// (overflow-marked when more children than `inner_cap`), ending with
+    /// a release fence — same discipline as [`NodeArena::chunk_init`]: the
+    /// link store that publishes the node orders every word written here.
+    pub fn block_init(&self, r: NodeRef, seps: &[u64], childs: &[NodeRef]) {
+        debug_assert!(self.inner_blocks());
+        debug_assert_eq!(seps.len(), childs.len());
+        let leaf = self.leaf(r);
+        if seps.is_empty() {
+            leaf[LEAF_COUNT].store(0, Ordering::Relaxed);
+        } else if seps.len() > self.inner_cap {
+            leaf[LEAF_COUNT].store(BLOCK_OVERFLOW, Ordering::Relaxed);
+        } else {
+            for (i, (&s, &c)) in seps.iter().zip(childs.iter()).enumerate() {
+                leaf[LEAF_KEYS + i].store(s, Ordering::Relaxed);
+                leaf[LEAF_KEYS + self.plane_cap + i].store(c, Ordering::Relaxed);
+            }
+            leaf[LEAF_COUNT].store(seps.len() as u64, Ordering::Relaxed);
+        }
+        fence(Ordering::Release);
+    }
+
+    /// Open a writer-side seqlock window on `r`'s routing block (caller
+    /// holds `r`'s write lock). Identical guard to [`NodeArena::chunk_write`]
+    /// — the plane slot is shared — named separately so call sites state
+    /// which role they are mutating. Every `(key, next)` store on a
+    /// published level ≥ 1 node must happen inside this window, so readers
+    /// pair the header and the block from one consistent moment.
+    #[inline]
+    pub fn block_write(&self, r: NodeRef) -> ChunkWrite<'_> {
+        self.chunk_write(r)
+    }
+
+    /// Writer-side block occupancy: `Some(count)` for a built in-range
+    /// block, `None` when unbuilt or overflow-marked (caller holds the
+    /// node's lock).
+    #[inline]
+    pub fn block_len(&self, r: NodeRef) -> Option<usize> {
+        let c = self.leaf(r)[LEAF_COUNT].load(Ordering::Relaxed);
+        if c == 0 || c > self.inner_cap as u64 {
+            None
+        } else {
+            Some(c as usize)
+        }
+    }
+
+    /// Writer-side separator read (caller holds the node's lock).
+    #[inline]
+    pub fn block_sep(&self, r: NodeRef, i: usize) -> u64 {
+        self.chunk_key(r, i)
+    }
+
+    /// Writer-side child-link read (caller holds the node's lock).
+    #[inline]
+    pub fn block_child(&self, r: NodeRef, i: usize) -> NodeRef {
+        self.chunk_val(r, i)
+    }
+
+    /// Lock-free consistent routing probe of `r`'s separator block for
+    /// `key`: one seqlock window yields the packed `(key, next)` header
+    /// *and* the block, one [`crate::util::simd::rank`] call replaces the
+    /// per-child linked walk. Validation protocol (version retry + post-
+    /// window generation re-check) is [`NodeArena::chunk_probe`]'s.
+    ///
+    /// `None` means the node is gone (stale link) or a writer interfered
+    /// persistently — the caller restarts its descent, exactly like a
+    /// failed `resolve`.
+    pub fn block_route(&self, r: NodeRef, key: u64) -> Option<BlockRoute> {
+        debug_assert!(self.inner_blocks());
+        let idx = ref_idx(r);
+        let cold = self.arena.cold(idx);
+        if cold.gen.load(Ordering::Acquire) != ref_gen(r) {
+            return None;
+        }
+        let leaf = self.leaf(r);
+        let hot = self.arena.hot(idx);
+        let mut seps = [0u64; MAX_INNER_CAP];
+        let mut childs = [SENTINEL; MAX_INNER_CAP];
+        for _ in 0..64 {
+            let v1 = leaf[LEAF_VERSION].load(Ordering::Acquire);
+            if v1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let kn = hot.kn.load();
+            let raw = leaf[LEAF_COUNT].load(Ordering::Relaxed);
+            if raw == 0 || raw > self.inner_cap as u64 {
+                // Unbuilt or overflowed: the header is one atomic load and
+                // needs no window validation, but the generation must still
+                // vouch this is the node the link meant.
+                if cold.gen.load(Ordering::Acquire) != ref_gen(r) {
+                    return None;
+                }
+                return Some(BlockRoute::Fallback { nkey: hi64(kn), next: lo64(kn) });
+            }
+            let count = raw as usize;
+            for i in 0..count {
+                seps[i] = leaf[LEAF_KEYS + i].load(Ordering::Relaxed);
+                childs[i] = leaf[LEAF_KEYS + self.plane_cap + i].load(Ordering::Relaxed);
+            }
+            fence(Ordering::Acquire);
+            if leaf[LEAF_VERSION].load(Ordering::Relaxed) != v1 {
+                continue;
+            }
+            if cold.gen.load(Ordering::Acquire) != ref_gen(r) {
+                return None;
+            }
+            let (nkey, next) = (hi64(kn), lo64(kn));
+            if nkey < key {
+                return Some(BlockRoute::Right { nkey, next });
+            }
+            let rank = simd::rank(&seps[..count], key);
+            if rank < count {
+                let sep_lo = if rank == 0 { None } else { Some(seps[rank - 1]) };
+                return Some(BlockRoute::Descend { nkey, next, child: childs[rank], sep_lo });
+            }
+            // All stored separators < key while nkey >= key: the node's
+            // header is stale-high (its real range ended below `key`) —
+            // separators are never stale-low, so no child covers `key`.
+            return Some(BlockRoute::Right { nkey, next });
         }
         None
     }
@@ -720,6 +974,81 @@ mod tests {
         assert_eq!(ref_idx(r), ref_idx(r2));
         assert!(a.chunk_probe(r, 7).is_none(), "old link stays dead");
         assert_eq!(a.chunk_probe(r2, 9).unwrap().hit, Some(90));
+    }
+
+    #[test]
+    fn block_init_route_overflow_and_shared_plane() {
+        // leaf_cap 4, inner_cap 8: plane sized by the wider role, both
+        // roles' second arrays at the same offset
+        let a = NodeArena::for_capacity_caps(256, ArenaOptions::default(), 4, 8);
+        assert_eq!(a.leaf_cap(), 4);
+        assert_eq!(a.inner_cap(), 8);
+        assert!(a.inner_blocks());
+        // terminal chunk still round-trips on the widened plane
+        let c = a.alloc_chunk(&[10, 20], &[1, 2], SENTINEL);
+        assert_eq!(a.chunk_probe(c, 20).unwrap().hit, Some(2));
+        // inner node with a 3-child block
+        let k1 = a.alloc_chunk(&[5], &[50], SENTINEL);
+        let n = a.alloc(300, SENTINEL, k1, 0, 1);
+        a.block_init(n, &[100, 200, 300], &[k1, c, k1]);
+        assert_eq!(a.block_len(n), Some(3));
+        assert_eq!(a.block_sep(n, 1), 200);
+        assert_eq!(a.block_child(n, 1), c);
+        // routing: first sep >= target wins; sep_lo = previous stored sep
+        match a.block_route(n, 150).unwrap() {
+            BlockRoute::Descend { child, sep_lo, nkey, .. } => {
+                assert_eq!(child, c);
+                assert_eq!(sep_lo, Some(100));
+                assert_eq!(nkey, 300);
+            }
+            other => panic!("expected Descend, got {other:?}"),
+        }
+        match a.block_route(n, 100).unwrap() {
+            BlockRoute::Descend { child, sep_lo, .. } => {
+                assert_eq!(child, k1);
+                assert_eq!(sep_lo, None, "first child has no lower separator");
+            }
+            other => panic!("expected Descend, got {other:?}"),
+        }
+        // target above the node's key: continue right
+        assert!(matches!(a.block_route(n, 301).unwrap(), BlockRoute::Right { nkey: 300, .. }));
+        // unbuilt and overflowed blocks both route to the fallback walk
+        let u = a.alloc(400, SENTINEL, k1, 0, 1);
+        a.block_init_unbuilt(u);
+        assert!(matches!(a.block_route(u, 7).unwrap(), BlockRoute::Fallback { nkey: 400, .. }));
+        let refs = [k1; 9];
+        a.block_init(u, &[1, 2, 3, 4, 5, 6, 7, 8, 9], &refs);
+        assert!(matches!(a.block_route(u, 7).unwrap(), BlockRoute::Fallback { .. }));
+        // an open write window blocks routing until closed; set_overflow
+        // inside a window republishes the fallback marker
+        {
+            let w = a.block_write(n);
+            assert!(a.block_route(n, 150).is_none(), "open window must not leak");
+            w.set_overflow();
+        }
+        assert!(matches!(a.block_route(n, 150).unwrap(), BlockRoute::Fallback { .. }));
+        // retired generation voids the probe entirely
+        a.node(n).cold.mark.store(true, Ordering::Release);
+        a.retire(n);
+        assert!(a.block_route(n, 150).is_none());
+    }
+
+    #[test]
+    fn block_header_and_block_read_in_one_window() {
+        // The route must pair (key,next) with the block from one seqlock
+        // moment: a header rewrite inside the window is invisible until
+        // the window closes, together with the new block content.
+        let a = NodeArena::for_capacity_caps(256, ArenaOptions::default(), 1, 4);
+        let k1 = a.alloc_chunk(&[5], &[50], SENTINEL);
+        let n = a.alloc(100, SENTINEL, k1, 0, 1);
+        a.block_init(n, &[100], &[k1]);
+        {
+            let w = a.block_write(n);
+            a.node(n).set_key_next(50, SENTINEL);
+            w.set_key(0, 50);
+            assert!(a.block_route(n, 80).is_none(), "mid-rewrite state must not leak");
+        }
+        assert!(matches!(a.block_route(n, 80).unwrap(), BlockRoute::Right { nkey: 50, .. }));
     }
 
     #[test]

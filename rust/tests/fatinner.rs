@@ -1,0 +1,420 @@
+//! Fat-inner routing-block correctness tests (run in CI as the release
+//! fat-inner stress step: `CDSKL_SCALE=... cargo test --release -q fatinner_`).
+//!
+//! Every swept routing-block capacity F must be behaviourally invisible: a
+//! `DetSkiplist` at F ∈ {2, 4, 8, 16} on both find modes must track a
+//! sequential `BTreeMap` oracle through point churn, fused sorted runs,
+//! the interleaved engine and range scans, keep its structural invariants
+//! (per-block occupancy/sort/child mirroring at every index level, never
+//! stale-LOW separators, 1-2-3-4 arity) through split/merge/borrow
+//! boundary hammering with the finger cache both on and off, agree with
+//! the oracle through all eight [`StoreKind`] builds, and survive
+//! concurrent mixed churn with a quiescent full validation.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use cdskl::coordinator::ShardedStore;
+use cdskl::experiments::hier::T11_KINDS;
+use cdskl::mem::ArenaOptions;
+use cdskl::numa::Topology;
+use cdskl::skiplist::{BatchOp, BatchReply, DetSkiplist, FindMode, DEFAULT_LEAF_CAP};
+use cdskl::util::rng::Rng;
+
+/// CDSKL_SCALE divides the op counts, mirroring the experiment harness
+/// (CI runs release with CDSKL_SCALE=10 for a deeper soak).
+fn scaled(n: u64) -> u64 {
+    let scale = std::env::var("CDSKL_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(40u64);
+    (n / scale.max(1)).clamp(500, 200_000)
+}
+
+/// Narrow leaves keep the tower tall, so the index-level block machinery
+/// (split at F full, merge/borrow at F/4) fires constantly.
+fn new_sl(mode: FindMode, leaf_cap: usize, inner_cap: usize) -> DetSkiplist {
+    DetSkiplist::with_caps_on(mode, 1 << 15, ArenaOptions::default(), leaf_cap, inner_cap)
+}
+
+const CAPS: [usize; 4] = [2, 4, 8, 16];
+
+/// Point insert/get/erase churn against the oracle, with periodic and
+/// final structural validation (which now checks every routing block), at
+/// every swept F on both find modes, fingers on and off.
+#[test]
+fn fatinner_point_churn_matches_btreemap_oracle() {
+    let ops = scaled(40_000);
+    for mode in [FindMode::LockFree, FindMode::ReadLocked] {
+        for f in CAPS {
+            for fingers in [true, false] {
+                let s = new_sl(mode, 4, f);
+                s.set_finger_cache(fingers);
+                let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+                let mut rng = Rng::new(0x1FA7 + f as u64 + fingers as u64);
+                for i in 0..ops {
+                    // tight key space: constant re-insert/erase collisions
+                    let k = rng.below(ops / 8 + 16) + 1;
+                    match rng.below(5) {
+                        0 | 1 | 2 => {
+                            let fresh = !oracle.contains_key(&k);
+                            if fresh {
+                                oracle.insert(k, k ^ 7);
+                            }
+                            assert_eq!(
+                                s.insert(k, k ^ 7),
+                                fresh,
+                                "{mode:?} F={f} fingers={fingers} insert {k}"
+                            );
+                        }
+                        3 => {
+                            assert_eq!(
+                                s.erase(k),
+                                oracle.remove(&k).is_some(),
+                                "{mode:?} F={f} fingers={fingers} erase {k}"
+                            );
+                        }
+                        _ => {
+                            assert_eq!(
+                                s.get(k),
+                                oracle.get(&k).copied(),
+                                "{mode:?} F={f} fingers={fingers} get {k}"
+                            );
+                        }
+                    }
+                    if i % 4096 == 0 {
+                        s.check_invariants().unwrap_or_else(|e| {
+                            panic!("{mode:?} F={f} fingers={fingers} invariants at op {i}: {e}")
+                        });
+                    }
+                }
+                assert_eq!(s.len(), oracle.len() as u64, "{mode:?} F={f}");
+                let keys = s.check_invariants().expect("final validation");
+                let want: Vec<u64> = oracle.keys().copied().collect();
+                assert_eq!(keys, want, "{mode:?} F={f}: terminal walk vs oracle");
+            }
+        }
+    }
+}
+
+/// The fused sorted-run path must produce the same replies and end state
+/// as the equivalent per-key loop (a twin list), at every F on both modes
+/// — runs mix all three op types with duplicate keys.
+#[test]
+fn fatinner_fused_runs_match_point_twin() {
+    let rounds = 6;
+    let per_round = scaled(12_000).min(4_000) as usize;
+    for mode in [FindMode::LockFree, FindMode::ReadLocked] {
+        for f in CAPS {
+            let fused = new_sl(mode, 4, f);
+            let twin = new_sl(mode, 4, f);
+            let mut rng = Rng::new(0x15ED + f as u64);
+            for round in 0..rounds {
+                let mut run: Vec<BatchOp> = (0..per_round)
+                    .map(|_| {
+                        let k = rng.below(per_round as u64 * 2 + 8) + 1;
+                        match rng.below(4) {
+                            0 | 1 => BatchOp::Insert(k, k ^ 9),
+                            2 => BatchOp::Erase(k),
+                            _ => BatchOp::Get(k),
+                        }
+                    })
+                    .collect();
+                run.sort_by_key(|op| op.key());
+                let mut fused_replies = vec![BatchReply::Applied(false); run.len()];
+                fused.apply_sorted_run(&run, &mut |i, r| fused_replies[i] = r);
+                for (i, op) in run.iter().enumerate() {
+                    let want = match *op {
+                        BatchOp::Insert(k, v) => BatchReply::Applied(twin.insert(k, v)),
+                        BatchOp::Erase(k) => BatchReply::Applied(twin.erase(k)),
+                        BatchOp::Get(k) => BatchReply::Value(twin.get(k)),
+                    };
+                    assert_eq!(
+                        fused_replies[i], want,
+                        "{mode:?} F={f} round {round} op {i} ({op:?})"
+                    );
+                }
+                let fk = fused.check_invariants().expect("fused invariants");
+                let tk = twin.check_invariants().expect("twin invariants");
+                assert_eq!(fk, tk, "{mode:?} F={f} round {round}: end states diverged");
+            }
+        }
+    }
+}
+
+/// The interleaved engine (scattered-batch MLP path, now block-routing at
+/// the index levels) must agree with the oracle for lookups (`get_many`)
+/// and with the fused path for mixed runs (`apply_interleaved`), at every
+/// F with fingers on and off.
+#[test]
+fn fatinner_interleaved_matches_oracle() {
+    let n = scaled(20_000);
+    for f in CAPS {
+        for fingers in [true, false] {
+            let s = new_sl(FindMode::LockFree, 4, f);
+            s.set_finger_cache(fingers);
+            let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+            // scattered resident set (odd stride keeps neighbours far apart)
+            for i in 0..n {
+                let k = i * 173 + 5;
+                assert!(s.insert(k, i));
+                oracle.insert(k, i);
+            }
+            // unsorted scattered probes, half misses, through every width
+            let mut rng = Rng::new(0x211 + f as u64);
+            let probes: Vec<u64> = (0..scaled(8_000)).map(|_| rng.below(n * 173 + 10)).collect();
+            for width in [1usize, 4, 8] {
+                let got = s.get_many(&probes, width);
+                for (i, &k) in probes.iter().enumerate() {
+                    assert_eq!(
+                        got[i],
+                        oracle.get(&k).copied(),
+                        "F={f} fingers={fingers} width {width} get {k}"
+                    );
+                }
+            }
+            // mixed interleaved run vs its oracle effect
+            let mut run: Vec<BatchOp> = (0..scaled(4_000))
+                .map(|_| {
+                    let k = rng.below(n * 173 + 10);
+                    match rng.below(3) {
+                        0 => BatchOp::Insert(k, k ^ 1),
+                        1 => BatchOp::Erase(k),
+                        _ => BatchOp::Get(k),
+                    }
+                })
+                .collect();
+            run.sort_by_key(|op| op.key());
+            s.apply_interleaved(&run, 8, &mut |i, r| {
+                let want = match run[i] {
+                    BatchOp::Insert(k, v) => {
+                        let fresh = !oracle.contains_key(&k);
+                        if fresh {
+                            oracle.insert(k, v);
+                        }
+                        BatchReply::Applied(fresh)
+                    }
+                    BatchOp::Erase(k) => BatchReply::Applied(oracle.remove(&k).is_some()),
+                    BatchOp::Get(k) => BatchReply::Value(oracle.get(&k).copied()),
+                };
+                assert_eq!(r, want, "F={f} interleaved op {i} ({:?})", run[i]);
+            });
+            assert_eq!(s.len(), oracle.len() as u64, "F={f}");
+            s.check_invariants().expect("post-interleave validation");
+        }
+    }
+}
+
+/// Boundary hammer: ascending fill (every block split fires at exactly F
+/// full, and every new max retracts/republishes the rightmost spine
+/// blocks) then descending erase (merge/borrow fires at exactly F/4),
+/// validating the per-level block invariants at tight intervals. Narrow
+/// leaves (K = 2) force the tallest towers the capacity allows.
+#[test]
+fn fatinner_split_merge_boundary_hammer() {
+    let n = scaled(6_000);
+    for f in CAPS {
+        let s = new_sl(FindMode::LockFree, 2, f);
+        for i in 0..n {
+            assert!(s.insert(i + 1, i));
+            if i % (f as u64) == f as u64 - 1 {
+                s.check_invariants().unwrap_or_else(|e| panic!("F={f} fill at {i}: {e}"));
+            }
+        }
+        // descending erase drains the rightmost blocks first: constant
+        // underflow (and depth decreases) at the moving boundary
+        for i in (0..n).rev() {
+            assert!(s.erase(i + 1), "F={f} erase {}", i + 1);
+            if i % (f as u64) == 0 {
+                s.check_invariants().unwrap_or_else(|e| panic!("F={f} drain at {i}: {e}"));
+            }
+        }
+        assert_eq!(s.len(), 0);
+        // striped erase from a fresh fill: merges and borrows between
+        // interior blocks at every level
+        for i in 0..n {
+            s.insert(i + 1, i);
+        }
+        let mut left = n;
+        for i in 0..n {
+            if i % 4 != 3 {
+                assert!(s.erase(i + 1));
+                left -= 1;
+            }
+            if i % 512 == 0 {
+                s.check_invariants().unwrap_or_else(|e| panic!("F={f} stripe at {i}: {e}"));
+            }
+        }
+        assert_eq!(s.len(), left);
+        s.check_invariants().expect("post-stripe validation");
+    }
+}
+
+/// All eight [`StoreKind`] builds at every swept F (including F = 1, the
+/// block-disabled baseline) must track a `BTreeMap` oracle through point
+/// churn and range sweeps, with the finger cache on and off — the block
+/// capacity must never leak into answers, whatever the store around it.
+#[test]
+fn fatinner_all_kinds_oracle_with_fingers_toggled() {
+    let ops = scaled(12_000);
+    for f in [1usize, 2, 4, 8, 16] {
+        for fingers in [true, false] {
+            for kind in T11_KINDS {
+                let s = ShardedStore::with_caps(
+                    kind,
+                    2,
+                    1 << 14,
+                    Topology::virtual_grid(2, 2),
+                    2,
+                    Some(DEFAULT_LEAF_CAP),
+                    Some(f),
+                );
+                s.set_finger_cache(fingers);
+                let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+                let mut rng = Rng::new(kind as u64 ^ 0x5EED ^ (f as u64) << 8 ^ fingers as u64);
+                for i in 0..ops {
+                    let k = rng.below(ops / 4 + 8) + 1;
+                    match rng.below(5) {
+                        0 | 1 | 2 => {
+                            let fresh = !oracle.contains_key(&k);
+                            if fresh {
+                                oracle.insert(k, k + 3);
+                            }
+                            assert_eq!(
+                                s.insert(k, k + 3),
+                                fresh,
+                                "{kind:?} F={f} fingers={fingers} insert {k} at op {i}"
+                            );
+                        }
+                        3 => {
+                            assert_eq!(
+                                s.erase(k),
+                                oracle.remove(&k).is_some(),
+                                "{kind:?} F={f} fingers={fingers} erase {k} at op {i}"
+                            );
+                        }
+                        _ => {
+                            assert_eq!(
+                                s.get(k),
+                                oracle.get(&k).copied(),
+                                "{kind:?} F={f} fingers={fingers} get {k} at op {i}"
+                            );
+                        }
+                    }
+                }
+                let want: Vec<(u64, u64)> = oracle.iter().map(|(&k, &v)| (k, v)).collect();
+                assert_eq!(s.range(0, u64::MAX - 2), want, "{kind:?} F={f} final sweep");
+                assert_eq!(s.len(), want.len() as u64, "{kind:?} F={f} len");
+            }
+        }
+    }
+}
+
+/// Concurrent mixed churn at fat-inner capacities: disjoint per-thread key
+/// ranges (every reply assertable) plus a shared contended stripe, on both
+/// find modes, with a quiescent full validation (including every routing
+/// block) at the end.
+#[test]
+fn fatinner_concurrent_churn_validates_quiescently() {
+    let per_thread = scaled(8_000).min(6_000);
+    for mode in [FindMode::LockFree, FindMode::ReadLocked] {
+        for f in [4usize, 8] {
+            let s = Arc::new(DetSkiplist::with_caps_on(
+                mode,
+                1 << 16,
+                ArenaOptions::default(),
+                4,
+                f,
+            ));
+            let threads = 6u64;
+            std::thread::scope(|scope| {
+                for t in 0..threads {
+                    let s = s.clone();
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(0xD0D0 + t);
+                        let base = (t + 1) << 40; // disjoint range per thread
+                        let mut mine: BTreeMap<u64, u64> = BTreeMap::new();
+                        for i in 0..per_thread {
+                            let k = base + rng.below(per_thread / 2 + 8);
+                            match rng.below(4) {
+                                0 | 1 => {
+                                    let fresh = !mine.contains_key(&k);
+                                    if fresh {
+                                        mine.insert(k, t);
+                                    }
+                                    assert_eq!(s.insert(k, t), fresh, "t{t} insert {k}");
+                                }
+                                2 => {
+                                    assert_eq!(
+                                        s.erase(k),
+                                        mine.remove(&k).is_some(),
+                                        "t{t} erase {k}"
+                                    );
+                                }
+                                _ => {
+                                    assert_eq!(s.get(k), mine.get(&k).copied(), "t{t} get {k}");
+                                }
+                            }
+                            // shared stripe: pure contention, no asserts on
+                            // outcome, but values must carry the key
+                            let sk = rng.below(64);
+                            if i % 3 == 0 {
+                                s.insert(sk, sk);
+                            } else if let Some(v) = s.get(sk) {
+                                assert_eq!(v, sk, "shared key {sk} tore");
+                            }
+                        }
+                        mine.len() as u64
+                    });
+                }
+            });
+            s.check_invariants()
+                .unwrap_or_else(|e| panic!("{mode:?} F={f} quiescent validation: {e}"));
+        }
+    }
+}
+
+/// Concurrent fused runs from several threads over disjoint key stripes
+/// (the owner-side combining shape), then full validation — exercises
+/// block split/merge under the run path's window gating concurrently.
+#[test]
+fn fatinner_concurrent_fused_runs() {
+    let per_run = scaled(4_000).min(2_000) as usize;
+    for f in [4usize, 8, 16] {
+        let s = Arc::new(DetSkiplist::with_caps_on(
+            FindMode::LockFree,
+            1 << 16,
+            ArenaOptions::default(),
+            4,
+            f,
+        ));
+        let threads = 4u64;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let s = s.clone();
+                scope.spawn(move || {
+                    let base = (t + 1) << 40;
+                    let mut rng = Rng::new(0x100D + t);
+                    for round in 0..6u64 {
+                        let mut run: Vec<BatchOp> = (0..per_run)
+                            .map(|_| {
+                                let k = base + rng.below(per_run as u64 * 2);
+                                if round % 2 == 0 || rng.below(3) > 0 {
+                                    BatchOp::Insert(k, t)
+                                } else {
+                                    BatchOp::Erase(k)
+                                }
+                            })
+                            .collect();
+                        run.sort_by_key(|op| op.key());
+                        s.apply_sorted_run(&run, &mut |_, _| {});
+                    }
+                });
+            }
+        });
+        let keys = s.check_invariants().expect("post-run validation");
+        assert_eq!(keys.len() as u64, s.len(), "walk vs len");
+        // every surviving key must carry its stripe owner's id
+        for &k in keys.iter() {
+            let owner = (k >> 40) - 1;
+            assert_eq!(s.get(k), Some(owner), "key {k} crossed stripes");
+        }
+    }
+}
