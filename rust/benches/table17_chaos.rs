@@ -1,0 +1,18 @@
+//! Bench for Table XVII (new, beyond the paper): delegation-fabric chaos —
+//! throughput and recovery latency under injected owner kill, slow owner,
+//! and queue-full storms. Self-asserts quiescence balance, oracle
+//! agreement with an unfaulted Direct run, and (with `--features
+//! failpoints`) a recorded owner death with nonzero recovery latency.
+//!
+//! `cargo bench --bench table17_chaos --features failpoints -- --smoke`
+//! runs the CI-sized smoke; without the feature the fault rows degenerate
+//! to the baseline.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(100);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table17_chaos (fabric fault injection, Table XVII)\n");
+    let tables = vec![cdskl::experiments::t17_chaos(&cfg, &router)];
+    common::emit("table17_chaos", &cfg, &tables);
+}

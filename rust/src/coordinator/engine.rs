@@ -23,7 +23,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::mem::PoolStats;
 use crate::numa::pin_to_cpu;
@@ -32,7 +32,7 @@ use crate::sync::Backoff;
 use crate::util::rng::Rng;
 use crate::workload::{OpKind, WorkloadSpec};
 
-use super::router::{DelegatedOp, FabricStats, OpFabric, PoisonOnUnwind, RouterFabric};
+use super::router::{DelegatedOp, FabricStats, OpFabric, RetireOnUnwind, RouterFabric};
 use super::store::ShardedStore;
 
 /// How drained operations reach shard memory.
@@ -131,11 +131,25 @@ pub struct RunOptions {
     /// --interleave k`, Table XIV sweep). `0` (the default) leaves the
     /// per-owner width adaptive.
     pub interleave: usize,
+    /// Deadline on delegated completion waits (sync-call spin and dispatch
+    /// backpressure). `None` (the default) preserves the historical
+    /// wait-forever behaviour; `Some(d)` makes a wedged owner surface as
+    /// [`super::router::FabricError::Timeout`] after `d` instead of
+    /// spinning forever. Also arms heartbeat-based dead-owner detection at
+    /// `d / 4` so surviving workers adopt orphaned queues well before
+    /// callers give up.
+    pub op_timeout: Option<Duration>,
 }
 
 impl Default for RunOptions {
     fn default() -> RunOptions {
-        RunOptions { mode: ExecMode::Direct, batch_n: 64, combining: true, interleave: 0 }
+        RunOptions {
+            mode: ExecMode::Direct,
+            batch_n: 64,
+            combining: true,
+            interleave: 0,
+            op_timeout: None,
+        }
     }
 }
 
@@ -205,6 +219,12 @@ pub fn run_with_opts(
     if let Some(f) = &fabric {
         f.set_combining(opts.combining);
         f.set_interleave_width(opts.interleave);
+        f.set_op_timeout(opts.op_timeout);
+        // Detect dead owners well inside the caller deadline so takeover
+        // (not timeout) is the common recovery path.
+        f.set_owner_dead_after(
+            opts.op_timeout.map(|d| (d / 4).max(Duration::from_millis(1))),
+        );
     }
 
     // ---- fill phase (leader thread; AOT pipeline) ----
@@ -385,11 +405,13 @@ fn drain_delegated(
     window: u64,
     mut caller: super::router::Caller<'_>,
 ) -> OpTally {
-    // A worker that unwinds anywhere (caller or owner role) can never
-    // finish() or drain its queue again — poison the fabric so the
-    // surviving workers bail out and the join propagates the panic
-    // instead of the run hanging on all_quiet().
-    let _guard = PoisonOnUnwind(fabric);
+    // A worker that unwinds out of here can never finish() or drain its
+    // queue again. Retiring the owner (instead of poisoning the whole
+    // fabric) lets the survivors adopt its queue and quiesce; the join
+    // still propagates the panic. Caller-side unwinds that never entered
+    // a drain body (e.g. a test assertion) therefore no longer cascade
+    // into fabric-wide poison.
+    let _guard = RetireOnUnwind { fabric, thread: t };
     let mut tally = OpTally::default();
     let mut since_drain = 0usize;
     while let Some(word) = words.pop_local(t) {

@@ -26,7 +26,7 @@ pub mod store;
 
 pub use engine::{bulk_load, run_with_mode, run_with_opts, run_workload, ExecMode, RunMetrics, RunOptions};
 pub use router::{
-    Caller, DelegatedOp, FabricStats, OpFabric, OpResult, RouterFabric, SlotTotals,
+    Caller, DelegatedOp, FabricError, FabricStats, OpFabric, OpResult, RouterFabric, SlotTotals,
 };
 pub use store::{
     keys_sorted, pairs_sorted, KvStore, OrderedKv, ShardedStore, StoreKind, DEFAULT_INTERLEAVE,

@@ -28,16 +28,41 @@
 //! asynchronous ops aggregate counters (acks, find hits, range rows,
 //! applied mutations) with relaxed atomics; a synchronous [`Caller::call`]
 //! parks on its slot's state word until the owner publishes the full
-//! [`OpResult`] (WAITING → DONE, release/acquire paired).
+//! [`OpResult`] (WAITING → CLAIMED → DONE, release/acquire paired).
+//!
+//! ## Fault tolerance
+//!
+//! The fabric is self-healing rather than fail-stop. Owner liveness is
+//! tracked by per-owner heartbeat epochs beaten at every drain entry; an
+//! owner that dies at an op-envelope boundary (an injected
+//! [`crate::util::fail::InjectedKill`] caught by [`OpFabric::drain`], or a
+//! heartbeat that stops advancing while batches pile up) is marked dead,
+//! and a surviving worker *adopts* its work: one CAS claims the orphaned
+//! queue (`queue_owner`), per-shard CASes re-home the shard→owner map, and
+//! the adopter drains the dead owner's queue and settles every pending
+//! completion slot. Boundary kills make this exactly-once: a popped window
+//! is always fully executed before a kill site can fire, so every batch
+//! still in the queue executes exactly once under its new owner.
+//!
+//! Sync waits escalate spin → yield → deadline (see
+//! [`OpFabric::set_op_timeout`]) and surface a typed [`FabricError`]
+//! instead of panicking; a timed-out slot is *abandoned* (the late settler
+//! recycles it) so a slow owner can never publish a stale result into a
+//! reused slot. A genuine (non-injected) owner panic still poisons the
+//! fabric — but its shards are quarantined and served by Direct-mode
+//! fallback, pending work is settled as `Err(Poisoned)`, and the original
+//! panic propagates for diagnosis.
 
 use std::cell::UnsafeCell;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::numa::Topology;
 use crate::queue::{ConcurrentQueue, LfQueue, WordQueue};
 use crate::skiplist::{BatchOp, BatchReply};
 use crate::sync::Backoff;
+use crate::util::fail;
 use crate::util::rng::Rng;
 
 use super::store::{ShardedStore, DEFAULT_INTERLEAVE};
@@ -185,6 +210,33 @@ pub enum OpResult {
     Rows(Vec<(u64, u64)>),
 }
 
+/// Typed failure surfaced to synchronous callers instead of a panic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricError {
+    /// The configured op deadline elapsed before the op settled (see
+    /// [`OpFabric::set_op_timeout`]; without a deadline waits are
+    /// unbounded, the pre-fault-tolerance behavior).
+    Timeout,
+    /// The deadline elapsed *and* the target owner is marked dead — no
+    /// survivor has adopted and settled the op yet.
+    OwnerDead,
+    /// The fabric was poisoned by a genuine (non-injected) owner panic;
+    /// pending work is settled with this error by the surviving drains.
+    Poisoned,
+}
+
+impl std::fmt::Display for FabricError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FabricError::Timeout => write!(f, "delegated op timed out"),
+            FabricError::OwnerDead => write!(f, "owner thread died before settling the op"),
+            FabricError::Poisoned => write!(f, "delegation fabric poisoned by an owner panic"),
+        }
+    }
+}
+
+impl std::error::Error for FabricError {}
+
 /// One flushed batch of envelopes from one caller to one owner.
 pub struct OpBatch {
     caller: u32,
@@ -198,17 +250,25 @@ pub struct OpBatch {
 
 const SLOT_IDLE: u32 = 0;
 const SLOT_WAITING: u32 = 1;
-const SLOT_DONE: u32 = 2;
+/// A settler won the WAITING → CLAIMED race and is writing the result.
+const SLOT_CLAIMED: u32 = 2;
+const SLOT_DONE: u32 = 3;
+/// The caller timed out and walked away; whoever eventually settles the op
+/// drops the result and recycles the slot back to IDLE.
+const SLOT_ABANDONED: u32 = 4;
 
 /// Per-caller completion slot, padded to its own cache line pair so two
 /// callers' completions never false-share.
 #[repr(align(128))]
 pub struct CompletionSlot {
-    /// Sync rendezvous word: IDLE → WAITING (caller) → DONE (owner).
+    /// Sync rendezvous word: IDLE → WAITING (caller) → CLAIMED → DONE
+    /// (settler), or WAITING → ABANDONED (caller deadline) → IDLE
+    /// (late settler recycles).
     state: AtomicU32,
-    /// Sync result cell; written by the owner while `state == WAITING`
-    /// (single writer), read by the caller after observing DONE (acquire).
-    result: UnsafeCell<OpResult>,
+    /// Sync result cell; written by the settler while `state == CLAIMED`
+    /// (the CAS from WAITING grants exclusive write access), read by the
+    /// caller after observing DONE (acquire).
+    result: UnsafeCell<Result<OpResult, FabricError>>,
     /// Async aggregation: ops completed for this caller.
     acked: AtomicU64,
     /// Async aggregation: finds that hit.
@@ -217,6 +277,8 @@ pub struct CompletionSlot {
     rows: AtomicU64,
     /// Async aggregation: mutations applied (inserts + erases + batch rows).
     applied: AtomicU64,
+    /// Async aggregation: ops settled as errors (poisoned-fabric drain).
+    errored: AtomicU64,
 }
 
 // The UnsafeCell is guarded by the state-word protocol above.
@@ -226,11 +288,12 @@ impl CompletionSlot {
     fn new() -> CompletionSlot {
         CompletionSlot {
             state: AtomicU32::new(SLOT_IDLE),
-            result: UnsafeCell::new(OpResult::Pending),
+            result: UnsafeCell::new(Ok(OpResult::Pending)),
             acked: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             rows: AtomicU64::new(0),
             applied: AtomicU64::new(0),
+            errored: AtomicU64::new(0),
         }
     }
 }
@@ -242,6 +305,10 @@ pub struct SlotTotals {
     pub hits: u64,
     pub rows: u64,
     pub applied: u64,
+    /// Ops settled as errors instead of acks (fabric poisoned while they
+    /// were in flight). Zero-lost-completions invariant per caller:
+    /// `acked + errored == delegated`.
+    pub errored: u64,
 }
 
 #[derive(Default)]
@@ -266,6 +333,17 @@ struct FabricAtomics {
     flush_shrink: AtomicU64,
     callers_started: AtomicUsize,
     callers_done: AtomicUsize,
+    errored: AtomicU64,
+    owner_deaths: AtomicU64,
+    shards_adopted: AtomicU64,
+    adopted_batches: AtomicU64,
+    direct_fallback: AtomicU64,
+    sync_timeouts: AtomicU64,
+    /// ns-since-epoch0 of the first owner death / first successful queue
+    /// takeover; 0 = never (set-once CAS). Their difference is the
+    /// recovery latency Table XVII reports.
+    first_death_ns: AtomicU64,
+    first_takeover_ns: AtomicU64,
 }
 
 /// Fabric health metrics (threaded into `RunMetrics` and the CLI).
@@ -293,7 +371,10 @@ pub struct FabricStats {
     /// Deepest owner-queue depth observed (in batches).
     pub peak_depth: u64,
     /// Ops an owner executed against a shard homed on a *different* node —
-    /// zero by construction; any other value is a routing bug.
+    /// zero by construction in a healthy fabric; nonzero only after a
+    /// fault (an adopter serving a dead owner's shards, or a Direct-mode
+    /// fallback). With `owner_deaths == 0` any other value is a routing
+    /// bug.
     pub remote_exec: u64,
     /// Drains that merged ≥ 2 caller batches into combined fused runs.
     pub combined_drains: u64,
@@ -313,6 +394,24 @@ pub struct FabricStats {
     pub flush_grow: u64,
     /// Adaptive flush-threshold halvings (idle owner queue).
     pub flush_shrink: u64,
+    /// Ops settled as errors instead of executing (poisoned-fabric drain).
+    /// Quiescence balance: `executed + errored == submitted`.
+    pub errored: u64,
+    /// Owner threads declared dead (injected kill, heartbeat takeover, or
+    /// genuine panic).
+    pub owner_deaths: u64,
+    /// Shards re-homed to a surviving owner by takeover CAS.
+    pub shards_adopted: u64,
+    /// Batches drained from adopted (orphaned) queues.
+    pub adopted_batches: u64,
+    /// Ops executed by Direct-mode fallback on the caller's own thread
+    /// (quarantined shard, or a handoff that hit its deadline).
+    pub direct_fallback: u64,
+    /// Sync calls that abandoned their slot on deadline.
+    pub sync_timeouts: u64,
+    /// First-death → first-takeover latency in ns (0 when no takeover
+    /// happened): the fabric's measured recovery time.
+    pub recovery_ns: u64,
 }
 
 impl FabricStats {
@@ -353,18 +452,44 @@ pub struct OpFabric {
     topology: Topology,
     threads: usize,
     nshards: usize,
-    /// shard → owner thread (on the shard's eq.-7 home node).
-    owner_of: Vec<usize>,
+    /// shard → owner thread (on the shard's eq.-7 home node). Atomic so a
+    /// survivor can re-home a dead owner's shards by CAS (takeover).
+    owner_of: Vec<AtomicUsize>,
+    /// queue index → thread currently responsible for draining it
+    /// (initially the identity map; an adopter CASes a dead owner's entry
+    /// to itself and drains the orphaned queue on its own cadence).
+    queue_owner: Vec<AtomicUsize>,
+    /// Per-owner death flags (injected kill, heartbeat takeover, genuine
+    /// panic). A dead owner stands down from draining; its new ops route
+    /// to the adopter once `owner_of` is re-CASed.
+    owner_dead: Vec<AtomicBool>,
+    /// Per-shard quarantine flags: set when the shard's owner died to a
+    /// *genuine* panic (state cannot be presumed at an op boundary).
+    /// Quarantined shards are never adopted; callers serve them by
+    /// Direct-mode fallback.
+    quarantined: Vec<AtomicBool>,
+    /// Cheap gate for the per-op quarantine check on the delegate path.
+    any_quarantine: AtomicBool,
+    /// Per-owner heartbeat epochs: ns since `epoch0`, beaten at every
+    /// drain entry. Staleness (plus a non-empty queue) is the frozen-owner
+    /// detector when `owner_dead_after_ns` is set.
+    beats: Vec<AtomicU64>,
+    /// Time origin for heartbeats and recovery latency.
+    epoch0: Instant,
+    /// Sync-wait / handoff deadline in ns; 0 = unbounded (default).
+    op_timeout_ns: AtomicU64,
+    /// Heartbeat staleness threshold in ns; 0 = heartbeat detection off.
+    owner_dead_after_ns: AtomicU64,
     batch_n: usize,
     at: FabricAtomics,
     /// Owner-side operation combining (see [`OpFabric::drain`]): on by
     /// default; the Table XIII baseline turns it off to measure the
     /// per-envelope execution path.
     combining: AtomicBool,
-    /// Set when an owner dies mid-drain (panic unwound through
-    /// [`OpFabric::drain`]): parked callers and termination loops bail out
-    /// with a panic instead of waiting forever on completions that will
-    /// never come.
+    /// Set when an owner dies to a *genuine* panic mid-execution (not an
+    /// injected op-boundary kill, which self-heals instead): surviving
+    /// drains settle pending work as `Err(Poisoned)` and sync callers get
+    /// a typed [`FabricError::Poisoned`] rather than waiting forever.
     poisoned: AtomicBool,
     /// Per-owner adaptive interleave width for scattered combined runs,
     /// adapted like the callers' flush threshold (see
@@ -430,7 +555,7 @@ impl OpFabric {
                 let home = topology.shard_home(s, threads);
                 let local: Vec<usize> =
                     (0..threads).filter(|&t| topology.node_of_cpu(t) == home).collect();
-                if local.is_empty() {
+                let owner = if local.is_empty() {
                     // Unreachable for id-ordered pinning (every engaged node
                     // hosts a thread); kept as a safe fallback.
                     s % threads
@@ -439,7 +564,8 @@ impl OpFabric {
                     // …; dividing by n_u round-robins them across the node's
                     // threads so one thread doesn't own every local shard.
                     local[(s / topology.nodes_in_use(threads)) % local.len()]
-                }
+                };
+                AtomicUsize::new(owner)
             })
             .collect();
         OpFabric {
@@ -451,6 +577,14 @@ impl OpFabric {
             threads,
             nshards,
             owner_of,
+            queue_owner: (0..threads).map(AtomicUsize::new).collect(),
+            owner_dead: (0..threads).map(|_| AtomicBool::new(false)).collect(),
+            quarantined: (0..nshards).map(|_| AtomicBool::new(false)).collect(),
+            any_quarantine: AtomicBool::new(false),
+            beats: (0..threads).map(|_| AtomicU64::new(0)).collect(),
+            epoch0: Instant::now(),
+            op_timeout_ns: AtomicU64::new(0),
+            owner_dead_after_ns: AtomicU64::new(0),
             batch_n,
             at: FabricAtomics::default(),
             combining: AtomicBool::new(true),
@@ -487,6 +621,145 @@ impl OpFabric {
         self.poisoned.load(Ordering::SeqCst)
     }
 
+    /// Bound sync waits and handoff backpressure loops: after `d`, a sync
+    /// caller abandons its slot with [`FabricError::Timeout`] and a wedged
+    /// handoff falls back to Direct-mode execution. `None` (the default)
+    /// restores unbounded waits.
+    pub fn set_op_timeout(&self, d: Option<Duration>) {
+        self.op_timeout_ns
+            .store(d.map(|d| d.as_nanos() as u64).unwrap_or(0), Ordering::Relaxed);
+    }
+
+    /// Enable heartbeat-based frozen-owner detection: an owner whose beat
+    /// is staler than `d` while batches sit in its queue is declared dead
+    /// and its work adopted by a survivor. `None` (the default) disables
+    /// detection; explicit kills are still detected synchronously.
+    pub fn set_owner_dead_after(&self, d: Option<Duration>) {
+        self.owner_dead_after_ns
+            .store(d.map(|d| d.as_nanos() as u64).unwrap_or(0), Ordering::Relaxed);
+    }
+
+    /// Whether owner thread `t` has been declared dead.
+    pub fn owner_dead(&self, t: usize) -> bool {
+        self.owner_dead[t].load(Ordering::SeqCst)
+    }
+
+    /// Whether `shard` is quarantined (owner died to a genuine panic);
+    /// quarantined shards are served by Direct-mode fallback.
+    pub fn is_quarantined(&self, shard: usize) -> bool {
+        self.any_quarantine.load(Ordering::Relaxed) && self.quarantined[shard].load(Ordering::SeqCst)
+    }
+
+    #[inline]
+    fn now_ns(&self) -> u64 {
+        self.epoch0.elapsed().as_nanos() as u64
+    }
+
+    #[inline]
+    fn beat(&self, t: usize) {
+        self.beats[t].store(self.now_ns(), Ordering::Relaxed);
+    }
+
+    /// Deadline for one sync wait / handoff attempt, if bounded.
+    #[inline]
+    fn deadline(&self) -> Option<Instant> {
+        let ns = self.op_timeout_ns.load(Ordering::Relaxed);
+        (ns > 0).then(|| Instant::now() + Duration::from_nanos(ns))
+    }
+
+    /// Declare owner `t` dead. `clean == true` means the death landed at
+    /// an op-envelope boundary (injected kill, or a heartbeat presumed
+    /// freeze) so its shards are safely adoptable; `clean == false` is a
+    /// genuine mid-execution panic — the owner's shards are quarantined
+    /// (Direct-mode fallback) and the fabric is poisoned so in-flight
+    /// waits fail typed instead of hanging. Idempotent per owner.
+    pub fn mark_owner_dead(&self, t: usize, clean: bool) {
+        if self.owner_dead[t].swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.at.owner_deaths.fetch_add(1, Ordering::SeqCst);
+        let now = self.now_ns().max(1);
+        let _ =
+            self.at.first_death_ns.compare_exchange(0, now, Ordering::SeqCst, Ordering::Relaxed);
+        if !clean {
+            for s in 0..self.nshards {
+                if self.owner_of[s].load(Ordering::SeqCst) == t {
+                    self.quarantined[s].store(true, Ordering::SeqCst);
+                }
+            }
+            self.any_quarantine.store(true, Ordering::SeqCst);
+            self.poison();
+        }
+    }
+
+    /// Liveness sweep run by worker `me` from its drain and wait loops:
+    /// declare frozen owners dead (heartbeat staleness + a non-empty
+    /// queue, when [`OpFabric::set_owner_dead_after`] armed the detector)
+    /// and adopt any orphaned work. Cheap when nothing is wrong: one
+    /// relaxed load each.
+    pub fn check_owners(&self, me: usize) {
+        if me >= self.threads || self.owner_dead(me) {
+            return;
+        }
+        let hb = self.owner_dead_after_ns.load(Ordering::Relaxed);
+        if hb > 0 {
+            let now = self.now_ns();
+            for t in 0..self.threads {
+                if t == me || self.owner_dead(t) {
+                    continue;
+                }
+                let beat = self.beats[t].load(Ordering::Relaxed);
+                if now.saturating_sub(beat) > hb && self.queues[t].stats().depth() > 0 {
+                    // Batches are piling up behind a heartbeat that stopped
+                    // advancing: presume the owner froze at an op boundary.
+                    // A false positive (merely-slow owner) is safe — the
+                    // queue is MPMC so every batch still pops exactly once;
+                    // only NUMA locality is sacrificed.
+                    self.mark_owner_dead(t, true);
+                }
+            }
+        }
+        if self.at.owner_deaths.load(Ordering::Relaxed) > 0 {
+            self.try_adopt(me);
+        }
+    }
+
+    /// Adopt orphaned work: claim each dead owner's queue with one CAS on
+    /// `queue_owner` (exactly one survivor wins and drains it) and re-home
+    /// its non-quarantined shards with per-shard CASes on `owner_of` (new
+    /// dispatches then route to the adopter's own queue).
+    fn try_adopt(&self, me: usize) {
+        for q in 0..self.threads {
+            let cur = self.queue_owner[q].load(Ordering::SeqCst);
+            if cur != me
+                && self.owner_dead(cur)
+                && self.queue_owner[q]
+                    .compare_exchange(cur, me, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                let now = self.now_ns().max(1);
+                let _ = self.at.first_takeover_ns.compare_exchange(
+                    0,
+                    now,
+                    Ordering::SeqCst,
+                    Ordering::Relaxed,
+                );
+            }
+        }
+        for s in 0..self.nshards {
+            let cur = self.owner_of[s].load(Ordering::SeqCst);
+            if cur != me
+                && self.owner_dead(cur)
+                && !self.quarantined[s].load(Ordering::SeqCst)
+                && self.owner_of[s]
+                    .compare_exchange(cur, me, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                self.at.shards_adopted.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -499,16 +772,16 @@ impl OpFabric {
         self.nshards
     }
 
-    /// Owner thread of a shard.
+    /// Owner thread of a shard (the adopter, after a takeover).
     #[inline]
     pub fn owner_of_shard(&self, shard: usize) -> usize {
-        self.owner_of[shard]
+        self.owner_of[shard].load(Ordering::Relaxed)
     }
 
     /// Owner thread of a key.
     #[inline]
     pub fn owner_of_key(&self, key: u64) -> usize {
-        self.owner_of[shard_of_key(key, self.nshards)]
+        self.owner_of_shard(shard_of_key(key, self.nshards))
     }
 
     /// Home NUMA node of a shard under this fabric's thread count (eq. 7).
@@ -574,11 +847,72 @@ impl OpFabric {
     /// concurrent interleavings async callers already accept. Sync batches
     /// never enter the pool (a parked caller is spinning on the result).
     pub fn drain(&self, who: usize, store: &ShardedStore, max_batches: usize) -> u64 {
-        let guard = PoisonOnUnwind(self);
-        let q = &self.queues[who];
+        // Injected slow owner: stretches the drain-entry window so the
+        // heartbeat detector has something to detect.
+        fail::point("fabric.owner.slow");
+        if self.owner_dead(who) {
+            // Declared dead (injected kill, or a heartbeat takeover while
+            // we were frozen): stand down as an owner. Our queue has been
+            // (or is being) adopted by a survivor; the thread itself lives
+            // on as a plain caller.
+            return 0;
+        }
+        self.beat(who);
+        self.check_owners(who);
+        if self.is_poisoned() {
+            // Fail-stop path (genuine panic elsewhere): settle everything
+            // still queued as errors so callers unblock and the quiescence
+            // balance `executed + errored == submitted` closes.
+            return self.fail_pending(who);
+        }
+        let mut ops = self.drain_queue(who, who, store, max_batches);
+        // Orphaned queues adopted by this thread drain on the same cadence.
+        if self.at.owner_deaths.load(Ordering::Relaxed) > 0 {
+            for q in 0..self.threads {
+                if q != who && self.queue_owner[q].load(Ordering::SeqCst) == who {
+                    ops += self.drain_queue(q, who, store, max_batches);
+                }
+            }
+        }
+        ops
+    }
+
+    /// Drain queue `q` as thread `me`, supervising the execution: an
+    /// injected op-boundary kill ([`fail::InjectedKill`]) is caught here —
+    /// `me` is declared cleanly dead and stands down, losing no work
+    /// (kill sites only fire while no popped batch is in flight). Any
+    /// other unwind is a genuine bug: `me`'s shards are quarantined, the
+    /// fabric is poisoned, and the panic propagates for diagnosis.
+    fn drain_queue(&self, q: usize, me: usize, store: &ShardedStore, max_batches: usize) -> u64 {
+        let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            self.drain_queue_inner(q, me, store, max_batches)
+        }));
+        match run {
+            Ok(n) => n,
+            Err(payload) => {
+                if payload.downcast_ref::<fail::InjectedKill>().is_some() {
+                    self.mark_owner_dead(me, true);
+                    0
+                } else {
+                    self.mark_owner_dead(me, false);
+                    std::panic::resume_unwind(payload);
+                }
+            }
+        }
+    }
+
+    fn drain_queue_inner(
+        &self,
+        q: usize,
+        me: usize,
+        store: &ShardedStore,
+        max_batches: usize,
+    ) -> u64 {
+        let adopted = q != me;
+        let queue = &self.queues[q];
         // Depth sample: drain is also called from idle spin loops, so only
         // pay the shared-line RMW when this could actually raise the peak.
-        let depth = q.stats().depth();
+        let depth = queue.stats().depth();
         if depth > 0 && depth > self.at.peak_depth.load(Ordering::Relaxed) {
             self.at.peak_depth.fetch_max(depth, Ordering::Relaxed);
         }
@@ -586,6 +920,11 @@ impl OpFabric {
         let mut ops = 0;
         let mut left = max_batches;
         loop {
+            // Op-envelope boundary: no popped batch is in flight here, so
+            // an injected kill can never strand work — everything not yet
+            // popped stays in the queue for the adopter; every fully
+            // popped window was fully executed.
+            fail::point("fabric.owner.kill");
             let window = left.min(COMBINE_WINDOW);
             if window == 0 {
                 break;
@@ -593,7 +932,7 @@ impl OpFabric {
             let mut popped: Vec<OpBatch> = Vec::new();
             let mut got = 0usize;
             while got < window {
-                let Some(batch) = q.pop() else { break };
+                let Some(batch) = queue.pop() else { break };
                 got += 1;
                 ops += batch.ops.len() as u64;
                 // Handoff latency is recorded here, at pop time, so every
@@ -605,24 +944,57 @@ impl OpFabric {
                     .handoff_ns
                     .fetch_add(batch.staged_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 self.at.queued_batches.fetch_add(1, Ordering::Relaxed);
+                if adopted {
+                    self.at.adopted_batches.fetch_add(1, Ordering::Relaxed);
+                }
                 if batch.sync || !combine {
                     // A sync op must observe everything its caller staged
                     // before it (Caller::call's FIFO promise): run the
                     // pooled prefix first, then the sync batch.
-                    self.flush_popped(who, &mut popped, store);
-                    self.execute_batch(who, batch, store);
+                    self.flush_popped(me, &mut popped, store);
+                    self.execute_batch(me, batch, store);
                 } else {
                     popped.push(batch);
                 }
             }
-            self.flush_popped(who, &mut popped, store);
+            self.flush_popped(me, &mut popped, store);
             left -= got;
             if got < window {
                 break; // queue drained
             }
         }
-        std::mem::forget(guard);
         ops
+    }
+
+    /// Poisoned-fabric drain: pop everything from `who`'s queue (and any
+    /// queues it adopted) and settle each op as an error — slots record
+    /// `errored` instead of `acked`, parked sync callers get
+    /// `Err(Poisoned)`, and the global ledger keeps
+    /// `executed + errored == submitted` so termination loops still
+    /// quiesce.
+    fn fail_pending(&self, who: usize) -> u64 {
+        let mut ops = 0;
+        for q in 0..self.threads {
+            if q != who && self.queue_owner[q].load(Ordering::SeqCst) != who {
+                continue;
+            }
+            while let Some(batch) = self.queues[q].pop() {
+                ops += self.fail_batch(batch);
+            }
+        }
+        ops
+    }
+
+    fn fail_batch(&self, batch: OpBatch) -> u64 {
+        let OpBatch { caller, sync, staged_at: _, ops } = batch;
+        let slot = &self.slots[caller as usize];
+        let n = ops.len() as u64;
+        slot.errored.fetch_add(n, Ordering::Relaxed);
+        self.at.errored.fetch_add(n, Ordering::SeqCst);
+        if sync {
+            self.settle_sync(slot, Err(FabricError::Poisoned));
+        }
+        n
     }
 
     /// Execute a pooled window: per-envelope for a single batch (no merge
@@ -785,10 +1157,12 @@ impl OpFabric {
     }
 
     /// True once every *started* caller handle has [`Caller::finish`]ed and
-    /// every submitted op has executed: no work is queued or in flight
-    /// anywhere, so owner loops can exit. Callers that will participate
-    /// must be created before quiescence polling starts (see
-    /// [`OpFabric::caller`]); unused completion slots don't count.
+    /// every submitted op has settled — executed, or errored out by the
+    /// poisoned-fabric drain (`executed + errored == submitted`): no work
+    /// is queued or in flight anywhere, so owner loops can exit. Callers
+    /// that will participate must be created before quiescence polling
+    /// starts (see [`OpFabric::caller`]); unused completion slots don't
+    /// count.
     pub fn all_quiet(&self) -> bool {
         // `started` is loaded first: a handle created after this load can
         // only push `done` past the snapshot, which fails the equality —
@@ -796,7 +1170,8 @@ impl OpFabric {
         let started = self.at.callers_started.load(Ordering::SeqCst);
         started > 0
             && self.at.callers_done.load(Ordering::SeqCst) == started
-            && self.at.executed.load(Ordering::SeqCst) == self.at.submitted.load(Ordering::SeqCst)
+            && self.at.executed.load(Ordering::SeqCst) + self.at.errored.load(Ordering::SeqCst)
+                == self.at.submitted.load(Ordering::SeqCst)
     }
 
     /// Async completion counters for caller `id`.
@@ -807,6 +1182,7 @@ impl OpFabric {
             hits: s.hits.load(Ordering::Relaxed),
             rows: s.rows.load(Ordering::Relaxed),
             applied: s.applied.load(Ordering::Relaxed),
+            errored: s.errored.load(Ordering::Relaxed),
         }
     }
 
@@ -830,36 +1206,58 @@ impl OpFabric {
             coalesced_finds: self.at.coalesced_finds.load(Ordering::Relaxed),
             flush_grow: self.at.flush_grow.load(Ordering::Relaxed),
             flush_shrink: self.at.flush_shrink.load(Ordering::Relaxed),
+            errored: self.at.errored.load(Ordering::SeqCst),
+            owner_deaths: self.at.owner_deaths.load(Ordering::SeqCst),
+            shards_adopted: self.at.shards_adopted.load(Ordering::SeqCst),
+            adopted_batches: self.at.adopted_batches.load(Ordering::Relaxed),
+            direct_fallback: self.at.direct_fallback.load(Ordering::Relaxed),
+            sync_timeouts: self.at.sync_timeouts.load(Ordering::Relaxed),
+            recovery_ns: {
+                let death = self.at.first_death_ns.load(Ordering::SeqCst);
+                let takeover = self.at.first_takeover_ns.load(Ordering::SeqCst);
+                if death > 0 && takeover > death {
+                    takeover - death
+                } else {
+                    0
+                }
+            },
         }
     }
 
     /// Hand one sealed batch to `owner`: inline if the dispatching thread
     /// *is* the owner (no queue round-trip, no self-deadlock on a full
     /// queue), otherwise queued with a backpressure loop that keeps the
-    /// helper's own queue draining while it waits. Returns whether the
-    /// push hit backpressure (the caller's adaptive flush threshold grows
-    /// on it).
+    /// helper's own queue draining while it waits. `Ok(pushed_back)`
+    /// reports whether the push hit backpressure (the caller's adaptive
+    /// flush threshold grows on it); `Err(batch)` hands the batch back
+    /// when the handoff gave up — fabric poisoned, or the configured op
+    /// deadline elapsed — so the caller can fall back to Direct-mode
+    /// execution (`submitted` is already counted; the fallback's
+    /// `execute_batch` keeps the ledger balanced).
     fn dispatch(
         &self,
         owner: usize,
         batch: OpBatch,
         helper: Option<usize>,
         store: &ShardedStore,
-    ) -> bool {
+    ) -> Result<bool, OpBatch> {
         self.at.submitted.fetch_add(batch.ops.len() as u64, Ordering::SeqCst);
         if helper == Some(owner) {
             self.at.inline_ops.fetch_add(batch.ops.len() as u64, Ordering::Relaxed);
             self.execute_batch(owner, batch, store);
-            return false;
+            return Ok(false);
         }
+        let deadline = self.deadline();
         let mut b = Backoff::new();
         let mut batch = batch;
         let mut pushed_back = false;
         loop {
+            if self.is_poisoned() {
+                return Err(batch);
+            }
             match self.queues[owner].try_push(batch) {
-                Ok(()) => return pushed_back,
+                Ok(()) => return Ok(pushed_back),
                 Err(back) => {
-                    assert!(!self.is_poisoned(), "delegation fabric poisoned: an owner died");
                     batch = back;
                     pushed_back = true;
                     self.at.backpressure.fetch_add(1, Ordering::Relaxed);
@@ -867,6 +1265,15 @@ impl OpFabric {
                         // Make progress on our own queue instead of spinning:
                         // breaks caller↔owner full-queue cycles.
                         self.drain(h, store, 4);
+                    } else {
+                        // Slot-only callers can't adopt, but a full queue
+                        // with a dead owner needs *someone* to notice.
+                        self.check_owners(owner);
+                    }
+                    if let Some(d) = deadline {
+                        if Instant::now() >= d {
+                            return Err(batch);
+                        }
                     }
                     b.wait();
                 }
@@ -889,14 +1296,42 @@ impl OpFabric {
             let result = self.execute_op(who, shard, op, store, slot);
             slot.acked.fetch_add(1, Ordering::Relaxed);
             if sync {
-                debug_assert_eq!(slot.state.load(Ordering::Acquire), SLOT_WAITING);
-                // Single writer while WAITING; the release store publishes
-                // the result to the parked caller.
-                unsafe { *slot.result.get() = result };
-                slot.state.store(SLOT_DONE, Ordering::Release);
+                self.settle_sync(slot, Ok(result));
             }
         }
         self.at.executed.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Publish a sync result (or error) into `slot`. The WAITING → CLAIMED
+    /// CAS grants exclusive write access; losing it means the caller
+    /// abandoned the slot on deadline — the result is dropped and the slot
+    /// recycled to IDLE so the caller can arm it again. A late settle can
+    /// therefore never publish a stale result into a *reused* slot.
+    fn settle_sync(&self, slot: &CompletionSlot, result: Result<OpResult, FabricError>) {
+        // Injected delayed ack: stretches the settle window (Delay only —
+        // a kill here would strand the already-executed op's accounting).
+        fail::point("fabric.settle");
+        match slot.state.compare_exchange(
+            SLOT_WAITING,
+            SLOT_CLAIMED,
+            Ordering::Acquire,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => {
+                unsafe { *slot.result.get() = result };
+                slot.state.store(SLOT_DONE, Ordering::Release);
+            }
+            Err(_) => {
+                // Caller walked away (ABANDONED): nobody will read the
+                // result; hand the slot back for reuse.
+                let _ = slot.state.compare_exchange(
+                    SLOT_ABANDONED,
+                    SLOT_IDLE,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                );
+            }
+        }
     }
 
     /// Execute one envelope against `shard` (accounting + slot counters;
@@ -998,14 +1433,40 @@ impl Caller<'_> {
 
     /// Stage one envelope toward its shard's owner; flushes that owner's
     /// buffer when it reaches the adaptive threshold (seeded at the
-    /// fabric's `batch_n`; see [`Caller::flush_n`]).
+    /// fabric's `batch_n`; see [`Caller::flush_n`]). Quarantined shards
+    /// (owner died to a genuine panic) bypass the fabric entirely and
+    /// execute Direct-mode on this thread.
     pub fn delegate(&mut self, op: DelegatedOp, store: &ShardedStore) {
-        let owner = self.fabric.owner_of[op.shard(self.fabric.nshards)];
+        let shard = op.shard(self.fabric.nshards);
+        if self.fabric.is_quarantined(shard) {
+            self.delegated += 1;
+            let _ = self.direct_exec(op, store);
+            return;
+        }
+        let owner = self.fabric.owner_of_shard(shard);
         self.staged[owner].push(op);
         self.delegated += 1;
         if self.staged[owner].len() >= self.flush_n[owner] {
             self.flush_owner(owner, store);
         }
+    }
+
+    /// Direct-mode fallback: execute one envelope on this thread, settling
+    /// this caller's own slot counters and keeping the fabric ledger
+    /// balanced. Used for quarantined shards and timed-out sync handoffs —
+    /// correctness holds because the data plane is thread-safe everywhere;
+    /// only NUMA locality is sacrificed (and accounted via `remote_exec`).
+    fn direct_exec(&self, op: DelegatedOp, store: &ShardedStore) -> OpResult {
+        let f = self.fabric;
+        let shard = op.shard(f.nshards);
+        let who = self.as_owner.unwrap_or_else(|| f.owner_of_shard(shard));
+        f.at.submitted.fetch_add(1, Ordering::SeqCst);
+        f.at.direct_fallback.fetch_add(1, Ordering::Relaxed);
+        let slot = &f.slots[self.id];
+        let r = f.execute_op(who, shard, op, store, slot);
+        slot.acked.fetch_add(1, Ordering::Relaxed);
+        f.at.executed.fetch_add(1, Ordering::SeqCst);
+        r
     }
 
     /// Split a `[lo, hi]` range scan into per-prefix sub-scans and delegate
@@ -1072,42 +1533,136 @@ impl Caller<'_> {
             OpBatch { caller: self.id as u32, sync: false, staged_at: Instant::now(), ops };
         // Adapt up on backpressure: a full owner queue wants fewer, deeper
         // batches (which also hands the combiner more to merge per drain).
-        if self.fabric.dispatch(owner, batch, self.as_owner, store) && self.flush_n[owner] < hi {
-            self.flush_n[owner] = (self.flush_n[owner] * 2).min(hi);
-            self.fabric.at.flush_grow.fetch_add(1, Ordering::Relaxed);
+        match self.fabric.dispatch(owner, batch, self.as_owner, store) {
+            Ok(pushed_back) => {
+                if pushed_back && self.flush_n[owner] < hi {
+                    self.flush_n[owner] = (self.flush_n[owner] * 2).min(hi);
+                    self.fabric.at.flush_grow.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(batch) => {
+                // Handoff gave up (deadline elapsed or fabric poisoned):
+                // Direct-mode fallback keeps the ops moving and the ledger
+                // balanced — `submitted` was counted by dispatch, and
+                // execute_batch counts `executed`.
+                let me = self.as_owner.unwrap_or(owner);
+                self.fabric.at.direct_fallback.fetch_add(batch.ops.len() as u64, Ordering::Relaxed);
+                self.fabric.execute_batch(me, batch, store);
+            }
         }
     }
 
     /// Synchronous delegation: flush (preserving per-owner FIFO order with
     /// everything staged so far), ship the op, park on this caller's
-    /// completion slot until the owner publishes the result. Owners must be
-    /// draining concurrently unless the op targets this caller's own shard
-    /// (then it executes inline).
-    pub fn call(&mut self, op: DelegatedOp, store: &ShardedStore) -> OpResult {
+    /// completion slot until a settler publishes the result. Owners must
+    /// be draining concurrently unless the op targets this caller's own
+    /// shard (then it executes inline). The wait escalates spin → yield →
+    /// deadline ([`Backoff`] phases + [`OpFabric::set_op_timeout`]); on
+    /// deadline the slot is abandoned and the caller gets
+    /// `Err(Timeout)` — or `Err(OwnerDead)` when the target owner is
+    /// marked dead and nobody has adopted the op yet. A poisoned fabric
+    /// yields `Err(Poisoned)` instead of the old panic.
+    pub fn call(&mut self, op: DelegatedOp, store: &ShardedStore) -> Result<OpResult, FabricError> {
         self.flush(store);
         self.delegated += 1;
         self.fabric.at.sync_calls.fetch_add(1, Ordering::Relaxed);
-        let owner = self.fabric.owner_of[op.shard(self.fabric.nshards)];
+        let shard = op.shard(self.fabric.nshards);
+        if self.fabric.is_quarantined(shard) {
+            // The shard's owner died un-cleanly: serve Direct-mode.
+            return Ok(self.direct_exec(op, store));
+        }
+        let owner = self.fabric.owner_of_shard(shard);
         let slot = &self.fabric.slots[self.id];
-        debug_assert_eq!(slot.state.load(Ordering::Relaxed), SLOT_IDLE);
-        slot.state.store(SLOT_WAITING, Ordering::Release);
-        let batch =
-            OpBatch { caller: self.id as u32, sync: true, staged_at: Instant::now(), ops: vec![op] };
-        self.fabric.dispatch(owner, batch, self.as_owner, store);
+        let deadline = self.fabric.deadline();
+        // The slot may still be burned by a previously abandoned call whose
+        // settler hasn't recycled it yet: wait for IDLE (bounded by the
+        // same deadline) before arming it again — re-arming early would let
+        // the late settler publish the *old* op's result into this call.
         let mut b = Backoff::new();
-        while slot.state.load(Ordering::Acquire) != SLOT_DONE {
-            assert!(
-                !self.fabric.is_poisoned(),
-                "delegation fabric poisoned: an owner died before completing a sync op"
-            );
+        while slot.state.load(Ordering::Acquire) != SLOT_IDLE {
+            if self.fabric.is_poisoned() {
+                return Err(FabricError::Poisoned);
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return Err(FabricError::Timeout);
+                }
+            }
             if let Some(h) = self.as_owner {
-                // An owner-caller parked on a remote sync op keeps its own
-                // queue moving (other callers may be parked on *us*).
                 self.fabric.drain(h, store, 4);
             }
             b.wait();
         }
-        let result = unsafe { std::mem::replace(&mut *slot.result.get(), OpResult::Pending) };
+        slot.state.store(SLOT_WAITING, Ordering::Release);
+        let batch =
+            OpBatch { caller: self.id as u32, sync: true, staged_at: Instant::now(), ops: vec![op] };
+        match self.fabric.dispatch(owner, batch, self.as_owner, store) {
+            Ok(_) => {}
+            Err(batch) => {
+                // Handoff gave up: Direct-mode fallback still settles our
+                // own slot (execute_batch runs the sync settle protocol),
+                // so the wait below completes immediately.
+                let me = self.as_owner.unwrap_or(owner);
+                self.fabric.at.direct_fallback.fetch_add(1, Ordering::Relaxed);
+                self.fabric.execute_batch(me, batch, store);
+            }
+        }
+        let mut b = Backoff::new();
+        loop {
+            let st = slot.state.load(Ordering::Acquire);
+            if st == SLOT_DONE {
+                break;
+            }
+            if st == SLOT_WAITING && self.fabric.is_poisoned() {
+                // The poisoned-fabric drain will error-settle us, but may
+                // itself be gone: abandon the slot (the CAS keeps the
+                // settle race safe) and fail typed.
+                if slot
+                    .state
+                    .compare_exchange(
+                        SLOT_WAITING,
+                        SLOT_ABANDONED,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    return Err(FabricError::Poisoned);
+                }
+                continue; // a settler claimed it first — take the result
+            }
+            if let Some(d) = deadline {
+                if st == SLOT_WAITING && Instant::now() >= d {
+                    if slot
+                        .state
+                        .compare_exchange(
+                            SLOT_WAITING,
+                            SLOT_ABANDONED,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_ok()
+                    {
+                        self.fabric.at.sync_timeouts.fetch_add(1, Ordering::Relaxed);
+                        return Err(if self.fabric.owner_dead(owner) {
+                            FabricError::OwnerDead
+                        } else {
+                            FabricError::Timeout
+                        });
+                    }
+                    continue; // settler won the race — take the result
+                }
+            }
+            if let Some(h) = self.as_owner {
+                // An owner-caller parked on a remote sync op keeps its own
+                // queue moving (other callers may be parked on *us*) and
+                // sweeps for dead owners whose work may include our op.
+                self.fabric.drain(h, store, 4);
+            }
+            b.wait();
+        }
+        let result =
+            unsafe { std::mem::replace(&mut *slot.result.get(), Ok(OpResult::Pending)) };
         slot.state.store(SLOT_IDLE, Ordering::Release);
         result
     }
@@ -1126,24 +1681,40 @@ impl Caller<'_> {
 impl Drop for Caller<'_> {
     fn drop(&mut self) {
         // Skipped while unwinding: asserting here would double-panic into
-        // an abort and defeat the fabric's poison-and-propagate path.
+        // an abort and defeat the fabric's propagate path.
         debug_assert!(
             std::thread::panicking() || self.staged.iter().all(|s| s.is_empty()),
             "Caller dropped with staged ops — call flush()/finish() first"
         );
+        // A caller dying mid-unwind (worker panic, test assertion) can
+        // never finish(): publish its done-mark anyway so quiescence
+        // detection still closes for the survivors. Its un-flushed staged
+        // ops were never submitted, so the op ledger stays balanced.
+        if std::thread::panicking() && !self.finished {
+            self.finished = true;
+            self.fabric.note_caller_done();
+        }
     }
 }
 
-/// RAII guard: poisons the fabric if the holding scope unwinds (a dead
-/// owner/worker can never drain its queue or `finish()` again, so parked
-/// peers must fail fast instead of waiting forever). Shared by
-/// [`OpFabric::drain`] and the engine's delegated worker body.
-pub(crate) struct PoisonOnUnwind<'f>(pub(crate) &'f OpFabric);
+/// RAII guard for the engine's delegated worker bodies: if the worker
+/// unwinds (a genuine bug or a caller-side assertion in the workload), the
+/// thread is declared a *clean* owner death so survivors adopt its queue
+/// and shards and the run completes — the panic itself still propagates to
+/// `join` for diagnosis. Deliberately NOT a fabric-wide poison: execution
+/// panics inside [`OpFabric::drain`] are supervised there (quarantine +
+/// poison), so an unwind seen only here happened *outside* shard
+/// execution, where shard state is untouched and peers must not be
+/// poisoned over it.
+pub(crate) struct RetireOnUnwind<'f> {
+    pub(crate) fabric: &'f OpFabric,
+    pub(crate) thread: usize,
+}
 
-impl Drop for PoisonOnUnwind<'_> {
+impl Drop for RetireOnUnwind<'_> {
     fn drop(&mut self) {
         if std::thread::panicking() {
-            self.0.poison();
+            self.fabric.mark_owner_dead(self.thread, true);
         }
     }
 }
@@ -1291,7 +1862,7 @@ mod tests {
             caller.delegate(DelegatedOp::Insert { key: (i % 8) << 61 | i, value: i }, &store);
         }
         // sync through the same path — executes inline, no owner thread
-        let r = caller.call(DelegatedOp::Find { key: 0 }, &store);
+        let r = caller.call(DelegatedOp::Find { key: 0 }, &store).unwrap();
         assert_eq!(r, OpResult::Value(Some(0)));
         caller.finish(&store);
         assert!(fabric.all_quiet());
@@ -1403,7 +1974,7 @@ mod tests {
             // sync calls land between the owners' combining windows
             for i in 0..6u64 {
                 let key = (i % 8) << 61 | i;
-                let r = c.call(DelegatedOp::Find { key }, &store);
+                let r = c.call(DelegatedOp::Find { key }, &store).unwrap();
                 assert!(matches!(r, OpResult::Value(_)));
             }
             a.finish(&store);
@@ -1540,5 +2111,115 @@ mod tests {
         }
         assert_eq!(fabric.slot_totals(4).rows, 80, "all rows aggregate to the caller");
         assert_eq!(caller.delegate_range(10, 5, &store), 0, "inverted bounds");
+    }
+
+    #[test]
+    fn killed_owner_work_is_adopted_and_completes() {
+        // No failpoints needed: mark_owner_dead(t, clean) simulates a
+        // clean op-boundary death. Survivors must adopt the orphaned queue
+        // and shards and finish every queued op — zero lost completions.
+        let topo = Topology::virtual_grid(2, 2);
+        let threads = 4;
+        let store =
+            Arc::new(ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 12, topo.clone(), threads));
+        let fabric = OpFabric::new(threads, 1, 8, topo, 16, 4);
+        let mut caller = fabric.caller(threads, None);
+        for i in 0..64u64 {
+            let key = (i % 8) << 61 | i;
+            caller.delegate(DelegatedOp::Insert { key, value: i }, &store);
+        }
+        caller.finish(&store);
+        // Kill owner 0 before anyone drains: its queued batches orphan.
+        fabric.mark_owner_dead(0, true);
+        assert!(fabric.owner_dead(0));
+        assert_eq!(fabric.drain(0, &store, usize::MAX), 0, "dead owners stand down");
+        for t in 1..threads {
+            while fabric.drain(t, &store, usize::MAX) > 0 {}
+        }
+        assert!(fabric.all_quiet(), "adoption must drain the dead owner's queue");
+        assert_eq!(store.len(), 64);
+        let st = fabric.stats();
+        assert_eq!(st.executed, 64);
+        assert_eq!(st.errored, 0, "clean kills lose nothing");
+        assert_eq!(st.owner_deaths, 1);
+        assert!(st.shards_adopted > 0, "the dead owner's shards re-home by CAS");
+        assert!(st.adopted_batches > 0, "orphaned batches drain under the adopter");
+        assert!(st.recovery_ns > 0, "death -> takeover latency is measured");
+        let totals = fabric.slot_totals(threads);
+        assert_eq!(totals.acked + totals.errored, 64, "zero lost acks");
+        // Post-recovery routing: every shard's owner is alive again.
+        for s in 0..8 {
+            assert!(!fabric.owner_dead(fabric.owner_of_shard(s)));
+        }
+    }
+
+    #[test]
+    fn sync_call_times_out_typed_and_slot_recovers() {
+        let topo = Topology::virtual_grid(2, 2);
+        let threads = 4;
+        let store =
+            Arc::new(ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 12, topo.clone(), threads));
+        let fabric = OpFabric::new(threads, 1, 8, topo, 16, 4);
+        fabric.set_op_timeout(Some(Duration::from_millis(30)));
+        let mut c = fabric.caller(threads, None);
+        // Nobody drains the owner: the sync wait must hit its deadline and
+        // surface a typed error instead of spinning forever.
+        let r = c.call(DelegatedOp::Find { key: 1 << 61 }, &store);
+        assert_eq!(r, Err(FabricError::Timeout));
+        // The late owner settles the abandoned batch: the slot must be
+        // recycled (ABANDONED -> IDLE), never delivered into a new call.
+        let owner = fabric.owner_of_key(1 << 61);
+        while fabric.drain(owner, &store, usize::MAX) > 0 {}
+        // A fresh call on the same slot completes once owners drain.
+        fabric.set_op_timeout(None);
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let fabric = &fabric;
+            let store = &store;
+            let stop = &stop;
+            s.spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    for t in 0..threads {
+                        fabric.drain(t, store, 8);
+                    }
+                }
+            });
+            let r2 = c.call(DelegatedOp::Find { key: 1 << 61 }, store);
+            assert_eq!(r2, Ok(OpResult::Value(None)));
+            stop.store(true, Ordering::Relaxed);
+        });
+        c.finish(&store);
+        let st = fabric.stats();
+        assert_eq!(st.sync_timeouts, 1);
+        assert_eq!(st.executed, st.submitted, "the timed-out op still executed exactly once");
+        assert!(fabric.all_quiet());
+    }
+
+    #[test]
+    fn poisoned_fabric_errors_pending_work_and_balances() {
+        let topo = Topology::virtual_grid(2, 2);
+        let threads = 4;
+        let store =
+            Arc::new(ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 12, topo.clone(), threads));
+        let fabric = OpFabric::new(threads, 1, 8, topo, 16, 4);
+        let mut caller = fabric.caller(threads, None);
+        for i in 0..64u64 {
+            let key = (i % 8) << 61 | i;
+            caller.delegate(DelegatedOp::Insert { key, value: i }, &store);
+        }
+        caller.finish(&store);
+        fabric.poison();
+        for t in 0..threads {
+            while fabric.drain(t, &store, usize::MAX) > 0 {}
+        }
+        // Every queued op settled as an error: nothing executed, nothing
+        // lost, and the ledger still closes for the termination loops.
+        assert!(fabric.all_quiet(), "errored ops must still quiesce the fabric");
+        let st = fabric.stats();
+        assert_eq!(st.executed + st.errored, st.submitted, "quiescence balance");
+        assert_eq!(st.errored, 64);
+        let totals = fabric.slot_totals(threads);
+        assert_eq!(totals.acked + totals.errored, 64, "zero lost completions");
+        assert_eq!(totals.errored, 64);
     }
 }

@@ -7,6 +7,7 @@
 
 pub mod batch;
 pub mod cache;
+pub mod chaos;
 pub mod fatinner;
 pub mod fatleaf;
 pub mod hier;
@@ -17,6 +18,7 @@ pub mod queues;
 
 pub use self::batch::t13_batch;
 pub use self::cache::t12_cache;
+pub use self::chaos::t17_chaos;
 pub use self::fatinner::t16_fatinner;
 pub use self::fatleaf::t15_fatleaf;
 pub use self::hier::t11_hier;

@@ -2,14 +2,14 @@
 //!
 //! ```text
 //! cdskl info                           topology, artifacts, self-check
-//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|t13|t14|t15|t16|all> [--threads 4,8]
+//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|t13|t14|t15|t16|t17|all> [--threads 4,8]
 //!           [--reps N] [--scale N] [--out FILE]   regenerate paper tables
 //! cdskl run [--store det|rwl|random|fixed|twolevel|spo|spo2|tbb]
 //!           [--ops N] [--threads N] [--mix w1|w2|hash|range|hier|bulk]
 //!           [--exec direct|delegated] [--range-window W] [--batch-n N]
 //!           [--combine true|false] [--run-len N] [--interleave K]
 //!           [--inject-latency NS] [--fingers true|false]
-//!           [--leaf-cap K] [--inner-cap F]
+//!           [--leaf-cap K] [--inner-cap F] [--op-timeout-ms MS]
 //!                                      one workload run with metrics
 //! cdskl selfcheck                      AOT artifacts vs native mixer
 //! ```
@@ -144,8 +144,11 @@ fn exp(args: &Args) {
     if all || which == "t16" || which == "fatinner" {
         tables.push(experiments::t16_fatinner(&cfg, &router));
     }
+    if all || which == "t17" || which == "chaos" {
+        tables.push(experiments::t17_chaos(&cfg, &router));
+    }
     if tables.is_empty() {
-        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 t13 t14 t15 t16 all)");
+        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 t13 t14 t15 t16 t17 all)");
         std::process::exit(2);
     }
     let mut out = String::new();
@@ -219,6 +222,12 @@ fn run(args: &Args) {
         batch_n: args.usize_or("batch-n", 64),
         combining: args.bool_or("combine", true),
         interleave: args.usize_or("interleave", 0),
+        // 0 = unbounded waits (the historical default); >0 bounds sync
+        // waits/handoffs and arms heartbeat takeover at a quarter of it.
+        op_timeout: match args.u64_or("op-timeout-ms", 0) {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
     };
     let m = run_with_opts(&store, &spec, threads, &router, seed, opts);
     println!(
@@ -260,6 +269,19 @@ fn run(args: &Args) {
             m.fabric.backpressure,
             m.fabric.remote_exec,
         );
+        if m.fabric.owner_deaths > 0 || m.fabric.direct_fallback > 0 || m.fabric.errored > 0 {
+            println!(
+                "faults : {} owner deaths, {} shards adopted, {} adopted batches, \
+                 recovery {:.1}us, {} direct-fallback ops, {} errored, {} sync timeouts",
+                m.fabric.owner_deaths,
+                m.fabric.shards_adopted,
+                m.fabric.adopted_batches,
+                m.fabric.recovery_ns as f64 / 1000.0,
+                m.fabric.direct_fallback,
+                m.fabric.errored,
+                m.fabric.sync_timeouts,
+            );
+        }
         if m.fabric.combined_drains > 0 {
             println!(
                 "combine: {} drains merged {} batches ({:.1}/drain) into {} runs \

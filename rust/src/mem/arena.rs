@@ -60,6 +60,7 @@ use std::sync::Mutex;
 use crate::numa::Topology;
 use crate::queue::{ConcurrentQueue, LfQueue};
 use crate::sync::Backoff;
+use crate::util::fail;
 use crate::util::prefetch::prefetch_read;
 
 /// Slots cached per magazine before spilling to the shared free list.
@@ -639,19 +640,25 @@ impl<N: ArenaNode> BlockArena<N> {
             return idx;
         }
         // Magazine dry: refill a batch from the shared free list so the
-        // next MAG_SPILL allocs stay on the fast path.
-        if let Some(first) = self.free.pop() {
-            st.recycled += 1;
-            for _ in 0..MAG_SPILL {
-                match self.free.pop() {
-                    Some(i) => {
-                        let ok = st.push(i as u32);
-                        debug_assert!(ok);
+        // next MAG_SPILL allocs stay on the fast path. Failpoint
+        // "arena.refill" (chaos tests) models transient free-list
+        // exhaustion by skipping the refill; the alloc falls through to
+        // the bump path, so it is correctness-preserving — slots are
+        // still distinct, only recycling is deferred.
+        if !fail::should_fail("arena.refill") {
+            if let Some(first) = self.free.pop() {
+                st.recycled += 1;
+                for _ in 0..MAG_SPILL {
+                    match self.free.pop() {
+                        Some(i) => {
+                            let ok = st.push(i as u32);
+                            debug_assert!(ok);
+                        }
+                        None => break,
                     }
-                    None => break,
                 }
+                return first as u32;
             }
-            return first as u32;
         }
         drop(st);
         self.bump_alloc()

@@ -46,6 +46,7 @@ use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize
 use std::sync::Mutex;
 
 use crate::sync::Backoff;
+use crate::util::fail;
 
 use super::traits::ConcurrentQueue;
 
@@ -396,7 +397,10 @@ impl<T: Send> LfQueue<T> {
 
             // If a push already claimed this index (p < r), give it a short
             // grace period to finish its data write before killing the slot.
-            let claimed_by_push = p < r;
+            // Failpoint "queue.pop.kill" (chaos tests) skips the grace
+            // period, forcing the EMPTY->KILLED race so the pusher's
+            // take-back path runs deterministically.
+            let claimed_by_push = p < r && !fail::should_fail("queue.pop.kill");
             let mut spin = Backoff::new();
             loop {
                 match blk.fe[p].load(Ordering::Acquire) {
@@ -499,6 +503,12 @@ impl<T: Send> ConcurrentQueue<T> for LfQueue<T> {
     }
 
     fn try_push(&self, v: T) -> Result<(), T> {
+        // Failpoint "queue.try_push" (chaos tests): report a spurious full
+        // queue without touching any slot — the caller's backpressure path
+        // must retry or fall back, never lose `v`.
+        if fail::should_fail("queue.try_push") {
+            return Err(v);
+        }
         self.push_inner(v, false)
     }
 

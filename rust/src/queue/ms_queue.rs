@@ -25,6 +25,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use crate::sync::{hi64, lo64, pack, AtomicU128, Backoff};
+use crate::util::fail;
 
 use super::traits::ConcurrentQueue;
 
@@ -223,6 +224,11 @@ impl<T: Send> ConcurrentQueue<T> for MsQueue<T> {
                     // `taken` so the pop that later unlinks next_ptr can
                     // recycle it (see module docs).
                     let v = unsafe { (*next_ptr).value.get().read().assume_init() };
+                    // Failpoint "msq.taken.delay" (chaos tests): widen the
+                    // window between the value read and the `taken` publish
+                    // so the recycler's rendezvous spin below is actually
+                    // exercised under contention.
+                    fail::point("msq.taken.delay");
                     unsafe { (*next_ptr).taken.store(true, Ordering::Release) };
                     // Recycle the outgoing dummy only after its own value
                     // read (by the pop that made it dummy) has completed.

@@ -3,8 +3,28 @@
 //! The evaluation host runs many more threads than cores (see
 //! DESIGN.md §Hardware-Adaptation), so pure spinning deadlocks progress:
 //! the lock holder is likely *descheduled*. We spin only a few iterations,
-//! then yield to the OS scheduler, then sleep with exponentially growing
-//! intervals.
+//! then yield to the OS scheduler, then park with exponentially growing
+//! timeouts — explicitly capped, so one `wait()` call never blocks longer
+//! than [`Backoff::MAX_PARK`]. This is the retry primitive every fabric
+//! recovery loop leans on (chaos takeover, deadline waits), which is why
+//! the progression is observable ([`Backoff::phase`]) and unit-tested.
+
+use std::time::Duration;
+
+/// Where a [`Backoff`] currently sits in its spin → yield → park
+/// escalation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Busy-wait with `spin_loop` hints (cheap, latency-optimal while the
+    /// peer is running on another core).
+    Spin,
+    /// `yield_now` to the OS scheduler (the peer is probably descheduled).
+    Yield,
+    /// `park_timeout` with exponentially growing, capped timeouts (the
+    /// wait is long; release the CPU entirely — a future `unpark` can
+    /// still end the wait early).
+    Park,
+}
 
 /// Exponential backoff helper. Create one per contended loop.
 #[derive(Debug, Default)]
@@ -14,27 +34,59 @@ pub struct Backoff {
 
 const SPIN_STEPS: u32 = 4;
 const YIELD_STEPS: u32 = 12;
+/// Cap on the park-phase exponent: timeouts grow 1us, 2us, ... and stop
+/// doubling at `1 << PARK_CAP_EXP` microseconds.
+const PARK_CAP_EXP: u32 = 6;
 
 impl Backoff {
+    /// Longest a single [`wait`](Backoff::wait) can block (the park-phase
+    /// timeout cap).
+    pub const MAX_PARK: Duration = Duration::from_micros(1 << PARK_CAP_EXP);
+
     #[inline]
     pub fn new() -> Self {
         Backoff { step: 0 }
     }
 
-    /// Wait once; escalates spin -> yield -> sleep across calls.
+    /// Wait once; escalates spin -> yield -> park across calls.
     #[inline]
     pub fn wait(&mut self) {
-        if self.step < SPIN_STEPS {
-            for _ in 0..(1 << self.step) {
-                std::hint::spin_loop();
+        match self.phase() {
+            Phase::Spin => {
+                for _ in 0..(1 << self.step) {
+                    std::hint::spin_loop();
+                }
             }
-        } else if self.step < YIELD_STEPS {
-            std::thread::yield_now();
-        } else {
-            let exp = (self.step - YIELD_STEPS).min(6);
-            std::thread::sleep(std::time::Duration::from_micros(1 << exp));
+            Phase::Yield => std::thread::yield_now(),
+            Phase::Park => {
+                // Capped exponential park. park_timeout may return early
+                // (spurious wakeup or a peer's unpark) — both are fine for
+                // a backoff: we only promise an upper bound.
+                std::thread::park_timeout(self.park_timeout());
+            }
         }
         self.step = self.step.saturating_add(1);
+    }
+
+    /// Current escalation phase (what the *next* [`wait`](Backoff::wait)
+    /// will do).
+    #[inline]
+    pub fn phase(&self) -> Phase {
+        if self.step < SPIN_STEPS {
+            Phase::Spin
+        } else if self.step < YIELD_STEPS {
+            Phase::Yield
+        } else {
+            Phase::Park
+        }
+    }
+
+    /// Timeout the next park-phase wait would use (monotone, capped at
+    /// [`Backoff::MAX_PARK`]).
+    #[inline]
+    fn park_timeout(&self) -> Duration {
+        let exp = self.step.saturating_sub(YIELD_STEPS).min(PARK_CAP_EXP);
+        Duration::from_micros(1 << exp)
     }
 
     /// True once waiting has escalated past pure spinning (used by tests and
@@ -55,15 +107,53 @@ mod tests {
     use super::*;
 
     #[test]
-    fn escalates() {
+    fn escalates_through_all_three_phases_in_order() {
         let mut b = Backoff::new();
+        let mut seen = Vec::new();
+        for _ in 0..YIELD_STEPS + 4 {
+            let p = b.phase();
+            if seen.last() != Some(&p) {
+                seen.push(p);
+            }
+            b.wait();
+        }
+        assert_eq!(seen, [Phase::Spin, Phase::Yield, Phase::Park]);
+    }
+
+    #[test]
+    fn phase_boundaries_match_constants() {
+        let mut b = Backoff::new();
+        assert_eq!(b.phase(), Phase::Spin);
         assert!(!b.is_yielding());
         for _ in 0..SPIN_STEPS {
             b.wait();
         }
+        assert_eq!(b.phase(), Phase::Yield);
         assert!(b.is_yielding());
+        for _ in SPIN_STEPS..YIELD_STEPS {
+            b.wait();
+        }
+        assert_eq!(b.phase(), Phase::Park);
         b.reset();
+        assert_eq!(b.phase(), Phase::Spin);
         assert!(!b.is_yielding());
+    }
+
+    #[test]
+    fn park_timeout_grows_monotonically_and_caps() {
+        let mut b = Backoff::new();
+        for _ in 0..YIELD_STEPS {
+            b.wait();
+        }
+        let mut prev = Duration::ZERO;
+        for _ in 0..PARK_CAP_EXP + 8 {
+            let t = b.park_timeout();
+            assert!(t >= prev, "timeout must not shrink: {t:?} < {prev:?}");
+            assert!(t <= Backoff::MAX_PARK, "timeout must stay capped: {t:?}");
+            prev = t;
+            b.step = b.step.saturating_add(1); // advance without sleeping
+        }
+        assert_eq!(prev, Backoff::MAX_PARK, "growth reaches the cap");
     }
 
     #[test]
@@ -73,7 +163,14 @@ mod tests {
         for _ in 0..YIELD_STEPS + 10 {
             b.wait();
         }
-        // sleep growth is capped at 64us per wait
+        // park growth is capped at MAX_PARK per wait
         assert!(t0.elapsed().as_millis() < 2_000);
+    }
+
+    #[test]
+    fn saturates_instead_of_overflowing() {
+        let mut b = Backoff { step: u32::MAX - 1 };
+        b.wait(); // must not panic on step arithmetic
+        assert_eq!(b.phase(), Phase::Park);
     }
 }

@@ -6,5 +6,5 @@ pub mod backoff;
 pub mod lock;
 
 pub use atomic128::{hi64, lo64, pack, AtomicU128};
-pub use backoff::Backoff;
+pub use backoff::{Backoff, Phase};
 pub use lock::RwSpinLock;

@@ -1,0 +1,395 @@
+//! Deterministic fault injection (`util::fail`).
+//!
+//! Named failpoint *sites* are compiled into production code paths — the
+//! fabric's queue push, owner drain boundaries, completion-slot settle, and
+//! arena refill. With the `failpoints` feature **off** (the default) every
+//! helper here is an `#[inline(always)]` constant and the sites cost nothing.
+//! With the feature **on**, each site consults the installed [`FaultPlan`]:
+//! a per-test script that triggers on the Nth hit, on every Nth hit, or by
+//! seeded probability, and responds with one of three actions:
+//!
+//! - **Fail** — the site reports a recoverable error (e.g. a spuriously full
+//!   queue, a transiently exhausted arena free list).
+//! - **Kill** — the site panics with the typed [`InjectedKill`] payload.
+//!   Kill sites are placed only at *op-envelope boundaries* where shard
+//!   state is consistent, so a supervisor may catch the unwind, declare the
+//!   owner dead, and re-execute pending work idempotently.
+//! - **Delay(ns)** — the site sleeps, stretching a race window (slow owner,
+//!   delayed completion ack, slow `taken` rendezvous).
+//!
+//! Plans are installed via a builder and removed by RAII: [`FaultGuard`]
+//! holds a global test mutex (chaos tests are serialized — the registry is
+//! process-global) and clears the plan on drop, even if the test panicked.
+//!
+//! Site names currently threaded through the tree:
+//!
+//! | site                 | seam                                    | actions   |
+//! |----------------------|-----------------------------------------|-----------|
+//! | `queue.try_push`     | `LfQueue::try_push` entry               | Fail      |
+//! | `queue.pop.kill`     | `LfQueue` pop grace period              | Fail      |
+//! | `msq.taken.delay`    | `MsQueue` `taken` rendezvous publish    | Delay     |
+//! | `fabric.owner.kill`  | owner drain entry / batch boundary      | Kill      |
+//! | `fabric.owner.slow`  | owner drain entry                       | Delay     |
+//! | `fabric.settle`      | sync completion-slot settle             | Delay     |
+//! | `arena.refill`       | magazine refill from shared free list   | Fail      |
+
+/// What a failpoint site should do, decided by the installed plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// No fault — continue on the normal path.
+    Proceed,
+    /// Report a recoverable, site-specific failure.
+    Fail,
+    /// Panic with an [`InjectedKill`] payload (caught by the fabric
+    /// supervisor, which treats it as a clean owner death).
+    Kill,
+    /// Sleep for the given number of nanoseconds, then proceed.
+    Delay(u64),
+}
+
+/// Panic payload carried by an injected owner kill. Supervisors downcast
+/// the unwind payload to this type to distinguish a scripted, op-boundary
+/// kill (clean: swallow, adopt, re-execute) from a genuine bug (propagate).
+#[derive(Clone, Copy, Debug)]
+pub struct InjectedKill(pub &'static str);
+
+#[cfg(not(feature = "failpoints"))]
+mod imp {
+    use super::FaultAction;
+
+    /// Feature off: every site proceeds, for free.
+    #[inline(always)]
+    pub fn hit(_site: &'static str) -> FaultAction {
+        FaultAction::Proceed
+    }
+
+    /// Feature off: never fails.
+    #[inline(always)]
+    pub fn should_fail(_site: &'static str) -> bool {
+        false
+    }
+
+    /// Feature off: no-op.
+    #[inline(always)]
+    pub fn point(_site: &'static str) {}
+
+    /// Feature off: no site ever fires.
+    #[inline(always)]
+    pub fn fires(_site: &'static str) -> u64 {
+        0
+    }
+}
+
+#[cfg(feature = "failpoints")]
+mod imp {
+    use super::{FaultAction, InjectedKill};
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Mutex, MutexGuard, RwLock};
+    use std::time::Duration;
+
+    #[derive(Clone, Copy, Debug)]
+    enum Trigger {
+        /// Fire exactly once, on the Nth hit (1-based).
+        Nth(u64),
+        /// Fire on every Nth hit (hits % n == 0).
+        EveryNth(u64),
+        /// Fire each hit with probability num/den, drawn from the seeded
+        /// per-site stream.
+        Prob { num: u64, den: u64 },
+    }
+
+    #[derive(Clone, Copy, Debug)]
+    enum Spec {
+        Fail,
+        Kill,
+        DelayNs(u64),
+    }
+
+    #[derive(Clone, Copy, Debug)]
+    struct Rule {
+        trigger: Trigger,
+        spec: Spec,
+    }
+
+    struct SiteState {
+        rules: Vec<Rule>,
+        hits: AtomicU64,
+        fired: AtomicU64,
+        /// splitmix64 state for Prob triggers; advanced by fetch_add so
+        /// concurrent hits draw distinct values. The aggregate fire rate is
+        /// seed-deterministic even though the per-thread interleaving isn't.
+        rng: AtomicU64,
+    }
+
+    /// Fast gate: no plan installed -> one relaxed load per site hit.
+    static ACTIVE: AtomicBool = AtomicBool::new(false);
+    static REGISTRY: RwLock<Option<HashMap<&'static str, SiteState>>> = RwLock::new(None);
+    /// Serializes chaos tests: the registry is process-global, so only one
+    /// plan may be live at a time. Poison-tolerant — a panicking chaos test
+    /// (injected kills unwind through test code) must not wedge the suite.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+    fn splitmix64(mut z: u64) -> u64 {
+        z = z.wrapping_add(GOLDEN);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    fn site_seed(seed: u64, site: &str) -> u64 {
+        let mut h = seed ^ 0xCBF2_9CE4_8422_2325;
+        for b in site.as_bytes() {
+            h = (h ^ *b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    }
+
+    /// Consult the installed plan for `site`. Returns the action the site
+    /// should take; does not perform it (see [`should_fail`] / [`point`]).
+    pub fn hit(site: &'static str) -> FaultAction {
+        if !ACTIVE.load(Ordering::Relaxed) {
+            return FaultAction::Proceed;
+        }
+        let reg = REGISTRY.read().unwrap_or_else(|e| e.into_inner());
+        let map = match reg.as_ref() {
+            Some(m) => m,
+            None => return FaultAction::Proceed,
+        };
+        let st = match map.get(site) {
+            Some(s) => s,
+            None => return FaultAction::Proceed,
+        };
+        let n = st.hits.fetch_add(1, Ordering::Relaxed) + 1;
+        for r in &st.rules {
+            let fire = match r.trigger {
+                Trigger::Nth(k) => n == k,
+                Trigger::EveryNth(k) => k > 0 && n % k == 0,
+                Trigger::Prob { num, den } => {
+                    let draw = splitmix64(st.rng.fetch_add(GOLDEN, Ordering::Relaxed));
+                    den > 0 && draw % den < num
+                }
+            };
+            if fire {
+                st.fired.fetch_add(1, Ordering::Relaxed);
+                return match r.spec {
+                    Spec::Fail => FaultAction::Fail,
+                    Spec::Kill => FaultAction::Kill,
+                    Spec::DelayNs(ns) => FaultAction::Delay(ns),
+                };
+            }
+        }
+        FaultAction::Proceed
+    }
+
+    /// `true` if the site should report a recoverable failure. Kill and
+    /// Delay actions are performed here (panic / sleep) so call sites that
+    /// only branch on failure still honor every action kind.
+    pub fn should_fail(site: &'static str) -> bool {
+        match hit(site) {
+            FaultAction::Proceed => false,
+            FaultAction::Fail => true,
+            FaultAction::Kill => std::panic::panic_any(InjectedKill(site)),
+            FaultAction::Delay(ns) => {
+                std::thread::sleep(Duration::from_nanos(ns));
+                false
+            }
+        }
+    }
+
+    /// Execute the site's action in place: Kill panics, Delay sleeps, Fail
+    /// is meaningless at a pure execution point and is ignored.
+    pub fn point(site: &'static str) {
+        match hit(site) {
+            FaultAction::Kill => std::panic::panic_any(InjectedKill(site)),
+            FaultAction::Delay(ns) => std::thread::sleep(Duration::from_nanos(ns)),
+            FaultAction::Proceed | FaultAction::Fail => {}
+        }
+    }
+
+    /// How many times `site` has fired (any action) under the current plan.
+    pub fn fires(site: &'static str) -> u64 {
+        let reg = REGISTRY.read().unwrap_or_else(|e| e.into_inner());
+        reg.as_ref()
+            .and_then(|m| m.get(site))
+            .map(|s| s.fired.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Builder for a per-test fault script. Install with [`FaultPlan::install`].
+    pub struct FaultPlan {
+        seed: u64,
+        rules: HashMap<&'static str, Vec<Rule>>,
+    }
+
+    impl FaultPlan {
+        pub fn new(seed: u64) -> Self {
+            FaultPlan {
+                seed,
+                rules: HashMap::new(),
+            }
+        }
+
+        fn push(mut self, site: &'static str, trigger: Trigger, spec: Spec) -> Self {
+            self.rules.entry(site).or_default().push(Rule { trigger, spec });
+            self
+        }
+
+        /// Fail once, on the Nth hit of `site` (1-based).
+        pub fn fail_nth(self, site: &'static str, n: u64) -> Self {
+            self.push(site, Trigger::Nth(n), Spec::Fail)
+        }
+
+        /// Fail on every Nth hit of `site`.
+        pub fn fail_every(self, site: &'static str, n: u64) -> Self {
+            self.push(site, Trigger::EveryNth(n), Spec::Fail)
+        }
+
+        /// Fail each hit with probability `num/den` (seeded stream).
+        pub fn fail_prob(self, site: &'static str, num: u64, den: u64) -> Self {
+            self.push(site, Trigger::Prob { num, den }, Spec::Fail)
+        }
+
+        /// Panic with [`InjectedKill`] on the Nth hit of `site`.
+        pub fn kill_nth(self, site: &'static str, n: u64) -> Self {
+            self.push(site, Trigger::Nth(n), Spec::Kill)
+        }
+
+        /// Sleep `ns` nanoseconds on the Nth hit of `site`.
+        pub fn delay_nth(self, site: &'static str, n: u64, ns: u64) -> Self {
+            self.push(site, Trigger::Nth(n), Spec::DelayNs(ns))
+        }
+
+        /// Sleep `ns` nanoseconds on each hit with probability `num/den`.
+        pub fn delay_prob(self, site: &'static str, num: u64, den: u64, ns: u64) -> Self {
+            self.push(site, Trigger::Prob { num, den }, Spec::DelayNs(ns))
+        }
+
+        /// Install the plan process-wide. The returned guard serializes
+        /// chaos tests (global test mutex) and clears the plan on drop.
+        pub fn install(self) -> FaultGuard {
+            let lock = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+            let mut map = HashMap::new();
+            for (site, rules) in self.rules {
+                map.insert(
+                    site,
+                    SiteState {
+                        rules,
+                        hits: AtomicU64::new(0),
+                        fired: AtomicU64::new(0),
+                        rng: AtomicU64::new(site_seed(self.seed, site)),
+                    },
+                );
+            }
+            {
+                let mut reg = REGISTRY.write().unwrap_or_else(|e| e.into_inner());
+                *reg = Some(map);
+            }
+            ACTIVE.store(true, Ordering::SeqCst);
+            // Silence the default "thread panicked" report for scripted
+            // kills — they are expected control flow under this guard; real
+            // panics still reach the previous hook.
+            let prev = std::panic::take_hook();
+            let prev_for_hook = std::sync::Arc::new(prev);
+            let prev_in_hook = prev_for_hook.clone();
+            std::panic::set_hook(Box::new(move |info| {
+                if info.payload().downcast_ref::<InjectedKill>().is_none() {
+                    prev_in_hook(info);
+                }
+            }));
+            FaultGuard {
+                _lock: lock,
+                prev_hook: Some(prev_for_hook),
+            }
+        }
+    }
+
+    /// RAII handle for an installed [`FaultPlan`]. Dropping it deactivates
+    /// all sites, clears the registry, and restores the panic hook.
+    pub struct FaultGuard {
+        _lock: MutexGuard<'static, ()>,
+        prev_hook: Option<std::sync::Arc<Box<dyn Fn(&std::panic::PanicHookInfo<'_>) + Send + Sync>>>,
+    }
+
+    impl Drop for FaultGuard {
+        fn drop(&mut self) {
+            ACTIVE.store(false, Ordering::SeqCst);
+            let mut reg = REGISTRY.write().unwrap_or_else(|e| e.into_inner());
+            *reg = None;
+            drop(reg);
+            // Restore the pre-install hook. The Arc is uniquely ours once
+            // the installed closure is replaced.
+            let _ours = std::panic::take_hook();
+            if let Some(prev) = self.prev_hook.take() {
+                #[allow(clippy::redundant_closure)]
+                std::panic::set_hook(Box::new(move |info| prev(info)));
+            }
+        }
+    }
+}
+
+pub use imp::*;
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_nth_trigger_fires_exactly_once() {
+        let _g = FaultPlan::new(1).fail_nth("test.site.a", 3).install();
+        assert_eq!(hit("test.site.a"), FaultAction::Proceed);
+        assert_eq!(hit("test.site.a"), FaultAction::Proceed);
+        assert_eq!(hit("test.site.a"), FaultAction::Fail);
+        assert_eq!(hit("test.site.a"), FaultAction::Proceed);
+        assert_eq!(fires("test.site.a"), 1);
+    }
+
+    #[test]
+    fn chaos_every_nth_trigger_repeats() {
+        let _g = FaultPlan::new(1).fail_every("test.site.b", 2).install();
+        let fails = (0..10).filter(|_| should_fail("test.site.b")).count();
+        assert_eq!(fails, 5);
+        assert_eq!(fires("test.site.b"), 5);
+    }
+
+    #[test]
+    fn chaos_prob_trigger_rate_is_seeded_and_plausible() {
+        let _g = FaultPlan::new(0xC0DE).fail_prob("test.site.c", 1, 4).install();
+        let fails = (0..4000).filter(|_| should_fail("test.site.c")).count();
+        // 1/4 of 4000 = 1000 expected; allow a generous deterministic band.
+        assert!(fails > 700 && fails < 1300, "fails = {fails}");
+    }
+
+    #[test]
+    fn chaos_unplanned_site_proceeds_and_guard_clears() {
+        {
+            let _g = FaultPlan::new(1).fail_nth("test.site.d", 1).install();
+            assert_eq!(hit("test.site.other"), FaultAction::Proceed);
+            assert!(should_fail("test.site.d"));
+        }
+        // Guard dropped: site is inert again.
+        assert_eq!(hit("test.site.d"), FaultAction::Proceed);
+        assert_eq!(fires("test.site.d"), 0);
+    }
+
+    #[test]
+    fn chaos_kill_panics_with_typed_payload() {
+        let _g = FaultPlan::new(1).kill_nth("test.site.e", 1).install();
+        let r = std::panic::catch_unwind(|| point("test.site.e"));
+        let err = r.expect_err("kill site must unwind");
+        let k = err
+            .downcast_ref::<InjectedKill>()
+            .expect("payload must be InjectedKill");
+        assert_eq!(k.0, "test.site.e");
+    }
+
+    #[test]
+    fn chaos_delay_returns_proceedish() {
+        let _g = FaultPlan::new(1).delay_nth("test.site.f", 1, 1_000).install();
+        // Delay performs the sleep and then reports "no failure".
+        assert!(!should_fail("test.site.f"));
+        assert_eq!(fires("test.site.f"), 1);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod fail;
 pub mod miniprop;
 pub mod prefetch;
 pub mod rng;

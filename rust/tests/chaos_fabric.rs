@@ -1,0 +1,434 @@
+//! Fault-injection integration tests for the self-healing delegation
+//! fabric (`--features failpoints`; run in CI as the chaos stress step:
+//! `CDSKL_SCALE=... cargo test --release --features failpoints -q chaos_`).
+//!
+//! Each test installs a seeded [`FaultPlan`] (deterministic: the plan +
+//! seed fully determine which hits fire) and asserts the fabric's
+//! self-healing contract: an owner killed at an op-envelope boundary loses
+//! no work (survivors adopt its queue and shards, every submitted op still
+//! settles exactly once), a frozen owner is detected by heartbeat and
+//! adopted, wedged synchronous callers get a typed [`FabricError`] instead
+//! of a hang or panic, spurious queue-full storms ride the backpressure
+//! loop, and a caller-side panic retires one owner without poisoning the
+//! fabric for everyone else.
+
+#![cfg(feature = "failpoints")]
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use cdskl::coordinator::{
+    run_with_opts, DelegatedOp, ExecMode, FabricError, OpFabric, OpResult, RunOptions,
+    ShardedStore, StoreKind,
+};
+// The canonical 8-kind list, shared with Table XI so the two can't drift.
+use cdskl::experiments::hier::T11_KINDS as ALL_KINDS;
+use cdskl::numa::{pin_to_cpu, Topology};
+use cdskl::runtime::KeyRouter;
+use cdskl::util::fail::FaultPlan;
+use cdskl::util::rng::Rng;
+use cdskl::workload::{OpMix, WorkloadSpec};
+
+/// CDSKL_SCALE divides the op counts, mirroring the experiment harness.
+fn scaled_ops(paper_ops: u64) -> u64 {
+    let scale = std::env::var("CDSKL_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(40u64);
+    (paper_ops / scale.max(1)).clamp(800, 200_000)
+}
+
+/// Run `body(caller_id, fabric, store)` while `threads` pinned owner
+/// threads drain the fabric (same harness as `hier_delegation.rs`, kept
+/// local because the fault tests need to poke the fabric mid-run). Owners
+/// exit once `body` returns and every queue — including adopted orphan
+/// queues — is empty; a cleanly-killed owner's loop survives as an idle
+/// spinner until then, exactly like a real worker that stood down.
+fn with_owner_pool<R>(
+    kind: StoreKind,
+    threads: usize,
+    topo: Topology,
+    batch_n: usize,
+    body: impl FnOnce(usize, &OpFabric, &ShardedStore) -> R,
+) -> (R, Arc<ShardedStore>, Arc<OpFabric>) {
+    let store = Arc::new(ShardedStore::new(kind, 8, 1 << 13, topo.clone(), threads));
+    let fabric = Arc::new(OpFabric::new(threads, 2, 8, topo, 64, batch_n));
+    let stop = Arc::new(AtomicBool::new(false));
+    let out = std::thread::scope(|scope| {
+        for t in 0..threads {
+            let fabric = fabric.clone();
+            let store = store.clone();
+            let stop = stop.clone();
+            scope.spawn(move || {
+                pin_to_cpu(t);
+                loop {
+                    let n = fabric.drain(t, &store, 16);
+                    if n == 0 {
+                        if stop.load(Ordering::Acquire) && fabric.pending_batches() == 0 {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+        let r = body(threads, &fabric, &store);
+        stop.store(true, Ordering::Release);
+        r
+    });
+    (out, store, fabric)
+}
+
+/// Spin until every submitted op has settled (executed or error-settled),
+/// while the owner pool is still draining.
+fn quiesce(fabric: &OpFabric, ctx: &str) {
+    let t0 = std::time::Instant::now();
+    loop {
+        let st = fabric.stats();
+        if st.executed + st.errored == st.submitted {
+            return;
+        }
+        assert!(t0.elapsed().as_secs() < 120, "{ctx}: fabric failed to quiesce: {st:?}");
+        std::thread::yield_now();
+    }
+}
+
+/// Acceptance: an owner killed at an op-envelope boundary mid-workload
+/// loses nothing, on every store kind — a survivor adopts the dead owner's
+/// queue and shards, all submitted ops execute exactly once, no op is
+/// error-settled, and final membership agrees with a sequential oracle
+/// (insert/find mix: membership is order-independent, so the cross-queue
+/// reordering a takeover can introduce is invisible to the oracle).
+#[test]
+fn chaos_owner_kill_recovers_zero_lost_acks_all_kinds() {
+    let ops = scaled_ops(100_000);
+    for (i, kind) in ALL_KINDS.into_iter().enumerate() {
+        // One kill, early: the site is hit once per drain window, so the
+        // 30th hit lands while the workload is still in flight.
+        let guard = FaultPlan::new(0xC4_05 + i as u64).kill_nth("fabric.owner.kill", 30).install();
+        let ((), store, fabric) = with_owner_pool(
+            kind,
+            4,
+            Topology::virtual_grid(2, 2),
+            8,
+            |caller_id, fabric, store| {
+                let mut caller = fabric.caller(caller_id, None);
+                let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+                let mut rng = Rng::new(0xDEAD + i as u64);
+                for n in 0..ops {
+                    // Distinct keys across all 8 prefixes: every insert is
+                    // fresh, so final membership is exactly the oracle.
+                    let k = ((n % 8) << 61) | (n >> 3);
+                    if rng.below(4) == 0 {
+                        caller.delegate(DelegatedOp::Find { key: k ^ 1 }, store);
+                    } else {
+                        oracle.insert(k, n);
+                        caller.delegate(DelegatedOp::Insert { key: k, value: n }, store);
+                    }
+                }
+                caller.finish(store);
+                quiesce(fabric, "owner-kill");
+                let got = store.range(0, u64::MAX);
+                let want: Vec<(u64, u64)> = oracle.iter().map(|(k, v)| (*k, *v)).collect();
+                assert_eq!(got, want, "{kind:?}: post-recovery state vs oracle");
+            },
+        );
+        drop(guard);
+        let st = fabric.stats();
+        assert_eq!(st.owner_deaths, 1, "{kind:?}: exactly the injected kill");
+        assert_eq!(st.errored, 0, "{kind:?}: a clean kill loses nothing");
+        assert_eq!(st.executed, st.submitted, "{kind:?}: every op settled");
+        assert!(st.shards_adopted >= 1, "{kind:?}: the dead owner's shards re-home");
+        assert!(st.recovery_ns > 0, "{kind:?}: takeover must be timestamped");
+        let totals = fabric.slot_totals(4);
+        assert_eq!(totals.acked, st.executed, "{kind:?}: single caller acks everything");
+        assert_eq!(totals.errored, 0, "{kind:?}");
+        drop(store);
+    }
+}
+
+/// A synchronous caller on a fabric whose owners never drain must come
+/// back typed, twice over: `Timeout` while the owner is merely wedged,
+/// `OwnerDead` once the owner has been declared dead — never a panic,
+/// never an unbounded spin.
+#[test]
+fn chaos_sync_call_times_out_on_wedged_owner() {
+    let topo = Topology::virtual_grid(1, 2);
+    let fabric = OpFabric::new(2, 2, 8, topo.clone(), 16, 4);
+    fabric.set_op_timeout(Some(Duration::from_millis(30)));
+    let store = ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 14, topo, 2);
+    // No drainer threads: the op sits in the owner queue forever.
+    let mut wedged = fabric.caller(2, None);
+    let r = wedged.call(DelegatedOp::Insert { key: 7, value: 7 }, &store);
+    assert!(matches!(r, Err(FabricError::Timeout)), "wedged-but-alive owner: got {r:?}");
+    wedged.finish(&store);
+    // Declare the key's owner dead: the same wait now discriminates.
+    let owner = fabric.owner_of_key(7);
+    fabric.mark_owner_dead(owner, true);
+    // Fresh caller: the wedged one's slot is still burned (its settler
+    // never ran), which is itself part of the abandon contract.
+    let mut caller = fabric.caller(3, None);
+    let r = caller.call(DelegatedOp::Insert { key: 7, value: 7 }, &store);
+    assert!(matches!(r, Err(FabricError::OwnerDead)), "dead owner: got {r:?}");
+    caller.finish(&store);
+    assert_eq!(fabric.stats().sync_timeouts, 2, "both waits abandoned their slot");
+}
+
+/// A frozen owner (never drains, heartbeat never advances) is declared
+/// dead by a survivor's liveness sweep and its queued work adopted and
+/// executed — no failpoint needed; the freeze is real (the thread is
+/// simply never started).
+#[test]
+fn chaos_heartbeat_detects_frozen_owner_and_adopts() {
+    let topo = Topology::virtual_grid(1, 2);
+    let store = Arc::new(ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 13, topo.clone(), 2));
+    let fabric = Arc::new(OpFabric::new(2, 1, 8, topo, 64, 4));
+    fabric.set_owner_dead_after(Some(Duration::from_millis(5)));
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        // Owner 0 is frozen: its drain loop never runs, its initial beat
+        // of 0 goes stale the moment the fabric is 5ms old. Owner 1 is
+        // the survivor.
+        let f = fabric.clone();
+        let s = store.clone();
+        let stp = stop.clone();
+        scope.spawn(move || loop {
+            let n = f.drain(1, &s, 16);
+            if n == 0 {
+                if stp.load(Ordering::Acquire) && f.pending_batches() == 0 {
+                    break;
+                }
+                std::thread::yield_now();
+            }
+        });
+        let mut caller = fabric.caller(2, None);
+        let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+        // Keys across all 8 prefixes: half route to the frozen owner and
+        // pile up in its queue until the heartbeat sweep fires.
+        for n in 0..scaled_ops(50_000) {
+            let k = ((n % 8) << 61) | (n >> 3);
+            oracle.insert(k, n);
+            caller.delegate(DelegatedOp::Insert { key: k, value: n }, &store);
+        }
+        caller.finish(&store);
+        quiesce(&fabric, "heartbeat");
+        stop.store(true, Ordering::Release);
+        let got = store.range(0, u64::MAX);
+        let want: Vec<(u64, u64)> = oracle.iter().map(|(k, v)| (*k, *v)).collect();
+        assert_eq!(got, want, "adopted work must all land");
+    });
+    let st = fabric.stats();
+    assert_eq!(st.owner_deaths, 1, "the frozen owner, declared by heartbeat");
+    assert!(st.shards_adopted >= 1, "its shards re-home to the survivor");
+    assert!(st.recovery_ns > 0);
+    assert_eq!(st.errored, 0);
+}
+
+/// Spurious queue-full rejections (injected `try_push` failures) are
+/// absorbed by the dispatch backpressure loop: order is preserved, every
+/// op executes, and the final state matches an exact sequential oracle —
+/// insert/erase included, since nothing dies and per-owner FIFO holds.
+#[test]
+fn chaos_spurious_queue_full_rides_backpressure() {
+    let ops = scaled_ops(100_000);
+    let _g = FaultPlan::new(0xF0_11).fail_prob("queue.try_push", 1, 4).install();
+    let ((), store, fabric) = with_owner_pool(
+        StoreKind::DetSkiplistLf,
+        4,
+        Topology::virtual_grid(2, 2),
+        8,
+        |caller_id, fabric, store| {
+            let mut caller = fabric.caller(caller_id, None);
+            let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+            let mut rng = Rng::new(0xB00);
+            for n in 0..ops {
+                let k = (rng.below(8) << 61) | rng.below(512);
+                if rng.below(3) < 2 {
+                    oracle.entry(k).or_insert(n);
+                    caller.delegate(DelegatedOp::Insert { key: k, value: n }, store);
+                } else {
+                    oracle.remove(&k);
+                    caller.delegate(DelegatedOp::Erase { key: k }, store);
+                }
+            }
+            caller.finish(store);
+            quiesce(fabric, "qfull");
+            let got = store.range(0, u64::MAX);
+            let want: Vec<(u64, u64)> = oracle.iter().map(|(k, v)| (*k, *v)).collect();
+            assert_eq!(got, want, "exact state survives the storm");
+        },
+    );
+    drop(store);
+    let st = fabric.stats();
+    assert!(st.backpressure > 0, "a 1-in-4 rejection storm must be visible: {st:?}");
+    assert_eq!(st.executed, st.submitted);
+    assert_eq!(st.owner_deaths, 0, "nothing actually died");
+}
+
+/// Slow owners (injected drain-entry delays) and delayed acks (injected
+/// settle delays) stretch every window the sync rendezvous has, but with a
+/// generous deadline every call still completes `Ok` with oracle-exact
+/// results and zero timeouts.
+#[test]
+fn chaos_slow_owner_and_delayed_ack_complete() {
+    let _g = FaultPlan::new(0xF0_22)
+        .delay_prob("fabric.owner.slow", 1, 8, 50_000)
+        .delay_prob("fabric.settle", 1, 4, 20_000)
+        .install();
+    let ops = scaled_ops(80_000).min(1_500); // sync round-trips, injected-slow
+    let ((), _store, fabric) = with_owner_pool(
+        StoreKind::DetSkiplistLf,
+        4,
+        Topology::virtual_grid(2, 2),
+        8,
+        |caller_id, fabric, store| {
+            fabric.set_op_timeout(Some(Duration::from_secs(5)));
+            let mut caller = fabric.caller(caller_id, None);
+            let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+            let mut rng = Rng::new(0x51_0E);
+            for n in 0..ops {
+                let k = (rng.below(8) << 61) | rng.below(256);
+                if rng.below(2) == 0 {
+                    let fresh = !oracle.contains_key(&k);
+                    if fresh {
+                        oracle.insert(k, n);
+                    }
+                    let got = caller
+                        .call(DelegatedOp::Insert { key: k, value: n }, store)
+                        .expect("slow is not dead: the call must complete");
+                    assert_eq!(got, OpResult::Applied(fresh), "insert {k:#x}");
+                } else {
+                    let got = caller
+                        .call(DelegatedOp::Find { key: k }, store)
+                        .expect("delayed ack still arrives");
+                    assert_eq!(got, OpResult::Value(oracle.get(&k).copied()), "find {k:#x}");
+                }
+            }
+            caller.finish(store);
+        },
+    );
+    let st = fabric.stats();
+    assert_eq!(st.sync_timeouts, 0, "generous deadline: nobody abandons");
+    assert_eq!(st.owner_deaths, 0, "slow must not be mistaken for dead (no heartbeat armed)");
+    assert_eq!(st.executed, st.submitted);
+}
+
+/// Transient arena free-list exhaustion (injected refill failure) only
+/// diverts allocation to the bump path: insert/erase/insert churn that
+/// leans hard on slot recycling still yields exact membership.
+#[test]
+fn chaos_arena_refill_transient_exhaustion() {
+    let _g = FaultPlan::new(0xF0_33).fail_prob("arena.refill", 1, 2).install();
+    let store = ShardedStore::new(
+        StoreKind::DetSkiplistLf,
+        8,
+        1 << 13,
+        Topology::virtual_grid(1, 2),
+        2,
+    );
+    let n = scaled_ops(50_000).min(6_000);
+    for i in 0..n {
+        assert!(store.insert(((i % 8) << 61) | i, i));
+    }
+    // Erase the odd half, then reinsert shifted: every reinsert allocates
+    // while the free list is (deterministically, half the time) "empty".
+    for i in (1..n).step_by(2) {
+        assert!(store.erase(((i % 8) << 61) | i));
+    }
+    for i in (1..n).step_by(2) {
+        assert!(store.insert(((i % 8) << 61) | i, i + 1));
+    }
+    assert_eq!(store.len(), n, "churn preserves cardinality");
+    for i in 0..n {
+        let want = if i % 2 == 1 { i + 1 } else { i };
+        assert_eq!(store.get(((i % 8) << 61) | i), Some(want), "key {i}");
+    }
+}
+
+/// The full engine (`run_with_opts`, Delegated mode) survives an injected
+/// owner kill: the run completes with every op accounted for, records the
+/// death and a measured recovery, and lands on the same final state as an
+/// unfaulted Direct-mode run of the identical spec (HASH mix: membership
+/// is order-independent under takeover).
+#[test]
+fn chaos_engine_run_with_owner_kill() {
+    let ops = scaled_ops(200_000);
+    let topo = Topology::virtual_grid(2, 2);
+    let spec = WorkloadSpec::new("chaos-it", ops, OpMix::HASH, (ops / 2).max(1 << 14));
+    let router = KeyRouter::Native;
+    let mk_store = |threads| {
+        Arc::new(ShardedStore::new(
+            StoreKind::DetSkiplistLf,
+            8,
+            (ops as usize / 4).max(1 << 14),
+            topo.clone(),
+            threads,
+        ))
+    };
+    let oracle = mk_store(4);
+    run_with_opts(&oracle, &spec, 4, &router, 0x17, RunOptions::default());
+    let guard = FaultPlan::new(0x17_17).kill_nth("fabric.owner.kill", 40).install();
+    let store = mk_store(4);
+    let m = run_with_opts(
+        &store,
+        &spec,
+        4,
+        &router,
+        0x17,
+        RunOptions {
+            mode: ExecMode::Delegated,
+            op_timeout: Some(Duration::from_secs(10)),
+            ..RunOptions::default()
+        },
+    );
+    drop(guard);
+    assert_eq!(m.ops(), ops, "zero lost completions: every op drains exactly once");
+    let f = &m.fabric;
+    assert_eq!(f.submitted, f.executed + f.errored, "quiescence balance");
+    assert_eq!(f.errored, 0, "a clean kill loses nothing");
+    assert!(f.owner_deaths >= 1, "the injected kill must be recorded: {f:?}");
+    assert!(f.recovery_ns > 0, "takeover must be timestamped");
+    assert_eq!(
+        store.range(0, u64::MAX),
+        oracle.range(0, u64::MAX),
+        "post-recovery state agrees with the unfaulted Direct run"
+    );
+}
+
+/// Satellite 6 regression: a *caller-side* panic (a test assertion, a bug
+/// in workload code — anything outside shard execution) must not poison
+/// the whole fabric. The unwinding caller publishes its done-mark, the
+/// fabric stays healthy, and a fresh caller keeps working.
+#[test]
+fn chaos_caller_panic_does_not_poison_fabric() {
+    let ((), _store, fabric) = with_owner_pool(
+        StoreKind::DetSkiplistLf,
+        4,
+        Topology::virtual_grid(2, 2),
+        8,
+        |caller_id, fabric, store| {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut caller = fabric.caller(caller_id, None);
+                for i in 0..64u64 {
+                    caller.delegate(DelegatedOp::Insert { key: i, value: i }, store);
+                }
+                caller.flush(store);
+                panic!("caller-side assertion failure");
+            }));
+            assert!(r.is_err(), "the panic must reach us");
+            assert!(!fabric.is_poisoned(), "caller panics must not poison the fabric");
+            // The fabric is still fully operational for everyone else.
+            fabric.set_op_timeout(Some(Duration::from_secs(30)));
+            let mut caller = fabric.caller(caller_id + 1, None);
+            let got = caller
+                .call(DelegatedOp::Insert { key: 1 << 61 | 9, value: 9 }, store)
+                .expect("a fresh caller still works");
+            assert_eq!(got, OpResult::Applied(true));
+            caller.finish(store);
+            quiesce(fabric, "caller-panic");
+        },
+    );
+    let st = fabric.stats();
+    assert_eq!(st.owner_deaths, 0, "no owner was involved in the caller's panic");
+    assert_eq!(st.errored, 0);
+    assert_eq!(st.executed, st.submitted, "the panicking caller's flushed ops still ran");
+}

@@ -92,7 +92,9 @@ fn hier_delegated_matches_btreemap_oracle_all_kinds() {
                     match rng.below(100) {
                         0..=39 => {
                             let v = n ^ 0xABCD;
-                            let got = caller.call(DelegatedOp::Insert { key: k, value: v }, store);
+                            let got = caller
+                                .call(DelegatedOp::Insert { key: k, value: v }, store)
+                                .unwrap();
                             // set semantics: a duplicate insert keeps the
                             // old value and reports not-applied
                             let fresh = !oracle.contains_key(&k);
@@ -102,7 +104,8 @@ fn hier_delegated_matches_btreemap_oracle_all_kinds() {
                             assert_eq!(got, OpResult::Applied(fresh), "{kind:?} insert {k}");
                         }
                         40..=64 => {
-                            let got = caller.call(DelegatedOp::Find { key: k }, store);
+                            let got =
+                                caller.call(DelegatedOp::Find { key: k }, store).unwrap();
                             assert_eq!(
                                 got,
                                 OpResult::Value(oracle.get(&k).copied()),
@@ -110,7 +113,8 @@ fn hier_delegated_matches_btreemap_oracle_all_kinds() {
                             );
                         }
                         65..=84 => {
-                            let got = caller.call(DelegatedOp::Erase { key: k }, store);
+                            let got =
+                                caller.call(DelegatedOp::Erase { key: k }, store).unwrap();
                             assert_eq!(
                                 got,
                                 OpResult::Applied(oracle.remove(&k).is_some()),
@@ -154,7 +158,7 @@ fn sync_range(
 ) -> Vec<(u64, u64)> {
     let mut out = Vec::new();
     for_each_prefix_segment(lo, hi, |slo, shi| {
-        match caller.call(DelegatedOp::Range { lo: slo, hi: shi }, store) {
+        match caller.call(DelegatedOp::Range { lo: slo, hi: shi }, store).unwrap() {
             OpResult::Rows(rows) => out.extend(rows),
             other => panic!("range returned {other:?}"),
         }

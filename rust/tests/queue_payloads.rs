@@ -168,3 +168,71 @@ fn queue_payload_mpmc_drop_exactly_once_lfqueue() {
 fn queue_payload_mpmc_drop_exactly_once_ms_queue() {
     mpmc_drop_exactly_once(|| MsQueue::<Payload>::with_block_size(16));
 }
+
+/// The same exactly-once-drop invariants under *injected* faults
+/// (`--features failpoints`): spurious `try_push` rejections must hand the
+/// payload back intact, forced slot kills must drive the pusher's
+/// take-back path, and a widened `taken` rendezvous window must still hand
+/// each MS node's value to exactly one consumer. Named `chaos_` so the CI
+/// chaos stress step picks them up.
+#[cfg(feature = "failpoints")]
+mod chaos {
+    use super::*;
+    use cdskl::util::fail::FaultPlan;
+
+    #[test]
+    fn chaos_queue_payload_spurious_try_push_returns_value_intact() {
+        let _g = FaultPlan::new(0xF001).fail_nth("queue.try_push", 1).install();
+        let live = Arc::new(AtomicI64::new(0));
+        let q: LfQueue<Payload> = LfQueue::with_config(4, 8, true);
+        let p = Payload::new(42, &live);
+        let p = match q.try_push(p) {
+            Err(p) => p,
+            Ok(()) => panic!("first try_push must be rejected by the plan"),
+        };
+        assert_eq!(live.load(Ordering::SeqCst), 1, "rejected payload stays alive");
+        assert_eq!(*p.v, 42, "rejected payload comes back intact");
+        q.try_push(p).expect("second attempt proceeds");
+        assert_eq!(*q.pop().expect("value round-trips").v, 42);
+        assert_eq!(live.load(Ordering::SeqCst), 0, "dropped exactly once");
+    }
+
+    #[test]
+    fn chaos_queue_payload_forced_slot_kills_drop_exactly_once() {
+        // Skip the pop grace period on a quarter of claimed slots: the
+        // EMPTY->KILLED race and the pusher's take-back run constantly.
+        let _g = FaultPlan::new(0xF002).fail_prob("queue.pop.kill", 1, 4).install();
+        mpmc_drop_exactly_once(|| LfQueue::<Payload>::with_config(16, 1 << 10, true));
+    }
+
+    #[test]
+    fn chaos_queue_payload_spurious_full_storm_mpmc() {
+        // try_push storms only reject; the blocking push used by the MPMC
+        // harness must be unaffected, and a try_push retry loop completes.
+        let _g = FaultPlan::new(0xF003).fail_prob("queue.try_push", 1, 4).install();
+        let live = Arc::new(AtomicI64::new(0));
+        let q: LfQueue<Payload> = LfQueue::with_config(16, 1 << 10, true);
+        for i in 0..500u64 {
+            let mut p = Payload::new(i, &live);
+            loop {
+                match q.try_push(p) {
+                    Ok(()) => break,
+                    Err(back) => p = back, // spurious full: retry with the same value
+                }
+            }
+        }
+        for i in 0..500u64 {
+            assert_eq!(*q.pop().expect("FIFO intact under storm").v, i);
+        }
+        assert_eq!(live.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn chaos_queue_payload_msq_taken_delay_rendezvous() {
+        // Stretch the value-read -> `taken`-publish window so the
+        // recycler's rendezvous spin is exercised under real contention.
+        let _g =
+            FaultPlan::new(0xF004).delay_prob("msq.taken.delay", 1, 16, 50_000).install();
+        mpmc_drop_exactly_once(|| MsQueue::<Payload>::with_block_size(16));
+    }
+}
