@@ -1,0 +1,18 @@
+//! Bench for Table XVIII (new, beyond the paper): NUMA-replicated index
+//! layers — Direct vs Delegated vs Replicated drains over read/write
+//! mixes 95/5, 70/30 and 50/50, reporting drain seconds, throughput and
+//! derefs+hops/op per mode (rows tagged with their execution mode in the
+//! JSON artifact). Self-asserts zero remote index-plane derefs for
+//! replicated reads, a strict derefs+hops win over Delegated at 95/5,
+//! and 8/8 store-kind agreement between Direct and Replicated drains.
+//!
+//! `cargo bench --bench table18_replica -- --smoke` runs the CI-sized smoke.
+mod common;
+use cdskl::runtime::KeyRouter;
+fn main() {
+    let cfg = common::config(100);
+    let router = KeyRouter::auto("artifacts");
+    println!("# bench table18_replica (replicated index layers, Table XVIII)\n");
+    let tables = vec![cdskl::experiments::t18_replica(&cfg, &router)];
+    common::emit("table18_replica", &cfg, &tables);
+}

@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 use crate::mem::PoolStats;
 use crate::numa::pin_to_cpu;
 use crate::runtime::KeyRouter;
+use crate::skiplist::ReplicaStats;
 use crate::sync::Backoff;
 use crate::util::rng::Rng;
 use crate::workload::{OpKind, WorkloadSpec};
@@ -44,6 +45,10 @@ pub enum ExecMode {
     /// Workers delegate typed op envelopes to per-shard owner threads over
     /// the [`OpFabric`]; only owners touch shard memory.
     Delegated,
+    /// Workers execute in place like Direct, but reads descend each NUMA
+    /// node's local replica of the index layers (shared terminals only at
+    /// the bottom) — no delegation hop, no remote index-plane derefs.
+    Replicated,
 }
 
 impl ExecMode {
@@ -51,6 +56,7 @@ impl ExecMode {
         Some(match s {
             "direct" => ExecMode::Direct,
             "delegated" | "del" | "hier" => ExecMode::Delegated,
+            "replicated" | "repl" | "rep" => ExecMode::Replicated,
             _ => return None,
         })
     }
@@ -59,6 +65,7 @@ impl ExecMode {
         match self {
             ExecMode::Direct => "direct",
             ExecMode::Delegated => "delegated",
+            ExecMode::Replicated => "replicated",
         }
     }
 }
@@ -85,6 +92,10 @@ pub struct RunMetrics {
     /// Delegation-fabric metrics (all-zero in Direct mode): queue depth,
     /// batch occupancy, completion latency, backpressure.
     pub fabric: FabricStats,
+    /// Replica-plane metrics (all-zero outside [`ExecMode::Replicated`]):
+    /// replica derefs and their locality, stale-landing recovery work,
+    /// fallbacks, sync traffic.
+    pub replica: ReplicaStats,
 }
 
 impl RunMetrics {
@@ -139,6 +150,12 @@ pub struct RunOptions {
     /// `d / 4` so surviving workers adopt orphaned queues well before
     /// callers give up.
     pub op_timeout: Option<Duration>,
+    /// Replicated mode: run one replica maintenance tick every this many
+    /// drained ops per worker (writers additionally tick eagerly after
+    /// each mutation). `0` disables all ticking — replicas then only
+    /// converge via descent-miss repair; the stress tests use this to
+    /// force maximal staleness.
+    pub replica_tick_every: usize,
 }
 
 impl Default for RunOptions {
@@ -149,6 +166,7 @@ impl Default for RunOptions {
             combining: true,
             interleave: 0,
             op_timeout: None,
+            replica_tick_every: 64,
         }
     }
 }
@@ -204,7 +222,7 @@ pub fn run_with_opts(
     ));
     let batch_n = opts.batch_n.max(1);
     let fabric = match mode {
-        ExecMode::Direct => None,
+        ExecMode::Direct | ExecMode::Replicated => None,
         ExecMode::Delegated => Some(Arc::new(OpFabric::new(
             threads,
             0,
@@ -241,8 +259,9 @@ pub fn run_with_opts(
             let word = spec.encode(raw, seq);
             seq += 1;
             match mode {
-                // Direct: home-node routing (the paper's word fabric).
-                ExecMode::Direct => words.route_key(word, &mut rng),
+                // Direct/Replicated: home-node routing (the paper's word
+                // fabric) — replicated workers execute in place too.
+                ExecMode::Direct | ExecMode::Replicated => words.route_key(word, &mut rng),
                 // Delegated: callers receive arbitrary slices; locality is
                 // established at delegation time by the op fabric.
                 ExecMode::Delegated => words.route_uniform(word),
@@ -252,6 +271,16 @@ pub fn run_with_opts(
         remaining -= n;
     }
     let fill_seconds = t_fill.elapsed().as_secs_f64();
+
+    // Replicated: build the per-node index replicas at the write-quiet
+    // fill/drain boundary so the initial builds are exact, and bypass the
+    // finger cache — replica descents ARE the locality shortcut, and a
+    // finger hit would re-route reads through the shared index.
+    if mode == ExecMode::Replicated {
+        store.enable_replication();
+        store.set_finger_cache(false);
+    }
+    let tick_every = opts.replica_tick_every;
 
     // ---- drain phase (workers) ----
     let barrier = Arc::new(Barrier::new(threads + 1));
@@ -272,6 +301,9 @@ pub fn run_with_opts(
             let caller = fabric.as_ref().map(|f| f.caller(t, Some(t)));
             barrier.wait(); // start together
             let local = match caller {
+                None if mode == ExecMode::Replicated => {
+                    drain_replicated(t, &store, &words, window, tick_every)
+                }
                 None => drain_direct(t, &store, &words, window),
                 Some(caller) => {
                     drain_delegated(t, &store, &words, fabric.as_ref().unwrap(), window, caller)
@@ -324,6 +356,7 @@ pub fn run_with_opts(
         final_len: store.len(),
         mem: store.mem_stats(),
         fabric: fabric_stats,
+        replica: store.replica_stats(),
     }
 }
 
@@ -385,6 +418,65 @@ fn drain_direct(
                 let hi = key.saturating_add(window);
                 store.account_range(t, key, hi);
                 tally.range_rows += store.range(key, hi).len() as u64;
+            }
+        }
+    }
+    tally
+}
+
+/// Replicated drain: like Direct, but every read routes through the
+/// worker's NUMA-node replica of the owning shard's index layers
+/// ([`ShardedStore::get_replicated`] / `range_replicated`), touching only
+/// the shared terminal chunk at the bottom. Writes go to the primary and
+/// eagerly tick the worker's local replicas so a node's own writes are
+/// visible to its replica almost immediately; a periodic tick (every
+/// `tick_every` ops) lets each node also absorb remote writers' published
+/// invalidations. `tick_every == 0` disables both (forced-staleness runs).
+fn drain_replicated(
+    t: usize,
+    store: &ShardedStore,
+    words: &RouterFabric,
+    window: u64,
+    tick_every: usize,
+) -> OpTally {
+    let mut tally = OpTally::default();
+    let mut since_tick = 0usize;
+    while let Some(word) = words.pop_local(t) {
+        let (op, key) = WorkloadSpec::decode(word);
+        match op {
+            OpKind::Insert => {
+                tally.inserts += 1;
+                store.account(t, key);
+                store.insert(key, key ^ 0xDA7A);
+                if tick_every != 0 {
+                    store.replica_tick();
+                }
+            }
+            OpKind::Find => {
+                tally.finds += 1;
+                if store.get_replicated(t, key).is_some() {
+                    tally.found += 1;
+                }
+            }
+            OpKind::Erase => {
+                tally.erases += 1;
+                store.account(t, key);
+                store.erase(key);
+                if tick_every != 0 {
+                    store.replica_tick();
+                }
+            }
+            OpKind::Range => {
+                tally.ranges += 1;
+                let hi = key.saturating_add(window);
+                tally.range_rows += store.range_replicated(t, key, hi).len() as u64;
+            }
+        }
+        if tick_every != 0 {
+            since_tick += 1;
+            if since_tick >= tick_every {
+                since_tick = 0;
+                store.replica_tick();
             }
         }
     }

@@ -2,7 +2,7 @@
 //! stores homed on NUMA nodes, a per-thread lock-free queue fabric routing
 //! work to NUMA-local workers, and the leader-driven workload engine.
 //!
-//! Two execution modes share the machinery ([`ExecMode`]):
+//! Three execution modes share the machinery ([`ExecMode`]):
 //!
 //! - **Direct** — the classic fill-then-drain path: transport words are
 //!   routed to threads on each key's home node, and workers apply ops
@@ -14,6 +14,12 @@
 //!   of each shard; owners execute against their NUMA-local shard only, so
 //!   callers never dereference remote shard memory
 //!   (`remote_accesses == 0` by construction).
+//! - **Replicated** — every NUMA node keeps a lazily-synced local replica
+//!   of each shard's index *layers* (`skiplist::replica`) routing into the
+//!   single shared terminal list: reads descend node-locally with no
+//!   delegation hop (`replica.remote_index_derefs == 0` by construction)
+//!   and validate their landing live; writes go to the primary and publish
+//!   compact invalidations that replicas absorb on maintenance ticks.
 //!
 //! The sharded store exposes the full ordered-map API ([`OrderedKv`]):
 //! cross-shard `range` (per-prefix fan-out, concatenated in key order) and

@@ -11,13 +11,16 @@
 //! globally sorted *by construction* — no merge heap is needed (see
 //! [`ShardedStore::range`]).
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use crate::hashtable::{
     ConcurrentMap, FixedHashMap, SpoHashMap, TbbLikeHashMap, TwoLevelHashMap, TwoLevelSpoHashMap,
 };
 use crate::mem::{ArenaOptions, PoolStats};
 use crate::numa::{LocalityStats, Topology, LATENCY};
 use crate::skiplist::{
-    is_sorted_run, BatchOp, BatchReply, DetSkiplist, FindMode, RandomSkiplist, SkiplistStats,
+    is_sorted_run, BatchOp, BatchReply, DetSkiplist, FindMode, RandomSkiplist, ReplicaStats,
+    SkiplistStats,
 };
 
 use super::{for_each_prefix_segment, shard_of_key};
@@ -85,6 +88,38 @@ pub trait KvStore: Send + Sync {
     fn cluster_gap(&self) -> u64 {
         FLAT_CLUSTER_GAP
     }
+
+    /// Build NUMA-local index replicas (`ExecMode::Replicated`). A no-op
+    /// for structures without a replicable index plane (hash tables answer
+    /// point ops in O(1) from their own shard already); the deterministic
+    /// skiplist overrides the whole family below.
+    fn enable_replicas(&self, _topo: &Topology, _threads: usize) {}
+
+    fn replicas_enabled(&self) -> bool {
+        false
+    }
+
+    /// Point lookup preferring the calling thread's node-local replica.
+    /// Returns `(answer, fell_back)`; the default simply answers from the
+    /// primary and reports a fallback, so replication-unaware structures
+    /// stay correct (and honestly accounted) under `ExecMode::Replicated`.
+    fn get_replicated(&self, key: u64) -> (Option<u64>, bool) {
+        (self.get(key), true)
+    }
+
+    /// One replica maintenance step for the calling thread's node-local
+    /// replica; `true` = clean afterwards (trivially so without replicas).
+    fn replica_tick(&self) -> bool {
+        true
+    }
+
+    /// Force-rebuild every replica (tests / quiescent resync).
+    fn replica_rebuild(&self) {}
+
+    /// Merged replica-plane counters (all-zero without replicas).
+    fn replica_stats(&self) -> ReplicaStats {
+        ReplicaStats::default()
+    }
 }
 
 /// Ordered-map capability layered on [`KvStore`]: range scans and batch
@@ -95,6 +130,12 @@ pub trait OrderedKv: KvStore {
     /// All `(key, value)` with `lo <= key <= hi`, sorted by key.
     /// `lo > hi` yields an empty result.
     fn range(&self, lo: u64, hi: u64) -> Vec<(u64, u64)>;
+
+    /// Range scan seeded by the calling thread's node-local replica.
+    /// Returns `(rows, fell_back)`; defaults to the primary walk.
+    fn range_replicated(&self, lo: u64, hi: u64) -> (Vec<(u64, u64)>, bool) {
+        (self.range(lo, hi), true)
+    }
 
     /// Apply a key-sorted run of mixed operations, calling `sink(idx,
     /// reply)` exactly once per op in run order. Semantically identical to
@@ -275,6 +316,24 @@ impl KvStore for DetSkiplist {
         // blocks are narrow or disabled).
         DetSkiplist::leaf_cap(self) as u64 * DetSkiplist::inner_cap(self).max(4) as u64
     }
+    fn enable_replicas(&self, topo: &Topology, threads: usize) {
+        DetSkiplist::enable_replicas(self, topo, threads)
+    }
+    fn replicas_enabled(&self) -> bool {
+        DetSkiplist::replicas_enabled(self)
+    }
+    fn get_replicated(&self, key: u64) -> (Option<u64>, bool) {
+        DetSkiplist::get_replicated(self, key)
+    }
+    fn replica_tick(&self) -> bool {
+        DetSkiplist::replica_tick(self)
+    }
+    fn replica_rebuild(&self) {
+        DetSkiplist::replica_rebuild_all(self)
+    }
+    fn replica_stats(&self) -> ReplicaStats {
+        DetSkiplist::replica_stats(self)
+    }
 }
 
 impl OrderedKv for DetSkiplist {
@@ -283,6 +342,13 @@ impl OrderedKv for DetSkiplist {
             return Vec::new();
         }
         DetSkiplist::range(self, lo, hi)
+    }
+
+    fn range_replicated(&self, lo: u64, hi: u64) -> (Vec<(u64, u64)>, bool) {
+        if lo > hi {
+            return (Vec::new(), false);
+        }
+        DetSkiplist::range_replicated(self, lo, hi)
     }
 
     fn apply_sorted_run(&self, ops: &[BatchOp], sink: &mut dyn FnMut(usize, BatchReply)) {
@@ -545,6 +611,8 @@ pub struct ShardedStore {
     topology: Topology,
     threads: usize,
     pub locality: LocalityStats,
+    /// `ExecMode::Replicated` engaged (per-shard NUMA index replicas built).
+    replicated: AtomicBool,
 }
 
 impl ShardedStore {
@@ -595,6 +663,7 @@ impl ShardedStore {
             topology,
             threads,
             locality: LocalityStats::new(),
+            replicated: AtomicBool::new(false),
         }
     }
 
@@ -802,6 +871,80 @@ impl ShardedStore {
                 }
             }
         });
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // NUMA-replicated index layers (ExecMode::Replicated)
+    // ------------------------------------------------------------------
+
+    /// Build node-local index replicas on every shard and start routing
+    /// replicated reads through them. Idempotent; call at a write-quiet
+    /// moment (post-fill) so the initial builds are exact.
+    pub fn enable_replication(&self) {
+        for s in &self.shards {
+            s.enable_replicas(&self.topology, self.threads);
+        }
+        self.replicated.store(true, Ordering::Release);
+    }
+
+    pub fn replication_enabled(&self) -> bool {
+        self.replicated.load(Ordering::Acquire)
+    }
+
+    /// Point lookup via the calling thread's node-local replica of the
+    /// key's shard. Locality accounting is honest: a replica answer is a
+    /// node-local access by construction; a fallback is accounted as the
+    /// Direct-mode access to the shard's home it actually performs.
+    pub fn get_replicated(&self, thread_id: usize, key: u64) -> Option<u64> {
+        let (v, fell_back) = self.shard(key).get_replicated(key);
+        if fell_back {
+            self.account(thread_id, key);
+        } else {
+            self.locality.record(true);
+        }
+        v
+    }
+
+    /// Cross-shard range scan with replica-seeded per-shard walks (same
+    /// prefix-segment concatenation as [`ShardedStore::range`]).
+    pub fn range_replicated(&self, thread_id: usize, lo: u64, hi: u64) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        for_each_prefix_segment(lo, hi, |slo, shi| {
+            let sh = shard_of_key(slo, self.shards.len());
+            let (rows, fell_back) = self.shards[sh].range_replicated(slo, shi);
+            if fell_back {
+                self.account_shard(thread_id, sh);
+            } else {
+                self.locality.record(true);
+            }
+            out.extend(rows);
+        });
+        out
+    }
+
+    /// One maintenance step on the calling thread's node-local replica of
+    /// **every** shard (writers run this eagerly; the engine also ticks it
+    /// periodically so remote replicas converge).
+    pub fn replica_tick(&self) {
+        for s in &self.shards {
+            s.replica_tick();
+        }
+    }
+
+    /// Force-rebuild every replica of every shard (tests / quiescence).
+    pub fn replica_rebuild(&self) {
+        for s in &self.shards {
+            s.replica_rebuild();
+        }
+    }
+
+    /// Replica-plane counters summed across every shard.
+    pub fn replica_stats(&self) -> ReplicaStats {
+        let mut out = ReplicaStats::default();
+        for s in &self.shards {
+            out.merge(&s.replica_stats());
+        }
         out
     }
 

@@ -35,7 +35,7 @@ use crate::coordinator::{DelegatedOp, KvStore, OpFabric, OrderedKv, ShardedStore
 use crate::mem::ArenaOptions;
 use crate::runtime::KeyRouter;
 use crate::skiplist::{BatchOp, DetSkiplist, FindMode, DEFAULT_LEAF_CAP};
-use crate::util::bench::Table;
+use crate::util::bench::{RowTag, Table};
 use crate::util::rng::mix64;
 
 use super::ExpConfig;
@@ -251,9 +251,10 @@ pub fn t16_fatinner_with(cfg: &ExpConfig, resident: u64) -> Table {
                 g1.derefs_per_op
             );
         }
-        t.push_row(
+        t.push_row_tagged(
             f as u64,
             vec![dir.mops, dir.derefs_per_op, del.mops, del.derefs_per_op, kinds as f64],
+            RowTag { inner_cap: f, ..RowTag::default() },
         );
         if f == 1 {
             dir_f1 = Some(dir);

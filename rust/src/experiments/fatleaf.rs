@@ -33,7 +33,7 @@ use crate::coordinator::{DelegatedOp, KvStore, OpFabric, OrderedKv, ShardedStore
 use crate::mem::ArenaOptions;
 use crate::runtime::KeyRouter;
 use crate::skiplist::{BatchOp, DetSkiplist, FindMode};
-use crate::util::bench::Table;
+use crate::util::bench::{RowTag, Table};
 use crate::util::rng::mix64;
 
 use super::ExpConfig;
@@ -245,9 +245,10 @@ pub fn t15_fatleaf_with(cfg: &ExpConfig, resident: u64) -> Table {
                 g1.derefs_per_op
             );
         }
-        t.push_row(
+        t.push_row_tagged(
             cap as u64,
             vec![dir.mops, dir.derefs_per_op, del.mops, del.derefs_per_op, kinds as f64],
+            RowTag { leaf_cap: cap, ..RowTag::default() },
         );
         if cap == 1 {
             dir_k1 = Some(dir);

@@ -15,6 +15,7 @@ pub mod mem;
 pub mod mlp;
 pub mod paper;
 pub mod queues;
+pub mod replica;
 
 pub use self::batch::t13_batch;
 pub use self::cache::t12_cache;
@@ -24,6 +25,7 @@ pub use self::fatleaf::t15_fatleaf;
 pub use self::hier::t11_hier;
 pub use self::mem::t10_mem;
 pub use self::mlp::t14_mlp;
+pub use self::replica::t18_replica;
 
 use std::sync::Arc;
 

@@ -2,14 +2,15 @@
 //!
 //! ```text
 //! cdskl info                           topology, artifacts, self-check
-//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|t13|t14|t15|t16|t17|all> [--threads 4,8]
+//! cdskl exp <t1|t2|t3|t4|t5|t6|t78|t9|t10|t11|t12|t13|t14|t15|t16|t17|t18|all> [--threads 4,8]
 //!           [--reps N] [--scale N] [--out FILE]   regenerate paper tables
 //! cdskl run [--store det|rwl|random|fixed|twolevel|spo|spo2|tbb]
-//!           [--ops N] [--threads N] [--mix w1|w2|hash|range|hier|bulk]
-//!           [--exec direct|delegated] [--range-window W] [--batch-n N]
+//!           [--ops N] [--threads N] [--mix w1|w2|hash|range|hier|bulk|r95|r70|r50]
+//!           [--exec direct|delegated|replicated] [--range-window W] [--batch-n N]
 //!           [--combine true|false] [--run-len N] [--interleave K]
 //!           [--inject-latency NS] [--fingers true|false]
 //!           [--leaf-cap K] [--inner-cap F] [--op-timeout-ms MS]
+//!           [--replica-tick N]
 //!                                      one workload run with metrics
 //! cdskl selfcheck                      AOT artifacts vs native mixer
 //! ```
@@ -147,8 +148,11 @@ fn exp(args: &Args) {
     if all || which == "t17" || which == "chaos" {
         tables.push(experiments::t17_chaos(&cfg, &router));
     }
+    if all || which == "t18" || which == "replica" {
+        tables.push(experiments::t18_replica(&cfg, &router));
+    }
     if tables.is_empty() {
-        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 t13 t14 t15 t16 t17 all)");
+        eprintln!("unknown experiment '{which}' (t1 t2 t3 t4 t5 t6 t78 t9 t10 t11 t12 t13 t14 t15 t16 t17 t18 all)");
         std::process::exit(2);
     }
     let mut out = String::new();
@@ -177,13 +181,16 @@ fn run(args: &Args) {
         "range" => OpMix::RANGE,
         "hier" => OpMix::HIER,
         "bulk" => OpMix::BULK,
+        "r95" => OpMix::READ95,
+        "r70" => OpMix::READ70,
+        "r50" => OpMix::READ50,
         other => {
-            eprintln!("unknown --mix '{other}' (w1 w2 hash range hier bulk)");
+            eprintln!("unknown --mix '{other}' (w1 w2 hash range hier bulk r95 r70 r50)");
             std::process::exit(2);
         }
     };
     let mode = ExecMode::parse(&args.str_or("exec", "direct")).unwrap_or_else(|| {
-        eprintln!("unknown --exec (direct delegated)");
+        eprintln!("unknown --exec (direct delegated replicated)");
         std::process::exit(2);
     });
     if let Some(ns) = args.get("inject-latency") {
@@ -228,6 +235,9 @@ fn run(args: &Args) {
             0 => None,
             ms => Some(std::time::Duration::from_millis(ms)),
         },
+        // replicated mode: maintenance tick cadence (ops between local
+        // replica ticks per worker; 0 leaves replicas entirely stale)
+        replica_tick_every: args.usize_or("replica-tick", 64),
     };
     let m = run_with_opts(&store, &spec, threads, &router, seed, opts);
     println!(
@@ -308,6 +318,25 @@ fn run(args: &Args) {
             100.0 * sl.finger_hit_rate(),
             sl.finger_hits,
             sl.finger_attempts,
+        );
+    }
+    if m.replica.lookups > 0 || m.replica.rebuilds > 0 {
+        let r = &m.replica;
+        println!(
+            "replica: {:.1} index derefs/read ({} remote), fallback {:.1}% ({} of {} lookups), \
+             {} walk hops, {} left steps, {} records ({} consumed), {} patches, {} rebuilds, {} ticks",
+            r.derefs_per_read(),
+            r.remote_index_derefs,
+            100.0 * r.fallback_rate(),
+            r.fallbacks,
+            r.lookups,
+            r.walk_hops,
+            r.left_steps,
+            r.records_published,
+            r.records_consumed,
+            r.patches,
+            r.rebuilds,
+            r.ticks,
         );
     }
     if m.mem.allocs > 0 {

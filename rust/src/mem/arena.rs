@@ -144,8 +144,12 @@ impl<const K: usize> ThreadTallies<K> {
     }
 }
 
+/// The calling thread's (virtual) CPU as recorded by [`note_thread_cpu`]
+/// (`usize::MAX` = unpinned, counted as local everywhere). Public so the
+/// NUMA index replicas can charge their derefs to the right node without
+/// re-deriving pinning state.
 #[inline]
-fn thread_cpu() -> usize {
+pub fn thread_cpu() -> usize {
     THREAD_CPU.with(|c| c.get())
 }
 

@@ -8,5 +8,7 @@
 pub mod arena;
 pub mod pool;
 
-pub use arena::{note_thread_cpu, ArenaHome, ArenaNode, ArenaOptions, BlockArena, PoolStats};
+pub use arena::{
+    note_thread_cpu, thread_cpu, ArenaHome, ArenaNode, ArenaOptions, BlockArena, PoolStats,
+};
 pub use pool::{eq5_average_blocks, NodePool};

@@ -28,8 +28,15 @@ impl Topology {
     }
 
     /// Detect from sysfs; falls back to the virtual Milan grid when the
-    /// host has no multi-node NUMA (as in this container).
+    /// host has no multi-node NUMA (as in this container). The `CDSKL_NODES`
+    /// environment variable overrides both: `CDSKL_NODES=4` gives a virtual
+    /// 4-node grid with the Milan per-node CPU count, `CDSKL_NODES=4x8`
+    /// also sets CPUs per node — letting single-socket CI exercise every
+    /// replica/shard-placement configuration deterministically.
     pub fn detect() -> Topology {
+        if let Some(t) = Self::from_env() {
+            return t;
+        }
         let nodes = Self::sysfs_node_count().unwrap_or(1);
         let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         if nodes > 1 {
@@ -37,6 +44,31 @@ impl Topology {
         } else {
             Topology::milan_virtual()
         }
+    }
+
+    /// Parse the `CDSKL_NODES` override (`"N"` or `"NxC"`); `None` when
+    /// unset, empty, or malformed (malformed values are ignored rather
+    /// than panicking — detection must never take a process down).
+    fn from_env() -> Option<Topology> {
+        let raw = std::env::var("CDSKL_NODES").ok()?;
+        Self::parse_override(&raw)
+    }
+
+    /// `"N"` → N virtual nodes x Milan's 16 CPUs; `"NxC"` → N nodes x C
+    /// CPUs each. Zero or unparsable fields reject the override.
+    pub fn parse_override(raw: &str) -> Option<Topology> {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            return None;
+        }
+        let (n, c) = match raw.split_once(['x', 'X']) {
+            Some((n, c)) => (n.trim().parse().ok()?, c.trim().parse().ok()?),
+            None => (raw.parse().ok()?, Topology::milan_virtual().cpus_per_node),
+        };
+        if n == 0 || c == 0 {
+            return None;
+        }
+        Some(Topology::virtual_grid(n, c))
     }
 
     fn sysfs_node_count() -> Option<usize> {
@@ -118,5 +150,39 @@ mod tests {
         let t = Topology::detect();
         assert!(t.numa_nodes >= 1);
         assert!(t.cpus_per_node >= 1);
+    }
+
+    #[test]
+    fn env_override_parsing() {
+        // bare node count: Milan CPUs per node
+        let t = Topology::parse_override("4").unwrap();
+        assert_eq!((t.numa_nodes, t.cpus_per_node), (4, 16));
+        assert!(!t.detected);
+        // NxC form, either case, whitespace tolerated
+        let t = Topology::parse_override("2x4").unwrap();
+        assert_eq!((t.numa_nodes, t.cpus_per_node), (2, 4));
+        let t = Topology::parse_override(" 3X8 ").unwrap();
+        assert_eq!((t.numa_nodes, t.cpus_per_node), (3, 8));
+        // malformed / zero values are rejected, not panicked on
+        for bad in ["", "0", "4x0", "0x4", "ax2", "2xb", "x", "4x", "x4"] {
+            assert!(Topology::parse_override(bad).is_none(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn env_override_pins_node_assignment() {
+        // 2 nodes x 4 CPUs: node of CPU c is (c/4) % 2, shards alternate
+        // once both nodes are engaged (>= 5 threads).
+        let t = Topology::parse_override("2x4").unwrap();
+        assert_eq!(t.total_cpus(), 8);
+        for (cpu, node) in [(0, 0), (3, 0), (4, 1), (7, 1), (8, 0)] {
+            assert_eq!(t.node_of_cpu(cpu), node, "cpu {cpu}");
+        }
+        assert_eq!(t.nodes_in_use(4), 1);
+        assert_eq!(t.nodes_in_use(5), 2);
+        for s in 0..8 {
+            assert_eq!(t.shard_home(s, 8), s % 2);
+            assert_eq!(t.shard_home(s, 4), 0);
+        }
     }
 }

@@ -57,11 +57,15 @@
 //!   discipline's "rebalance on the way down" invariant.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use crate::mem::arena::{magazine_count, thread_slot, ThreadTallies};
 use crate::mem::{ArenaOptions, PoolStats};
+use crate::numa::Topology;
 use crate::sync::Backoff;
 use crate::util::simd;
+
+use super::replica::{ReplicaRead, ReplicaSet, ReplicaStats};
 
 use super::node::{
     BlockRoute, NodeArena, NodeRef, NodeView, DEFAULT_INNER_CAP, DEFAULT_LEAF_CAP, MAX_INNER_CAP,
@@ -435,6 +439,10 @@ pub struct DetSkiplist {
     /// Hashed per-thread hot-path counter lines (see [`ThreadTallies`]).
     tallies: ThreadTallies<TALLY_WIDTH>,
     fingers_on: AtomicBool,
+    /// NUMA-replicated index layers (`ExecMode::Replicated`); unset until
+    /// [`DetSkiplist::enable_replicas`], so the write-path publication hook
+    /// costs one `OnceLock` load in non-replicated runs.
+    replicas: OnceLock<ReplicaSet>,
 }
 
 /// Keys must stay below `u64::MAX` (reserved for the head/sentinel spine).
@@ -497,6 +505,7 @@ impl DetSkiplist {
             fingers: (0..magazine_count(opts.threads_hint)).map(|_| FingerSlot::new()).collect(),
             tallies: ThreadTallies::new(opts.threads_hint),
             fingers_on: AtomicBool::new(true),
+            replicas: OnceLock::new(),
         }
     }
 
@@ -637,9 +646,108 @@ impl DetSkiplist {
         &self.arena
     }
 
-    /// §V arena accounting (allocs/recycled/capacity/locality).
+    /// §V arena accounting (allocs/recycled/capacity/locality), replica
+    /// block arenas included once replication is enabled.
     pub fn mem_stats(&self) -> PoolStats {
-        self.arena.stats()
+        let mut out = self.arena.stats();
+        if let Some(set) = self.replicas.get() {
+            out.merge(&set.mem_stats());
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // NUMA-replicated index layers (ExecMode::Replicated)
+    // ------------------------------------------------------------------
+
+    /// Build one node-local index replica per engaged NUMA node and start
+    /// routing replicated reads through them. Idempotent; best enabled at
+    /// a write-quiet moment (e.g. after the fill phase) so the initial
+    /// builds are exact.
+    pub fn enable_replicas(&self, topo: &Topology, threads: usize) {
+        self.replicas.get_or_init(|| ReplicaSet::new(self, topo, threads));
+    }
+
+    pub fn replicas_enabled(&self) -> bool {
+        self.replicas.get().is_some()
+    }
+
+    /// Point lookup through the calling thread's node-local replica.
+    /// Returns `(answer, fell_back)`: `fell_back` is `true` when the
+    /// replica missed (or replication is off) and the shared index
+    /// answered instead — the answer itself is always live-validated.
+    pub fn get_replicated(&self, key: u64) -> (Option<u64>, bool) {
+        let Some(set) = self.replicas.get() else {
+            return (self.get(key), true);
+        };
+        match set.local().lookup(self, key) {
+            ReplicaRead::Value(v) => (v, false),
+            ReplicaRead::Miss => (self.get(key), true),
+        }
+    }
+
+    /// Range scan seeded by the calling thread's node-local replica: the
+    /// replica seeks the starting terminal chunk, the walk itself reads
+    /// the shared terminal list (chunks are not replicated). Torn walks
+    /// retry the replica seek a few times before falling back.
+    pub fn range_replicated(&self, lo: u64, hi: u64) -> (Vec<(u64, u64)>, bool) {
+        let Some(set) = self.replicas.get() else {
+            return (self.range(lo, hi), true);
+        };
+        let rep = set.local();
+        let mut cost = PathCost::default();
+        for _ in 0..4 {
+            let Some(start) = rep.seek(self, lo) else { break };
+            if let Some(out) = self.range_walk(start, lo, hi, &mut cost) {
+                self.flush_cost(&cost);
+                return (out, false);
+            }
+        }
+        self.flush_cost(&cost);
+        (self.range(lo, hi), true)
+    }
+
+    /// One maintenance step on the calling thread's node-local replica
+    /// (consume pending invalidations / rebuild if dirty). Returns `true`
+    /// when that replica is clean afterwards. No-op without replication.
+    pub fn replica_tick(&self) -> bool {
+        match self.replicas.get() {
+            Some(set) => set.local().maintain(self, set.log(), false),
+            None => true,
+        }
+    }
+
+    /// Force a full rebuild of **every** replica (tests / quiescent
+    /// resync after deliberately starving the tick).
+    pub fn replica_rebuild_all(&self) {
+        if let Some(set) = self.replicas.get() {
+            for r in set.replicas() {
+                r.maintain(self, set.log(), true);
+            }
+        }
+    }
+
+    /// Merged replica-plane counters (zeroes when replication is off).
+    pub fn replica_stats(&self) -> ReplicaStats {
+        self.replicas.get().map(|s| s.stats()).unwrap_or_default()
+    }
+
+    /// Writer-side publication hook: every terminal-membership or boundary
+    /// change notes the affected key so replicas can invalidate lazily.
+    #[inline]
+    fn replica_note(&self, key: u64) {
+        if let Some(set) = self.replicas.get() {
+            set.note(key);
+        }
+    }
+
+    /// First terminal chunk of the live list (`Some(SENTINEL)` = empty,
+    /// `None` = torn — retry). Replica rebuilds walk from here.
+    pub(crate) fn first_terminal(&self) -> Option<NodeRef> {
+        let mut cost = PathCost::default();
+        let out = self.seek_terminal(0, &mut cost);
+        self.flush_cost(&cost);
+        out
     }
 
     /// Enable/disable the per-thread finger cache (enabled by default).
@@ -1378,6 +1486,7 @@ impl DetSkiplist {
             let t = self.arena.alloc_chunk(&[key], &[value], SENTINEL);
             pn.hot.bottom.store(t, Ordering::Release);
             self.block_refresh(p, None);
+            self.replica_note(key);
             return Tri::True;
         }
         // target: first chunk whose max covers the key, else the last (an
@@ -1426,6 +1535,10 @@ impl DetSkiplist {
             }
             if raising {
                 self.block_refresh(p, None);
+                // the chunk's routing max moved: invalidate both the old
+                // boundary (stale replica separator) and the new one
+                self.replica_note(keys[cnt - 1]);
+                self.replica_note(key);
             }
             return Tri::True;
         }
@@ -1468,6 +1581,10 @@ impl DetSkiplist {
         // membership grew by one (and `raising` was retracted above):
         // republish the leaf's routing block over the post-split chunks
         self.block_refresh(p, None);
+        // new chunk boundary at ks[lh-1]; the right chunk keeps (or, when
+        // raising, takes) the high max ks[total-1]
+        self.replica_note(ks[lh - 1]);
+        self.replica_note(ks[total - 1]);
         Tri::True
     }
 
@@ -2135,6 +2252,8 @@ impl DetSkiplist {
                 tn.set_key_next(sk, snext);
                 drop(w);
                 sn.cold.mark.store(true, Ordering::Release);
+                // `sk` now answers from chunk `t`; the old `s` is dead
+                self.replica_note(sk);
             } else {
                 // only chunk (possible only at the head leaf)
                 pn.hot.bottom.store(tnext, Ordering::Release);
@@ -2142,6 +2261,7 @@ impl DetSkiplist {
             }
             // membership shrank: republish the routing block
             self.block_refresh(p, None);
+            self.replica_note(key);
             return Tri::True;
         }
 
@@ -2158,6 +2278,11 @@ impl DetSkiplist {
                 // atomically with the array it describes
                 tn.set_key_next(keys[newcnt - 1], tnext);
             }
+        }
+        if pos == newcnt {
+            // max lowering leaves replica separators stale-high (safe);
+            // note it so maintenance re-tightens them
+            self.replica_note(key);
         }
         if pos == newcnt && ti == children.len() - 1 {
             // removed the leaf max: sync the leaf key (a lowering — the
@@ -2199,7 +2324,11 @@ impl DetSkiplist {
         let lcnt = self.arena.chunk_keys_into(l, &mut lk);
         let rcnt = self.arena.chunk_keys_into(r, &mut rk);
         let total = lcnt + rcnt;
+        let (lkey, _) = ln.key_next();
         let (rkey, rnext) = rn.key_next();
+        // both chunk boundaries move (merge or resplit): invalidate both
+        self.replica_note(lkey);
+        self.replica_note(rkey);
         if total <= cap {
             // merge: left absorbs right; the header takeover inside left's
             // window makes the widened coverage and the data atomic
@@ -2260,45 +2389,54 @@ impl DetSkiplist {
 
     fn range_inner(&self, lo: u64, hi: u64, cost: &mut PathCost) -> Vec<(u64, u64)> {
         let mut b = Backoff::new();
-        'retry: loop {
-            let Some(start) = self.seek_terminal(lo, cost) else {
-                self.stats.find_retries.fetch_add(1, Ordering::Relaxed);
-                b.wait();
-                continue 'retry;
-            };
-            let mut out = Vec::new();
-            let mut cur = start;
-            let mut keys = [0u64; MAX_LEAF_CAP];
-            let mut vals = [0u64; MAX_LEAF_CAP];
-            loop {
-                if cur == SENTINEL {
+        loop {
+            if let Some(start) = self.seek_terminal(lo, cost) {
+                if let Some(out) = self.range_walk(start, lo, hi, cost) {
                     return out;
                 }
-                cost.derefs += 1;
-                // one seqlock snapshot copies the whole chunk out; a torn
-                // read or generation change retries the range
-                let Some((cnt, max, nx)) = self.arena.chunk_snapshot(cur, &mut keys, &mut vals)
-                else {
-                    self.stats.find_retries.fetch_add(1, Ordering::Relaxed);
-                    b.wait();
-                    continue 'retry;
-                };
-                // pull the next chunk's line while this one is copied out
-                cost.prefetches += self.arena.prefetch(nx) as u64;
-                for j in 0..cnt {
-                    let k = keys[j];
-                    if k > hi {
-                        return out;
-                    }
-                    if k >= lo {
-                        out.push((k, vals[j]));
-                    }
-                }
-                if max > hi {
-                    return out;
-                }
-                cur = nx;
             }
+            self.stats.find_retries.fetch_add(1, Ordering::Relaxed);
+            b.wait();
+        }
+    }
+
+    /// Collect `[lo, hi]` rows walking the terminal list from `start`
+    /// (`None` = a chunk snapshot tore / recycled — re-seek and retry).
+    /// Shared by the top-down range and the replica-seeded range.
+    fn range_walk(
+        &self,
+        start: NodeRef,
+        lo: u64,
+        hi: u64,
+        cost: &mut PathCost,
+    ) -> Option<Vec<(u64, u64)>> {
+        let mut out = Vec::new();
+        let mut cur = start;
+        let mut keys = [0u64; MAX_LEAF_CAP];
+        let mut vals = [0u64; MAX_LEAF_CAP];
+        loop {
+            if cur == SENTINEL {
+                return Some(out);
+            }
+            cost.derefs += 1;
+            // one seqlock snapshot copies the whole chunk out; a torn
+            // read or generation change retries the range
+            let (cnt, max, nx) = self.arena.chunk_snapshot(cur, &mut keys, &mut vals)?;
+            // pull the next chunk's line while this one is copied out
+            cost.prefetches += self.arena.prefetch(nx) as u64;
+            for j in 0..cnt {
+                let k = keys[j];
+                if k > hi {
+                    return Some(out);
+                }
+                if k >= lo {
+                    out.push((k, vals[j]));
+                }
+            }
+            if max > hi {
+                return Some(out);
+            }
+            cur = nx;
         }
     }
 
@@ -3535,8 +3673,10 @@ impl DetSkiplist {
         let mut buf = [0u64; MAX_LEAF_CAP];
         let mut t = *level_heads.last().unwrap();
         let mut prev: Option<u64> = None;
+        let mut chunk_list: Vec<(u64, NodeRef)> = Vec::new();
         while t != SENTINEL {
             let (k, nx) = self.arena.node(t).key_next();
+            chunk_list.push((k, t));
             let cnt = self.arena.chunk_keys_into(t, &mut buf);
             if cnt == 0 {
                 return Err(format!("empty terminal chunk (header key {k})"));
@@ -3564,7 +3704,65 @@ impl DetSkiplist {
         if keys.len() as u64 != self.len() {
             return Err(format!("len {} != terminal count {}", self.len(), keys.len()));
         }
+        self.check_replica_invariants(&chunk_list)?;
         Ok(keys)
+    }
+
+    /// Replica-plane half of [`DetSkiplist::check_invariants`] (quiescent):
+    /// every replica's leaf entries must route into the shared terminal
+    /// list. An **exact** replica (rebuilt with no publications since) must
+    /// agree entry-for-entry with the live chunk list; a stale one is held
+    /// to the safe-stale contract — ascending separators, every child
+    /// either dead or a live terminal chunk with `sep >= chunk key`.
+    fn check_replica_invariants(&self, chunk_list: &[(u64, NodeRef)]) -> Result<(), String> {
+        let Some(set) = self.replicas.get() else { return Ok(()) };
+        for (ri, rep) in set.replicas().iter().enumerate() {
+            let entries = rep.leaf_entries();
+            if rep.is_exact() {
+                if entries.len() != chunk_list.len() {
+                    return Err(format!(
+                        "replica {ri} exact but holds {} entries vs {} live chunks",
+                        entries.len(),
+                        chunk_list.len()
+                    ));
+                }
+                for (i, (&(sep, child), &(ck, cref))) in
+                    entries.iter().zip(chunk_list.iter()).enumerate()
+                {
+                    if child != cref || sep != ck {
+                        return Err(format!(
+                            "replica {ri} exact entry {i}: ({sep}, {child:#x}) \
+                             != live chunk ({ck}, {cref:#x})"
+                        ));
+                    }
+                }
+            } else {
+                let mut prev: Option<u64> = None;
+                for &(sep, child) in &entries {
+                    if let Some(p) = prev {
+                        if sep <= p {
+                            return Err(format!(
+                                "replica {ri}: separators not increasing ({p} -> {sep})"
+                            ));
+                        }
+                    }
+                    prev = Some(sep);
+                    let Some(n) = self.arena.resolve(child) else { continue };
+                    if n.is_marked() {
+                        continue; // dead chunk: readers retry off it, fine
+                    }
+                    // a live child must be in the terminal list; its sep may
+                    // sit on either side of the live chunk key (raised maxes
+                    // go stale-low, lowered maxes stale-high — both safe)
+                    if !chunk_list.iter().any(|&(_, r)| r == child) {
+                        return Err(format!(
+                            "replica {ri}: live child {child:#x} not in the terminal list"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -4630,5 +4828,52 @@ mod tests {
             df < dl,
             "block routing must cut index derefs: fat {df} vs legacy {dl}"
         );
+    }
+
+    #[test]
+    fn replicas_answer_reads_and_survive_staleness() {
+        let s = new_lf();
+        for k in 0..4_000u64 {
+            s.insert(k * 3 + 1, k);
+        }
+        assert!(!s.replicas_enabled());
+        assert_eq!(s.get_replicated(301).0, Some(100), "pre-enable reads fall through");
+        s.enable_replicas(&Topology::virtual_grid(2, 2), 4);
+        assert!(s.replicas_enabled());
+        // exact replica straight after the quiescent build: on-replica hits
+        let before = s.replica_stats();
+        for k in 0..4_000u64 {
+            let (v, fell_back) = s.get_replicated(k * 3 + 1);
+            assert_eq!(v, Some(k), "fresh-replica get {k}");
+            assert!(!fell_back, "exact replica must answer key {}", k * 3 + 1);
+            assert_eq!(s.get_replicated(k * 3 + 2).0, None, "absent key");
+        }
+        assert_eq!(s.replica_stats().fallbacks, before.fallbacks);
+        s.check_invariants().expect("exact replicas mirror the terminal list");
+        // staleness: splits, merges and boundary raises under the replica
+        for k in 0..4_000u64 {
+            s.insert(k * 3 + 2, k);
+            if k % 3 == 0 {
+                s.erase(k * 3 + 1);
+            }
+        }
+        assert!(s.replica_stats().records_published > 0, "hooks must publish");
+        for k in 0..4_000u64 {
+            assert_eq!(s.get_replicated(k * 3 + 2).0, Some(k), "stale-replica get");
+            let want = if k % 3 == 0 { None } else { Some(k) };
+            assert_eq!(s.get_replicated(k * 3 + 1).0, want, "stale-replica erase view");
+        }
+        let (rows, _) = s.range_replicated(0, 100);
+        assert_eq!(rows, s.range(0, 100), "replicated range agrees while stale");
+        s.check_invariants().expect("stale replicas pass the weak invariants");
+        // ticks drain the log; a forced rebuild restores exactness
+        while !s.replica_tick() {}
+        s.replica_rebuild_all();
+        s.check_invariants().expect("rebuilt replicas mirror the terminal list");
+        let before = s.replica_stats();
+        for k in (0..4_000u64).filter(|k| k % 3 != 0) {
+            assert_eq!(s.get_replicated(k * 3 + 1).0, Some(k));
+        }
+        assert_eq!(s.replica_stats().fallbacks, before.fallbacks, "no post-rebuild fallbacks");
     }
 }

@@ -16,10 +16,12 @@
 pub mod det;
 pub mod node;
 pub mod random;
+pub mod replica;
 
 pub use det::{DetSkiplist, FindMode, SkiplistStats, MAX_KEY};
 pub use node::{DEFAULT_INNER_CAP, DEFAULT_LEAF_CAP, MAX_INNER_CAP, MAX_LEAF_CAP};
 pub use random::RandomSkiplist;
+pub use replica::ReplicaStats;
 
 /// One element of a key-sorted mixed-operation run — the unit the fused
 /// batch descents consume. Runs may contain duplicate keys; ops are applied

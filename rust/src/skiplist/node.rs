@@ -858,6 +858,59 @@ impl NodeArena {
         None
     }
 
+    /// Lock-free consistent snapshot of `r`'s full routing block (for the
+    /// NUMA-replica descent, which needs every separator at once so it can
+    /// clamp past-the-end ranks to the last child and retry leftward ranks
+    /// after a stale terminal landing): `(count, node_key, next)` plus
+    /// `seps`/`childs` filled in. Validation protocol (version retry +
+    /// post-window generation re-check) is [`NodeArena::chunk_snapshot`]'s.
+    ///
+    /// `None` means the block is gone (stale link), unbuilt/overflowed, or
+    /// a writer interfered persistently — replica callers treat all of
+    /// those as a descent miss and fall back to the shared index.
+    pub fn block_snapshot(
+        &self,
+        r: NodeRef,
+        seps: &mut [u64; MAX_INNER_CAP],
+        childs: &mut [NodeRef; MAX_INNER_CAP],
+    ) -> Option<(usize, u64, NodeRef)> {
+        debug_assert!(self.inner_blocks());
+        let idx = ref_idx(r);
+        let cold = self.arena.cold(idx);
+        if cold.gen.load(Ordering::Acquire) != ref_gen(r) {
+            return None;
+        }
+        let leaf = self.leaf(r);
+        let hot = self.arena.hot(idx);
+        for _ in 0..64 {
+            let v1 = leaf[LEAF_VERSION].load(Ordering::Acquire);
+            if v1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let kn = hot.kn.load();
+            let raw = leaf[LEAF_COUNT].load(Ordering::Relaxed);
+            if raw == 0 || raw > self.inner_cap as u64 {
+                // Unbuilt or overflowed: no consistent block to copy.
+                return None;
+            }
+            let count = raw as usize;
+            for i in 0..count {
+                seps[i] = leaf[LEAF_KEYS + i].load(Ordering::Relaxed);
+                childs[i] = leaf[LEAF_KEYS + self.plane_cap + i].load(Ordering::Relaxed);
+            }
+            fence(Ordering::Acquire);
+            if leaf[LEAF_VERSION].load(Ordering::Relaxed) != v1 {
+                continue;
+            }
+            if cold.gen.load(Ordering::Acquire) != ref_gen(r) {
+                return None;
+            }
+            return Some((count, hi64(kn), lo64(kn)));
+        }
+        None
+    }
+
     /// Nodes currently materialized (capacity in nodes).
     pub fn capacity(&self) -> u64 {
         self.arena.capacity()

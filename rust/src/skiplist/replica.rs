@@ -1,0 +1,825 @@
+//! NUMA-replicated index layers (the third execution mode's backbone).
+//!
+//! Each engaged NUMA node owns an [`IndexReplica`]: a private, node-locally
+//! allocated copy of the level >= 1 routing structure — fat separator
+//! blocks, built with the same `node.rs` block machinery as the shared
+//! index — whose bottom level routes straight into the **single shared
+//! terminal fat-leaf list**. A replicated read descends entirely inside its
+//! node's replica (zero remote index-plane derefs by construction) and only
+//! then touches the shared terminal chunk, where the landing is validated
+//! live exactly like the shared lock-free descent: seqlock window probe,
+//! post-window generation + mark re-check, and a key-coverage proof.
+//!
+//! ## Safe-stale (the finger/carry argument, applied to a whole index)
+//!
+//! Replicas are *lazily* synced, so a descent may land on a stale terminal
+//! position. Staleness is recoverable because terminal membership changes
+//! are themselves safe to race with:
+//!
+//! - **Landed too far left** (chunk's live max < key — appends, splits):
+//!   walk right through *live* `next` links, re-probing each chunk. A chunk
+//!   whose probe proves `lo <= key <= max` answers definitively (global
+//!   sortedness makes live chunk ranges disjoint); walking off the right
+//!   end proves absence, exactly as in `find_lockfree_from`.
+//! - **Landed too far right** (chunk's live lo > key — merges publish
+//!   through the left sibling, delete-by-copy raises `lo`): retry the next
+//!   entry to the left inside the replica's leaf block, then one step into
+//!   the parent's previous child; every leftward retry is followed by the
+//!   same walk-right protocol, which crosses the moved region through live
+//!   links.
+//! - **Landed on a dead chunk** (generation bumped or marked): treated as
+//!   "too far right" — step left and walk forward through live links.
+//!
+//! A descent that exhausts its (bounded) retries returns a **miss** and the
+//! caller falls back to the shared index — slower, never wrong. Misses also
+//! mark the replica dirty so the next maintenance tick rebuilds it.
+//!
+//! ## Sync protocol
+//!
+//! Writers publish a compact record (the affected boundary key) into a
+//! fixed [`ReplicaLog`] ring at every terminal membership change (first
+//! chunk, split, unlink, delete-by-copy, merge/borrow, max movement).
+//! Each replica consumes the log from its own cursor: in-budget lag is
+//! repaired by **patching** (re-deriving one leaf block's entries from a
+//! live terminal walk, rewritten under the block's seqlock), while a lapped
+//! cursor or a dirty flag triggers a **full rebuild** (fresh tree from a
+//! terminal walk, atomic root swap, old blocks marked + retired so stale
+//! readers fail generation checks into the miss path). Writers drain their
+//! own node's log eagerly after each write; remote replicas catch up on the
+//! maintenance tick or on descent-miss repair. Replica correctness never
+//! depends on sync — patches and rebuilds are pure performance.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::mem::{thread_cpu, ArenaOptions, PoolStats};
+use crate::numa::Topology;
+use crate::util::simd;
+
+use super::det::DetSkiplist;
+use super::node::{NodeArena, NodeRef, MAX_INNER_CAP, SENTINEL};
+
+/// Invalidation-ring slots per skiplist (shard). A writer burst larger than
+/// this between two ticks laps the consumer, which then rebuilds instead of
+/// patching — correctness is unaffected either way.
+const LOG_RING: usize = 1024;
+
+/// Replica branching factor: separators per replica block. The widest the
+/// shared plane supports — replicas are read-mostly, so denser is better.
+const REPLICA_BF: usize = MAX_INNER_CAP;
+
+/// Rightward live-link hops a stale landing may take before giving up.
+const WALK_HOP_CAP: usize = 64;
+
+/// Records one maintenance tick consumes before yielding (bounds tick
+/// latency on the write path; the rest stay queued for the next tick).
+const PATCH_BUDGET: u64 = 128;
+
+/// Snapshot of replica-plane counters (merged across a store's replicas).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaStats {
+    /// Point reads attempted through a replica.
+    pub lookups: u64,
+    /// Range seeks attempted through a replica.
+    pub seeks: u64,
+    /// Replica block dereferences (the node-local index plane).
+    pub index_derefs: u64,
+    /// Replica block dereferences issued from a thread pinned to a
+    /// *different* NUMA node — zero by construction in Replicated runs.
+    pub remote_index_derefs: u64,
+    /// Shared terminal-chunk probes issued by replica descents.
+    pub terminal_probes: u64,
+    /// Rightward terminal hops taken to recover stale landings.
+    pub walk_hops: u64,
+    /// Leftward in-block entry retries after dead / too-far-right landings.
+    pub left_steps: u64,
+    /// Parent-level previous-child retries (one per descent at most).
+    pub parent_retries: u64,
+    /// Descents that gave up and fell back to the shared index.
+    pub fallbacks: u64,
+    /// Invalidation records published by writers.
+    pub records_published: u64,
+    /// Invalidation records consumed by maintenance.
+    pub records_consumed: u64,
+    /// Leaf blocks rewritten in place from a live terminal walk.
+    pub patches: u64,
+    /// Full replica rebuilds (initial build included).
+    pub rebuilds: u64,
+    /// Maintenance ticks that did work (fast-path clean ticks excluded).
+    pub ticks: u64,
+}
+
+impl ReplicaStats {
+    /// Accumulate `other` (per-replica / per-shard aggregation).
+    pub fn merge(&mut self, other: &ReplicaStats) {
+        self.lookups += other.lookups;
+        self.seeks += other.seeks;
+        self.index_derefs += other.index_derefs;
+        self.remote_index_derefs += other.remote_index_derefs;
+        self.terminal_probes += other.terminal_probes;
+        self.walk_hops += other.walk_hops;
+        self.left_steps += other.left_steps;
+        self.parent_retries += other.parent_retries;
+        self.fallbacks += other.fallbacks;
+        self.records_published += other.records_published;
+        self.records_consumed += other.records_consumed;
+        self.patches += other.patches;
+        self.rebuilds += other.rebuilds;
+        self.ticks += other.ticks;
+    }
+
+    /// Replica-plane derefs per lookup-class op (index + shared terminal).
+    pub fn derefs_per_read(&self) -> f64 {
+        let reads = (self.lookups + self.seeks).max(1);
+        (self.index_derefs + self.terminal_probes + self.walk_hops) as f64 / reads as f64
+    }
+
+    /// Fraction of replica reads that fell back to the shared index.
+    pub fn fallback_rate(&self) -> f64 {
+        let reads = (self.lookups + self.seeks).max(1);
+        self.fallbacks as f64 / reads as f64
+    }
+}
+
+/// Per-replica counter block (relaxed; snapshotted into [`ReplicaStats`]).
+#[derive(Default)]
+struct Counters {
+    lookups: AtomicU64,
+    seeks: AtomicU64,
+    index_derefs: AtomicU64,
+    remote_index_derefs: AtomicU64,
+    terminal_probes: AtomicU64,
+    walk_hops: AtomicU64,
+    left_steps: AtomicU64,
+    parent_retries: AtomicU64,
+    fallbacks: AtomicU64,
+    records_consumed: AtomicU64,
+    patches: AtomicU64,
+    rebuilds: AtomicU64,
+    ticks: AtomicU64,
+}
+
+impl Counters {
+    #[inline]
+    fn bump(c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> ReplicaStats {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        ReplicaStats {
+            lookups: g(&self.lookups),
+            seeks: g(&self.seeks),
+            index_derefs: g(&self.index_derefs),
+            remote_index_derefs: g(&self.remote_index_derefs),
+            terminal_probes: g(&self.terminal_probes),
+            walk_hops: g(&self.walk_hops),
+            left_steps: g(&self.left_steps),
+            parent_retries: g(&self.parent_retries),
+            fallbacks: g(&self.fallbacks),
+            records_published: 0, // set-level counter, merged by the owner
+            records_consumed: g(&self.records_consumed),
+            patches: g(&self.patches),
+            rebuilds: g(&self.rebuilds),
+            ticks: g(&self.ticks),
+        }
+    }
+}
+
+/// Fixed ring of boundary keys published by terminal-membership writers.
+/// Monotonic write cursor; per-replica read cursors. Lapped readers detect
+/// the overrun (`pos - cursor > LOG_RING`) and rebuild instead of trusting
+/// possibly-overwritten slots — a stale slot read is at worst a patch of
+/// the wrong (still valid) block, never a wrong answer.
+pub(crate) struct ReplicaLog {
+    ring: Vec<AtomicU64>,
+    pos: AtomicU64,
+}
+
+impl ReplicaLog {
+    fn new() -> ReplicaLog {
+        ReplicaLog { ring: (0..LOG_RING).map(|_| AtomicU64::new(0)).collect(), pos: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    fn publish(&self, key: u64) {
+        let i = self.pos.fetch_add(1, Ordering::AcqRel) as usize;
+        self.ring[i % LOG_RING].store(key, Ordering::Release);
+    }
+
+    #[inline]
+    fn position(&self) -> u64 {
+        self.pos.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    fn read(&self, i: u64) -> u64 {
+        self.ring[(i as usize) % LOG_RING].load(Ordering::Acquire)
+    }
+}
+
+/// Outcome of a replica read attempt.
+pub(crate) enum ReplicaRead {
+    /// Definitive, live-validated answer (`None` = key proven absent).
+    Value(Option<u64>),
+    /// Descent gave up; caller must use the shared index.
+    Miss,
+}
+
+/// Outcome of one terminal-landing attempt inside a leaf block.
+enum Landing {
+    Answer(Option<u64>),
+    /// For seeks: the validated chunk the range walk starts from
+    /// (`SENTINEL` = walked off the right end, empty result).
+    Start(NodeRef),
+    /// Block exhausted leftward: the covering chunk lies left of it.
+    Left,
+    Miss,
+}
+
+/// What a landing should produce.
+#[derive(Clone, Copy, PartialEq)]
+enum Want {
+    /// Point lookup: the value (or proven absence).
+    Point,
+    /// Range seek: the first chunk whose live max >= key.
+    Seek,
+}
+
+/// One NUMA node's private copy of the level >= 1 index: fat separator
+/// blocks in a node-local arena, leaf blocks holding `(separator, shared
+/// terminal chunk ref)` entries. Blocks at each level are `next`-linked;
+/// block node keys (the last separator at build time) are fixed for the
+/// tree's lifetime — live coverage may outgrow them, which descents repair
+/// with rightward walks (stale-high parents are safe, as in the shared
+/// index).
+pub(crate) struct IndexReplica {
+    /// Home NUMA node (arena placement + deref locality accounting).
+    home: usize,
+    /// Engaged-node count (`topo.nodes_in_use(threads)`): the same fold
+    /// [`ReplicaSet::local`] selects replicas with, so the remote-deref
+    /// charge detects genuine cross-node routing rather than real CPU ids
+    /// beyond the virtually-pinned engaged set.
+    engaged: usize,
+    cpus_per_node: usize,
+    /// Node-local block arena (chunk role unused; `inner_cap` = BF).
+    arena: NodeArena,
+    /// Current tree root (`SENTINEL` = empty / unbuilt: every read misses).
+    root: AtomicU64,
+    /// All blocks of the current tree (maintainer-owned; retired on swap).
+    blocks: Mutex<Vec<NodeRef>>,
+    /// Consume position into the shared [`ReplicaLog`].
+    cursor: AtomicU64,
+    /// Patch failed / log lapped / descent missed: rebuild on next tick.
+    dirty: AtomicBool,
+    /// Exactly mirrors the terminal list: set by a rebuild that raced no
+    /// writer, cleared by every published record. Gates the strong
+    /// `check_invariants` agreement assertion.
+    exact: AtomicBool,
+    /// Maintainer try-lock: one patcher/rebuilder at a time per replica.
+    maint: AtomicBool,
+    stats: Counters,
+}
+
+impl IndexReplica {
+    fn new(node: usize, topo: &Topology, threads: usize, block_capacity: usize) -> IndexReplica {
+        IndexReplica {
+            home: node,
+            engaged: topo.nodes_in_use(threads).max(1),
+            cpus_per_node: topo.cpus_per_node.max(1),
+            arena: NodeArena::for_capacity_caps(
+                block_capacity,
+                ArenaOptions::placed(node, topo, threads),
+                1,
+                REPLICA_BF,
+            ),
+            root: AtomicU64::new(SENTINEL),
+            blocks: Mutex::new(Vec::new()),
+            cursor: AtomicU64::new(0),
+            dirty: AtomicBool::new(false),
+            exact: AtomicBool::new(false),
+            maint: AtomicBool::new(false),
+            stats: Counters::default(),
+        }
+    }
+
+    /// Count one replica-block deref, charged remote when the calling
+    /// thread's engaged-set node differs from `home` — i.e. when routing
+    /// handed the thread a replica that is not its node-local one.
+    #[inline]
+    fn deref(&self) {
+        Counters::bump(&self.stats.index_derefs);
+        let cpu = thread_cpu();
+        if cpu != usize::MAX && (cpu / self.cpus_per_node) % self.engaged != self.home {
+            Counters::bump(&self.stats.remote_index_derefs);
+        }
+    }
+
+    #[inline]
+    fn note_miss(&self) {
+        Counters::bump(&self.stats.fallbacks);
+        self.dirty.store(true, Ordering::Release);
+    }
+
+    // ------------------------------------------------------------------
+    // Read path
+    // ------------------------------------------------------------------
+
+    /// Point lookup through this replica. `Value` answers carry the full
+    /// shared-index validation (coverage proof + post-window mark/gen
+    /// re-check on the answering chunk); `Miss` means fall back.
+    pub(crate) fn lookup(&self, det: &DetSkiplist, key: u64) -> ReplicaRead {
+        Counters::bump(&self.stats.lookups);
+        match self.landing(det, key, Want::Point) {
+            Landing::Answer(v) => ReplicaRead::Value(v),
+            _ => {
+                self.note_miss();
+                ReplicaRead::Miss
+            }
+        }
+    }
+
+    /// Range seek: the shared terminal chunk a walk for keys `>= lo`
+    /// starts at (`Some(SENTINEL)` = proven past the end). `None` = miss.
+    pub(crate) fn seek(&self, det: &DetSkiplist, lo: u64) -> Option<NodeRef> {
+        Counters::bump(&self.stats.seeks);
+        match self.landing(det, lo, Want::Seek) {
+            Landing::Start(r) => Some(r),
+            _ => {
+                self.note_miss();
+                None
+            }
+        }
+    }
+
+    /// Descend this replica for `key` and run the terminal protocol.
+    fn landing(&self, det: &DetSkiplist, key: u64, want: Want) -> Landing {
+        let mut cur = self.root.load(Ordering::Acquire);
+        if cur == SENTINEL {
+            return Landing::Miss;
+        }
+        let mut seps = [0u64; MAX_INNER_CAP];
+        let mut childs = [SENTINEL; MAX_INNER_CAP];
+        // The parent's previous child (a leaf block), for one left retry.
+        let mut parent_left: Option<NodeRef> = None;
+        // Bounded: tree height + a few lateral moves.
+        for _ in 0..48 {
+            self.deref();
+            let Some(n) = self.arena.resolve(cur) else { return Landing::Miss };
+            if n.is_marked() {
+                return Landing::Miss; // tree retired under us (root swap)
+            }
+            let level = n.hot.level.load(Ordering::Relaxed);
+            let Some((count, _bkey, bnext)) = self.arena.block_snapshot(cur, &mut seps, &mut childs)
+            else {
+                return Landing::Miss;
+            };
+            let rank = simd::rank(&seps[..count], key);
+            if level >= 2 {
+                if rank == count {
+                    if bnext != SENTINEL {
+                        // Block range ended below key (stale-high parent
+                        // separator): lateral move, like the shared index.
+                        cur = bnext;
+                        continue;
+                    }
+                    // Rightmost spine: clamp into the last subtree — the
+                    // terminal walk-right recovers any growth past it.
+                    parent_left = if count >= 2 { Some(childs[count - 2]) } else { None };
+                    cur = childs[count - 1];
+                    continue;
+                }
+                parent_left = if rank > 0 { Some(childs[rank - 1]) } else { None };
+                cur = childs[rank];
+                continue;
+            }
+            // Leaf block: entries are shared terminal chunks. Clamp
+            // past-the-end ranks to the last entry — rightward recovery
+            // through live terminal links beats block hopping.
+            let r0 = rank.min(count - 1);
+            match self.terminal(det, &childs[..count], r0, key, want) {
+                Landing::Left => match parent_left.take() {
+                    None => return Landing::Miss,
+                    Some(lb) => {
+                        // One parent-level retry: land on the previous leaf
+                        // block's last entry and re-run the protocol.
+                        Counters::bump(&self.stats.parent_retries);
+                        self.deref();
+                        if self.arena.resolve(lb).is_none() {
+                            return Landing::Miss;
+                        }
+                        let Some((c2, _, _)) = self.arena.block_snapshot(lb, &mut seps, &mut childs)
+                        else {
+                            return Landing::Miss;
+                        };
+                        return match self.terminal(det, &childs[..c2], c2 - 1, key, want) {
+                            Landing::Left => Landing::Miss,
+                            other => other,
+                        };
+                    }
+                },
+                other => return other,
+            }
+        }
+        Landing::Miss
+    }
+
+    /// The terminal protocol: probe entry `r` of a leaf block's `childs`,
+    /// retrying leftward on dead / too-far-right landings and walking
+    /// right through live links on too-far-left ones.
+    fn terminal(
+        &self,
+        det: &DetSkiplist,
+        childs: &[NodeRef],
+        mut r: usize,
+        key: u64,
+        want: Want,
+    ) -> Landing {
+        loop {
+            Counters::bump(&self.stats.terminal_probes);
+            if let Some(p) = det.arena().chunk_probe(childs[r], key) {
+                if key > p.max {
+                    // Too far left (or just left of the target): recover
+                    // rightward through live links — sound regardless of
+                    // how stale the landing was, because a live chunk with
+                    // max < key proves the covering position is right of it.
+                    return self.walk_right(det, p.next, key, want);
+                }
+                if key >= p.lo {
+                    // Coverage proven inside the probe window; the same
+                    // post-window re-check as `find_lockfree_from` pins the
+                    // chunk live at the linearization point.
+                    let live =
+                        det.arena().resolve(childs[r]).map(|n| !n.is_marked()).unwrap_or(false);
+                    if live {
+                        return match want {
+                            Want::Point => Landing::Answer(p.hit),
+                            Want::Seek => Landing::Start(childs[r]),
+                        };
+                    }
+                }
+                // key < p.lo (chunk's live range moved right — merge /
+                // delete-by-copy) or the chunk died post-window: go left.
+            }
+            if r == 0 {
+                return Landing::Left;
+            }
+            r -= 1;
+            Counters::bump(&self.stats.left_steps);
+        }
+    }
+
+    /// Walk live terminal `next` links until a chunk covers `key` (answer /
+    /// range start) or the list ends (proven absence — mirrors the shared
+    /// descent returning `Ok(None)` off the right end).
+    fn walk_right(&self, det: &DetSkiplist, mut cur: NodeRef, key: u64, want: Want) -> Landing {
+        for _ in 0..WALK_HOP_CAP {
+            if cur == SENTINEL {
+                return match want {
+                    Want::Point => Landing::Answer(None),
+                    Want::Seek => Landing::Start(SENTINEL),
+                };
+            }
+            Counters::bump(&self.stats.walk_hops);
+            let Some(p) = det.arena().chunk_probe(cur, key) else { return Landing::Miss };
+            if key <= p.max {
+                let live = det.arena().resolve(cur).map(|n| !n.is_marked()).unwrap_or(false);
+                if !live {
+                    return Landing::Miss;
+                }
+                return match want {
+                    Want::Point => Landing::Answer(p.hit),
+                    Want::Seek => Landing::Start(cur),
+                };
+            }
+            cur = p.next;
+        }
+        Landing::Miss
+    }
+
+    // ------------------------------------------------------------------
+    // Maintenance (single maintainer per replica via `maint` try-lock)
+    // ------------------------------------------------------------------
+
+    /// Consume pending log records (patching), or rebuild when dirty /
+    /// lapped / forced. Returns `true` when the replica is clean after the
+    /// call. Cheap when there is nothing to do (one fast-path check).
+    pub(crate) fn maintain(&self, det: &DetSkiplist, log: &ReplicaLog, force: bool) -> bool {
+        if !force
+            && !self.dirty.load(Ordering::Acquire)
+            && self.cursor.load(Ordering::Acquire) == log.position()
+            && self.root.load(Ordering::Acquire) != SENTINEL
+        {
+            return true;
+        }
+        if self.maint.swap(true, Ordering::AcqRel) {
+            return false; // another maintainer is on it
+        }
+        let clean = self.maintain_locked(det, log, force);
+        self.maint.store(false, Ordering::Release);
+        clean
+    }
+
+    fn maintain_locked(&self, det: &DetSkiplist, log: &ReplicaLog, force: bool) -> bool {
+        Counters::bump(&self.stats.ticks);
+        let cur = self.cursor.load(Ordering::Relaxed);
+        let pre = log.position();
+        let lag = pre.saturating_sub(cur);
+        if force
+            || self.dirty.load(Ordering::Acquire)
+            || lag > LOG_RING as u64
+            || self.root.load(Ordering::Acquire) == SENTINEL
+        {
+            if self.rebuild(det) {
+                self.cursor.store(pre, Ordering::Release);
+                self.dirty.store(false, Ordering::Release);
+                // Exact only when no writer published during the walk.
+                self.exact.store(log.position() == pre, Ordering::Release);
+                return log.position() == pre;
+            }
+            // Terminal walk tore under concurrent writers: stay dirty, the
+            // old tree keeps serving (safe-stale) until the next tick.
+            self.dirty.store(true, Ordering::Release);
+            return false;
+        }
+        let take = lag.min(PATCH_BUDGET);
+        for i in cur..cur + take {
+            Counters::bump(&self.stats.records_consumed);
+            if !self.patch(det, log.read(i)) {
+                self.dirty.store(true, Ordering::Release);
+                break;
+            }
+        }
+        // Writers lapped us mid-consume: some slots we read were reused.
+        if log.position().saturating_sub(cur) > LOG_RING as u64 {
+            self.dirty.store(true, Ordering::Release);
+        }
+        self.cursor.store(cur + take, Ordering::Release);
+        !self.dirty.load(Ordering::Acquire) && log.position() == cur + take
+    }
+
+    /// Re-derive the leaf block covering `k` from a live terminal walk and
+    /// rewrite it under its seqlock. The block's node key is immutable —
+    /// collected separators may exceed it (raised maxes), which descents
+    /// tolerate; a span that outgrew the block fails the patch (rebuild).
+    fn patch(&self, det: &DetSkiplist, k: u64) -> bool {
+        let mut cur = self.root.load(Ordering::Acquire);
+        if cur == SENTINEL {
+            return false;
+        }
+        // Writer-side descent: the maintainer lock makes our tree stable.
+        for _ in 0..32 {
+            let Some(n) = self.arena.resolve(cur) else { return false };
+            let level = n.hot.level.load(Ordering::Relaxed);
+            let Some(cnt) = self.arena.block_len(cur) else { return false };
+            let mut rank = cnt - 1;
+            for i in 0..cnt {
+                if self.arena.block_sep(cur, i) >= k {
+                    rank = i;
+                    break;
+                }
+            }
+            if level == 1 {
+                break;
+            }
+            cur = self.arena.block_child(cur, rank);
+        }
+        let header = self.arena.node(cur).key_next().0;
+        let Some(cnt) = self.arena.block_len(cur) else { return false };
+        // First live entry anchors the walk; a fully dead block rebuilds.
+        let mut c = SENTINEL;
+        for i in 0..cnt {
+            let e = self.arena.block_child(cur, i);
+            if det.arena().resolve(e).map(|n| !n.is_marked()).unwrap_or(false) {
+                c = e;
+                break;
+            }
+        }
+        if c == SENTINEL {
+            return false;
+        }
+        let mut seps = [0u64; MAX_INNER_CAP];
+        let mut childs = [SENTINEL; MAX_INNER_CAP];
+        let mut n = 0usize;
+        loop {
+            let Some((ck, cnext)) = det.arena().read_key_next(c) else { return false };
+            if n == REPLICA_BF {
+                return false; // span outgrew the block
+            }
+            seps[n] = ck;
+            childs[n] = c;
+            n += 1;
+            if ck >= header || cnext == SENTINEL {
+                break;
+            }
+            c = cnext;
+        }
+        Counters::bump(&self.stats.patches);
+        let w = self.arena.block_write(cur);
+        for i in 0..n {
+            w.set_key(i, seps[i]);
+            w.set_child(i, childs[i]);
+        }
+        w.set_count(n);
+        true
+    }
+
+    /// Build a fresh tree from a live terminal walk, swap it in, and mark +
+    /// retire the old blocks (stale readers then fail generation checks
+    /// into the miss path). Returns `false` when the walk tore.
+    fn rebuild(&self, det: &DetSkiplist) -> bool {
+        let mut entries: Vec<(u64, NodeRef)> = Vec::new();
+        if !collect_terminals(det, &mut entries) {
+            return false;
+        }
+        let mut new_blocks = Vec::new();
+        let root = if entries.is_empty() {
+            SENTINEL
+        } else {
+            let mut level_refs = entries;
+            let mut level = 1u32;
+            loop {
+                // Right-to-left per level so `next` links are known at
+                // alloc time; `block_init`'s release fence orders content
+                // before the root's release publish below.
+                let groups: Vec<&[(u64, NodeRef)]> = level_refs.chunks(REPLICA_BF).collect();
+                let mut next_level: Vec<(u64, NodeRef)> = Vec::with_capacity(groups.len());
+                let mut next = SENTINEL;
+                for g in groups.iter().rev() {
+                    let seps: Vec<u64> = g.iter().map(|e| e.0).collect();
+                    let childs: Vec<NodeRef> = g.iter().map(|e| e.1).collect();
+                    let last = *seps.last().unwrap();
+                    let r = self.arena.alloc(last, next, childs[0], 0, level);
+                    self.arena.block_init(r, &seps, &childs);
+                    new_blocks.push(r);
+                    next_level.push((last, r));
+                    next = r;
+                }
+                next_level.reverse();
+                if next_level.len() == 1 {
+                    break next_level[0].1;
+                }
+                level_refs = next_level;
+                level += 1;
+            }
+        };
+        self.root.store(root, Ordering::Release);
+        let old = {
+            let mut blocks = self.blocks.lock().unwrap();
+            std::mem::replace(&mut *blocks, new_blocks)
+        };
+        for r in old {
+            if let Some(n) = self.arena.resolve(r) {
+                n.cold.mark.store(true, Ordering::Release);
+                self.arena.retire(r);
+            }
+        }
+        Counters::bump(&self.stats.rebuilds);
+        true
+    }
+
+    /// Whether the replica exactly mirrors the terminal list (rebuilt at
+    /// quiescence, nothing published since). Gates the strong agreement
+    /// assertion in `check_invariants`.
+    pub(crate) fn is_exact(&self) -> bool {
+        self.exact.load(Ordering::Acquire)
+    }
+
+    /// Left-to-right `(separator, shared chunk ref)` entries of the leaf
+    /// blocks (quiescent use only: `check_invariants` / tests).
+    pub(crate) fn leaf_entries(&self) -> Vec<(u64, NodeRef)> {
+        let mut out = Vec::new();
+        let mut cur = self.root.load(Ordering::Acquire);
+        if cur == SENTINEL {
+            return out;
+        }
+        // descend leftmost spine to level 1
+        for _ in 0..32 {
+            let Some(n) = self.arena.resolve(cur) else { return out };
+            if n.hot.level.load(Ordering::Relaxed) == 1 {
+                break;
+            }
+            match self.arena.block_len(cur) {
+                Some(_) => cur = self.arena.block_child(cur, 0),
+                None => return out,
+            }
+        }
+        while cur != SENTINEL {
+            let Some(n) = self.arena.resolve(cur) else { break };
+            let Some(cnt) = self.arena.block_len(cur) else { break };
+            for i in 0..cnt {
+                out.push((self.arena.block_sep(cur, i), self.arena.block_child(cur, i)));
+            }
+            cur = n.next();
+        }
+        out
+    }
+
+    fn stats_snapshot(&self) -> ReplicaStats {
+        self.stats.snapshot()
+    }
+
+    fn mem_stats(&self) -> PoolStats {
+        self.arena.stats()
+    }
+}
+
+/// Walk the live terminal list into `(chunk key, chunk ref)` entries.
+/// Retries a bounded number of times on torn reads; `false` = give up
+/// (caller keeps the old tree and stays dirty).
+fn collect_terminals(det: &DetSkiplist, out: &mut Vec<(u64, NodeRef)>) -> bool {
+    'retry: for _ in 0..8 {
+        out.clear();
+        let Some(start) = det.first_terminal() else { continue 'retry };
+        let mut cur = start;
+        while cur != SENTINEL {
+            let Some((k, nx)) = det.arena().read_key_next(cur) else { continue 'retry };
+            out.push((k, cur));
+            cur = nx;
+        }
+        return true;
+    }
+    false
+}
+
+/// The per-skiplist replica family: one [`IndexReplica`] per engaged NUMA
+/// node plus the shared invalidation log. Lives inside [`DetSkiplist`]
+/// behind a `OnceLock` — `None` until `enable_replicas`, so non-replicated
+/// runs pay one atomic load per write-path publication check.
+pub(crate) struct ReplicaSet {
+    log: ReplicaLog,
+    replicas: Vec<IndexReplica>,
+    cpus_per_node: usize,
+    published: AtomicU64,
+}
+
+impl ReplicaSet {
+    /// Build one replica per engaged node (`topo.nodes_in_use(threads)`),
+    /// each node-locally placed, and populate them from the current
+    /// terminal list.
+    pub(crate) fn new(det: &DetSkiplist, topo: &Topology, threads: usize) -> ReplicaSet {
+        let nodes = topo.nodes_in_use(threads);
+        // Generous block budget: ~chunks/(BF-1) blocks live per replica,
+        // doubled for rebuild overlap (retired blocks recycle afterwards).
+        let chunks = (det.arena().capacity() as usize / det.leaf_cap().max(1)).max(64);
+        let block_capacity = (chunks / 4).max(1024);
+        let set = ReplicaSet {
+            log: ReplicaLog::new(),
+            replicas: (0..nodes)
+                .map(|n| IndexReplica::new(n, topo, threads, block_capacity))
+                .collect(),
+            cpus_per_node: topo.cpus_per_node.max(1),
+            published: AtomicU64::new(0),
+        };
+        for r in &set.replicas {
+            r.maintain(det, &set.log, true);
+        }
+        set
+    }
+
+    /// Publish a terminal-membership change (writer hook).
+    #[inline]
+    pub(crate) fn note(&self, key: u64) {
+        self.published.fetch_add(1, Ordering::Relaxed);
+        self.log.publish(key);
+        for r in &self.replicas {
+            r.exact.store(false, Ordering::Release);
+        }
+    }
+
+    /// The calling thread's node-local replica (unpinned threads map to
+    /// node 0; nodes beyond the engaged set wrap around).
+    #[inline]
+    pub(crate) fn local(&self) -> &IndexReplica {
+        let cpu = thread_cpu();
+        let node = if cpu == usize::MAX { 0 } else { cpu / self.cpus_per_node };
+        &self.replicas[node % self.replicas.len()]
+    }
+
+    pub(crate) fn log(&self) -> &ReplicaLog {
+        &self.log
+    }
+
+    pub(crate) fn replicas(&self) -> &[IndexReplica] {
+        &self.replicas
+    }
+
+    /// Merged counters across this set's replicas.
+    pub(crate) fn stats(&self) -> ReplicaStats {
+        let mut out = ReplicaStats::default();
+        for r in &self.replicas {
+            out.merge(&r.stats_snapshot());
+        }
+        out.records_published = self.published.load(Ordering::Relaxed);
+        out
+    }
+
+    /// Merged arena accounting across this set's replicas.
+    pub(crate) fn mem_stats(&self) -> PoolStats {
+        let mut out = PoolStats::default();
+        for r in &self.replicas {
+            out.merge(&r.mem_stats());
+        }
+        out
+    }
+}

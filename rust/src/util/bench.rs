@@ -23,6 +23,46 @@ pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Summary {
     Summary::of(&samples)
 }
 
+/// Per-row configuration tag for the trajectory artifact (schema v2 in
+/// EXPERIMENTS.md §Bench-artifacts): which execution mode produced the row
+/// and under which structure capacities. Empty/zero fields are omitted
+/// from the JSON so v1 tables (no tags) emit byte-identical rows.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RowTag {
+    /// Execution mode (`"direct"` / `"delegated"` / `"replicated"`); empty
+    /// = untagged (single-mode table).
+    pub mode: &'static str,
+    /// Terminal fat-leaf chunk capacity K (0 = default / not applicable).
+    pub leaf_cap: usize,
+    /// Fat-inner routing-block capacity F (0 = default / not applicable).
+    pub inner_cap: usize,
+}
+
+impl RowTag {
+    /// Tag carrying only an execution mode.
+    pub fn mode(mode: &'static str) -> RowTag {
+        RowTag { mode, ..RowTag::default() }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.mode.is_empty() && self.leaf_cap == 0 && self.inner_cap == 0
+    }
+
+    fn to_json_fields(&self) -> String {
+        let mut s = String::new();
+        if !self.mode.is_empty() {
+            s.push_str(&format!(",\"mode\":\"{}\"", self.mode));
+        }
+        if self.leaf_cap != 0 {
+            s.push_str(&format!(",\"leaf_cap\":{}", self.leaf_cap));
+        }
+        if self.inner_cap != 0 {
+            s.push_str(&format!(",\"inner_cap\":{}", self.inner_cap));
+        }
+        s
+    }
+}
+
 /// A labelled results table mirroring one paper table: rows keyed by thread
 /// count, one column per configuration.
 #[derive(Debug, Clone)]
@@ -31,6 +71,9 @@ pub struct Table {
     pub row_key: String,
     pub columns: Vec<String>,
     pub rows: Vec<(u64, Vec<f64>)>,
+    /// Optional per-row tags, parallel to `rows` (padded with empty tags
+    /// when plain `push_row` and `push_row_tagged` are mixed).
+    pub tags: Vec<RowTag>,
 }
 
 impl Table {
@@ -40,12 +83,19 @@ impl Table {
             row_key: row_key.to_string(),
             columns: columns.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            tags: Vec::new(),
         }
     }
 
     pub fn push_row(&mut self, key: u64, values: Vec<f64>) {
+        self.push_row_tagged(key, values, RowTag::default());
+    }
+
+    /// `push_row` with a configuration tag emitted into the JSON artifact.
+    pub fn push_row_tagged(&mut self, key: u64, values: Vec<f64>, tag: RowTag) {
         assert_eq!(values.len(), self.columns.len());
         self.rows.push((key, values));
+        self.tags.push(tag);
     }
 
     /// Render as github markdown.
@@ -101,9 +151,14 @@ impl Table {
         let rows = self
             .rows
             .iter()
-            .map(|(k, vals)| {
+            .enumerate()
+            .map(|(i, (k, vals))| {
                 let vs = vals.iter().map(|&v| num(v)).collect::<Vec<_>>().join(",");
-                format!("{{\"key\":{k},\"values\":[{vs}]}}")
+                let tag = match self.tags.get(i) {
+                    Some(t) if !t.is_empty() => t.to_json_fields(),
+                    _ => String::new(),
+                };
+                format!("{{\"key\":{k},\"values\":[{vs}]{tag}}}")
             })
             .collect::<Vec<_>>()
             .join(",");
@@ -165,5 +220,25 @@ mod tests {
         // crude but effective structural sanity: balanced braces/brackets
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn table_row_tags_in_json() {
+        let mut t = Table::new("T", "k", &["v"]);
+        t.push_row(1, vec![1.0]); // untagged rows emit the v1 shape
+        t.push_row_tagged(
+            2,
+            vec![2.0],
+            RowTag { mode: "replicated", leaf_cap: 8, inner_cap: 16 },
+        );
+        t.push_row_tagged(3, vec![3.0], RowTag::mode("direct"));
+        let j = t.to_json();
+        assert!(j.contains("{\"key\":1,\"values\":[1]}"), "v1 row unchanged: {j}");
+        assert!(
+            j.contains("{\"key\":2,\"values\":[2],\"mode\":\"replicated\",\"leaf_cap\":8,\"inner_cap\":16}"),
+            "full tag: {j}"
+        );
+        assert!(j.contains("{\"key\":3,\"values\":[3],\"mode\":\"direct\"}"), "mode-only: {j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 }

@@ -64,6 +64,15 @@ impl OpMix {
     /// the §VII batching proposal assumes.
     pub const BULK: OpMix = OpMix::new(400, 400, 200);
 
+    /// Table XVIII read-heavy mix: 95% find, 2.5% insert, 2.5% erase —
+    /// the replicated-index sweet spot (reads never leave their node).
+    pub const READ95: OpMix = OpMix::new(25, 950, 25);
+    /// Table XVIII mixed mix: 70% find, 15% insert, 15% erase.
+    pub const READ70: OpMix = OpMix::new(150, 700, 150);
+    /// Table XVIII write-heavy mix: 50% find, 25% insert, 25% erase —
+    /// stresses the invalidation log and replica maintenance.
+    pub const READ50: OpMix = OpMix::new(250, 500, 250);
+
     /// Deterministic op for a key: both the router (producer) and the
     /// worker (consumer) compute the same answer from the key alone.
     #[inline]

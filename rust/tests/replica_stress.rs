@@ -1,0 +1,354 @@
+//! Replicated-index-plane property tests (run in CI as the release
+//! replica stress step: `CDSKL_SCALE=10 cargo test --release -q replica_`).
+//!
+//! The per-node index replicas are *hints*: a replicated read must agree
+//! exactly with the shared index no matter how stale its replica is —
+//! staleness may cost a bounded local repair walk or a fallback, never a
+//! wrong answer (DESIGN.md §Replicated-index-layers). These tests starve
+//! the maintenance tick on purpose, churn the terminal list underneath
+//! live replicas, and check every answer against a `BTreeMap` oracle;
+//! then they rebuild at quiescence and assert the replicas converge
+//! (reads stop falling back, `check_invariants` proves entry-for-entry
+//! agreement with the shared terminal list).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use cdskl::coordinator::{run_with_opts, ExecMode, RunOptions, ShardedStore, StoreKind};
+use cdskl::numa::Topology;
+use cdskl::runtime::KeyRouter;
+use cdskl::skiplist::{DetSkiplist, FindMode};
+use cdskl::util::rng::Rng;
+use cdskl::workload::{OpMix, WorkloadSpec};
+
+/// CDSKL_SCALE divides the op counts, mirroring the experiment harness
+/// (CI runs release with CDSKL_SCALE=10 for a deeper soak).
+fn scaled_ops(base: u64) -> u64 {
+    let scale = std::env::var("CDSKL_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(40u64);
+    (base / scale.max(1)).max(2_000)
+}
+
+/// Deterministic value for a key — concurrent tests can validate any
+/// observed `Some(v)` without tracking interleavings.
+fn val(k: u64) -> u64 {
+    k.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(k)
+}
+
+/// Every replicated answer must match the oracle even though the replica
+/// is never ticked after its initial build — writes below make it
+/// arbitrarily stale, and the live landing validation plus the repair
+/// walks (walk-right / left-step / parent retry / fallback) must absorb
+/// every stale route.
+#[test]
+fn replica_matches_oracle_when_forced_stale() {
+    let ops = scaled_ops(200_000);
+    let sl = DetSkiplist::with_capacity(FindMode::LockFree, 1 << 16);
+    let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+    for i in 0..2_000u64 {
+        let k = i * 7 + 3;
+        sl.insert(k, val(k));
+        oracle.insert(k, val(k));
+    }
+    sl.enable_replicas(&Topology::virtual_grid(4, 4), 16);
+    let mut rng = Rng::new(0x5E9A);
+    for i in 0..ops {
+        // tight key space: every chunk sees splits, merges and boundary
+        // raises while the replica keeps routing through the old layout
+        let k = rng.below(16_384) + 1;
+        match rng.below(10) {
+            0..=2 => {
+                let fresh = !oracle.contains_key(&k);
+                if fresh {
+                    oracle.insert(k, val(k));
+                }
+                assert_eq!(sl.insert(k, val(k)), fresh, "insert({k}) disagreed at op {i}");
+            }
+            3..=4 => {
+                assert_eq!(sl.erase(k), oracle.remove(&k).is_some(), "erase({k}) at op {i}");
+            }
+            5..=8 => {
+                let (v, _fell_back) = sl.get_replicated(k);
+                assert_eq!(v, oracle.get(&k).copied(), "get_replicated({k}) at op {i}");
+            }
+            _ => {
+                let lo = rng.below(16_384);
+                let hi = lo + rng.below(256);
+                let want: Vec<(u64, u64)> =
+                    oracle.range(lo..=hi).map(|(&k, &v)| (k, v)).collect();
+                let (rows, _fell_back) = sl.range_replicated(lo, hi);
+                assert_eq!(rows, want, "range_replicated({lo},{hi}) at op {i}");
+            }
+        }
+    }
+    let st = sl.replica_stats();
+    assert!(st.lookups > 0, "the replica plane must have served reads");
+    assert!(st.records_published > 0, "writes must publish invalidations");
+    assert_eq!(st.records_consumed, 0, "tick starved: nothing may be consumed");
+    assert_eq!(st.remote_index_derefs, 0, "reads route through the local replica");
+    sl.check_invariants().expect("stale replicas must still pass the weak invariants");
+}
+
+/// Descent-miss repair convergence: flood the list with keys the replica
+/// has never seen (every lookup of them degrades or falls back), then
+/// force a quiescent rebuild — after it, reads of every resident key must
+/// resolve on-replica without a single new fallback, and the strong
+/// `check_invariants` agreement (exact replicas mirror the terminal list
+/// entry-for-entry) must hold.
+#[test]
+fn replica_repair_converges_after_rebuild() {
+    let n = scaled_ops(60_000);
+    let sl = DetSkiplist::with_capacity(FindMode::LockFree, 1 << 16);
+    for i in 0..1_000u64 {
+        sl.insert(i * 31 + 5, val(i * 31 + 5));
+    }
+    sl.enable_replicas(&Topology::virtual_grid(2, 4), 8);
+    // grow the list far past the replicated snapshot — no ticks
+    for i in 0..n {
+        let k = 1_000 * 31 + 7 + i * 3;
+        sl.insert(k, val(k));
+        assert_eq!(sl.get_replicated(k).0, Some(val(k)), "stale read of fresh key {k}");
+    }
+    sl.replica_rebuild_all();
+    sl.check_invariants().expect("exact replicas must mirror the terminal list");
+    let before = sl.replica_stats();
+    for i in 0..n {
+        let k = 1_000 * 31 + 7 + i * 3;
+        let (v, fell_back) = sl.get_replicated(k);
+        assert_eq!(v, Some(val(k)));
+        assert!(!fell_back, "post-rebuild read of {k} must resolve on-replica");
+    }
+    let after = sl.replica_stats();
+    assert_eq!(after.fallbacks, before.fallbacks, "rebuilt replicas must stop falling back");
+    assert_eq!(after.lookups - before.lookups, n, "every probe went through the replica");
+}
+
+/// Concurrent churn: writers mutate disjoint key stripes (each tracking
+/// its own oracle) while readers hammer `get_replicated`/`range_replicated`
+/// and maintenance ticks race the writers' invalidation stream. Any
+/// observed value must be the key's deterministic value; afterwards the
+/// quiescent state must agree with the merged oracles and pass the full
+/// invariant check.
+#[test]
+fn replica_concurrent_churn_stays_safe() {
+    const KEYS: u64 = 8_192;
+    let ops = scaled_ops(160_000);
+    let sl = Arc::new(DetSkiplist::with_capacity(FindMode::LockFree, 1 << 16));
+    for k in 1..=KEYS {
+        sl.insert(k, val(k));
+    }
+    sl.enable_replicas(&Topology::virtual_grid(2, 2), 4);
+    let done = Arc::new(AtomicBool::new(false));
+    let writers: Vec<_> = (0..2u64)
+        .map(|t| {
+            let sl = Arc::clone(&sl);
+            std::thread::spawn(move || {
+                let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+                for k in (1..=KEYS).filter(|k| k % 2 == (t + 1) % 2) {
+                    oracle.insert(k, val(k));
+                }
+                let mut rng = Rng::new(0xC0FE ^ t);
+                for i in 0..ops {
+                    // stripe-local key: writers never contend on a key, so
+                    // each oracle is exact for its half of the space
+                    let k = rng.below(KEYS / 2) * 2 + t + 1;
+                    let k = if k > KEYS { t + 1 } else { k };
+                    if rng.below(2) == 0 {
+                        let fresh = !oracle.contains_key(&k);
+                        if fresh {
+                            oracle.insert(k, val(k));
+                        }
+                        assert_eq!(sl.insert(k, val(k)), fresh, "w{t}: insert({k}) at {i}");
+                    } else {
+                        assert_eq!(sl.erase(k), oracle.remove(&k).is_some(), "w{t}: erase({k})");
+                    }
+                    if i % 64 == 0 {
+                        sl.replica_tick(); // patch path racing the churn
+                    }
+                }
+                oracle
+            })
+        })
+        .collect();
+    let readers: Vec<_> = (0..2u64)
+        .map(|t| {
+            let sl = Arc::clone(&sl);
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0xFEED ^ t);
+                let mut seen = 0u64;
+                while !done.load(Ordering::Acquire) {
+                    let k = rng.below(KEYS) + 1;
+                    if let (Some(v), _) = sl.get_replicated(k) {
+                        assert_eq!(v, val(k), "reader {t}: wrong value for live key {k}");
+                        seen += 1;
+                    }
+                    let lo = rng.below(KEYS);
+                    let (rows, _) = sl.range_replicated(lo, lo + 64);
+                    let mut prev = 0u64;
+                    for &(k, v) in &rows {
+                        assert!(k >= lo && k <= lo + 64 && k > prev, "reader {t}: row order");
+                        assert_eq!(v, val(k), "reader {t}: wrong value in range row {k}");
+                        prev = k;
+                    }
+                }
+                seen
+            })
+        })
+        .collect();
+    let mut oracle = BTreeMap::new();
+    for w in writers {
+        oracle.append(&mut w.join().unwrap());
+    }
+    done.store(true, Ordering::Release);
+    let mut seen = 0;
+    for r in readers {
+        seen += r.join().unwrap();
+    }
+    assert!(seen > 0, "readers must have observed live keys");
+    // quiescence: converge the replicas, then demand exact agreement
+    sl.replica_rebuild_all();
+    sl.check_invariants().expect("post-churn invariants (incl. replica agreement)");
+    for (&k, &v) in &oracle {
+        assert_eq!(sl.get_replicated(k).0, Some(v), "final get_replicated({k})");
+    }
+    let want: Vec<(u64, u64)> = oracle.iter().map(|(&k, &v)| (k, v)).collect();
+    assert_eq!(sl.range_replicated(0, u64::MAX - 2).0, want, "final replicated sweep");
+    assert_eq!(sl.len(), want.len() as u64);
+    assert_eq!(sl.replica_stats().remote_index_derefs, 0);
+}
+
+/// Sharded-store surface: the same oracle discipline through
+/// [`ShardedStore::get_replicated`]/[`range_replicated`] with periodic
+/// whole-store ticks (the engine's cadence), across shard boundaries.
+#[test]
+fn replica_sharded_store_matches_oracle() {
+    let ops = scaled_ops(120_000);
+    let topo = Topology::virtual_grid(2, 4);
+    let store = ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 14, topo, 8);
+    let mut oracle: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut rng = Rng::new(0x5AAD);
+    for _ in 0..2_000u64 {
+        // spread the prefill across all 8 prefix segments (shards)
+        let k = (rng.below(8) << 61) | (rng.below(1 << 14) + 1);
+        store.insert(k, val(k));
+        oracle.insert(k, val(k));
+    }
+    store.enable_replication();
+    assert!(store.replication_enabled());
+    for i in 0..ops {
+        let k = (rng.below(8) << 61) | (rng.below(1 << 14) + 1);
+        match rng.below(10) {
+            0..=2 => {
+                let fresh = !oracle.contains_key(&k);
+                if fresh {
+                    oracle.insert(k, val(k));
+                }
+                assert_eq!(store.insert(k, val(k)), fresh, "insert({k:#x}) at op {i}");
+            }
+            3..=4 => {
+                assert_eq!(store.erase(k), oracle.remove(&k).is_some(), "erase({k:#x})");
+            }
+            5..=8 => {
+                assert_eq!(
+                    store.get_replicated(0, k),
+                    oracle.get(&k).copied(),
+                    "get_replicated({k:#x}) at op {i}"
+                );
+            }
+            _ => {
+                // cross-shard window: spans the segment boundary whenever
+                // lo lands near the top of a segment
+                let lo = (rng.below(8) << 61) | ((1u64 << 61) - rng.below(512) - 1);
+                let hi = lo.saturating_add(1 << 60);
+                let want: Vec<(u64, u64)> =
+                    oracle.range(lo..=hi).map(|(&k, &v)| (k, v)).collect();
+                assert_eq!(store.range_replicated(0, lo, hi), want, "range({lo:#x})");
+            }
+        }
+        if i % 128 == 0 {
+            store.replica_tick();
+        }
+    }
+    store.replica_rebuild();
+    let want: Vec<(u64, u64)> = oracle.iter().map(|(&k, &v)| (k, v)).collect();
+    assert_eq!(store.range_replicated(0, 0, u64::MAX - 2), want, "final sweep");
+    let rs = store.replica_stats();
+    assert!(rs.lookups > 0 && rs.ticks > 0);
+    assert_eq!(rs.remote_index_derefs, 0);
+}
+
+/// Engine end-to-end with the maintenance tick disabled
+/// (`replica_tick_every: 0`): replicas stay as stale as they can possibly
+/// get for the whole drain, yet a Replicated run must produce exactly the
+/// same answers as a Direct run of the same seeded workload.
+#[test]
+fn replica_engine_forced_stale_matches_direct() {
+    let ops = scaled_ops(120_000);
+    let topo = Topology::virtual_grid(2, 2);
+    let router = KeyRouter::Native;
+    let spec = WorkloadSpec::new("replica-stale", ops, OpMix::READ50, (ops / 2).max(1 << 12))
+        .with_range_window(64);
+    let mk = || Arc::new(ShardedStore::new(StoreKind::DetSkiplistLf, 8, 1 << 14, topo.clone(), 4));
+    let direct = mk();
+    let md = run_with_opts(
+        &direct,
+        &spec,
+        4,
+        &router,
+        0x51A1E,
+        RunOptions { mode: ExecMode::Direct, ..Default::default() },
+    );
+    let repl = mk();
+    let mr = run_with_opts(
+        &repl,
+        &spec,
+        4,
+        &router,
+        0x51A1E,
+        RunOptions { mode: ExecMode::Replicated, replica_tick_every: 0, ..Default::default() },
+    );
+    assert_eq!(md.final_len, mr.final_len, "final length disagreed");
+    assert_eq!(md.found, mr.found, "find hits disagreed");
+    assert_eq!(
+        direct.range(0, u64::MAX - 2),
+        repl.range(0, u64::MAX - 2),
+        "final contents disagreed"
+    );
+    let rs = mr.replica;
+    assert!(rs.lookups > 0, "drain reads must route through the replica plane");
+    assert!(rs.records_published > 0, "drain writes must publish invalidations");
+    assert_eq!(rs.records_consumed, 0, "tick_every=0 must never sync a replica");
+    assert_eq!(rs.remote_index_derefs, 0, "replicated reads stay node-local");
+}
+
+/// Satellite: the finger cache is mode-aware. Replica descents never
+/// consult fingers, and in Replicated mode the engine turns the cache off
+/// entirely — so with the cache disabled at the boundary (as the engine
+/// does), an arbitrary replicated read/tick mix must leave
+/// `finger_attempts` untouched, including on the fallback path.
+#[test]
+fn replica_reads_bypass_finger_cache() {
+    let sl = DetSkiplist::with_capacity(FindMode::LockFree, 1 << 14);
+    for i in 0..2_000u64 {
+        sl.insert(i * 3 + 1, val(i * 3 + 1));
+    }
+    assert!(sl.finger_cache_enabled(), "fingers default on");
+    // the engine's Replicated-mode boundary: fingers off, replicas on
+    sl.set_finger_cache(false);
+    sl.enable_replicas(&Topology::virtual_grid(2, 2), 4);
+    let base = sl.stats().finger_attempts;
+    for i in 0..2_000u64 {
+        let k = i * 3 + 1;
+        assert_eq!(sl.get_replicated(k).0, Some(val(k)));
+        let _ = sl.get_replicated(k + 1); // absent key: may take the fallback path
+        let _ = sl.range_replicated(k, k + 64);
+        sl.insert(6_001 + i * 2, 0); // keep writes flowing through the hooks
+        sl.replica_tick();
+    }
+    assert_eq!(
+        sl.stats().finger_attempts,
+        base,
+        "replicated reads and their fallbacks must never consult the finger cache"
+    );
+}
